@@ -1,0 +1,113 @@
+"""Shared benchmark scaffolding.
+
+Every benchmark module exposes `run() -> list[dict]` with keys
+  name, us_per_call, derived
+where `us_per_call` is the wall time of the measured unit and `derived` is
+the paper-relevant quantity (accuracy, ppl ratio, bytes, rank...).
+
+Paper-scale models cannot train on this CPU container, so the comparisons
+(LIFT vs Full FT vs LoRA vs selection baselines) run at reduced scale on the
+synthetic reasoning corpus — the *orderings* are the reproduction target,
+not absolute numbers (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sparse_adam as sa
+from repro.core.lift import LiftConfig
+from repro.core.peft import PeftConfig
+from repro.data.loader import ShardedLoader
+from repro.data.synthetic import VOCAB_SIZE, eval_accuracy, generate
+from repro.models import ModelConfig, build_model
+from repro.training import trainer as T
+
+SMALL = ModelConfig(family="dense", num_layers=2, d_model=64, num_heads=4,
+                    num_kv_heads=2, head_dim=16, d_ff=128,
+                    vocab_size=max(VOCAB_SIZE, 97))
+
+
+def timer(fn, *args, reps: int = 3):
+    fn(*args)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6, out
+
+
+def make_method(kind: str, rank: int = 8, **lift_kw) -> T.MethodConfig:
+    lift_defaults = dict(rank=rank, match_rank=max(1, rank // 4),
+                         method="exact", min_dim=16,
+                         update_interval=25)
+    lift_defaults.update(lift_kw)
+    sel = lift_kw.get("selection", "lift")
+    kind_map = {"magnitude": "sparse", "gradient": "sparse",
+                "movement": "sparse", "random": "sparse"}
+    if kind in kind_map:
+        lift_defaults["selection"] = kind
+        kind = "sparse"
+    return T.MethodConfig(kind=kind, lift=LiftConfig(**lift_defaults),
+                          peft=PeftConfig(rank=rank))
+
+
+def train_method(cfg: ModelConfig, method: T.MethodConfig, *,
+                 task: str = "arith", steps: int = 60, batch: int = 8,
+                 seq: int = 48, lr: float = 0.0, seed: int = 0,
+                 n_data: int = 512, refresh_every: Optional[int] = None,
+                 eval_n: int = 32):
+    """Train, return dict(train_loss, eval_acc, us_per_step, params...).
+
+    lr == 0 picks the paper-style per-method default (the paper searches LR
+    per method, App. D.2; these are the best-of-search values at this
+    scale): Full FT 1e-3, adapters 3e-3, sparse-FT 1e-2."""
+    if lr == 0.0:
+        lr = {"full": 1e-3, "lift": 1e-2, "sparse": 1e-2}.get(
+            method.kind, 3e-3)
+    model = build_model(cfg)
+    params0 = model.init(jax.random.PRNGKey(seed))
+    data = generate(task, n_data, seq, seed=seed)
+    loader = ShardedLoader(data, batch_size=batch, seed=seed)
+
+    sample_grads = None
+    if method.kind == "sparse" and method.lift.selection in ("gradient",
+                                                             "movement"):
+        b0 = {k: jnp.asarray(v) for k, v in loader.next_batch().items()}
+        sample_grads = jax.grad(lambda p: model.loss(p, b0)[0])(params0)
+
+    params, state = T.init_train_state(model, params0, method,
+                                       jax.random.PRNGKey(seed + 1),
+                                       sample_grads=sample_grads)
+    step_fn = jax.jit(T.make_train_step(model, method,
+                                        sa.AdamConfig(lr=lr),
+                                        T.constant_lr(lr)))
+    refresh = None
+    if method.kind in ("lift", "sparse") and refresh_every:
+        refresh = jax.jit(T.make_refresh_step(model, method))
+
+    t0 = time.perf_counter()
+    losses = []
+    for i in range(steps):
+        b = {k: jnp.asarray(v) for k, v in loader.next_batch().items()}
+        params, state, metrics = step_fn(params, state, b)
+        losses.append(float(metrics["loss"]))
+        if refresh is not None and (i + 1) % refresh_every == 0:
+            state = refresh(params, state, jax.random.PRNGKey(100 + i))
+    dt = (time.perf_counter() - t0) / steps * 1e6
+
+    eff = T.effective_params(model, params, state, method)
+    acc = eval_accuracy(model, eff, task if task != "lm" else "arith",
+                        n=eval_n, seq_len=seq, seed=9999) if eval_n else 0.0
+    return {"model": model, "params0": params0, "params": eff,
+            "state": state, "train_loss": float(np.mean(losses[-10:])),
+            "eval_acc": acc, "us_per_step": dt}
+
+
+def csv_rows(rows):
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")

@@ -1,0 +1,28 @@
+"""Figs. 12/13 analog: eigenspace alignment score (App. H.1) and
+update-matrix rank (App. G.3) per layer type, for LIFT vs Full FT vs LoRA.
+Paper: LIFT rotates the top eigenspace of Up/Down/O far more than LoRA and
+its update rank is near-full (LoRA's is capped at r).
+derived = alignment score + update rank for the mlp/up matrix."""
+import numpy as np
+
+from benchmarks.common import SMALL, csv_rows, make_method, train_method
+from repro.core.analysis import alignment_score, update_rank
+
+
+def run():
+    rows = []
+    for kind in ["full", "lift", "lora"]:
+        out = train_method(SMALL, make_method(kind), task="arith",
+                           steps=80, eval_n=0, refresh_every=25)
+        b = out["params0"]["blocks"]["mlp"]["up"][0]
+        a = out["params"]["blocks"]["mlp"]["up"][0]
+        score = float(alignment_score(b, a, top_n=32))
+        rk = int(update_rank(a - b))
+        rows.append({"name": f"fig12_13/{kind}",
+                     "us_per_call": out["us_per_step"],
+                     "derived": f"align={score:.4f};update_rank={rk}"})
+    return rows
+
+
+if __name__ == "__main__":
+    csv_rows(run())

@@ -1,0 +1,22 @@
+"""Fig. 16 analog: LRA rank x selected-rank grid.  Paper: best accuracy
+sits near LRA-rank ~ selected-rank, not at max LRA rank.
+derived = eval accuracy per (lra_rank, sel_rank)."""
+from benchmarks.common import SMALL, csv_rows, make_method, train_method
+
+
+def run():
+    rows = []
+    for lra in [4, 8, 16]:
+        for sel in [1, 2, 4]:
+            out = train_method(
+                SMALL, make_method("lift", rank=lra, match_rank=sel),
+                task="arith", steps=100, refresh_every=25, seed=4,
+                eval_n=24)
+            rows.append({"name": f"fig16/lra{lra}-sel{sel}",
+                         "us_per_call": out["us_per_step"],
+                         "derived": f"acc={out['eval_acc']:.3f}"})
+    return rows
+
+
+if __name__ == "__main__":
+    csv_rows(run())

@@ -1,0 +1,43 @@
+"""App. G.9 analog (Fig. 17): overlap of LIFT-selected vs magnitude-selected
+parameters (paper: small — 5-20 % on MLP, up to 40 % on Q/K — and growing
+with the LRA rank), PLUS the framework's local-quota-vs-global overlap
+(DESIGN.md §3 distributed selection).  derived = overlap fractions."""
+import jax
+import numpy as np
+
+from benchmarks.common import SMALL, csv_rows, make_method, train_method
+from repro.core.lift import LiftConfig, scores_for, topk_indices
+from repro.core.local_quota import overlap_with_global
+
+
+def run():
+    out = train_method(SMALL, make_method("full"), task="lm", steps=40,
+                       eval_n=0)
+    params = out["params"]
+    rows = []
+    for layer, w in [("mlp-up", params["blocks"]["mlp"]["up"][0]),
+                     ("attn-wq", params["blocks"]["attn"]["wq"][0])]:
+        k = int(0.05 * w.size)
+        mag = set(np.asarray(topk_indices(
+            scores_for(w, LiftConfig(rank=8), "magnitude"), k)).tolist())
+        parts = []
+        for rank in (4, 8, 16):
+            lift = set(np.asarray(topk_indices(scores_for(
+                w, LiftConfig(rank=rank, method="exact"), "lift"),
+                k)).tolist())
+            parts.append(f"r{rank}={len(lift & mag) / k:.2f}")
+        rows.append({"name": f"fig17/lift-vs-magnitude-{layer}",
+                     "us_per_call": 0.0, "derived": ";".join(parts)})
+    # distributed local-quota deviation (beyond-paper, DESIGN.md §3)
+    w = params["blocks"]["mlp"]["up"][0]
+    s = scores_for(w, LiftConfig(rank=8, method="exact"), "lift")
+    k = 1024
+    parts = [f"shards{n}={overlap_with_global(s, k, n):.3f}"
+             for n in (4, 8, 16)]
+    rows.append({"name": "fig17/local-quota-vs-global",
+                 "us_per_call": 0.0, "derived": ";".join(parts)})
+    return rows
+
+
+if __name__ == "__main__":
+    csv_rows(run())

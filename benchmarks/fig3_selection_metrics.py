@@ -1,0 +1,21 @@
+"""Fig. 3 analog: sparse-FT selection criteria at a fixed parameter budget
+(GSM8K stand-in = synthetic arithmetic).  derived = eval accuracy."""
+from benchmarks.common import SMALL, csv_rows, make_method, train_method
+
+
+def run():
+    rows = []
+    for sel in ["lift", "magnitude", "gradient", "movement", "random"]:
+        kind = "lift" if sel == "lift" else sel
+        out = train_method(SMALL, make_method(kind), task="arith",
+                           steps=150, refresh_every=25, seed=1)
+        rows.append({
+            "name": f"fig3/select-{sel}",
+            "us_per_call": out["us_per_step"],
+            "derived": f"acc={out['eval_acc']:.3f}",
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    csv_rows(run())

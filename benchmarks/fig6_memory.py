@@ -1,0 +1,63 @@
+"""Fig. 6 analog: optimizer-state memory breakdown at PAPER scale
+(llama2-7b / llama3-8b-class configs, analytic — no allocation) plus a
+measured check on the smoke model.  Paper: Full FT 27 GB optimizer ->
+LIFT ~1.3 GB (<5 %).  derived = optimizer-state gigabytes."""
+import jax
+import numpy as np
+
+from benchmarks.common import SMALL, csv_rows, make_method, train_method
+from repro.configs import get_arch
+from repro.core.lift import LiftConfig, make_plan
+from repro.models import build_model
+from repro.nn.core import is_spec
+
+
+def _spec_bytes(spec_tree, per_leaf=4):
+    leaves = jax.tree.leaves(spec_tree, is_leaf=is_spec)
+    return sum(int(np.prod(s.shape)) * per_leaf for s in leaves)
+
+
+def analytic(arch: str):
+    cfg = get_arch(arch).full
+    model = build_model(cfg)
+    spec = model.spec()
+    n_params = sum(int(np.prod(s.shape))
+                   for s in jax.tree.leaves(spec, is_leaf=is_spec))
+    full_opt = 2 * 4 * n_params                       # fp32 m+v
+    lcfg = LiftConfig(rank=128, density=0.05, k_multiple=1024)
+    plan = make_plan(spec, lcfg)
+    k_total = sum(p.k * max(1, int(np.prod(p.stack))) for p in plan.values())
+    lift_opt = k_total * (4 + 4 + 4)                  # idx + m + v
+    lora_r = 128
+    lora_params = sum((p.rows + p.cols) * lora_r
+                      * max(1, int(np.prod(p.stack))) for p in plan.values())
+    lora_opt = 2 * 4 * lora_params
+    return n_params, full_opt, lift_opt, lora_opt
+
+
+def run():
+    rows = []
+    n, full_b, lift_b, lora_b = analytic("llama2-7b")
+    g = 1 / 2 ** 30
+    rows.append({"name": "fig6/llama2-7b-analytic", "us_per_call": 0.0,
+                 "derived": f"fullFT={full_b * g:.1f}GB;"
+                            f"LIFT={lift_b * g:.2f}GB"
+                            f"({100 * lift_b / full_b:.1f}%);"
+                            f"LoRA={lora_b * g:.2f}GB"})
+    # measured on the smoke model
+    import jax.numpy as jnp
+
+    def opt_bytes(state):
+        return sum(x.size * x.dtype.itemsize
+                   for x in jax.tree.leaves(state["opt"]))
+    for kind in ["full", "lift"]:
+        out = train_method(SMALL, make_method(kind), task="arith", steps=4,
+                           eval_n=0)
+        rows.append({"name": f"fig6/smoke-{kind}-measured",
+                     "us_per_call": out["us_per_step"],
+                     "derived": f"opt_bytes={opt_bytes(out['state'])}"})
+    return rows
+
+
+if __name__ == "__main__":
+    csv_rows(run())

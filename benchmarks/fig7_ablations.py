@@ -1,0 +1,27 @@
+"""Fig. 7 analogs.  (a) LIFT mask update interval sweep;
+(b) rank-reduction strategies (largest / smallest / random / hybrid).
+derived = eval accuracy."""
+from benchmarks.common import SMALL, csv_rows, make_method, train_method
+
+
+def run():
+    rows = []
+    for interval in [10, 25, 50, 10_000]:
+        out = train_method(SMALL, make_method("lift"), task="arith",
+                           steps=120, refresh_every=min(interval, 80),
+                           seed=2)
+        tag = "never" if interval >= 10_000 else str(interval)
+        rows.append({"name": f"fig7a/interval-{tag}",
+                     "us_per_call": out["us_per_step"],
+                     "derived": f"acc={out['eval_acc']:.3f}"})
+    for strat in ["largest", "smallest", "random", "hybrid"]:
+        out = train_method(SMALL, make_method("lift", strategy=strat),
+                           task="arith", steps=120, refresh_every=25, seed=2)
+        rows.append({"name": f"fig7b/strategy-{strat}",
+                     "us_per_call": out["us_per_step"],
+                     "derived": f"acc={out['eval_acc']:.3f}"})
+    return rows
+
+
+if __name__ == "__main__":
+    csv_rows(run())

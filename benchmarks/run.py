@@ -1,0 +1,53 @@
+"""Benchmark harness — one module per paper table/figure (DESIGN.md §8).
+Prints ``name,us_per_call,derived`` CSV.  ``--only <prefix>`` filters."""
+import argparse
+import importlib
+import sys
+import time
+import traceback
+
+MODULES = [
+    "benchmarks.tbl_method_comparison",   # Tables 1 & 2
+    "benchmarks.tbl_reasoning_sft",       # Table 4
+    "benchmarks.fig2_perturbation",       # Figure 2
+    "benchmarks.fig3_selection_metrics",  # Figure 3
+    "benchmarks.fig4_generalization",     # Figure 4 / App G.1
+    "benchmarks.fig5_update_magnitude",   # Figure 5
+    "benchmarks.fig6_memory",             # Figure 6
+    "benchmarks.fig7_ablations",          # Figure 7a/7b
+    "benchmarks.appc_spectral_norm",      # App C
+    "benchmarks.fig12_13_eigen",          # Figures 12/13
+    "benchmarks.toy_model",               # App G.5
+    "benchmarks.tbl17_structured",        # App G.7 / Table 17
+    "benchmarks.fig16_rank_grid",         # Figure 16
+    "benchmarks.fig17_selection_overlap", # Figure 17 / App G.9
+    "benchmarks.kernels_micro",           # kernel hot-spots
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failures = 0
+    for modname in MODULES:
+        if args.only and args.only not in modname:
+            continue
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(modname)
+            for r in mod.run():
+                print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}",
+                      flush=True)
+        except Exception as e:
+            failures += 1
+            print(f"{modname},0,ERROR:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+        print(f"# {modname} took {time.time() - t0:.1f}s", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""App. G.7 analog: structured 4x4-block LIFT vs unstructured LIFT vs
+top-k magnitude at equal budget.  derived = eval accuracy."""
+from benchmarks.common import SMALL, csv_rows, make_method, train_method
+
+
+def run():
+    rows = []
+    cases = [("lift", dict()), ("lift-4x4", dict(block_size=4)),
+             ("magnitude", dict())]
+    for tag, extra in cases:
+        kind = "magnitude" if tag == "magnitude" else "lift"
+        out = train_method(SMALL, make_method(kind, **extra), task="arith",
+                           steps=120, refresh_every=25, seed=3)
+        rows.append({"name": f"tbl17/{tag}",
+                     "us_per_call": out["us_per_step"],
+                     "derived": f"acc={out['eval_acc']:.3f}"})
+    return rows
+
+
+if __name__ == "__main__":
+    csv_rows(run())

@@ -1,0 +1,24 @@
+"""Tables 1 & 2 analog: LIFT vs Full FT / LoRA / PiSSA / DoRA / magnitude
+sparse-FT on the synthetic reasoning SFT task (reduced scale).
+derived = eval accuracy (paper's finding: LIFT >= Full FT > adapters)."""
+from benchmarks.common import SMALL, csv_rows, make_method, train_method
+
+METHODS = ["full", "lift", "lora", "pissa", "dora", "magnitude"]
+
+
+def run():
+    rows = []
+    for kind in METHODS:
+        out = train_method(SMALL, make_method(kind), task="arith",
+                           steps=150, refresh_every=25)
+        rows.append({
+            "name": f"tbl12/{kind}",
+            "us_per_call": out["us_per_step"],
+            "derived": f"acc={out['eval_acc']:.3f};"
+                       f"loss={out['train_loss']:.3f}",
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    csv_rows(run())

@@ -1,0 +1,22 @@
+"""Table 4 analog (s1K-style): low-data reasoning SFT — LIFT vs Full FT.
+128 examples x multiple epochs; Full FT overfits, LIFT generalizes.
+derived = held-out accuracy."""
+from benchmarks.common import SMALL, csv_rows, make_method, train_method
+
+
+def run():
+    rows = []
+    for kind in ["full", "lift"]:
+        out = train_method(SMALL, make_method(kind), task="arith",
+                           steps=150, n_data=128, refresh_every=25)
+        rows.append({
+            "name": f"tbl4/{kind}-lowdata",
+            "us_per_call": out["us_per_step"],
+            "derived": f"acc={out['eval_acc']:.3f};"
+                       f"loss={out['train_loss']:.3f}",
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    csv_rows(run())

@@ -1,0 +1,96 @@
+"""Elastic restart demo: train on a 4-device (2x2) mesh, checkpoint, crash,
+then resume on an 8-device (4x2) mesh — the checkpoint stores logical
+arrays, so the restore re-shards onto whatever topology the restarted job
+has (DESIGN.md §4).  Runs each phase in a subprocess with a different
+--xla_force_host_platform_device_count.
+
+    PYTHONPATH=src python examples/elastic_restart.py
+"""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+PHASE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(ndev)d"
+import sys, json
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import sparse_adam as sa
+from repro.core.lift import LiftConfig
+from repro.data.loader import LoaderState, ShardedLoader
+from repro.data.synthetic import VOCAB_SIZE, generate
+from repro.launch.mesh import make_host_mesh
+from repro.models import ModelConfig, build_model
+from repro.parallel.sharding import set_sharding_ctx, tree_shardings
+from repro.training import trainer as T
+
+ndev = %(ndev)d
+mesh = make_host_mesh(%(dp)d, %(tp)d)
+set_sharding_ctx(mesh)
+cfg = ModelConfig(family="dense", num_layers=2, d_model=64, num_heads=4,
+                  num_kv_heads=4, head_dim=16, d_ff=128,
+                  vocab_size=128)  # divisible by every test mesh axis
+model = build_model(cfg)
+method = T.MethodConfig(kind="lift", lift=LiftConfig(
+    rank=4, match_rank=1, method="exact", min_dim=16, k_multiple=8))
+params = model.init(jax.random.PRNGKey(0))
+params, state = T.init_train_state(model, params, method,
+                                   jax.random.PRNGKey(1))
+step = jax.jit(T.make_train_step(model, method, sa.AdamConfig(lr=1e-3),
+                                 T.constant_lr(1e-3)))
+loader = ShardedLoader(generate("arith", 128, 32, seed=0), batch_size=8)
+ckpt = CheckpointManager(%(ckpt)r, keep=3)
+start = 0
+latest = ckpt.latest_step()
+if latest is not None:
+    sh = tree_shardings(model.axes(), mesh)
+    r = ckpt.restore(latest, {"params": params, "state": state})
+    params = jax.tree.map(
+        lambda x, s: jax.device_put(x, s), r["params"], sh)
+    state = r["state"]
+    loader.state = LoaderState.from_dict(ckpt.restore_meta(latest)["loader"])
+    start = latest
+    print(f"[{ndev}dev] resumed from step {latest}; params resharded onto "
+          f"mesh {mesh.devices.shape}")
+for i in range(start, %(steps)d):
+    b = {k: jnp.asarray(v) for k, v in loader.next_batch().items()}
+    params, state, metrics = step(params, state, b)
+    if (i + 1) %% 4 == 0:
+        ckpt.save(i + 1, {"params": params, "state": state},
+                  meta={"loader": loader.state.to_dict()})
+print(f"[{ndev}dev] finished at step {%(steps)d} "
+      f"loss={float(metrics['loss']):.4f}")
+import numpy as np
+np.save(%(out)r, np.asarray(jax.tree.leaves(params)[0], np.float32))
+"""
+
+
+def run_phase(ndev, dp, tp, ckpt, steps, out):
+    code = PHASE % dict(ndev=ndev, dp=dp, tp=tp, ckpt=ckpt, steps=steps,
+                        out=out)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True)
+    print(r.stdout, end="")
+    if r.returncode != 0:
+        print(r.stderr[-2000:])
+        raise SystemExit("phase failed")
+
+
+if __name__ == "__main__":
+    import numpy as np
+    with tempfile.TemporaryDirectory() as td:
+        ck = os.path.join(td, "ckpt")
+        a, b = os.path.join(td, "a.npy"), os.path.join(td, "b.npy")
+        print("phase 1: 4 devices (2x2), train to step 8, checkpointing")
+        run_phase(4, 2, 2, ck, 8, a)
+        print("phase 2: 8 devices (4x2), resume from the same checkpoint")
+        run_phase(8, 4, 2, ck, 12, b)
+        print("phase 3: 1 device, resume again (scale DOWN)")
+        run_phase(1, 1, 1, ck, 14, os.path.join(td, "c.npy"))
+        print("\nelastic restart OK: one checkpoint, three topologies")

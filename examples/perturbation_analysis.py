@@ -1,0 +1,55 @@
+"""Paper §4 (Fig. 2): Principal Weights are the fragile ones.
+
+Trains a small LM, then adds N(0, sigma^2) noise to (a) LIFT-selected,
+(b) largest-magnitude, (c) random parameter sets of equal size and reports
+the loss blow-up.  LIFT's selections should be dramatically more sensitive.
+
+    PYTHONPATH=src python examples/perturbation_analysis.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core.analysis import perturb_at_indices
+from repro.core.lift import LiftConfig, compute_indices, make_plan
+from repro.core import sparse_adam as sa
+from repro.data.loader import ShardedLoader
+from repro.data.synthetic import VOCAB_SIZE, generate
+from repro.models import ModelConfig, build_model
+from repro.training import trainer as T
+
+cfg = ModelConfig(family="dense", num_layers=2, d_model=96, num_heads=4,
+                  num_kv_heads=2, head_dim=24, d_ff=192,
+                  vocab_size=max(97, VOCAB_SIZE))
+model = build_model(cfg)
+
+# quick LM pre-training so the weights carry structure
+method = T.MethodConfig(kind="full")
+params = model.init(jax.random.PRNGKey(0))
+params, state = T.init_train_state(model, params, method,
+                                   jax.random.PRNGKey(1))
+step = jax.jit(T.make_train_step(model, method, sa.AdamConfig(lr=2e-3),
+                                 T.constant_lr(2e-3)))
+loader = ShardedLoader(generate("lm", 512, 40, seed=0), batch_size=16)
+for _ in range(60):
+    b = {k: jnp.asarray(v) for k, v in loader.next_batch().items()}
+    params, state, _ = step(params, state, b)
+
+batch = {k: jnp.asarray(v) for k, v in
+         generate("lm", 128, 40, seed=99).items()}
+base = float(model.loss(params, batch)[0])
+print(f"clean loss {base:.4f}\n")
+print(f"{'selection':<12}" + "".join(f"sigma={s:<8}" for s in
+                                     (0.01, 0.02, 0.05)))
+for sel in ["lift", "magnitude", "random"]:
+    lcfg = LiftConfig(rank=8, match_rank=2, method="exact", selection=sel,
+                      min_dim=16)
+    plan = make_plan(model.spec(), lcfg)
+    idx = compute_indices(params, plan, lcfg, jax.random.PRNGKey(3))
+    row = []
+    for scale in (0.01, 0.02, 0.05):
+        pert = perturb_at_indices(params, idx, plan, scale,
+                                  jax.random.PRNGKey(7))
+        row.append(float(model.loss(pert, batch)[0]) - base)
+    print(f"{sel:<12}" + "".join(f"+{d:<13.4f}"[:14] for d in row))
+print("\n(larger = more damage; LIFT-selected Principal Weights should "
+      "dominate, paper Fig. 2)")

@@ -1,0 +1,58 @@
+"""Quickstart: LIFT in ~40 lines.
+
+Builds a small decoder LM, selects the Principal Weights (top-5 % magnitude
+entries after rank-8 reduction), fine-tunes ONLY those with the sparse
+AdamW, and shows that (a) the loss drops, (b) only ~5 % of entries moved,
+(c) optimizer state is tiny.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sparse_adam as sa
+from repro.core.lift import LiftConfig
+from repro.data.loader import ShardedLoader
+from repro.data.synthetic import VOCAB_SIZE, generate
+from repro.models import ModelConfig, build_model
+from repro.training import trainer as T
+
+cfg = ModelConfig(family="dense", num_layers=2, d_model=96, num_heads=4,
+                  num_kv_heads=2, head_dim=24, d_ff=192,
+                  vocab_size=max(97, VOCAB_SIZE))
+model = build_model(cfg)
+
+method = T.MethodConfig(kind="lift", lift=LiftConfig(
+    rank=8,           # LRA rank r: W' = SVD_r(W)
+    density=0.05,     # keep the top-5% of |W'| -> Principal Weights
+    method="exact", min_dim=16, update_interval=25))
+
+params = model.init(jax.random.PRNGKey(0))
+params0 = params
+params, state = T.init_train_state(model, params, method,
+                                   jax.random.PRNGKey(1))
+step = jax.jit(T.make_train_step(model, method, sa.AdamConfig(lr=2e-3),
+                                 T.constant_lr(2e-3)))
+refresh = jax.jit(T.make_refresh_step(model, method))
+
+loader = ShardedLoader(generate("arith", 512, 40, seed=0), batch_size=16)
+for i in range(50):
+    batch = {k: jnp.asarray(v) for k, v in loader.next_batch().items()}
+    params, state, metrics = step(params, state, batch)
+    if (i + 1) % 25 == 0:
+        state = refresh(params, state, jax.random.PRNGKey(i))
+    if i % 10 == 0 or i == 49:
+        print(f"step {i:3d}  loss {float(metrics['loss']):.4f}")
+
+changed = sum(int((np.asarray(a) != np.asarray(b)).sum())
+              for a, b in zip(jax.tree.leaves(params0),
+                              jax.tree.leaves(params)))
+total = sum(x.size for x in jax.tree.leaves(params))
+opt_bytes = sum(x.size * x.dtype.itemsize
+                for x in jax.tree.leaves(state["opt"]))
+full_opt_bytes = 8 * total
+print(f"\nchanged {changed}/{total} params ({100 * changed / total:.2f}%)")
+print(f"optimizer state {opt_bytes / 1e6:.2f} MB "
+      f"(Full-FT AdamW would be {full_opt_bytes / 1e6:.2f} MB -> "
+      f"{100 * opt_bytes / full_opt_bytes:.1f}%)")

@@ -1,0 +1,172 @@
+"""Sharded, atomic, elastic checkpointing (no orbax dependency).
+
+Layout per step:
+    <dir>/step_000123.tmp/...      (write)
+    <dir>/step_000123/             (atomic rename-commit)
+        manifest.json              tree structure, shapes, dtypes, metadata
+        arrays.npz                 leaf data, keyed by escaped path
+
+Guarantees:
+  * atomic: a checkpoint directory either exists fully or not at all
+    (write to .tmp, fsync, os.replace) — a crash mid-write is harmless;
+  * elastic: leaves are stored as LOGICAL (unsharded) arrays; `restore`
+    re-device_puts them under whatever mesh/shardings the restarted job
+    uses, so pod counts can change between runs;
+  * self-pruning: keep the newest `keep` checkpoints;
+  * async: `save_async` hands the (host-materialized) tree to a writer
+    thread so the train loop is not blocked by serialization.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import re
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree.keys()):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)) and not hasattr(tree, "_fields"):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    elif hasattr(tree, "_fields"):  # NamedTuple
+        for k in tree._fields:
+            out.update(_flatten(getattr(tree, k), f"{prefix}{k}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten_into(like, flat, prefix=""):
+    """Rebuild a tree shaped `like` from flat {path: np.ndarray}."""
+    if isinstance(like, dict):
+        return {k: _unflatten_into(v, flat, f"{prefix}{k}/")
+                for k, v in like.items()}
+    if hasattr(like, "_fields"):
+        return type(like)(*[
+            _unflatten_into(getattr(like, k), flat, f"{prefix}{k}/")
+            for k in like._fields])
+    if isinstance(like, (list, tuple)):
+        return type(like)(_unflatten_into(v, flat, f"{prefix}{i}/")
+                          for i, v in enumerate(like))
+    return flat[prefix[:-1]]
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._q: queue.Queue = queue.Queue(maxsize=2)
+        self._worker: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------- save
+    def save(self, step: int, tree, meta: Optional[dict] = None):
+        flat = _flatten(tree)
+        host = {k: np.asarray(v) for k, v in flat.items()}
+        self._write(step, host, meta or {})
+
+    def save_async(self, step: int, tree, meta: Optional[dict] = None):
+        if self._error is not None:
+            raise RuntimeError("async checkpoint writer failed") \
+                from self._error
+        flat = _flatten(tree)
+        host = {k: np.asarray(v) for k, v in flat.items()}  # D2H now
+        if self._worker is None or not self._worker.is_alive():
+            self._worker = threading.Thread(target=self._drain, daemon=True)
+            self._worker.start()
+        self._q.put((step, host, meta or {}))
+
+    def wait(self):
+        if self._worker is not None:
+            self._q.join()
+        if self._error is not None:
+            raise RuntimeError("async checkpoint writer failed") \
+                from self._error
+
+    def _drain(self):
+        while True:
+            step, host, meta = self._q.get()
+            try:
+                self._write(step, host, meta)
+            except BaseException as e:  # surfaced on next save/wait
+                self._error = e
+            finally:
+                self._q.task_done()
+
+    def _write(self, step: int, host: dict, meta: dict):
+        name = f"step_{step:08d}"
+        tmp = os.path.join(self.dir, name + ".tmp")
+        final = os.path.join(self.dir, name)
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{k.replace("/", "\x1f"): v for k, v in host.items()})
+        manifest = {
+            "step": step,
+            "meta": meta,
+            "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                       for k, v in host.items()},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        self._prune()
+
+    def _prune(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep > 0 else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # ---------------------------------------------------------- restore
+    def all_steps(self) -> list[int]:
+        out = []
+        for d in os.listdir(self.dir):
+            mm = _STEP_RE.match(d)
+            if mm and os.path.exists(
+                    os.path.join(self.dir, d, "manifest.json")):
+                out.append(int(mm.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, like, shardings=None):
+        """Rebuild a tree shaped `like`.  If `shardings` (same structure or
+        None) is given, leaves are device_put with those shardings —
+        this is the elastic-reshard path."""
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        with np.load(os.path.join(path, "arrays.npz")) as z:
+            flat = {k.replace("\x1f", "/"): z[k] for k in z.files}
+        tree = _unflatten_into(like, flat)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda x, s: jax.device_put(x, s) if s is not None else
+                jax.device_put(x), tree, shardings)
+        else:
+            tree = jax.tree.map(jax.numpy.asarray, tree)
+        return tree
+
+    def restore_meta(self, step: int) -> dict:
+        path = os.path.join(self.dir, f"step_{step:08d}", "manifest.json")
+        with open(path) as f:
+            return json.load(f)["meta"]

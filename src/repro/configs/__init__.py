@@ -1,0 +1,29 @@
+"""Architecture registry: --arch <id> resolves here."""
+from repro.configs import (gemma_7b, hubert_xlarge, llama2_7b,
+                           llava_next_mistral_7b, mixtral_8x22b,
+                           moonshot_16b, qwen2_72b, qwen2_7b, qwen3_1_7b,
+                           rwkv6_1_6b, zamba2_1_2b)
+from repro.configs.base import LM_SHAPES, ArchBundle, ShapeSpec  # noqa: F401
+
+ARCHS = {
+    "qwen3-1.7b": qwen3_1_7b.BUNDLE,
+    "qwen2-7b": qwen2_7b.BUNDLE,
+    "qwen2-72b": qwen2_72b.BUNDLE,
+    "gemma-7b": gemma_7b.BUNDLE,
+    "moonshot-16b-a3b": moonshot_16b.BUNDLE,
+    "mixtral-8x22b": mixtral_8x22b.BUNDLE,
+    "rwkv6-1.6b": rwkv6_1_6b.BUNDLE,
+    "hubert-xlarge": hubert_xlarge.BUNDLE,
+    "llava-next-mistral-7b": llava_next_mistral_7b.BUNDLE,
+    "zamba2-1.2b": zamba2_1_2b.BUNDLE,
+    # the paper's own model (not part of the assigned 10)
+    "llama2-7b": llama2_7b.BUNDLE,
+}
+
+ASSIGNED = [k for k in ARCHS if k != "llama2-7b"]
+
+
+def get_arch(name: str) -> ArchBundle:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]

@@ -1,0 +1,61 @@
+"""Config system: architecture bundles (full + smoke + shapes + sharding)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+
+LM_SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchBundle:
+    name: str
+    full: ModelConfig
+    smoke: ModelConfig
+    skips: dict            # shape_name -> reason (documented in DESIGN.md)
+    rules: dict            # sharding-rule overrides (e.g. FSDP)
+    notes: str = ""
+
+    def shapes(self):
+        return {k: v for k, v in LM_SHAPES.items() if k not in self.skips}
+
+
+# dry-run numerics: bf16 params/compute, remat, streaming attention + loss
+DRYRUN_OPTS = dict(
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+    remat=True,
+    scan_layers=True,
+    attn_chunk=1024,
+    loss_chunk=512,
+)
+
+# reduced smoke numerics: tiny fp32, naive attention
+SMOKE_OPTS = dict(
+    param_dtype="float32",
+    compute_dtype="float32",
+    remat=False,
+    scan_layers=True,
+)
+
+FSDP_RULES = {"embed": ("data",)}   # ZeRO-3-style weight sharding over data
+
+FULL_ATTN_SKIP = ("pure full-attention architecture: 500k decode KV cache "
+                  "is quadratic-history; assignment says skip")
+ENCODER_SKIP = "encoder-only architecture: no autoregressive decode step"

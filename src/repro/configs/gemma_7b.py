@@ -1,0 +1,23 @@
+"""gemma-7b [dense] 28L d_model=3072 16H (kv=16) d_ff=24576 vocab=256000
+— GeGLU, head_dim=256.  [arXiv:2403.08295; hf]"""
+from repro.configs.base import (ArchBundle, DRYRUN_OPTS, FULL_ATTN_SKIP,
+                                SMOKE_OPTS)
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="gemma-7b", family="dense", num_layers=28, d_model=3072,
+    num_heads=16, num_kv_heads=16, head_dim=256, d_ff=24_576,
+    vocab_size=256_000, mlp_act="gelu", tie_embeddings=True,
+    scale_embeddings=True, **DRYRUN_OPTS)
+
+SMOKE = ModelConfig(
+    name="gemma-smoke", family="dense", num_layers=2, d_model=48,
+    num_heads=4, num_kv_heads=4, head_dim=16, d_ff=128, vocab_size=128,
+    mlp_act="gelu", tie_embeddings=True, scale_embeddings=True,
+    **SMOKE_OPTS)
+
+BUNDLE = ArchBundle(
+    name="gemma-7b", full=FULL, smoke=SMOKE,
+    skips={"long_500k": FULL_ATTN_SKIP}, rules={},
+    notes="GeGLU MLP, head_dim=256 (q_dim 4096 > d_model), tied+scaled "
+          "embeddings, 256k vocab -> chunked CE is essential")

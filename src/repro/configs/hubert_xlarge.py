@@ -1,0 +1,25 @@
+"""hubert-xlarge [audio] 48L d_model=1280 16H (kv=16) d_ff=5120 vocab=504
+— encoder-only; conv frontend is a STUB (input_specs provides frame
+embeddings).  [arXiv:2106.07447]"""
+from repro.configs.base import (ArchBundle, DRYRUN_OPTS, ENCODER_SKIP,
+                                SMOKE_OPTS)
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="hubert-xlarge", family="encoder", num_layers=48, d_model=1280,
+    num_heads=16, num_kv_heads=16, head_dim=80, d_ff=5120, vocab_size=504,
+    causal=False, mlp_glu=False, mlp_act="gelu", input_mode="embeddings",
+    **DRYRUN_OPTS)
+
+SMOKE = ModelConfig(
+    name="hubert-smoke", family="encoder", num_layers=2, d_model=64,
+    num_heads=4, num_kv_heads=4, head_dim=16, d_ff=128, vocab_size=504,
+    causal=False, mlp_glu=False, mlp_act="gelu", input_mode="embeddings",
+    **SMOKE_OPTS)
+
+BUNDLE = ArchBundle(
+    name="hubert-xlarge", full=FULL, smoke=SMOKE,
+    skips={"decode_32k": ENCODER_SKIP, "long_500k": ENCODER_SKIP},
+    rules={},
+    notes="masked-prediction loss over 504 codebook classes; "
+          "train/prefill shapes take (B, S, 1280) frame embeddings")

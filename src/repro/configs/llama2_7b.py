@@ -1,0 +1,20 @@
+"""llama2-7b — the paper's own primary model (Tables 1, 2; Figs. 2, 5, 13).
+32L d_model=4096 32H MHA d_ff=11008 vocab=32000.  [arXiv:2307.09288]"""
+from repro.configs.base import (ArchBundle, DRYRUN_OPTS, FULL_ATTN_SKIP,
+                                SMOKE_OPTS)
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="llama2-7b", family="dense", num_layers=32, d_model=4096,
+    num_heads=32, num_kv_heads=32, head_dim=128, d_ff=11_008,
+    vocab_size=32_000, **DRYRUN_OPTS)
+
+SMOKE = ModelConfig(
+    name="llama2-smoke", family="dense", num_layers=2, d_model=64,
+    num_heads=4, num_kv_heads=4, head_dim=16, d_ff=128, vocab_size=128,
+    **SMOKE_OPTS)
+
+BUNDLE = ArchBundle(
+    name="llama2-7b", full=FULL, smoke=SMOKE,
+    skips={"long_500k": FULL_ATTN_SKIP}, rules={},
+    notes="paper's primary experimental model")

@@ -1,0 +1,23 @@
+"""llava-next-mistral-7b [vlm] 32L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=32000 — anyres tiling; vision frontend is a STUB (input_specs
+provides patch embeddings).  [hf:llava-hf/llava-v1.6-mistral-7b-hf]"""
+from repro.configs.base import (ArchBundle, DRYRUN_OPTS, FULL_ATTN_SKIP,
+                                SMOKE_OPTS)
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="llava-next-mistral-7b", family="dense", num_layers=32,
+    d_model=4096, num_heads=32, num_kv_heads=8, head_dim=128, d_ff=14_336,
+    vocab_size=32_000, input_mode="embeddings", **DRYRUN_OPTS)
+
+SMOKE = ModelConfig(
+    name="llava-smoke", family="dense", num_layers=2, d_model=64,
+    num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128, vocab_size=128,
+    input_mode="embeddings", **SMOKE_OPTS)
+
+BUNDLE = ArchBundle(
+    name="llava-next-mistral-7b", full=FULL, smoke=SMOKE,
+    skips={"long_500k": FULL_ATTN_SKIP}, rules={},
+    notes="Mistral-7B backbone; train/prefill consume pre-projected "
+          "patch+text embeddings (anyres tiling happens in the stub), "
+          "decode is standard token decode")

@@ -1,0 +1,30 @@
+"""mixtral-8x22b [moe] 56L d_model=6144 48H (GQA kv=8) d_ff=16384
+vocab=32768, MoE 8e top-2, SWA.  [arXiv:2401.04088; hf]"""
+from repro.configs.base import (ArchBundle, DRYRUN_OPTS, FSDP_RULES,
+                                SMOKE_OPTS)
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="mixtral-8x22b", family="moe", num_layers=56, d_model=6144,
+    num_heads=48, num_kv_heads=8, head_dim=128, d_ff=16_384,
+    vocab_size=32_768, num_experts=8, num_experts_per_tok=2,
+    sliding_window=4096, capacity_factor=1.25, moe_groups=16,
+    rope_theta=1_000_000.0, **DRYRUN_OPTS)
+
+SMOKE = ModelConfig(
+    name="mixtral-smoke", family="moe", num_layers=2, d_model=64,
+    num_heads=4, num_kv_heads=2, head_dim=16, d_ff=64, vocab_size=128,
+    num_experts=4, num_experts_per_tok=2, sliding_window=16,
+    capacity_factor=2.0, **SMOKE_OPTS)
+
+BUNDLE = ArchBundle(
+    name="mixtral-8x22b", full=FULL, smoke=SMOKE,
+    skips={},
+    # 8 experts < TP=16: expert-parallelism cannot use the whole model axis,
+    # so experts replicate over the axis name and instead shard d (over
+    # data, FSDP) x d_ff (over model) — tensor-parallel experts.
+    rules={**FSDP_RULES, "experts": (), "expert_mlp": ("model",)},
+    notes="SWA window 4096 -> long_500k decode runs with a rolling-buffer "
+          "cache (4096 slots, key_pos disambiguation) — sub-quadratic "
+          "history, so the 500k cell is IN scope. 281 GB bf16 params: "
+          "FSDP x TP expert sharding (E=8 < TP=16 rules out pure EP)")

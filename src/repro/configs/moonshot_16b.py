@@ -1,0 +1,24 @@
+"""moonshot-v1-16b-a3b [moe] 48L d_model=2048 16H (GQA kv=16) d_ff=1408
+vocab=163840, MoE 64e top-6 — kimi/moonlight.
+[hf:moonshotai/Moonlight-16B-A3B; hf]"""
+from repro.configs.base import (ArchBundle, DRYRUN_OPTS, FULL_ATTN_SKIP,
+                                SMOKE_OPTS)
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="moonshot-16b-a3b", family="moe", num_layers=48, d_model=2048,
+    num_heads=16, num_kv_heads=16, head_dim=128, d_ff=1408,
+    vocab_size=163_840, num_experts=64, num_experts_per_tok=6,
+    capacity_factor=1.25, moe_groups=16, **DRYRUN_OPTS)
+
+SMOKE = ModelConfig(
+    name="moonshot-smoke", family="moe", num_layers=2, d_model=64,
+    num_heads=4, num_kv_heads=4, head_dim=16, d_ff=32, vocab_size=128,
+    num_experts=8, num_experts_per_tok=2, capacity_factor=2.0,
+    **SMOKE_OPTS)
+
+BUNDLE = ArchBundle(
+    name="moonshot-16b-a3b", full=FULL, smoke=SMOKE,
+    skips={"long_500k": FULL_ATTN_SKIP}, rules={},
+    notes="64 experts top-6, expert-parallel over model axis (4 experts "
+          "per device at TP=16); LIFT vmaps per-expert LRA")

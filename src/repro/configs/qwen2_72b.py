@@ -1,0 +1,21 @@
+"""qwen2-72b [dense] 80L d_model=8192 64H (GQA kv=8) d_ff=29568
+vocab=152064 — GQA, QKV bias.  [arXiv:2407.10671; hf]"""
+from repro.configs.base import (ArchBundle, DRYRUN_OPTS, FSDP_RULES,
+                                FULL_ATTN_SKIP, SMOKE_OPTS)
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="qwen2-72b", family="dense", num_layers=80, d_model=8192,
+    num_heads=64, num_kv_heads=8, head_dim=128, d_ff=29_568,
+    vocab_size=152_064, qkv_bias=True, rope_theta=1_000_000.0,
+    **DRYRUN_OPTS)
+
+SMOKE = ModelConfig(
+    name="qwen2-72b-smoke", family="dense", num_layers=3, d_model=64,
+    num_heads=8, num_kv_heads=1, head_dim=8, d_ff=160, vocab_size=128,
+    qkv_bias=True, **SMOKE_OPTS)
+
+BUNDLE = ArchBundle(
+    name="qwen2-72b", full=FULL, smoke=SMOKE,
+    skips={"long_500k": FULL_ATTN_SKIP}, rules=FSDP_RULES,
+    notes="145 GB of bf16 params: FSDP(embed->data) x TP(model) sharding")

@@ -1,0 +1,23 @@
+"""qwen2-7b [dense] 28L d_model=3584 28H (GQA kv=4) d_ff=18944
+vocab=152064 — GQA, QKV bias.  [arXiv:2407.10671; hf]"""
+from repro.configs.base import (ArchBundle, DRYRUN_OPTS, FULL_ATTN_SKIP,
+                                SMOKE_OPTS)
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="qwen2-7b", family="dense", num_layers=28, d_model=3584,
+    num_heads=28, num_kv_heads=4, head_dim=128, d_ff=18_944,
+    vocab_size=152_064, qkv_bias=True, rope_theta=1_000_000.0,
+    **DRYRUN_OPTS)
+
+SMOKE = ModelConfig(
+    name="qwen2-smoke", family="dense", num_layers=2, d_model=56,
+    num_heads=7, num_kv_heads=1, head_dim=8, d_ff=128, vocab_size=128,
+    qkv_bias=True, **SMOKE_OPTS)
+
+BUNDLE = ArchBundle(
+    name="qwen2-7b", full=FULL, smoke=SMOKE,
+    skips={"long_500k": FULL_ATTN_SKIP}, rules={},
+    notes="28 q-heads / 4 kv-heads do not divide TP=16: XLA pads the "
+          "q-head dim (28->32) and KV projections are replicated "
+          "(DESIGN.md §3)")

@@ -1,0 +1,21 @@
+"""qwen3-1.7b [dense] 28L d_model=2048 16H (GQA kv=8) d_ff=6144
+vocab=151936 — qk_norm, GQA.  [hf:Qwen/Qwen3-8B family; hf]"""
+from repro.configs.base import (ArchBundle, DRYRUN_OPTS, FULL_ATTN_SKIP,
+                                SMOKE_OPTS)
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="qwen3-1.7b", family="dense", num_layers=28, d_model=2048,
+    num_heads=16, num_kv_heads=8, head_dim=128, d_ff=6144,
+    vocab_size=151_936, qk_norm=True, rope_theta=1_000_000.0,
+    **DRYRUN_OPTS)
+
+SMOKE = ModelConfig(
+    name="qwen3-smoke", family="dense", num_layers=2, d_model=64,
+    num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128, vocab_size=128,
+    qk_norm=True, **SMOKE_OPTS)
+
+BUNDLE = ArchBundle(
+    name="qwen3-1.7b", full=FULL, smoke=SMOKE,
+    skips={"long_500k": FULL_ATTN_SKIP}, rules={},
+    notes="qk-norm per head before RoPE (Qwen3)")

@@ -1,0 +1,23 @@
+"""rwkv6-1.6b [ssm] 24L d_model=2048 (attn-free) d_ff=7168 vocab=65536
+— Finch, data-dependent decay.  [arXiv:2404.05892]"""
+from repro.configs.base import ArchBundle, DRYRUN_OPTS, SMOKE_OPTS
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="rwkv6-1.6b", family="rwkv6", num_layers=24, d_model=2048,
+    num_heads=32, num_kv_heads=32, head_dim=64, d_ff=7168,
+    vocab_size=65_536, rwkv_head_dim=64, rwkv_decay_lora=64,
+    rwkv_mix_lora=32, ssm_chunk=64, **DRYRUN_OPTS)
+
+SMOKE = ModelConfig(
+    name="rwkv6-smoke", family="rwkv6", num_layers=2, d_model=64,
+    num_heads=8, num_kv_heads=8, head_dim=8, d_ff=128, vocab_size=128,
+    rwkv_head_dim=8, rwkv_decay_lora=8, rwkv_mix_lora=4, ssm_chunk=8,
+    **SMOKE_OPTS)
+
+BUNDLE = ArchBundle(
+    name="rwkv6-1.6b", full=FULL, smoke=SMOKE,
+    skips={}, rules={},
+    notes="attention-free: O(1) decode state -> long_500k runs; LIFT "
+          "applies to all time/channel-mix projections (decay-LoRA "
+          "vectors excluded, DESIGN.md §6)")

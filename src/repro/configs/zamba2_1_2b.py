@@ -1,0 +1,26 @@
+"""zamba2-1.2b [hybrid] 38L d_model=2048 32H (kv=32) d_ff=8192 vocab=32000,
+ssm_state=64 — Mamba2 backbone + shared attention blocks.
+[arXiv:2411.15242; hf]"""
+from repro.configs.base import ArchBundle, DRYRUN_OPTS, SMOKE_OPTS
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="zamba2-1.2b", family="hybrid", num_layers=38, d_model=2048,
+    num_heads=32, num_kv_heads=32, head_dim=128, d_ff=8192,
+    vocab_size=32_000, ssm_state=64, ssm_expand=2, ssm_head_dim=64,
+    ssm_conv=4, ssm_chunk=64, shared_attn_period=6,
+    **{**DRYRUN_OPTS, "scan_layers": False})
+
+SMOKE = ModelConfig(
+    name="zamba2-smoke", family="hybrid", num_layers=4, d_model=64,
+    num_heads=4, num_kv_heads=4, head_dim=32, d_ff=128, vocab_size=128,
+    ssm_state=8, ssm_expand=2, ssm_head_dim=16, ssm_conv=4, ssm_chunk=8,
+    shared_attn_period=2, **{**SMOKE_OPTS, "scan_layers": False})
+
+BUNDLE = ArchBundle(
+    name="zamba2-1.2b", full=FULL, smoke=SMOKE,
+    skips={}, rules={},
+    notes="shared attention block every 6 mamba layers on "
+          "concat(hidden, embeddings) width 2*d_model (32H x 128 = 4096); "
+          "O(1) mamba state -> long_500k runs (shared-block KV caches are "
+          "sequence-sharded)")

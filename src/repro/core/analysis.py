@@ -1,0 +1,90 @@
+"""Analysis tools reproducing the paper's §4 / §7 / App. C & G studies:
+perturbation of selected weights, eigenspace alignment score (App. H.1),
+update-matrix rank (App. G.3), spectral-norm change (App. C), and the
+weight-update magnitude distribution (Fig. 5).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lift import TensorPlan, get_by_path, set_by_path
+from repro.core.lowrank import spectral_norm
+
+
+def perturb_at_indices(params, indices: dict[str, jax.Array],
+                       plan: dict[str, TensorPlan], scale: float,
+                       key: jax.Array):
+    """Add N(0, scale^2) noise at the selected flat indices (paper §4)."""
+    out = params
+    paths = sorted(indices.keys())
+    keys = jax.random.split(key, len(paths))
+    for kk, path in zip(keys, paths):
+        p = plan[path]
+        leaf = get_by_path(params, path)
+        ns = int(np.prod(p.stack)) if p.stack else 1
+        flat = leaf.reshape(ns, p.rows * p.cols)
+        idx = indices[path]
+        noise = scale * jax.random.normal(kk, idx.shape, jnp.float32)
+        cur = jnp.take_along_axis(flat, idx, axis=1).astype(jnp.float32)
+        flat = jnp.put_along_axis(flat, idx, (cur + noise).astype(flat.dtype),
+                                  axis=1, inplace=False)
+        out = set_by_path(out, path, flat.reshape(p.shape))
+    return out
+
+
+def alignment_score(w_before: jax.Array, w_after: jax.Array,
+                    top_n: int = 128) -> jax.Array:
+    """App. H.1: mean squared projection of the fine-tuned top right singular
+    vectors onto the pre-trained top subspace.  1 = unchanged eigenspace."""
+    n = min(top_n, min(w_before.shape))
+    _, _, vt0 = jnp.linalg.svd(w_before.astype(jnp.float32),
+                               full_matrices=False)
+    _, _, vt1 = jnp.linalg.svd(w_after.astype(jnp.float32),
+                               full_matrices=False)
+    v0 = vt0[:n]                     # (n, cols)
+    v1 = vt1[:n]
+    proj = v1 @ v0.T                 # (n, n): v1_i . v0_j
+    d = jnp.sum(proj * proj, axis=1)
+    return jnp.mean(d)
+
+
+def update_rank(delta: jax.Array, tol_mult: float = 10.0) -> jax.Array:
+    """App. G.3: count of singular values above 10x the default matrix_rank
+    tolerance max(m, n) * sigma_max * eps."""
+    d32 = delta.astype(jnp.float32)
+    s = jnp.linalg.svd(d32, compute_uv=False)
+    tol = tol_mult * max(delta.shape) * s[0] * jnp.finfo(jnp.float32).eps
+    return jnp.sum(s > tol)
+
+
+def spectral_norm_change(w_before: jax.Array, w_after: jax.Array,
+                         key: Optional[jax.Array] = None) -> jax.Array:
+    return spectral_norm(w_after, key=key) - spectral_norm(w_before, key=key)
+
+
+def update_magnitude_histogram(w_before, w_after, bins: int = 61,
+                               lim: float = 0.003):
+    """Fig. 5: histogram of (W_after - W_before) entries."""
+    delta = (np.asarray(w_after, np.float32)
+             - np.asarray(w_before, np.float32)).reshape(-1)
+    hist, edges = np.histogram(delta, bins=bins, range=(-lim, lim))
+    return hist, edges
+
+
+def tree_update_stats(before, after):
+    """Aggregate |delta| stats over a param tree."""
+    total, changed, sq = 0, 0, 0.0
+    mx = 0.0
+    for b, a in zip(jax.tree.leaves(before), jax.tree.leaves(after)):
+        d = np.asarray(a, np.float32) - np.asarray(b, np.float32)
+        total += d.size
+        changed += int((d != 0).sum())
+        sq += float((d * d).sum())
+        mx = max(mx, float(np.abs(d).max()))
+    return {"total": total, "changed": changed,
+            "frac_changed": changed / max(total, 1),
+            "l2": sq ** 0.5, "max": mx}

@@ -1,0 +1,239 @@
+"""LIFT: Low-rank Informed Sparse Fine-Tuning — mask machinery.
+
+Pipeline per eligible weight matrix W (paper §3.2):
+  1. rank-r approximation  W' = A B^T           (core/lowrank.py)
+  2. Principal Weights     idx = top-k of |W'|  (eq. 2)
+  3. fine-tune only idx; optimizer state lives in (k,) vectors (eq. 3)
+  4. every `update_interval` steps the mask is recomputed and optimizer
+     state migrated (Algorithm 1)
+
+Param trees may stack layers/experts on leading axes; LIFT treats each
+(rows x cols) matrix independently (vmapped over the stack).  Which trailing
+dims fold into rows vs cols comes from each Spec's `matrix_split`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lowrank
+from repro.nn.core import Spec, is_spec
+
+STACK_AXES = ("layers", "experts")
+
+
+@dataclasses.dataclass(frozen=True)
+class LiftConfig:
+    rank: int = 128               # LRA rank r
+    match_rank: int = 0           # k = match_rank * (rows + cols) (LoRA-matched)
+    density: float = 0.05         # used if match_rank == 0
+    method: str = "randomized"    # exact | randomized
+    strategy: str = "largest"     # App. B.2: largest | smallest | random | hybrid
+    selection: str = "lift"       # lift | magnitude | gradient | movement | random
+    scope: str = "all"            # all | mlp  (LIFT_MLP, App. G.4)
+    min_dim: int = 32
+    include_embed: bool = False
+    train_other: bool = False     # dense-train the non-eligible params
+    update_interval: int = 200
+    block_size: int = 1           # App. G.7 structured LIFT (e.g. 4)
+    oversample: int = 8
+    power_iters: int = 2
+    use_kernel: bool = False      # Pallas fused mask kernel (kernels/)
+    k_multiple: int = 8           # k rounded up (1024 in production so the
+                                  # (ns, k) state shards evenly over the mesh)
+
+    def replace(self, **kw):
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorPlan:
+    path: str
+    shape: tuple          # full leaf shape
+    stack: tuple          # leading stack dims
+    rows: int
+    cols: int
+    k: int                # selected entries per matrix
+
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+        else:
+            out.append(str(p))
+    return "/".join(out)
+
+
+_MLP_TOKENS = ("mlp", "moe", "cmix", "mixer")
+
+
+def make_plan(spec_tree, cfg: LiftConfig) -> dict[str, TensorPlan]:
+    """Decide which tensors LIFT masks and their matrix geometry."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(spec_tree, is_leaf=is_spec)
+    plan: dict[str, TensorPlan] = {}
+    for path, spec in flat:
+        ps = _path_str(path)
+        axes, shape = spec.axes, spec.shape
+        n_stack = 0
+        while n_stack < len(axes) and axes[n_stack] in STACK_AXES:
+            n_stack += 1
+        mat_dims = shape[n_stack:]
+        if len(mat_dims) < 2:
+            continue
+        split = max(1, min(spec.matrix_split, len(mat_dims) - 1))
+        rows = int(np.prod(mat_dims[:split]))
+        cols = int(np.prod(mat_dims[split:]))
+        if min(rows, cols) < cfg.min_dim:
+            continue
+        if not cfg.include_embed and "vocab" in axes:
+            continue
+        if cfg.scope == "mlp" and not any(t in ps for t in _MLP_TOKENS):
+            continue
+        if cfg.match_rank > 0:
+            k = cfg.match_rank * (rows + cols)
+        else:
+            k = int(cfg.density * rows * cols)
+        mult = max(cfg.k_multiple, 1)
+        k = -(-k // mult) * mult
+        k = int(min(max(k, 1), rows * cols))
+        if cfg.block_size > 1:
+            bs2 = cfg.block_size ** 2
+            k = max(bs2, (k // bs2) * bs2)
+        plan[ps] = TensorPlan(ps, tuple(shape), tuple(shape[:n_stack]),
+                              rows, cols, k)
+    return plan
+
+
+def get_by_path(tree, path: str):
+    if isinstance(tree, dict) and path in tree:  # flat {path: leaf} dicts
+        return tree[path]
+    node = tree
+    for seg in path.split("/"):
+        node = node[seg]
+    return node
+
+
+def set_by_path(tree, path: str, value):
+    """Functionally replace tree[path] (nested or flat {path: leaf} dicts)."""
+    if isinstance(tree, dict) and path in tree:
+        new = dict(tree)
+        new[path] = value
+        return new
+    segs = path.split("/")
+
+    def rec(node, i):
+        if i == len(segs) - 1:
+            new = dict(node)
+            new[segs[i]] = value
+            return new
+        new = dict(node)
+        new[segs[i]] = rec(node[segs[i]], i + 1)
+        return new
+
+    return rec(tree, 0)
+
+
+# --------------------------------------------------------------- scoring
+def lift_scores(w2d: jax.Array, cfg: LiftConfig,
+                key: Optional[jax.Array] = None) -> jax.Array:
+    """|W'| for a single (rows, cols) matrix."""
+    a, b = lowrank.lowrank_factors(
+        w2d, cfg.rank, method=cfg.method, strategy=cfg.strategy, key=key,
+        oversample=cfg.oversample, iters=cfg.power_iters)
+    if cfg.use_kernel:
+        from repro.kernels import ops as kops
+        return kops.lowrank_abs(a, b)
+    return jnp.abs(a @ b.T)
+
+
+def scores_for(w2d: jax.Array, cfg: LiftConfig, selection: str,
+               key: Optional[jax.Array] = None,
+               grad2d: Optional[jax.Array] = None) -> jax.Array:
+    if selection == "lift":
+        return lift_scores(w2d, cfg, key)
+    if selection == "magnitude":
+        return jnp.abs(w2d.astype(jnp.float32))
+    if selection == "gradient":
+        assert grad2d is not None, "gradient selection needs a gradient sample"
+        return jnp.abs(grad2d.astype(jnp.float32))
+    if selection == "movement":
+        assert grad2d is not None, "movement selection needs a gradient sample"
+        return (-w2d.astype(jnp.float32) * grad2d.astype(jnp.float32))
+    if selection == "random":
+        assert key is not None
+        return jax.random.uniform(key, w2d.shape, jnp.float32)
+    raise ValueError(selection)
+
+
+def topk_indices(scores2d: jax.Array, k: int, block_size: int = 1) -> jax.Array:
+    """Flat indices (sorted ascending) of the top-k score entries.
+
+    block_size > 1 implements structured LIFT (App. G.7): scores are summed
+    over (bs x bs) blocks and whole blocks are selected.
+    """
+    rows, cols = scores2d.shape
+    if block_size > 1:
+        bs = block_size
+        assert rows % bs == 0 and cols % bs == 0, (rows, cols, bs)
+        nb_r, nb_c = rows // bs, cols // bs
+        blocks = scores2d.reshape(nb_r, bs, nb_c, bs).sum(axis=(1, 3))
+        kb = k // (bs * bs)
+        _, bidx = jax.lax.top_k(blocks.reshape(-1), kb)
+        br, bc = bidx // nb_c, bidx % nb_c
+        rr = (br[:, None, None] * bs + jnp.arange(bs)[None, :, None])
+        cc = (bc[:, None, None] * bs + jnp.arange(bs)[None, None, :])
+        flat = (rr * cols + cc).reshape(-1)
+        return jnp.sort(flat)
+    _, idx = jax.lax.top_k(scores2d.reshape(-1), k)
+    return jnp.sort(idx)
+
+
+def mask_from_indices(idx: jax.Array, rows: int, cols: int) -> jax.Array:
+    m = jnp.zeros((rows * cols,), jnp.bool_).at[idx].set(True)
+    return m.reshape(rows, cols)
+
+
+# ----------------------------------------------------------- whole trees
+def _leaf_matrices(leaf: jax.Array, plan: TensorPlan) -> jax.Array:
+    """-> (n_stack_total, rows, cols) view of the leaf."""
+    ns = int(np.prod(plan.stack)) if plan.stack else 1
+    return leaf.reshape(ns, plan.rows, plan.cols)
+
+
+def compute_indices(params, plan: dict[str, TensorPlan], cfg: LiftConfig,
+                    key: jax.Array, grads=None) -> dict[str, jax.Array]:
+    """Principal-Weight indices for every planned tensor.
+
+    Returns {path: (n_stack, k) int32} (flat indices into rows*cols,
+    sorted ascending per matrix).
+    """
+    out = {}
+    paths = sorted(plan.keys())
+    keys = jax.random.split(key, len(paths))
+    for kk, path in zip(keys, paths):
+        p = plan[path]
+        w = _leaf_matrices(get_by_path(params, path), p)
+        g = None
+        if grads is not None:
+            g = _leaf_matrices(get_by_path(grads, path), p)
+        ns = w.shape[0]
+        subkeys = jax.random.split(kk, ns)
+
+        def one(w2d, key1, g2d=None):
+            s = scores_for(w2d, cfg, cfg.selection, key1, g2d)
+            return topk_indices(s, p.k, cfg.block_size)
+
+        if g is None:
+            idx = jax.vmap(lambda a, b: one(a, b))(w, subkeys)
+        else:
+            idx = jax.vmap(lambda a, b, c: one(a, b, c))(w, subkeys, g)
+        out[path] = idx.astype(jnp.int32)
+    return out

@@ -1,0 +1,111 @@
+"""Low-rank approximation backends for LIFT.
+
+Two interchangeable backends produce the rank-r factors (A, B) with
+W' = A @ B^T (A: m x r carries the singular values):
+
+  * `exact`      — full `jnp.linalg.svd` (the paper's method; O(mn·min(m,n)),
+                   single-device only, used for tests and small models).
+  * `randomized` — subspace iteration with oversampling (matmul-dominant:
+                   MXU-friendly and shardable under pjit; the TPU-native
+                   default, DESIGN.md §3).
+
+Also implements the App. B.2 ablation strategies over which part of the
+spectrum to keep: largest / smallest / random / hybrid.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def exact_lowrank(w: jax.Array, rank: int,
+                  strategy: str = "largest",
+                  key: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Rank-r factors of w (m, n) by exact SVD.  Returns (A (m,r), B (n,r))."""
+    m, n = w.shape
+    rank = min(rank, m, n)
+    u, s, vt = jnp.linalg.svd(w.astype(jnp.float32), full_matrices=False)
+    nsv = s.shape[0]
+    if strategy == "largest":
+        sel = jnp.arange(rank)
+    elif strategy == "smallest":
+        sel = jnp.arange(nsv - rank, nsv)
+    elif strategy == "random":
+        assert key is not None
+        sel = jax.random.permutation(key, nsv)[:rank]
+    elif strategy == "hybrid":
+        half = rank // 2
+        sel = jnp.concatenate([jnp.arange(half),
+                               jnp.arange(nsv - (rank - half), nsv)])
+    else:
+        raise ValueError(strategy)
+    a = u[:, sel] * s[sel][None, :]
+    b = vt[sel, :].T
+    return a, b
+
+
+def randomized_lowrank(w: jax.Array, rank: int, *,
+                       oversample: int = 8, iters: int = 2,
+                       key: Optional[jax.Array] = None
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Randomized subspace iteration.  Returns (A (m,r), B (n,r)), W' = A B^T.
+
+    Only tall-skinny (m, r+p) / (n, r+p) intermediates are materialized, so
+    the factorization of a TP-sharded W runs with local matmuls + small
+    collectives under pjit.
+    """
+    m, n = w.shape
+    rank = min(rank, m, n)
+    p = min(oversample, max(m, n) - rank)
+    key = key if key is not None else jax.random.PRNGKey(0)
+    w32 = w.astype(jnp.float32)
+    omega = jax.random.normal(key, (n, rank + p), jnp.float32)
+    y = w32 @ omega                                   # (m, r+p)
+    q, _ = jnp.linalg.qr(y)
+    for _ in range(iters):
+        z = w32.T @ q                                 # (n, r+p)
+        qz, _ = jnp.linalg.qr(z)
+        y = w32 @ qz
+        q, _ = jnp.linalg.qr(y)
+    b_small = q.T @ w32                               # (r+p, n)
+    u_s, s, vt = jnp.linalg.svd(b_small, full_matrices=False)
+    a = (q @ u_s[:, :rank]) * s[:rank][None, :]
+    b = vt[:rank, :].T
+    return a, b
+
+
+def lowrank_factors(w: jax.Array, rank: int, *, method: str = "randomized",
+                    strategy: str = "largest",
+                    key: Optional[jax.Array] = None,
+                    oversample: int = 8, iters: int = 2):
+    """Dispatch.  Non-"largest" strategies force the exact backend."""
+    if method == "exact" or strategy != "largest":
+        return exact_lowrank(w, rank, strategy, key)
+    return randomized_lowrank(w, rank, oversample=oversample, iters=iters,
+                              key=key)
+
+
+def reconstruct(a: jax.Array, b: jax.Array) -> jax.Array:
+    return a @ b.T
+
+
+def spectral_norm(w: jax.Array, iters: int = 32,
+                  key: Optional[jax.Array] = None) -> jax.Array:
+    """Largest singular value by power iteration (fp32)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    w32 = w.astype(jnp.float32)
+    v = jax.random.normal(key, (w.shape[1],), jnp.float32)
+    v = v / jnp.linalg.norm(v)
+
+    def body(v, _):
+        u = w32 @ v
+        u = u / jnp.maximum(jnp.linalg.norm(u), 1e-30)
+        v2 = w32.T @ u
+        s = jnp.linalg.norm(v2)
+        return v2 / jnp.maximum(s, 1e-30), s
+
+    v, ss = jax.lax.scan(body, v, None, length=iters)
+    return ss[-1]

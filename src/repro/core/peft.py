@@ -1,0 +1,99 @@
+"""PEFT baselines the paper compares against: LoRA, PiSSA, DoRA.
+
+Functional formulation: adapters live in their own tree; `merge` produces
+the effective params consumed by the (unchanged) model.  Gradients flow
+through the merge, so `jax.grad` w.r.t. the adapter tree alone gives
+adapter-only training — no module surgery.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lift import (TensorPlan, get_by_path, set_by_path)
+from repro.core.lowrank import exact_lowrank
+
+
+@dataclasses.dataclass(frozen=True)
+class PeftConfig:
+    kind: str = "lora"        # lora | pissa | dora
+    rank: int = 16
+    alpha: float = 32.0
+    dropout: float = 0.0      # kept for config parity; not used in eval
+
+    @property
+    def scale(self) -> float:
+        return self.alpha / self.rank
+
+    def replace(self, **kw):
+        return dataclasses.replace(self, **kw)
+
+
+def _mat(leaf, plan: TensorPlan):
+    ns = int(np.prod(plan.stack)) if plan.stack else 1
+    return leaf.reshape(ns, plan.rows, plan.cols)
+
+
+def init_adapters(params, plan: dict[str, TensorPlan], pcfg: PeftConfig,
+                  key: jax.Array):
+    """Returns (adapters, base_params).  PiSSA subtracts the principal
+    component from the base (its defining trick)."""
+    adapters = {}
+    base = params
+    paths = sorted(plan.keys())
+    keys = jax.random.split(key, len(paths))
+    for kk, path in zip(keys, paths):
+        p = plan[path]
+        r = min(pcfg.rank, p.rows, p.cols)
+        ns = int(np.prod(p.stack)) if p.stack else 1
+        if pcfg.kind in ("lora", "dora"):
+            a = 0.01 * jax.random.normal(kk, (ns, p.rows, r), jnp.float32)
+            b = jnp.zeros((ns, r, p.cols), jnp.float32)
+        elif pcfg.kind == "pissa":
+            w = _mat(get_by_path(params, path), p).astype(jnp.float32)
+
+            def fac(w2d):
+                fa, fb = exact_lowrank(w2d, r)
+                s = jnp.sqrt(jnp.maximum(
+                    jnp.linalg.norm(fa, axis=0), 1e-12))
+                return fa / s[None, :], (fb * s[None, :]).T
+
+            a, b = jax.vmap(fac)(w)
+            w_res = w - jnp.einsum("nik,nkj->nij", a, b) * 1.0
+            base = set_by_path(
+                base, path,
+                w_res.reshape(p.shape).astype(get_by_path(params, path).dtype))
+        else:
+            raise ValueError(pcfg.kind)
+        entry = {"a": a, "b": b}
+        if pcfg.kind == "dora":
+            w = _mat(get_by_path(params, path), p).astype(jnp.float32)
+            entry["mag"] = jnp.linalg.norm(w, axis=1)     # (ns, cols)
+        adapters[path] = entry
+    return adapters, base
+
+
+def merge(base, adapters, plan: dict[str, TensorPlan], pcfg: PeftConfig):
+    """Effective params = base ⊕ adapters."""
+    out = base
+    scale = 1.0 if pcfg.kind == "pissa" else pcfg.scale
+    for path, entry in adapters.items():
+        p = plan[path]
+        leaf = get_by_path(base, path)
+        w = _mat(leaf, p).astype(jnp.float32)
+        delta = jnp.einsum("nik,nkj->nij", entry["a"], entry["b"]) * scale
+        w_new = w + delta
+        if pcfg.kind == "dora":
+            col = jnp.linalg.norm(w_new, axis=1, keepdims=True)     # (ns,1,c)
+            w_new = w_new / jnp.maximum(col, 1e-8) \
+                * entry["mag"][:, None, :]
+        out = set_by_path(out, path, w_new.reshape(p.shape).astype(leaf.dtype))
+    return out
+
+
+def adapter_param_count(adapters) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(adapters))

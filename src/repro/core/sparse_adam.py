@@ -1,0 +1,197 @@
+"""Sparse AdamW over Principal Weights (paper Algorithm 1, App. A).
+
+Optimizer state is stored ONLY for the k selected entries of each planned
+tensor, as (n_stack, k) vectors — this is the paper's <5 % optimizer-memory
+result.  With bf16 params, an fp32 "master" vector of the selected entries
+is kept as well (beyond-paper: sparse master weights).
+
+Gather/scatter use `take_along_axis` / `put_along_axis` on the flattened
+(n_stack, rows*cols) view; indices are sorted ascending per matrix so the
+HBM access pattern is near-sequential (DESIGN.md §3).
+
+`migrate` implements Algorithm 1 lines 5–12: entries surviving a mask
+refresh keep their moments, fresh entries restart at zero.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lift import LiftConfig, TensorPlan, get_by_path, set_by_path
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 1e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+
+    def replace(self, **kw):
+        return dataclasses.replace(self, **kw)
+
+
+def _flat2d(leaf: jax.Array, plan: TensorPlan) -> jax.Array:
+    ns = int(np.prod(plan.stack)) if plan.stack else 1
+    return leaf.reshape(ns, plan.rows * plan.cols)
+
+
+def _stacked_flat(leaf: jax.Array, plan: TensorPlan) -> jax.Array:
+    """(stack..., rows*cols) view — keeps the (possibly sharded) stack dims
+    unmerged so expert/layer sharding survives the reshape (merging a
+    sharded stack dim forces an all-gather; EXPERIMENTS.md §Perf)."""
+    stack = plan.stack if plan.stack else (1,)
+    return leaf.reshape(*stack, plan.rows * plan.cols)
+
+
+def _stacked_idx(idx: jax.Array, plan: TensorPlan) -> jax.Array:
+    stack = plan.stack if plan.stack else (1,)
+    return idx.reshape(*stack, idx.shape[-1])
+
+
+def init_state(params, indices: dict[str, jax.Array],
+               plan: dict[str, TensorPlan], use_master: bool = False):
+    """-> {"step": 0, "tensors": {path: {idx, m, v[, master]}}}."""
+    tensors = {}
+    for path, p in plan.items():
+        idx = indices[path]
+        entry = {
+            "idx": idx,
+            "m": jnp.zeros(idx.shape, jnp.float32),
+            "v": jnp.zeros(idx.shape, jnp.float32),
+        }
+        if use_master:
+            w = _stacked_flat(get_by_path(params, path), p)
+            entry["master"] = jnp.take_along_axis(
+                w, _stacked_idx(idx, p), axis=-1
+            ).reshape(idx.shape).astype(jnp.float32)
+        tensors[path] = entry
+    return {"step": jnp.zeros((), jnp.int32), "tensors": tensors}
+
+
+def apply_updates(params, grads, state, plan: dict[str, TensorPlan],
+                  opt: AdamConfig, lr: Optional[jax.Array] = None):
+    """One sparse AdamW step.  Returns (new_params, new_state).
+
+    `params`/`grads` here are the *trainable subtree* (planned tensors and,
+    optionally, densely-trained extras handled by the caller).
+    """
+    lr = opt.lr if lr is None else lr
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - opt.b1 ** t
+    c2 = 1.0 - opt.b2 ** t
+
+    new_params = params
+    new_tensors = {}
+    for path, p in plan.items():
+        entry = state["tensors"][path]
+        idx = entry["idx"]
+        idx_s = _stacked_idx(idx, p)
+        leaf = get_by_path(params, path)
+        # gather BEFORE the f32 cast: the (k,)-sized slice is what upcasts,
+        # never the full (rows*cols) gradient (collective-traffic matters)
+        g = _stacked_flat(get_by_path(grads, path), p)
+        g_sel = jnp.take_along_axis(g, idx_s, axis=-1).astype(jnp.float32)
+        g_sel = g_sel.reshape(idx.shape)
+
+        m = opt.b1 * entry["m"] + (1.0 - opt.b1) * g_sel
+        v = opt.b2 * entry["v"] + (1.0 - opt.b2) * g_sel * g_sel
+        mhat = m / c1
+        vhat = v / c2
+
+        w_flat = _stacked_flat(leaf, p)
+        if "master" in entry:
+            w_sel = entry["master"]
+        else:
+            w_sel = jnp.take_along_axis(w_flat, idx_s, axis=-1
+                                        ).reshape(idx.shape
+                                                  ).astype(jnp.float32)
+        upd = mhat / (jnp.sqrt(vhat) + opt.eps) + opt.weight_decay * w_sel
+        w_new_sel = w_sel - lr * upd
+
+        w_flat = jnp.put_along_axis(
+            w_flat, idx_s, w_new_sel.reshape(idx_s.shape).astype(w_flat.dtype),
+            axis=-1, inplace=False)
+        new_leaf = w_flat.reshape(p.shape)
+        new_params = set_by_path(new_params, path, new_leaf)
+        new_entry = {"idx": idx, "m": m, "v": v}
+        if "master" in entry:
+            new_entry["master"] = w_new_sel
+        new_tensors[path] = new_entry
+
+    return new_params, {"step": step, "tensors": new_tensors}
+
+
+def migrate(params, state, new_indices: dict[str, jax.Array],
+            plan: dict[str, TensorPlan]):
+    """Mask refresh (Algorithm 1 lines 5–12): remap m/v onto the new mask."""
+    new_tensors = {}
+    for path, p in plan.items():
+        entry = state["tensors"][path]
+        old_idx, new_idx = entry["idx"], new_indices[path]
+        k = old_idx.shape[-1]
+        pos = jax.vmap(jnp.searchsorted)(old_idx, new_idx)
+        pos_c = jnp.clip(pos, 0, k - 1)
+        hit = jnp.take_along_axis(old_idx, pos_c, axis=1) == new_idx
+        new_m = jnp.where(hit, jnp.take_along_axis(entry["m"], pos_c, axis=1),
+                          0.0)
+        new_v = jnp.where(hit, jnp.take_along_axis(entry["v"], pos_c, axis=1),
+                          0.0)
+        new_entry = {"idx": new_idx, "m": new_m, "v": new_v}
+        if "master" in entry:
+            w = _stacked_flat(get_by_path(params, path), p)
+            new_entry["master"] = jnp.take_along_axis(
+                w, _stacked_idx(new_idx, p), axis=-1
+            ).reshape(new_idx.shape).astype(jnp.float32)
+        new_tensors[path] = new_entry
+    return {"step": state["step"], "tensors": new_tensors}
+
+
+# --------------------------------------------------- dense AdamW (baseline)
+def dense_init(params):
+    z = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), params)
+    return {"step": jnp.zeros((), jnp.int32), "m": z,
+            "v": jax.tree.map(jnp.zeros_like, z)}
+
+
+def dense_apply(params, grads, state, opt: AdamConfig,
+                lr: Optional[jax.Array] = None):
+    lr = opt.lr if lr is None else lr
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - opt.b1 ** t
+    c2 = 1.0 - opt.b2 ** t
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m2 = opt.b1 * m + (1 - opt.b1) * g
+        v2 = opt.b2 * v + (1 - opt.b2) * g * g
+        u = (m2 / c1) / (jnp.sqrt(v2 / c2) + opt.eps) \
+            + opt.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m2, v2
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    leaves, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+    new_p = jax.tree.unflatten(treedef, [l[0] for l in leaves])
+    new_m = jax.tree.unflatten(treedef, [l[1] for l in leaves])
+    new_v = jax.tree.unflatten(treedef, [l[2] for l in leaves])
+    return new_p, {"step": step, "m": new_m, "v": new_v}
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    gn = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale
+                                   ).astype(x.dtype), tree), gn

@@ -1,0 +1,75 @@
+"""Deterministic, shardable, checkpointable data loader.
+
+Design requirements at cluster scale:
+  * every data-parallel host must read a disjoint shard,
+  * a restart (possibly with a DIFFERENT number of hosts — elastic) must
+    resume mid-epoch without replaying or skipping examples,
+  * iteration order must be a pure function of (seed, epoch).
+
+The loader is index-based over an in-memory (or memory-mapped) array store:
+a permutation of example indices is derived per epoch from
+`PRNG(seed, epoch)`; host h of H takes indices with `i % H == h`.  The
+cursor state is just (epoch, step) — two ints — which is what the
+checkpoint stores; elastic restarts recompute shards from the new H.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class LoaderState:
+    epoch: int = 0
+    step: int = 0  # batches already emitted this epoch (global count)
+
+    def to_dict(self):
+        return {"epoch": self.epoch, "step": self.step}
+
+    @staticmethod
+    def from_dict(d):
+        return LoaderState(int(d["epoch"]), int(d["step"]))
+
+
+class ShardedLoader:
+    def __init__(self, arrays: dict[str, np.ndarray], batch_size: int,
+                 seed: int = 0, shard_id: int = 0, num_shards: int = 1,
+                 drop_last: bool = True,
+                 state: Optional[LoaderState] = None):
+        n = len(next(iter(arrays.values())))
+        assert all(len(v) == n for v in arrays.values())
+        assert batch_size % num_shards == 0, (batch_size, num_shards)
+        self.arrays = arrays
+        self.n = n
+        self.global_batch = batch_size
+        self.local_batch = batch_size // num_shards
+        self.seed = seed
+        self.shard_id = shard_id
+        self.num_shards = num_shards
+        self.state = state or LoaderState()
+        self.batches_per_epoch = n // batch_size if drop_last \
+            else -(-n // batch_size)
+
+    def _perm(self, epoch: int) -> np.ndarray:
+        rng = np.random.default_rng((self.seed << 20) + epoch)
+        return rng.permutation(self.n)
+
+    def next_batch(self) -> dict[str, np.ndarray]:
+        st = self.state
+        if st.step >= self.batches_per_epoch:
+            st.epoch += 1
+            st.step = 0
+        perm = self._perm(st.epoch)
+        lo = st.step * self.global_batch
+        idx = perm[lo:lo + self.global_batch]
+        if len(idx) < self.global_batch:  # wrap (drop_last=False tail)
+            idx = np.concatenate([idx, perm[:self.global_batch - len(idx)]])
+        local = idx[self.shard_id::self.num_shards]
+        st.step += 1
+        return {k: v[local] for k, v in self.arrays.items()}
+
+    def __iter__(self):
+        while True:
+            yield self.next_batch()

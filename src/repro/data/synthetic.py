@@ -1,0 +1,190 @@
+"""Synthetic SFT corpora (offline container: no dataset downloads).
+
+Reproduces the *structure* of the paper's data regimes:
+  * "arith"  — arithmetic-reasoning SFT in the MATH-10K style: a word
+               problem, a short chain of calculation steps, final answer.
+               (target domain)
+  * "common" — commonsense-style cloze Q/A templates. (source domain)
+  * "lm"     — plain next-token text (wikitext stand-in for perplexity).
+
+A small deterministic word-level tokenizer covers all corpora; everything is
+seeded and reproducible across hosts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import numpy as np
+
+_WORDS = (
+    "<pad> <bos> <eos> <sep> what is plus minus times equals if has gives "
+    "then so answer : the a and of are more less left total first second "
+    "third apple box book coin ball star tree fish bird cat dog sum "
+    "difference product result john mary tom anna buys sells finds loses "
+    "start with end now count how many because therefore step compute "
+    "true false not all some most city country capital located in water "
+    "fire air earth big small fast slow hot cold".split()
+)
+_DIGITS = [str(d) for d in range(10)]
+VOCAB = _WORDS + _DIGITS
+TOK = {w: i for i, w in enumerate(VOCAB)}
+PAD, BOS, EOS, SEP = TOK["<pad>"], TOK["<bos>"], TOK["<eos>"], TOK["<sep>"]
+VOCAB_SIZE = len(VOCAB)
+
+
+def encode(text: str) -> list[int]:
+    out = []
+    for w in text.split():
+        if w in TOK:
+            out.append(TOK[w])
+        else:
+            for ch in w:  # digits of numbers
+                out.append(TOK.get(ch, PAD))
+    return out
+
+
+def decode(ids) -> str:
+    inv = {i: w for w, i in TOK.items()}
+    return " ".join(inv.get(int(i), "?") for i in ids)
+
+
+def _num(rng, lo=2, hi=99) -> int:
+    return int(rng.integers(lo, hi))
+
+
+def make_arith_example(rng: np.random.Generator) -> tuple[str, str]:
+    """(prompt, answer-with-reasoning)."""
+    kind = rng.integers(0, 4)
+    a, b = _num(rng), _num(rng)
+    c = _num(rng, 2, 9)
+    who = rng.choice(["john", "mary", "tom", "anna"])
+    thing = rng.choice(["apple", "coin", "book", "ball", "star"])
+    if kind == 0:
+        q = f"{who} has {a} {thing} and buys {b} more how many now"
+        r = f"step {a} plus {b} equals {a + b} answer : {a + b}"
+    elif kind == 1:
+        q = f"{who} has {a} {thing} and loses {min(a, b)} how many left"
+        r = f"step {a} minus {min(a, b)} equals {a - min(a, b)} " \
+            f"answer : {a - min(a, b)}"
+    elif kind == 2:
+        q = f"{who} has {c} box of {a} {thing} how many total"
+        r = f"step {c} times {a} equals {c * a} answer : {c * a}"
+    else:
+        q = f"what is {a} plus {b} times {c}"
+        r = f"step {b} times {c} equals {b * c} step {a} plus {b * c} " \
+            f"equals {a + b * c} answer : {a + b * c}"
+    return q, r
+
+
+def make_common_example(rng: np.random.Generator) -> tuple[str, str]:
+    pairs = [
+        ("fire is hot true or false", "answer : true"),
+        ("water is hot true or false", "answer : false"),
+        ("a tree is big and a coin is small true or false",
+         "answer : true"),
+        ("all fish are birds true or false", "answer : false"),
+        ("some dog are fast true or false", "answer : true"),
+        ("the capital city is located in the country true or false",
+         "answer : true"),
+        ("cold is more hot than fire true or false", "answer : false"),
+        ("a ball is more big than a city true or false", "answer : false"),
+    ]
+    q, r = pairs[int(rng.integers(0, len(pairs)))]
+    return q, r
+
+
+def make_lm_text(rng: np.random.Generator) -> str:
+    w = [VOCAB[4 + int(rng.integers(0, VOCAB_SIZE - 14))] for _ in range(24)]
+    return " ".join(w)
+
+
+@dataclasses.dataclass
+class SftExample:
+    tokens: np.ndarray      # (S,) int32
+    loss_mask: np.ndarray   # (S,) float32 (1 on answer tokens)
+
+
+def build_sft_example(prompt: str, answer: str, seq_len: int) -> SftExample:
+    p = [BOS] + encode(prompt) + [SEP]
+    r = encode(answer) + [EOS]
+    toks = (p + r)[:seq_len]
+    mask = ([0.0] * len(p) + [1.0] * len(r))[:seq_len]
+    pad = seq_len - len(toks)
+    toks = np.asarray(toks + [PAD] * pad, np.int32)
+    mask = np.asarray(mask + [0.0] * pad, np.float32)
+    return SftExample(toks, mask)
+
+
+def generate(task: str, n: int, seq_len: int, seed: int = 0):
+    """-> dict of stacked arrays {tokens, labels, loss_mask}."""
+    rng = np.random.default_rng(seed)
+    toks, masks = [], []
+    for _ in range(n):
+        if task == "arith":
+            q, r = make_arith_example(rng)
+        elif task == "common":
+            q, r = make_common_example(rng)
+        elif task == "lm":
+            t = make_lm_text(rng)
+            q, r = t, make_lm_text(rng)
+        else:
+            raise ValueError(task)
+        ex = build_sft_example(q, r, seq_len + 1)
+        toks.append(ex.tokens)
+        masks.append(ex.loss_mask)
+    toks = np.stack(toks)
+    masks = np.stack(masks)
+    return {
+        "tokens": toks[:, :-1],
+        "labels": toks[:, 1:].astype(np.int32),
+        "loss_mask": masks[:, 1:],
+    }
+
+
+def eval_accuracy(model, params, task: str, n: int = 64, seq_len: int = 48,
+                  seed: int = 10_000) -> float:
+    """Teacher-forced per-token accuracy on held-out answer tokens.
+
+    (Reduced-scale models never reach exact-match accuracy in a few hundred
+    steps; token-level accuracy preserves the method ORDERING the paper's
+    tables measure, which is the reproduction target — DESIGN.md §7.)"""
+    import jax
+    import jax.numpy as jnp
+    data = generate(task, n, seq_len, seed=seed)
+    logits_fn = jax.jit(model.logits)
+    lg = logits_fn(params, {"tokens": jnp.asarray(data["tokens"])})
+    pred = np.asarray(jnp.argmax(lg, -1))
+    mask = data["loss_mask"] > 0
+    hit = (pred == data["labels"]) & mask
+    return float(hit.sum() / max(mask.sum(), 1))
+
+
+def eval_exact_match(model, params, task: str, n: int = 32,
+                     seq_len: int = 48, seed: int = 10_000) -> float:
+    """Greedy-decode exact final-answer match (strict; for larger runs)."""
+    import jax
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    correct = 0
+    logits_fn = jax.jit(model.logits)
+    for _ in range(n):
+        if task == "arith":
+            q, r = make_arith_example(rng)
+        else:
+            q, r = make_common_example(rng)
+        p = [BOS] + encode(q) + [SEP]
+        gold = encode(r) + [EOS]
+        ctx = list(p)
+        ok = True
+        for gt in gold:
+            x = np.full((1, seq_len), PAD, np.int32)
+            x[0, :min(len(ctx), seq_len)] = ctx[-seq_len:]
+            lg = logits_fn(params, {"tokens": jnp.asarray(x)})
+            nxt = int(jnp.argmax(lg[0, min(len(ctx), seq_len) - 1]))
+            if nxt != gt:
+                ok = False
+                break
+            ctx.append(nxt)
+        correct += int(ok)
+    return correct / n

@@ -1,0 +1,3 @@
+from repro.ft.resilience import (  # noqa: F401
+    PreemptionSimulator, StragglerMonitor, auto_resume,
+)

@@ -1,0 +1,104 @@
+"""Pallas TPU flash-attention (forward) kernel.
+
+The §Roofline tables show attention score traffic dominating the memory
+term of every train/prefill cell under unfused accounting — this kernel is
+the TPU hot-path that keeps the (q_blk x kv_blk) score tile in VMEM
+end-to-end (the pure-JAX nn/flash.py remains the autodiff-complete
+reference and the CPU default; MaxText-style layering).
+
+Grid: (B*H, S/q_blk).  Each program instance streams the KV blocks of one
+query block with the online-softmax recurrence in VMEM registers:
+
+    m' = max(m, rowmax(s));  l' = l*e^{m-m'} + rowsum(e^{s-m'})
+    acc' = acc*e^{m-m'} + e^{s-m'} @ v
+
+Causality is handled per-block: fully-masked KV blocks are skipped via the
+grid upper bound, the diagonal block applies the triangular mask.
+Validated against ref/naive attention in interpret mode
+(tests/test_kernels.py); dtypes bf16/f32, head dims {64, 80, 128, 256}.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, *, q_blk: int, kv_blk: int,
+               seq_len: int, scale: float, causal: bool):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * scale          # (q_blk, d)
+    d = q.shape[-1]
+
+    m0 = jnp.full((q_blk,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((q_blk,), jnp.float32)
+    a0 = jnp.zeros((q_blk, d), jnp.float32)
+
+    n_kv = seq_len // kv_blk
+    if causal:
+        # number of kv blocks this q block attends into
+        hi = (qi * q_blk + q_blk + kv_blk - 1) // kv_blk
+    else:
+        hi = n_kv
+
+    def body(kj, carry):
+        m, l, acc = carry
+        k = pl.load(k_ref, (0, pl.dslice(kj * kv_blk, kv_blk),
+                            slice(None))).astype(jnp.float32)
+        v = pl.load(v_ref, (0, pl.dslice(kj * kv_blk, kv_blk),
+                            slice(None))).astype(jnp.float32)
+        s = q @ k.T                                   # (q_blk, kv_blk)
+        if causal:
+            qpos = qi * q_blk + jax.lax.broadcasted_iota(
+                jnp.int32, (q_blk, kv_blk), 0)
+            kpos = kj * kv_blk + jax.lax.broadcasted_iota(
+                jnp.int32, (q_blk, kv_blk), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, hi, body, (m0, l0, a0))
+    l = jnp.maximum(l, 1e-37)
+    o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal: bool = True,
+                        scale: float | None = None,
+                        q_blk: int = 128, kv_blk: int = 128,
+                        interpret: bool = True):
+    """q, k, v: (B, S, H, D) with equal head counts (GQA pre-expanded).
+    Returns o: (B, S, H, D)."""
+    B, S, H, D = q.shape
+    scale = D ** -0.5 if scale is None else scale
+    q_blk = min(q_blk, S)
+    kv_blk = min(kv_blk, S)
+    assert S % q_blk == 0 and S % kv_blk == 0, (S, q_blk, kv_blk)
+
+    # (B*H, S, D) layout: one grid row per (batch, head)
+    qh = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    kh = k.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    vh = v.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+
+    kern = functools.partial(_fa_kernel, q_blk=q_blk, kv_blk=kv_blk,
+                             seq_len=S, scale=scale, causal=causal)
+    oh = pl.pallas_call(
+        kern,
+        grid=(B * H, S // q_blk),
+        in_specs=[
+            pl.BlockSpec((1, q_blk, D), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, S, D), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, S, D), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_blk, D), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, D), q.dtype),
+        interpret=interpret,
+    )(qh, kh, vh)
+    return oh.reshape(B, H, S, D).transpose(0, 2, 1, 3)

@@ -1,0 +1,169 @@
+"""jit'd wrappers around the Pallas kernels.
+
+`interpret` defaults to True off-TPU (the kernels execute via the Pallas
+interpreter on CPU for correctness); on TPU backends the compiled kernels
+run natively.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import lowrank_mask as lrm
+from repro.kernels import sparse_adam as sak
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ------------------------------------------------------------ lowrank ops
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def lowrank_abs(a, b, bm: int = 256, bn: int = 256,
+                interpret: Optional[bool] = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return lrm.lowrank_stat(a, b, "abs", bm=bm, bn=bn, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def lowrank_count(a, b, tau, bm: int = 256, bn: int = 256,
+                  interpret: Optional[bool] = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    parts = lrm.lowrank_stat(a, b, "count", tau=tau, bm=bm, bn=bn,
+                             interpret=interpret)
+    return jnp.sum(parts)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def lowrank_absmax(a, b, bm: int = 256, bn: int = 256,
+                   interpret: Optional[bool] = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    parts = lrm.lowrank_stat(a, b, "absmax", bm=bm, bn=bn,
+                             interpret=interpret)
+    return jnp.max(parts)
+
+
+@functools.partial(jax.jit, static_argnames=("nbins", "bm", "bn", "interpret"))
+def lowrank_hist(a, b, lo, hi, nbins: int = 512, bm: int = 256, bn: int = 256,
+                 interpret: Optional[bool] = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    parts = lrm.lowrank_stat(a, b, "hist", lo=lo, hi=hi, nbins=nbins,
+                             bm=bm, bn=bn, interpret=interpret)
+    return jnp.sum(parts, axis=0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "passes", "nbins", "bm", "bn",
+                                    "interpret"))
+def lift_threshold(a, b, k: int, passes: int = 2, nbins: int = 512,
+                   bm: int = 256, bn: int = 256,
+                   interpret: Optional[bool] = None):
+    """Threshold tau s.t. count(|A B^T| > tau) ~= k (within the final bin).
+
+    Multi-pass histogram refinement: W' never materializes in HBM.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    lo = jnp.float32(0.0)
+    hi = lowrank_absmax(a, b, bm, bn, interpret) * (1 + 1e-6)
+    for _ in range(passes):
+        hist = lowrank_hist(a, b, lo, hi, nbins, bm, bn, interpret)
+        # count of entries strictly above each bin's lower edge
+        above = jnp.cumsum(hist[::-1])[::-1]          # above[i] = sum(hist[i:])
+        # smallest bin whose lower edge keeps >= k entries above it
+        ok = above >= k
+        j = jnp.maximum(jnp.sum(ok) - 1, 0)           # last True index
+        width = (hi - lo) / nbins
+        new_lo = lo + j * width
+        new_hi = new_lo + width
+        lo, hi = new_lo, new_hi
+    return lo
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "passes", "nbins", "bm", "bn",
+                                    "interpret"))
+def lift_mask(a, b, k: int, passes: int = 2, nbins: int = 512,
+              bm: int = 256, bn: int = 256,
+              interpret: Optional[bool] = None):
+    """(mask (m, n) bool, tau) with count(mask) in [k, k + final-bin-ties)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    tau = lift_threshold(a, b, k, passes, nbins, bm, bn, interpret)
+    mask = lrm.lowrank_stat(a, b, "mask", tau=tau, bm=bm, bn=bn,
+                            interpret=interpret)
+    return mask, tau
+
+
+# ----------------------------------------------------------- sparse adam
+@functools.partial(jax.jit,
+                   static_argnames=("bn", "capacity", "exact", "interpret"))
+def sparse_adam(p, g, idx, m, v, step, *, lr, b1=0.9, b2=0.999, eps=1e-8,
+                wd=0.0, bn: int = 2048, capacity: int = 0,
+                exact: bool = True, interpret: Optional[bool] = None):
+    """Fused sparse AdamW on a flat tensor.
+
+    p, g: (N,);  idx: (k,) sorted int32;  m, v: (k,) fp32;  step: int (1-based).
+    Returns (p', m', v').  `capacity` is the per-block window size (0 ->
+    heuristic 4x mean occupancy); with exact=True an O(k) XLA fallback
+    corrects any windows that overflowed, so results are exact regardless.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    N = p.shape[0]
+    k = idx.shape[0]
+    nb = max(1, -(-N // bn))
+    padN = nb * bn
+    p_pad = jnp.pad(p, (0, padN - N))
+    g_pad = jnp.pad(g, (0, padN - N))
+
+    if capacity <= 0:
+        capacity = int(min(k, max(64, 4 * -(-k // nb))))
+    K = capacity
+
+    block_of = idx // bn
+    arangeb = jnp.arange(nb)
+    starts = jnp.searchsorted(block_of, arangeb, side="left")
+    ends = jnp.searchsorted(block_of, arangeb, side="right")
+    gpos = starts[:, None] + jnp.arange(K)[None, :]
+    in_win = gpos < ends[:, None]
+    gposc = jnp.minimum(gpos, k - 1)
+    idxw = jnp.where(in_win, idx[gposc], -1).astype(jnp.int32)
+    mw = jnp.where(in_win, m[gposc], 0.0)
+    vw = jnp.where(in_win, v[gposc], 0.0)
+
+    t = jnp.asarray(step, jnp.float32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+    hyper = jnp.stack([jnp.asarray(lr, jnp.float32),
+                       jnp.float32(b1), jnp.float32(b2), jnp.float32(eps),
+                       jnp.float32(wd), c1, c2]).reshape(1, 7)
+
+    p2, mw2, vw2 = sak.sparse_adam_blocks(
+        p_pad.reshape(nb, bn), g_pad.reshape(nb, bn), idxw, mw, vw, hyper,
+        bn=bn, interpret=interpret)
+    p_out = p2.reshape(padN)[:N]
+
+    # windows -> flat (k,)
+    j = jnp.arange(k)
+    slot = j - starts[block_of]
+    covered = slot < K
+    slotc = jnp.minimum(slot, K - 1)
+    m_out = mw2[block_of, slotc]
+    v_out = vw2[block_of, slotc]
+
+    if exact:
+        # O(k) reference update; replaces any window-overflow entries
+        g_sel = g.astype(jnp.float32)[idx]
+        m_ref = b1 * m + (1 - b1) * g_sel
+        v_ref = b2 * v + (1 - b2) * g_sel * g_sel
+        w = p.astype(jnp.float32)[idx]
+        upd = (m_ref / c1) / (jnp.sqrt(v_ref / c2) + eps) + wd * w
+        w_ref = w - lr * upd
+        cur = p_out[idx]
+        p_out = p_out.at[idx].set(
+            jnp.where(covered, cur, w_ref.astype(p.dtype)))
+        m_out = jnp.where(covered, m_out, m_ref)
+        v_out = jnp.where(covered, v_out, v_ref)
+
+    return p_out, m_out, v_out

@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ------------------------------------------------------------ lowrank_mask
+def lowrank_abs(a: jax.Array, b: jax.Array) -> jax.Array:
+    """|A @ B^T| in fp32.  a: (m, r); b: (n, r)."""
+    return jnp.abs(a.astype(jnp.float32) @ b.astype(jnp.float32).T)
+
+
+def lowrank_count(a, b, tau) -> jax.Array:
+    return jnp.sum(lowrank_abs(a, b) > tau, dtype=jnp.int32)
+
+
+def lowrank_mask(a, b, tau) -> jax.Array:
+    return lowrank_abs(a, b) > tau
+
+
+def lowrank_hist(a, b, lo, hi, nbins: int) -> jax.Array:
+    """Histogram of |A B^T| over `nbins` uniform bins on [lo, hi); the last
+    bin also catches >= hi, the first also catches < lo."""
+    s = lowrank_abs(a, b)
+    width = (hi - lo) / nbins
+    ids = jnp.clip(jnp.floor((s - lo) / width), 0, nbins - 1).astype(jnp.int32)
+    return jnp.zeros((nbins,), jnp.int32).at[ids.reshape(-1)].add(1)
+
+
+def lowrank_absmax(a, b) -> jax.Array:
+    return jnp.max(lowrank_abs(a, b))
+
+
+# ------------------------------------------------------------- sparse_adam
+def sparse_adam(p, g, idx, m, v, *, lr, b1, b2, eps, wd, step):
+    """Reference sparse AdamW on flat vectors.
+
+    p, g: (N,); idx: (k,) sorted unique int32; m, v: (k,).
+    Returns (p', m', v') — only entries at idx change.
+    """
+    p32 = p.astype(jnp.float32)
+    g_sel = g.astype(jnp.float32)[idx]
+    m2 = b1 * m + (1 - b1) * g_sel
+    v2 = b2 * v + (1 - b2) * g_sel * g_sel
+    c1 = 1.0 - b1 ** step
+    c2 = 1.0 - b2 ** step
+    w = p32[idx]
+    upd = (m2 / c1) / (jnp.sqrt(v2 / c2) + eps) + wd * w
+    p_new = p32.at[idx].set(w - lr * upd)
+    return p_new.astype(p.dtype), m2, v2
+
+
+# -------------------------------------------------------- flash attention
+def naive_attention(q, k, v, causal=True, scale=None):
+    """q,k,v: (B, S, H, D) -> o (B, S, H, D), fp32 softmax."""
+    B, S, H, D = q.shape
+    scale = D ** -0.5 if scale is None else scale
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -1,0 +1,98 @@
+"""Fused sparse-AdamW kernel (Pallas TPU): gather -> Adam -> scatter.
+
+TPUs have no efficient random gather/scatter, so the kernel exploits the one
+structural property LIFT guarantees: **indices are sorted ascending**.  The
+flat parameter vector is processed in contiguous blocks of BN entries; the
+selected indices falling in block b occupy a contiguous *window* of the
+(idx, m, v) vectors, [starts[b], starts[b+1]).  The XLA-side wrapper
+(ops.py) pads each window to a fixed capacity K and hands the kernel
+windowed views, so all kernel memory access is dense:
+
+    grid = (N / BN,)
+    p_blk (BN,)   g_blk (BN,)   idxw/mw/vw (K,) per block
+
+In-block gather/scatter become one-hot matmuls against iota (MXU/VPU work,
+no dynamic addressing):   sel[e, i] = (idxw[e] - b*BN == i)
+    g_sel = sel @ g_blk          (gather)
+    p'    = p_blk + sel^T @ dw   (scatter; windows are disjoint)
+
+Entries beyond a window's capacity are handled by an exact XLA fallback in
+ops.py (correctness never depends on the capacity heuristic).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(hyper_ref, idxw_ref, mw_ref, vw_ref, p_ref, g_ref,
+            po_ref, mo_ref, vo_ref, *, bn: int):
+    b = pl.program_id(0)
+    lr = hyper_ref[0, 0]
+    b1 = hyper_ref[0, 1]
+    b2 = hyper_ref[0, 2]
+    eps = hyper_ref[0, 3]
+    wd = hyper_ref[0, 4]
+    c1 = hyper_ref[0, 5]          # 1 - b1**t
+    c2 = hyper_ref[0, 6]          # 1 - b2**t
+
+    idxw = idxw_ref[0, :]                            # (K,) int32, -1 = pad
+    local = idxw - b * bn
+    valid = (idxw >= 0)
+    k = idxw.shape[0]
+
+    iota = jax.lax.broadcasted_iota(jnp.int32, (k, bn), 1)
+    sel = ((local[:, None] == iota) & valid[:, None]).astype(jnp.float32)
+
+    p_blk = p_ref[0, :].astype(jnp.float32)          # (BN,)
+    g_blk = g_ref[0, :].astype(jnp.float32)
+
+    g_sel = sel @ g_blk                              # (K,) gather
+    w_sel = sel @ p_blk
+
+    m2 = b1 * mw_ref[0, :] + (1.0 - b1) * g_sel
+    v2 = b2 * vw_ref[0, :] + (1.0 - b2) * g_sel * g_sel
+    upd = (m2 / c1) / (jnp.sqrt(v2 / c2) + eps) + wd * w_sel
+    dw = jnp.where(valid, -lr * upd, 0.0)
+
+    po_ref[0, :] = (p_blk + dw @ sel).astype(po_ref.dtype)   # scatter
+    mo_ref[0, :] = jnp.where(valid, m2, mw_ref[0, :])
+    vo_ref[0, :] = jnp.where(valid, v2, vw_ref[0, :])
+
+
+def sparse_adam_blocks(p, g, idxw, mw, vw, hyper, *, bn: int,
+                       interpret: bool = True):
+    """p, g: (NB, BN); idxw/mw/vw: (NB, K); hyper: (1, 7) f32.
+
+    Returns (p', m'_windows, v'_windows) with the same shapes.
+    """
+    nb, bn_ = p.shape
+    assert bn_ == bn
+    k = idxw.shape[1]
+    kern = functools.partial(_kernel, bn=bn)
+    return pl.pallas_call(
+        kern,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, 7), lambda b: (0, 0)),      # hyper
+            pl.BlockSpec((1, k), lambda b: (b, 0)),      # idx windows
+            pl.BlockSpec((1, k), lambda b: (b, 0)),      # m windows
+            pl.BlockSpec((1, k), lambda b: (b, 0)),      # v windows
+            pl.BlockSpec((1, bn), lambda b: (b, 0)),     # p blocks
+            pl.BlockSpec((1, bn), lambda b: (b, 0)),     # g blocks
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bn), lambda b: (b, 0)),
+            pl.BlockSpec((1, k), lambda b: (b, 0)),
+            pl.BlockSpec((1, k), lambda b: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, bn), p.dtype),
+            jax.ShapeDtypeStruct((nb, k), jnp.float32),
+            jax.ShapeDtypeStruct((nb, k), jnp.float32),
+        ],
+        interpret=interpret,
+    )(hyper, idxw, mw, vw, p, g)

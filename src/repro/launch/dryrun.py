@@ -1,0 +1,308 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST precede any jax import: jax locks the device count
+at first init, and the production meshes need 512 host-platform placeholder
+devices.  Tests and benchmarks do NOT import this module (they see 1 device).
+
+Per cell this runner produces:
+  * full-depth compile  -> proof of shardability + memory_analysis()
+  * depth-P and depth-2P UNROLLED compiles (single-pod only) -> exact HLO
+    flops / bytes / collective-bytes per layer by linear extrapolation
+    (scan bodies are counted once by cost_analysis; DESIGN.md §5)
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--multi-pod] [--jobs ...]
+  python -m repro.launch.dryrun --summary
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+# §Perf variants: beyond-baseline sharding schemes.  Each entry is
+# (rules_extra, cfg_transform).  "zero3" = pure 256-way data parallelism
+# with ZeRO-3 parameter sharding (per-layer weight all-gather) — right for
+# small-d_model models where Megatron TP's activation psums dominate.
+# "seqp" = sequence-parallel activations for long-context prefill.
+VARIANTS = {
+    "zero3": (
+        {"batch": ("pod", "data", "model"),
+         "embed": ("data", "model"),
+         "mlp": (), "heads_flat": (), "heads": (), "kv_heads": (),
+         "experts": (), "expert_mlp": (), "vocab": (),
+         "capacity": ("data", "model"),
+         "cache_seq": ()},
+        lambda cfg: cfg.replace(moe_groups=256) if cfg.num_experts else cfg,
+    ),
+    "seqp": (
+        {"seq": ("model",)},
+        lambda cfg: cfg,
+    ),
+    # zero3 without remat: drops the 3rd ZeRO weight re-gather (bwd only
+    # re-gathers once) at the price of storing activations
+    "zero3nr": (
+        {"batch": ("pod", "data", "model"),
+         "embed": ("data", "model"),
+         "mlp": (), "heads_flat": (), "heads": (), "kv_heads": (),
+         "experts": (), "expert_mlp": (), "vocab": (),
+         "capacity": ("data", "model"),
+         "cache_seq": ()},
+        lambda cfg: (cfg.replace(moe_groups=256) if cfg.num_experts else cfg
+                     ).replace(remat=False),
+    ),
+    # zero3 + expert weights kept sharded over "model" (no per-layer expert
+    # all-gather; XLA reshards the dispatch buffer instead)
+    "zero3ep": (
+        {"batch": ("pod", "data", "model"),
+         "embed": ("data",),
+         "mlp": (), "heads_flat": (), "heads": (), "kv_heads": (),
+         "experts": ("model",), "expert_mlp": (), "vocab": (),
+         "capacity": ("data", "model"),
+         "cache_seq": ()},
+        lambda cfg: cfg.replace(moe_groups=256) if cfg.num_experts else cfg,
+    ),
+}
+
+
+def _result_path(arch, shape, mesh_tag, method, variant=""):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    suffix = "" if method == "lift" else f"_{method}"
+    if variant:
+        suffix += f"_{variant}"
+    return os.path.join(RESULTS_DIR, f"{arch}__{shape}__{mesh_tag}{suffix}.json")
+
+
+def _shard_bytes(sds_tree, sharding_tree, mesh):
+    """Exact per-device bytes of an input tree under its shardings."""
+    import jax
+    import numpy as np
+    total = 0
+    leaves_s = jax.tree.leaves(sds_tree)
+    if sharding_tree is None:
+        shardings = [None] * len(leaves_s)
+    else:
+        shardings = jax.tree.leaves(
+            sharding_tree, is_leaf=lambda x: hasattr(x, "shard_shape"))
+    for sds, sh in zip(leaves_s, shardings):
+        if sh is not None and hasattr(sh, "shard_shape"):
+            shp = sh.shard_shape(sds.shape)
+        else:
+            shp = sds.shape
+        total += int(np.prod(shp)) * sds.dtype.itemsize
+    return total
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, method: str,
+             skip_cost: bool = False, variant: str = "") -> dict:
+    import jax
+    from repro.configs import LM_SHAPES, get_arch
+    from repro.launch import hlo as hlomod
+    from repro.launch.lowering import build_cell
+    from repro.launch.mesh import make_production_mesh
+
+    bundle = get_arch(arch)
+    shape = LM_SHAPES[shape_name]
+    if shape_name in bundle.skips:
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": bundle.skips[shape_name]}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    cfg = bundle.full
+    rules_extra = None
+    if variant:
+        rules_extra, cfg_tf = VARIANTS[variant]
+        cfg = cfg_tf(cfg)
+    out = {"arch": arch, "shape": shape_name, "method": method,
+           "mesh": list(mesh.devices.shape), "n_devices": n_dev,
+           "kind": shape.kind, "variant": variant}
+
+    # ---------------- full-depth compile: shardability + memory ----------
+    t0 = time.time()
+    low = build_cell(bundle, cfg, mesh, shape, method=method,
+                     rules_extra=rules_extra)
+    jfn = jax.jit(low.fn, in_shardings=low.in_shardings,
+                  out_shardings=low.out_shardings,
+                  donate_argnums=low.donate)
+    lowered = jfn.lower(*low.args)
+    out["lower_s"] = round(time.time() - t0, 2)
+    t0 = time.time()
+    compiled = lowered.compile()
+    out["compile_s"] = round(time.time() - t0, 2)
+    ma = compiled.memory_analysis()
+    out["memory_analysis"] = {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+        "code_bytes": int(ma.generated_code_size_in_bytes),
+    }
+    # exact per-device resident input bytes from the shardings
+    names = ["params", "state_or_batch", "batch_or_cache", "positions"]
+    per_arg = {}
+    for i, (sds, sh) in enumerate(zip(low.args, low.in_shardings)):
+        per_arg[names[i] if i < len(names) else f"arg{i}"] = \
+            _shard_bytes(sds, sh, mesh)
+    out["per_device_input_bytes"] = per_arg
+    out["per_device_input_gib"] = round(sum(per_arg.values()) / 2**30, 3)
+
+    ca_full = compiled.cost_analysis() or {}
+    out["cost_full_scanned"] = {
+        "flops": float(ca_full.get("flops", -1)),
+        "bytes": float(ca_full.get("bytes accessed", -1)),
+    }
+
+    # ---------------- cost extrapolation (single-pod only) ---------------
+    if not multi_pod and not skip_cost:
+        period = cfg.shared_attn_period if cfg.family == "hybrid" else 1
+        costs = {}
+        for depth in (period, 2 * period):
+            ccfg = cfg.replace(
+                num_layers=depth, scan_layers=False, unroll_layers=True,
+                attn_chunk=(max(1024, shape.seq_len // 4)
+                            if cfg.attn_chunk else 0))
+            low2 = build_cell(bundle, ccfg, mesh, shape, method=method,
+                              rules_extra=rules_extra)
+            jfn2 = jax.jit(low2.fn, in_shardings=low2.in_shardings,
+                           out_shardings=low2.out_shardings,
+                           donate_argnums=low2.donate)
+            comp2 = jfn2.lower(*low2.args).compile()
+            ca = comp2.cost_analysis() or {}
+            colls = hlomod.analyze_collectives(comp2.as_text(), n_dev)
+            costs[depth] = {
+                "flops": float(ca.get("flops", 0)),
+                "bytes": float(ca.get("bytes accessed", 0)),
+                "coll_link_bytes": colls.link_bytes,
+                "coll_by_kind": dict(colls.by_kind),
+                "coll_count": colls.count,
+                "coll_in_while": colls.in_while,
+            }
+        L = cfg.num_layers
+        P = period
+        c1, c2 = costs[P], costs[2 * P]
+
+        def extrap(a, b):
+            return a + (L - P) / P * (b - a)
+
+        out["cost_depths"] = costs
+        by_kind = {k: extrap(c1["coll_by_kind"].get(k, 0.0),
+                             c2["coll_by_kind"].get(k, 0.0))
+                   for k in set(c1["coll_by_kind"]) | set(c2["coll_by_kind"])}
+        out["cost_extrapolated"] = {
+            "flops": extrap(c1["flops"], c2["flops"]),
+            "bytes": extrap(c1["bytes"], c2["bytes"]),
+            "coll_link_bytes": extrap(c1["coll_link_bytes"],
+                                      c2["coll_link_bytes"]),
+            "coll_by_kind": by_kind,
+            "coll_in_while": c1["coll_in_while"] + c2["coll_in_while"],
+        }
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--method", default="lift", choices=["lift", "full"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--skip-cost", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--summary", action="store_true")
+    ap.add_argument("--variant", default="", choices=[""] + list(VARIANTS))
+    args = ap.parse_args()
+
+    if args.summary:
+        print_summary()
+        return
+
+    if args.all:
+        orchestrate(args)
+        return
+
+    mesh_tag = "multi" if args.multi_pod else "single"
+    path = _result_path(args.arch, args.shape, mesh_tag, args.method,
+                        args.variant)
+    try:
+        res = run_cell(args.arch, args.shape, args.multi_pod, args.method,
+                       args.skip_cost, args.variant)
+    except Exception as e:  # recorded, orchestrator continues
+        res = {"arch": args.arch, "shape": args.shape, "error": str(e),
+               "traceback": traceback.format_exc()[-4000:]}
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1)
+        print(f"FAIL {args.arch} {args.shape} {mesh_tag}: {e}",
+              file=sys.stderr)
+        sys.exit(1)
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1)
+    if res.get("skipped"):
+        print(f"SKIP {args.arch} {args.shape}: {res['reason']}")
+    else:
+        ce = res.get("cost_extrapolated", {})
+        print(f"OK {args.arch} {args.shape} {mesh_tag} "
+              f"compile={res['compile_s']}s "
+              f"in_bytes/dev={res['per_device_input_gib']}GiB "
+              f"flops/dev={ce.get('flops', 0):.3e} "
+              f"coll/dev={ce.get('coll_link_bytes', 0):.3e}B")
+
+
+def orchestrate(args):
+    """Run every cell in a subprocess (isolates XLA state + memory)."""
+    from repro.configs import ARCHS, ASSIGNED, LM_SHAPES
+    meshes = ["single", "multi"] if args.both_meshes else \
+        (["multi"] if args.multi_pod else ["single"])
+    cells = []
+    for arch in ASSIGNED:
+        for shape in LM_SHAPES:
+            for mesh_tag in meshes:
+                cells.append((arch, shape, mesh_tag))
+    failures = 0
+    for arch, shape, mesh_tag in cells:
+        path = _result_path(arch, shape, mesh_tag, args.method)
+        if os.path.exists(path) and not args.force:
+            print(f"cached {arch} {shape} {mesh_tag}")
+            continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape, "--method", args.method]
+        if mesh_tag == "multi":
+            cmd.append("--multi-pod")
+        if args.skip_cost or mesh_tag == "multi":
+            cmd.append("--skip-cost")
+        t0 = time.time()
+        r = subprocess.run(cmd, capture_output=True, text=True)
+        dt = time.time() - t0
+        tail = (r.stdout + r.stderr).strip().splitlines()
+        msg = tail[-1] if tail else ""
+        print(f"[{dt:6.1f}s] {msg}")
+        if r.returncode != 0:
+            failures += 1
+    print(f"done; {failures} failures")
+
+
+def print_summary():
+    rows = []
+    for fn in sorted(os.listdir(RESULTS_DIR)):
+        if not fn.endswith(".json"):
+            continue
+        with open(os.path.join(RESULTS_DIR, fn)) as f:
+            rows.append(json.load(f))
+    ok = [r for r in rows if "error" not in r and not r.get("skipped")]
+    sk = [r for r in rows if r.get("skipped")]
+    er = [r for r in rows if "error" in r]
+    print(f"{len(ok)} compiled, {len(sk)} skipped, {len(er)} failed")
+    for r in er:
+        print("FAILED:", r["arch"], r["shape"], r["error"][:120])
+
+
+if __name__ == "__main__":
+    main()

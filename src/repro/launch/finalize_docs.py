@@ -1,0 +1,20 @@
+"""Splice the generated §Dry-run and §Roofline tables into EXPERIMENTS.md."""
+import re
+
+from repro.launch.report import dryrun_markdown
+from repro.launch.roofline import markdown as roofline_markdown
+
+
+def main():
+    path = "EXPERIMENTS.md"
+    with open(path) as f:
+        text = f.read()
+    text = text.replace("<!-- DRYRUN_TABLE -->", dryrun_markdown(), 1)
+    text = text.replace("<!-- ROOFLINE_TABLE -->", roofline_markdown(), 1)
+    with open(path, "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,127 @@
+"""Post-SPMD HLO text analysis: collective bytes per class.
+
+`cost_analysis()` reports flops / bytes-accessed but NOT collective traffic,
+so we parse `compiled.as_text()` (post-partitioning, shapes are per-device)
+and charge each collective with ring-algorithm link bytes:
+
+    all-reduce          2 (n-1)/n * buf        (reduce-scatter + all-gather)
+    all-gather          (n-1)/n   * result     (result = gathered buffer)
+    reduce-scatter      (n-1)     * result     (input = n * result)
+    all-to-all          (n-1)/n   * buf
+    collective-permute  1         * buf
+
+Cost lowerings are UNROLLED (no while loops), so text counts are exact; the
+parser still tracks computations and flags collectives living inside a
+`while` body (sanity check for the methodology, DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9_]+\[[^\]]*\][^ ]*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9_]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*"
+                      r"(?:->\s*[^{]*)?\{\s*$")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        # [G, S] <= [N]: G groups of size S
+        return int(m.group(2))
+    return default
+
+
+_FACTORS = {
+    "all-reduce": lambda n, b: 2.0 * (n - 1) / n * b,
+    "all-gather": lambda n, b: (n - 1) / n * b,
+    "reduce-scatter": lambda n, b: float(n - 1) * b,
+    "all-to-all": lambda n, b: (n - 1) / n * b,
+    "collective-permute": lambda n, b: float(b),
+}
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    link_bytes: float = 0.0            # per-device bytes over ICI links
+    by_kind: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    count: int = 0
+    in_while: int = 0                  # collectives inside while bodies (bad
+                                       # for the unrolled-cost methodology)
+
+
+def analyze_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:
+    stats = CollectiveStats()
+    current_comp = ""
+    while_comps = set()
+
+    # first pass: find computations referenced by while ops
+    for line in hlo_text.splitlines():
+        if " while(" in line:
+            for m in re.finditer(r"(?:body|condition)=%?([\w.\-]+)", line):
+                while_comps.add(m.group(1))
+
+    for line in hlo_text.splitlines():
+        mc = _COMP_RE.match(line.strip()) if line and not line.startswith(" ") \
+            else None
+        if mc:
+            current_comp = mc.group(1)
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        result_text, kind = m.group(1), m.group(2)
+        if f"{kind}-done" in line:
+            continue
+        buf = _shape_bytes(result_text)
+        # XLA:CPU promotes bf16 all-reduce accumulation to f32
+        # (to_apply=..._promoted); TPUs reduce in bf16 natively, so count
+        # the un-promoted width.
+        if kind == "all-reduce" and "promoted" in line and "f32[" in line \
+                and "bf16[" not in result_text:
+            buf = buf // 2
+        n = _group_size(line, n_devices)
+        if n <= 1:
+            continue
+        link = _FACTORS[kind](n, buf)
+        stats.link_bytes += link
+        stats.by_kind[kind] += link
+        stats.count += 1
+        if current_comp in while_comps or "while" in current_comp \
+                or "body" in current_comp:
+            stats.in_while += 1
+    return stats
+
+
+def count_ops(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))

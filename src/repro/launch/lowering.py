@@ -1,0 +1,310 @@
+"""Builders that turn (arch x shape x mesh x method) into a lowerable jit.
+
+`input_specs` returns ShapeDtypeStruct stand-ins for every input — weak-type
+correct, shardable, never allocated.  Each builder returns
+(fn, args, in_shardings, out_shardings, donate) ready for
+
+    jax.jit(fn, in_shardings=..., out_shardings=..., donate_argnums=...) \
+        .lower(*args).compile()
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchBundle, ShapeSpec
+from repro.core import sparse_adam as sa
+from repro.core.lift import LiftConfig, make_plan
+from repro.models import build_model
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import sharding_ctx, tree_shardings
+from repro.training import trainer as T
+
+I32 = jnp.int32
+F32 = jnp.float32
+
+
+def safe_shardings(sds_tree, sharding_tree, mesh):
+    """jit in_shardings require every sharded dim to divide evenly; null out
+    the axes that don't (e.g. hubert's 504-way vocab head, batch=1 decode).
+    Interior with_sharding_constraints still shard those values (GSPMD pads
+    intermediates)."""
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    if sharding_tree is None:
+        return None
+    axis_size = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def fix(sds, sh):
+        if sh is None or not hasattr(sh, "spec"):
+            return sh
+        spec = list(sh.spec) + [None] * (len(sds.shape) - len(sh.spec))
+        out = []
+        for dim, ax in zip(sds.shape, spec):
+            if ax is None:
+                out.append(None)
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            n = int(np.prod([axis_size[a] for a in axes]))
+            out.append(ax if dim % n == 0 else None)
+        return NamedSharding(mesh, P(*out))
+
+    sh_leaves = jax.tree.leaves(
+        sharding_tree, is_leaf=lambda x: hasattr(x, "spec"))
+    sds_leaves = jax.tree.leaves(sds_tree)
+    fixed = [fix(s, h) for s, h in zip(sds_leaves, sh_leaves)]
+    treedef = jax.tree.structure(
+        sharding_tree, is_leaf=lambda x: hasattr(x, "spec"))
+    return jax.tree.unflatten(treedef, fixed)
+
+
+
+def _ctx_fn(fn, mesh, rules):
+    """Re-enter the sharding context at TRACE time: jit(...).lower() runs
+    outside the builder's `with sharding_ctx(...)` block, and shard_logical
+    constraints are no-ops without an active mesh."""
+    import functools
+
+    @functools.wraps(fn)
+    def wrapped(*args):
+        with sharding_ctx(mesh, rules):
+            return fn(*args)
+
+    return wrapped
+
+def _dt(cfg: ModelConfig):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.compute_dtype]
+
+
+DEFAULT_LIFT = LiftConfig(rank=128, density=0.05, method="randomized",
+                          update_interval=200, k_multiple=1024)
+DEFAULT_ADAM = sa.AdamConfig(lr=1e-4, weight_decay=0.0, grad_clip=1.0)
+
+
+# ------------------------------------------------------------- input specs
+def train_batch_specs(cfg: ModelConfig, shape: ShapeSpec):
+    B, S = shape.global_batch, shape.seq_len
+    batch = {}
+    if cfg.input_mode == "embeddings":
+        batch["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), _dt(cfg))
+    else:
+        batch["tokens"] = jax.ShapeDtypeStruct((B, S), I32)
+    batch["labels"] = jax.ShapeDtypeStruct((B, S), I32)
+    batch["loss_mask"] = jax.ShapeDtypeStruct((B, S), F32)
+    return batch
+
+
+def train_batch_axes(cfg: ModelConfig):
+    axes = {"labels": ("batch", "seq"), "loss_mask": ("batch", "seq")}
+    if cfg.input_mode == "embeddings":
+        axes["embeds"] = ("batch", "seq", "embed")
+    else:
+        axes["tokens"] = ("batch", "seq")
+    return axes
+
+
+def lift_state_specs(model, lcfg: LiftConfig, use_master: bool):
+    plan = make_plan(model.spec(), lcfg)
+    tensors, axes = {}, {}
+    for path, p in sorted(plan.items()):
+        ns = int(np.prod(p.stack)) if p.stack else 1
+        sd = jax.ShapeDtypeStruct((ns, p.k), I32)
+        fd = jax.ShapeDtypeStruct((ns, p.k), F32)
+        tensors[path] = {"idx": sd, "m": fd, "v": fd}
+        axes[path] = {"idx": ("layers", "topk"), "m": ("layers", "topk"),
+                      "v": ("layers", "topk")}
+        if use_master:
+            tensors[path]["master"] = fd
+            axes[path]["master"] = ("layers", "topk")
+    return ({"step": jax.ShapeDtypeStruct((), I32), "tensors": tensors},
+            {"step": (), "tensors": axes})
+
+
+def full_state_specs(model):
+    p = model.param_shapes()
+    f32 = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, F32), p)
+    ax = model.axes()
+    return ({"step": jax.ShapeDtypeStruct((), I32),
+             "opt": {"step": jax.ShapeDtypeStruct((), I32),
+                     "m": f32, "v": jax.tree.map(lambda x: x, f32)}},
+            {"step": (),
+             "opt": {"step": (), "m": ax, "v": jax.tree.map(lambda x: x, ax)}})
+
+
+# ----------------------------------------------------------------- builders
+@dataclasses.dataclass
+class Lowering:
+    fn: Any
+    args: tuple
+    in_shardings: tuple
+    out_shardings: Any
+    donate: tuple
+    meta: dict
+
+
+def build_train(bundle: ArchBundle, cfg: ModelConfig, mesh, shape: ShapeSpec,
+                method: str = "lift",
+                lcfg: LiftConfig = DEFAULT_LIFT,
+                adam: sa.AdamConfig = DEFAULT_ADAM,
+                rules_extra: Optional[dict] = None) -> Lowering:
+    model = build_model(cfg)
+    rules = {**bundle.rules, **(rules_extra or {})}
+    with sharding_ctx(mesh, rules):
+        mcfg = T.MethodConfig(kind=method, lift=lcfg)
+        step = T.make_train_step(model, mcfg, adam,
+                                 T.constant_lr(adam.lr))
+        params_sds = model.param_shapes()
+        params_sh = safe_shardings(params_sds,
+                                   tree_shardings(model.axes(), mesh), mesh)
+        batch_sds = train_batch_specs(cfg, shape)
+        batch_sh = safe_shardings(
+            batch_sds, tree_shardings(train_batch_axes(cfg), mesh), mesh)
+        if method == "lift":
+            use_master = cfg.param_dtype != "float32"
+            state_sds_inner, state_axes = lift_state_specs(model, lcfg,
+                                                           use_master)
+            state_sds = {"step": jax.ShapeDtypeStruct((), I32),
+                         "opt": state_sds_inner}
+            state_sh = safe_shardings(
+                state_sds,
+                tree_shardings({"step": (), "opt": state_axes}, mesh), mesh)
+        elif method == "full":
+            s_sds, s_axes = full_state_specs(model)
+            state_sds = {"step": s_sds["step"], "opt": s_sds["opt"]}
+            state_sh = safe_shardings(
+                state_sds,
+                tree_shardings({"step": (), "opt": s_axes["opt"]}, mesh),
+                mesh)
+        else:
+            raise ValueError(method)
+
+        def fn(params, state, batch):
+            return step(params, state, batch)
+
+        args = (params_sds, state_sds, batch_sds)
+        in_sh = (params_sh, state_sh, batch_sh)
+        out_sh = (params_sh, state_sh, None)
+    return Lowering(_ctx_fn(fn, mesh, rules), args, in_sh, out_sh, (0, 1),
+                    {"kind": "train", "method": method})
+
+
+def build_refresh(bundle: ArchBundle, cfg: ModelConfig, mesh,
+                  lcfg: LiftConfig = DEFAULT_LIFT,
+                  rules_extra: Optional[dict] = None) -> Lowering:
+    """LIFT mask-refresh program (SVD + top-k + state migration)."""
+    model = build_model(cfg)
+    rules = {**bundle.rules, **(rules_extra or {})}
+    with sharding_ctx(mesh, rules):
+        mcfg = T.MethodConfig(kind="lift", lift=lcfg)
+        refresh = T.make_refresh_step(model, mcfg)
+        params_sds = model.param_shapes()
+        params_sh = safe_shardings(params_sds,
+                                   tree_shardings(model.axes(), mesh), mesh)
+        use_master = cfg.param_dtype != "float32"
+        state_sds_inner, state_axes = lift_state_specs(model, lcfg, use_master)
+        state_sds = {"step": jax.ShapeDtypeStruct((), I32),
+                     "opt": state_sds_inner}
+        state_sh = safe_shardings(
+            state_sds, tree_shardings({"step": (), "opt": state_axes}, mesh),
+            mesh)
+        key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+        def fn(params, state, k):
+            return refresh(params, state, k)
+
+        args = (params_sds, state_sds, key)
+        in_sh = (params_sh, state_sh, None)
+        out_sh = state_sh
+    return Lowering(_ctx_fn(fn, mesh, rules), args, in_sh, out_sh, (1,),
+                    {"kind": "refresh"})
+
+
+def build_prefill(bundle: ArchBundle, cfg: ModelConfig, mesh,
+                  shape: ShapeSpec,
+                  rules_extra: Optional[dict] = None) -> Lowering:
+    model = build_model(cfg)
+    rules = {**bundle.rules, **(rules_extra or {})}
+    B, S = shape.global_batch, shape.seq_len
+    with sharding_ctx(mesh, rules):
+        params_sds = model.param_shapes()
+        params_sh = safe_shardings(params_sds,
+                                   tree_shardings(model.axes(), mesh), mesh)
+        if cfg.input_mode == "embeddings":
+            batch_sds = {"embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                        _dt(cfg))}
+            batch_sh = tree_shardings({"embeds": ("batch", "seq", "embed")},
+                                      mesh)
+        else:
+            batch_sds = {"tokens": jax.ShapeDtypeStruct((B, S), I32)}
+            batch_sh = tree_shardings({"tokens": ("batch", "seq")}, mesh)
+        batch_sh = safe_shardings(batch_sds, batch_sh, mesh)
+
+        if cfg.is_encoder:
+            def fn(params, batch):
+                return model.logits(params, batch)
+            args = (params_sds, batch_sds)
+            in_sh = (params_sh, batch_sh)
+            return Lowering(_ctx_fn(fn, mesh, rules), args, in_sh, None,
+                            (), {"kind": "prefill", "encoder": True})
+
+        cache_sds = jax.eval_shape(lambda: model.init_cache(B, S))
+        cache_sh = safe_shardings(
+            cache_sds, tree_shardings(model.cache_axes(), mesh), mesh)
+
+        def fn(params, batch, cache):
+            return model.prefill(params, batch, cache)
+
+        args = (params_sds, batch_sds, cache_sds)
+        in_sh = (params_sh, batch_sh, cache_sh)
+        out_sh = (None, cache_sh)
+    return Lowering(_ctx_fn(fn, mesh, rules), args, in_sh, out_sh, (2,),
+                    {"kind": "prefill"})
+
+
+def build_decode(bundle: ArchBundle, cfg: ModelConfig, mesh,
+                 shape: ShapeSpec,
+                 rules_extra: Optional[dict] = None) -> Lowering:
+    """One-token serve_step with a KV/state cache of shape.seq_len."""
+    model = build_model(cfg)
+    rules = {**bundle.rules, **(rules_extra or {})}
+    B, S = shape.global_batch, shape.seq_len
+    with sharding_ctx(mesh, rules):
+        params_sds = model.param_shapes()
+        params_sh = safe_shardings(params_sds,
+                                   tree_shardings(model.axes(), mesh), mesh)
+        cache_sds = jax.eval_shape(lambda: model.init_cache(B, S))
+        cache_sh = safe_shardings(
+            cache_sds, tree_shardings(model.cache_axes(), mesh), mesh)
+        tok_sds = jax.ShapeDtypeStruct((B, 1), I32)
+        tok_sh = safe_shardings(
+            tok_sds, tree_shardings({"t": ("batch", "seq")}, mesh)["t"], mesh)
+        pos_sds = jax.ShapeDtypeStruct((B,), I32)
+        pos_sh = safe_shardings(
+            pos_sds, tree_shardings({"p": ("batch",)}, mesh)["p"], mesh)
+
+        def fn(params, tokens, cache, positions):
+            return model.decode(params, tokens, cache, positions)
+
+        args = (params_sds, tok_sds, cache_sds, pos_sds)
+        in_sh = (params_sh, tok_sh, cache_sh, pos_sh)
+        out_sh = (None, cache_sh)
+    return Lowering(_ctx_fn(fn, mesh, rules), args, in_sh, out_sh, (2,),
+                    {"kind": "decode"})
+
+
+BUILDERS = {"train": build_train, "prefill": build_prefill,
+            "decode": build_decode}
+
+
+def build_cell(bundle: ArchBundle, cfg: ModelConfig, mesh, shape: ShapeSpec,
+               method: str = "lift", **kw) -> Lowering:
+    if shape.kind == "train":
+        return build_train(bundle, cfg, mesh, shape, method=method, **kw)
+    if shape.kind == "prefill":
+        return build_prefill(bundle, cfg, mesh, shape, **kw)
+    return build_decode(bundle, cfg, mesh, shape, **kw)

@@ -1,0 +1,35 @@
+"""Production mesh definitions.
+
+`make_production_mesh` is a FUNCTION so importing this module never touches
+jax device state; the dry-run entrypoint sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax import.
+
+Topology (TPU v5e-like):
+  single pod:  (data=16, model=16)              = 256 chips
+  multi pod :  (pod=2, data=16, model=16)       = 512 chips
+The "pod" axis is outer data parallelism — batch shards over
+("pod", "data"); only the gradient all-reduce crosses the pod boundary.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh for tests on the local host's devices."""
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))
+
+
+# hardware constants for the roofline (per chip) — TPU v5e-like
+PEAK_FLOPS_BF16 = 197e12       # FLOP/s
+HBM_BW = 819e9                 # bytes/s
+ICI_BW_PER_LINK = 50e9         # bytes/s  (per the assignment: ~50 GB/s/link)

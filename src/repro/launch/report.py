@@ -1,0 +1,43 @@
+"""Generate the EXPERIMENTS.md §Dry-run table from results/dryrun/."""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.launch.roofline import RESULTS_DIR, load_results
+
+
+def dryrun_markdown() -> str:
+    out = ["| arch | shape | mesh | compile s | in-bytes/dev GiB | "
+           "temp bytes/dev | HLO flops/dev (extrap) | coll link-bytes/dev | "
+           "collective mix |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    skips = []
+    for mesh_tag in ("single", "multi"):
+        for (arch, shape), r in sorted(load_results(mesh_tag).items()):
+            if r.get("skipped"):
+                if mesh_tag == "single":
+                    skips.append((arch, shape, r["reason"]))
+                continue
+            ce = r.get("cost_extrapolated", {})
+            mix = ce.get("coll_by_kind", {})
+            mix_s = " ".join(f"{k.split('-')[-1][:4]}:{v:.1e}"
+                             for k, v in sorted(mix.items(),
+                                                key=lambda x: -x[1])[:3])
+            out.append(
+                f"| {arch} | {shape} | {mesh_tag} | {r['compile_s']} "
+                f"| {r['per_device_input_gib']} "
+                f"| {r['memory_analysis']['temp_bytes']:.2e} "
+                f"| {ce.get('flops', float('nan')):.3e} "
+                f"| {ce.get('coll_link_bytes', float('nan')):.3e} "
+                f"| {mix_s} |")
+    out.append("")
+    out.append("Skipped cells (documented in DESIGN.md §6):")
+    out.append("")
+    for arch, shape, reason in skips:
+        out.append(f"* `{arch} x {shape}` — {reason}")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print(dryrun_markdown())

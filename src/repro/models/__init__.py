@@ -1,0 +1,9 @@
+from repro.models.config import ModelConfig  # noqa: F401
+from repro.models.lm import LM  # noqa: F401
+from repro.models.zamba import ZambaLM  # noqa: F401
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family == "hybrid":
+        return ZambaLM(cfg)
+    return LM(cfg)

@@ -1,0 +1,97 @@
+"""Model configuration shared by every architecture family."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    # family: dense | moe | rwkv6 | hybrid | encoder
+    family: str = "dense"
+    num_layers: int = 2
+    d_model: int = 64
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    head_dim: int = 16
+    d_ff: int = 128
+    vocab_size: int = 256
+
+    # attention options
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    sliding_window: Optional[int] = None
+    rope_theta: float = 10_000.0
+    causal: bool = True
+    attn_logit_softcap: Optional[float] = None
+
+    # MLP options: silu -> SwiGLU, gelu -> GeGLU, plain -> fc1/act/fc2
+    mlp_act: str = "silu"
+    mlp_glu: bool = True
+
+    # embedding / head
+    tie_embeddings: bool = False
+    scale_embeddings: bool = False     # gemma-style sqrt(d_model) scaling
+    # tokens -> standard LM; embeddings -> frontend-stub (audio/VLM backbones)
+    input_mode: str = "tokens"
+
+    # MoE
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    moe_groups: int = 1   # dispatch groups; == data-shard count in production
+
+    # RWKV6
+    rwkv_head_dim: int = 64
+    rwkv_decay_lora: int = 64
+    rwkv_mix_lora: int = 32
+
+    # Mamba2 (hybrid family)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv: int = 4
+    ssm_chunk: int = 64
+    shared_attn_period: int = 0  # zamba2: shared block every k-th layer
+
+    # normalization
+    norm_eps: float = 1e-6
+
+    # numerics / lowering
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+    remat: bool = False
+    scan_layers: bool = True
+    unroll_layers: bool = False        # cost-accounting mode (see DESIGN.md §5)
+    attn_chunk: int = 0                # 0 -> naive attention; else online-softmax
+    loss_chunk: int = 0                # 0 -> full logits; else chunked CE
+    seq_shard_activations: bool = False
+
+    @property
+    def is_encoder(self) -> bool:
+        return self.family == "encoder"
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.ssm_d_inner // self.ssm_head_dim
+
+    @property
+    def rwkv_heads(self) -> int:
+        return self.d_model // self.rwkv_head_dim
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)

@@ -1,0 +1,281 @@
+"""Decoder / encoder LM assembly for every architecture family.
+
+One `LM` class covers the uniform-stack families (dense, moe, rwkv6,
+encoder) with scan-over-layers (stacked per-layer params keep the HLO small:
+an 80-layer model compiles as one while loop).  The zamba2 hybrid (periodic
+shared attention block) lives in models/zamba.py.
+
+Batch format (training):
+    {"tokens": (B, S) int32}  or  {"embeds": (B, S, d)}   (frontend stubs)
+    {"labels": (B, S) int32, "loss_mask": (B, S) f32}
+
+Decode state is a pytree stacked over layers; `prefill` fills it, `decode`
+advances one token.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.nn import core as nncore
+from repro.nn import layers as L
+from repro.nn import mlp as mlpmod
+from repro.nn import moe as moemod
+from repro.nn import rwkv6 as rwkvmod
+from repro.nn.attention import (KVCache, attention, attention_decode,
+                                attention_prefill, attention_spec)
+from repro.nn.core import Spec
+from repro.parallel.sharding import shard_logical
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+class LM:
+    """Uniform-stack language model (dense / moe / rwkv6 / encoder)."""
+
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.family in ("dense", "moe", "rwkv6", "encoder"), cfg.family
+        self.cfg = cfg
+
+    # ------------------------------------------------------------- specs
+    def block_spec(self):
+        cfg = self.cfg
+        if cfg.family == "rwkv6":
+            return {
+                "ln1": L.rmsnorm_spec(cfg.d_model),
+                "tmix": rwkvmod.time_mix_spec(cfg),
+                "ln2": L.rmsnorm_spec(cfg.d_model),
+                "cmix": rwkvmod.channel_mix_spec(cfg),
+            }
+        spec = {
+            "ln1": L.rmsnorm_spec(cfg.d_model),
+            "attn": attention_spec(cfg),
+            "ln2": L.rmsnorm_spec(cfg.d_model),
+        }
+        if cfg.family == "moe":
+            spec["moe"] = moemod.moe_spec(cfg)
+        else:
+            spec["mlp"] = mlpmod.mlp_spec(cfg)
+        return spec
+
+    def spec(self):
+        cfg = self.cfg
+        spec = {
+            "embed": L.embedding_spec(cfg.vocab_size, cfg.d_model),
+            "blocks": nncore.stack_specs(self.block_spec(), cfg.num_layers),
+            "final_norm": L.rmsnorm_spec(cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            spec["lm_head"] = L.lm_head_spec(cfg.d_model, cfg.vocab_size)
+        return spec
+
+    def init(self, key):
+        return nncore.init_params(key, self.spec(),
+                                  dtype=_dtype(self.cfg.param_dtype))
+
+    def axes(self):
+        return nncore.axes_tree(self.spec())
+
+    def param_shapes(self):
+        return nncore.shape_tree(self.spec(),
+                                 dtype=_dtype(self.cfg.param_dtype))
+
+    # ------------------------------------------------------------ blocks
+    def _block(self, params, x, positions=None):
+        """Training/plain-forward block.  Returns (x, aux)."""
+        cfg = self.cfg
+        if cfg.family == "rwkv6":
+            h, _, _ = rwkvmod.time_mix(
+                params["tmix"], L.rmsnorm(params["ln1"], x, cfg.norm_eps),
+                cfg, chunk=cfg.ssm_chunk or 64, unroll=cfg.unroll_layers)
+            x = x + h
+            h, _ = rwkvmod.channel_mix(
+                params["cmix"], L.rmsnorm(params["ln2"], x, cfg.norm_eps), cfg)
+            return x + h, 0.0
+        h = attention(params["attn"], L.rmsnorm(params["ln1"], x, cfg.norm_eps),
+                      cfg, positions)
+        x = x + h
+        hn = L.rmsnorm(params["ln2"], x, cfg.norm_eps)
+        if cfg.family == "moe":
+            h, aux = moemod.moe(params["moe"], hn, cfg)
+        else:
+            h, aux = mlpmod.mlp(params["mlp"], hn, cfg), 0.0
+        return x + h, aux
+
+    def _embed_in(self, params, batch):
+        cfg = self.cfg
+        if "embeds" in batch:
+            x = batch["embeds"].astype(_dtype(cfg.compute_dtype))
+            x = shard_logical(x, ("batch", "seq", "embed"))
+        else:
+            scale = cfg.d_model ** 0.5 if cfg.scale_embeddings else None
+            x = L.embed(params["embed"], batch["tokens"], scale,
+                        _dtype(cfg.compute_dtype))
+        return x
+
+    def _head_w(self, params):
+        if self.cfg.tie_embeddings:
+            return params["embed"]["table"].T
+        return params["lm_head"]["w"]
+
+    # ----------------------------------------------------------- forward
+    def forward(self, params, batch):
+        """-> (hidden (B, S, d), aux_loss)."""
+        cfg = self.cfg
+        x = self._embed_in(params, batch)
+
+        def body(carry, lyr):
+            x, aux = carry
+            x2, a = self._block(lyr, x)
+            return (x2, aux + a), None
+
+        if cfg.remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+
+        if cfg.scan_layers and not cfg.unroll_layers:
+            (x, aux), _ = jax.lax.scan(body, (x, 0.0), params["blocks"])
+        else:
+            carry = (x, 0.0)
+            for i in range(cfg.num_layers):
+                lyr = jax.tree.map(lambda a: a[i], params["blocks"])
+                carry, _ = body(carry, lyr)
+            x, aux = carry
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        return x, aux
+
+    def loss(self, params, batch):
+        """-> (scalar loss, metrics dict)."""
+        cfg = self.cfg
+        h, aux = self.forward(params, batch)
+        ce = L.cross_entropy(h, self._head_w(params).astype(h.dtype),
+                             batch["labels"], batch.get("loss_mask"),
+                             chunk=cfg.loss_chunk, unroll=cfg.unroll_layers)
+        loss = ce + cfg.router_aux_coef * aux
+        return loss, {"ce": ce, "aux": aux}
+
+    def logits(self, params, batch):
+        h, _ = self.forward(params, batch)
+        return h @ self._head_w(params).astype(h.dtype)
+
+    # ----------------------------------------------------------- serving
+    def cache_axes(self):
+        """Logical-axis tree matching init_cache's structure."""
+        cfg = self.cfg
+        if cfg.family == "rwkv6":
+            return rwkvmod.RwkvState(
+                tm_last=("layers", "batch", "embed"),
+                cm_last=("layers", "batch", "embed"),
+                wkv=("layers", "batch", "heads", None, None))
+        return KVCache(
+            k=("layers", "batch", "cache_seq", None, "head_dim"),
+            v=("layers", "batch", "cache_seq", None, "head_dim"),
+            key_pos=("layers", "batch", "cache_seq"))
+
+    def init_cache(self, batch: int, max_len: int):
+        cfg = self.cfg
+        dt = _dtype(cfg.compute_dtype)
+        if cfg.family == "rwkv6":
+            one = rwkvmod.RwkvState.init(batch, cfg, dt)
+        else:
+            window = min(cfg.sliding_window or max_len, max_len)
+            one = KVCache.init(batch, window, cfg.num_kv_heads,
+                               cfg.head_dim, dt)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.num_layers,) + a.shape)
+            .copy(), one)
+
+    def prefill(self, params, batch, cache):
+        """batch: tokens/embeds (B, S).  Returns (last-token logits, cache)."""
+        cfg = self.cfg
+        x = self._embed_in(params, batch)
+
+        def body(x, lyr_and_cache):
+            lyr, c = lyr_and_cache
+            xn = L.rmsnorm(lyr["ln1"], x, cfg.norm_eps)
+            if cfg.family == "rwkv6":
+                h, tm_last, wkv = rwkvmod.time_mix(
+                    lyr["tmix"], xn, cfg, last=c.tm_last, state=c.wkv,
+                    chunk=cfg.ssm_chunk or 64, unroll=cfg.unroll_layers)
+                x = x + h
+                xn2 = L.rmsnorm(lyr["ln2"], x, cfg.norm_eps)
+                h, cm_last = rwkvmod.channel_mix(lyr["cmix"], xn2, cfg,
+                                                 last=c.cm_last)
+                new_c = rwkvmod.RwkvState(tm_last.astype(c.tm_last.dtype),
+                                          cm_last.astype(c.cm_last.dtype),
+                                          wkv)
+            else:
+                h, new_c = attention_prefill(lyr["attn"], xn, cfg, c)
+                x = x + h
+                xn2 = L.rmsnorm(lyr["ln2"], x, cfg.norm_eps)
+                if cfg.family == "moe":
+                    h, _ = moemod.moe(lyr["moe"], xn2, cfg)
+                else:
+                    h = mlpmod.mlp(lyr["mlp"], xn2, cfg)
+            return x + h, new_c
+
+        x, cache = self._scan_serve(params, x, cache, body)
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = x[:, -1:, :] @ self._head_w(params).astype(x.dtype)
+        return logits, cache
+
+    def decode(self, params, tokens, cache, positions):
+        """tokens: (B, 1) int32; positions: (B,).  -> (logits, cache)."""
+        cfg = self.cfg
+        if cfg.is_encoder:
+            raise ValueError("encoder-only models have no decode step")
+        x = self._embed_in(params, {"tokens": tokens})
+
+        def body(x, lyr_and_cache):
+            lyr, c = lyr_and_cache
+            xn = L.rmsnorm(lyr["ln1"], x, cfg.norm_eps)
+            if cfg.family == "rwkv6":
+                h, tm_last, wkv = rwkvmod.time_mix(
+                    lyr["tmix"], xn, cfg, last=c.tm_last, state=c.wkv,
+                    chunk=1)
+                x = x + h
+                xn2 = L.rmsnorm(lyr["ln2"], x, cfg.norm_eps)
+                h, cm_last = rwkvmod.channel_mix(lyr["cmix"], xn2, cfg,
+                                                 last=c.cm_last)
+                new_c = rwkvmod.RwkvState(tm_last.astype(c.tm_last.dtype),
+                                          cm_last.astype(c.cm_last.dtype),
+                                          wkv)
+            else:
+                h, new_c = attention_decode(lyr["attn"], xn, cfg, c, positions)
+                x = x + h
+                xn2 = L.rmsnorm(lyr["ln2"], x, cfg.norm_eps)
+                if cfg.family == "moe":
+                    h, _ = moemod.moe(lyr["moe"], xn2, cfg)
+                else:
+                    h = mlpmod.mlp(lyr["mlp"], xn2, cfg)
+            return x + h, new_c
+
+        x, cache = self._scan_serve(params, x, cache, body)
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = x @ self._head_w(params).astype(x.dtype)
+        return logits, cache
+
+    def _scan_serve(self, params, x, cache, body):
+        cfg = self.cfg
+        if cfg.scan_layers and not cfg.unroll_layers:
+            def scan_body(x, lc):
+                x2, new_c = body(x, lc)
+                return x2, new_c
+            x, new_cache = jax.lax.scan(scan_body, x,
+                                        (params["blocks"], cache))
+            return x, new_cache
+        new_layers = []
+        for i in range(cfg.num_layers):
+            lyr = jax.tree.map(lambda a: a[i], params["blocks"])
+            c = jax.tree.map(lambda a: a[i], cache)
+            x, nc = body(x, (lyr, c))
+            new_layers.append(nc)
+        new_cache = jax.tree.map(lambda *a: jnp.stack(a), *new_layers)
+        return x, new_cache

@@ -1,0 +1,175 @@
+"""Zamba2-style hybrid: Mamba-2 backbone with a *shared* transformer block.
+
+Every `shared_attn_period`-th layer, the hidden state is concatenated with
+the original embedding (width 2*d_model), run through ONE shared attention+
+MLP block (same parameters each invocation), and projected back to d_model
+through a per-invocation linear.  The backbone layers are Mamba-2 blocks.
+
+The stack is non-uniform, so layers are a python loop (38 mamba bodies + ~6
+shared invocations still compile quickly); dry-run cost extrapolation uses
+depth P and 2P with P = shared_attn_period (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.lm import LM, _dtype
+from repro.nn import core as nncore
+from repro.nn import layers as L
+from repro.nn import mlp as mlpmod
+from repro.nn.attention import (KVCache, attention, attention_decode,
+                                attention_prefill, attention_spec)
+from repro.nn.core import Spec
+from repro.nn.mamba2 import MambaState, mamba2, mamba2_spec
+
+
+class ZambaCache(NamedTuple):
+    mamba: MambaState      # stacked over mamba layers
+    kv: KVCache            # stacked over shared-block invocations
+
+
+class ZambaLM(LM):
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.family == "hybrid"
+        assert cfg.shared_attn_period > 0
+        self.cfg = cfg
+
+    @property
+    def n_shared(self) -> int:
+        return self.cfg.num_layers // self.cfg.shared_attn_period
+
+    def shared_cfg(self) -> ModelConfig:
+        cfg = self.cfg
+        return cfg.replace(d_model=2 * cfg.d_model, family="dense",
+                           sliding_window=None)
+
+    def spec(self):
+        cfg = self.cfg
+        d = cfg.d_model
+        scfg = self.shared_cfg()
+        mamba_block = {
+            "ln": L.rmsnorm_spec(d),
+            "mixer": mamba2_spec(cfg),
+        }
+        shared = {
+            "ln1": L.rmsnorm_spec(2 * d),
+            "attn": attention_spec(scfg),
+            "ln2": L.rmsnorm_spec(2 * d),
+            "mlp": mlpmod.mlp_spec(scfg),
+        }
+        return {
+            "embed": L.embedding_spec(cfg.vocab_size, d),
+            "blocks": nncore.stack_specs(mamba_block, cfg.num_layers),
+            "shared": shared,
+            "down_proj": Spec((self.n_shared, 2 * d, d),
+                              ("layers", "mlp", "embed")),
+            "final_norm": L.rmsnorm_spec(d),
+            "lm_head": L.lm_head_spec(d, cfg.vocab_size),
+        }
+
+    # ------------------------------------------------------------ forward
+    def _shared_apply(self, params, x, e0, inv_idx, mode="train",
+                      cache=None, positions=None):
+        """x: (B, S, d) hidden; e0: (B, S, d) original embeddings."""
+        cfg = self.cfg
+        scfg = self.shared_cfg()
+        u = jnp.concatenate([x, e0], axis=-1)
+        un = L.rmsnorm(params["shared"]["ln1"], u, cfg.norm_eps)
+        new_kv = None
+        if mode == "train":
+            a = attention(params["shared"]["attn"], un, scfg)
+        elif mode == "prefill":
+            a, new_kv = attention_prefill(params["shared"]["attn"], un, scfg,
+                                          cache)
+        else:
+            a, new_kv = attention_decode(params["shared"]["attn"], un, scfg,
+                                         cache, positions)
+        u = u + a
+        un = L.rmsnorm(params["shared"]["ln2"], u, cfg.norm_eps)
+        u = u + mlpmod.mlp(params["shared"]["mlp"], un, scfg)
+        dp = params["down_proj"][inv_idx].astype(x.dtype)
+        return x + u @ dp, new_kv
+
+    def _iter_layers(self, params, x, e0, mode, cache=None, positions=None):
+        cfg = self.cfg
+        new_mamba, new_kv = [], []
+        inv = 0
+        for i in range(cfg.num_layers):
+            lyr = jax.tree.map(lambda a: a[i], params["blocks"])
+            st = None if cache is None else \
+                jax.tree.map(lambda a: a[i], cache.mamba)
+            xn = L.rmsnorm(lyr["ln"], x, cfg.norm_eps)
+            h, new_st = mamba2(lyr["mixer"], xn, cfg, state=st,
+                               chunk=cfg.ssm_chunk, unroll=cfg.unroll_layers)
+            x = x + h
+            if st is not None:
+                new_mamba.append(new_st)
+            if (i + 1) % cfg.shared_attn_period == 0 and inv < self.n_shared:
+                kv = None if cache is None else \
+                    jax.tree.map(lambda a: a[inv], cache.kv)
+                x, nkv = self._shared_apply(params, x, e0, inv, mode, kv,
+                                            positions)
+                if nkv is not None:
+                    new_kv.append(nkv)
+                inv += 1
+        if cache is None:
+            return x, None
+        stacked_m = jax.tree.map(lambda *a: jnp.stack(a), *new_mamba)
+        stacked_kv = jax.tree.map(lambda *a: jnp.stack(a), *new_kv)
+        return x, ZambaCache(stacked_m, stacked_kv)
+
+    def forward(self, params, batch):
+        cfg = self.cfg
+        x = self._embed_in(params, batch)
+        e0 = x
+        x, _ = self._iter_layers(params, x, e0, "train")
+        return L.rmsnorm(params["final_norm"], x, cfg.norm_eps), 0.0
+
+    # ----------------------------------------------------------- serving
+    def cache_axes(self):
+        from repro.nn.mamba2 import MambaState
+        return ZambaCache(
+            mamba=MambaState(
+                conv_x=("layers", "batch", None, "mlp"),
+                conv_b=("layers", "batch", None, "state"),
+                conv_c=("layers", "batch", None, "state"),
+                ssm=("layers", "batch", "heads", None, None)),
+            kv=KVCache(
+                k=("layers", "batch", "cache_seq", None, "head_dim"),
+                v=("layers", "batch", "cache_seq", None, "head_dim"),
+                key_pos=("layers", "batch", "cache_seq")))
+
+    def init_cache(self, batch: int, max_len: int):
+        cfg = self.cfg
+        dt = _dtype(cfg.compute_dtype)
+        m = MambaState.init(batch, cfg, dt)
+        mamba = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None],
+                                       (cfg.num_layers,) + a.shape).copy(), m)
+        scfg = self.shared_cfg()
+        kv1 = KVCache.init(batch, max_len, scfg.num_kv_heads, scfg.head_dim,
+                           dt)
+        kv = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None],
+                                       (self.n_shared,) + a.shape).copy(), kv1)
+        return ZambaCache(mamba, kv)
+
+    def prefill(self, params, batch, cache):
+        cfg = self.cfg
+        x = self._embed_in(params, batch)
+        x, cache = self._iter_layers(params, x, x, "prefill", cache)
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = x[:, -1:, :] @ self._head_w(params).astype(x.dtype)
+        return logits, cache
+
+    def decode(self, params, tokens, cache, positions):
+        cfg = self.cfg
+        x = self._embed_in(params, {"tokens": tokens})
+        x, cache = self._iter_layers(params, x, x, "decode", cache, positions)
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = x @ self._head_w(params).astype(x.dtype)
+        return logits, cache

@@ -1,0 +1,4 @@
+from repro.nn.core import (  # noqa: F401
+    Spec, axes_tree, cast_tree, init_params, param_bytes, param_count,
+    shape_tree, stack_specs,
+)

@@ -1,0 +1,254 @@
+"""Multi-head attention: MHA/GQA/MQA, qk-norm, QKV bias, sliding window,
+RoPE, flash or naive computation, and a position-explicit KV cache that
+uniformly supports full caches and SWA rolling buffers.
+
+Sharding scheme (DESIGN.md §3/§4): Q projection is head-sharded over the
+"model" axis (Megatron column-parallel); K/V projections are replicated over
+heads (GQA kv-head counts rarely divide the TP degree — replicating the small
+KV computation beats 4x pad-waste); the output projection is row-parallel
+(one psum per block, inserted by XLA from the sharding constraints).  KV
+*caches* are sequence-sharded over the model axis for decode (context
+parallelism — softmax stats are the only cross-shard collective).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.nn.core import Spec
+from repro.nn import layers as L
+from repro.nn.flash import NEG_INF, causal_bias, flash_attention, full_bias
+from repro.parallel.sharding import shard_logical
+
+
+def attention_spec(cfg: ModelConfig):
+    """Projections are stored 2-D flat: (d, Hq*hd) shards evenly over the
+    model axis even when the head COUNT does not divide TP (qwen2's 28
+    heads on a 16-way axis); the per-head (B, S, H, hd) view only exists as
+    an intermediate, where GSPMD tolerates uneven (padded) sharding."""
+    d, hq, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    spec = {
+        "wq": Spec((d, hq * hd), ("embed", "heads_flat")),
+        "wk": Spec((d, hkv * hd), ("embed", None)),
+        "wv": Spec((d, hkv * hd), ("embed", None)),
+        "wo": Spec((hq * hd, d), ("heads_flat", "embed")),
+    }
+    if cfg.qkv_bias:
+        spec["bq"] = Spec((hq * hd,), ("heads_flat",), init="zeros")
+        spec["bk"] = Spec((hkv * hd,), (None,), init="zeros")
+        spec["bv"] = Spec((hkv * hd,), (None,), init="zeros")
+    if cfg.qk_norm:
+        spec["q_norm"] = L.rmsnorm_spec(hd, axis="head_dim")
+        spec["k_norm"] = L.rmsnorm_spec(hd, axis="head_dim")
+    return spec
+
+
+class KVCache(NamedTuple):
+    """k/v: (B, S_max, H_kv, D).  key_pos: (B, S_max) int32, -1 = empty.
+
+    For full attention, slot i holds position i.  For sliding-window
+    attention the cache is a rolling buffer: position p lives in slot
+    p % S_max, and `key_pos` disambiguates stale entries — one mask rule
+    covers both layouts.
+    """
+    k: jax.Array
+    v: jax.Array
+    key_pos: jax.Array
+
+    @staticmethod
+    def init(batch: int, max_len: int, n_kv: int, head_dim: int, dtype):
+        return KVCache(
+            k=jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
+            v=jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
+            key_pos=jnp.full((batch, max_len), -1, jnp.int32),
+        )
+
+
+def _qkv(params, x, cfg: ModelConfig):
+    B, S, _ = x.shape
+    dt = x.dtype
+    hd = cfg.head_dim
+    q = x @ params["wq"].astype(dt)
+    k = x @ params["wk"].astype(dt)
+    v = x @ params["wv"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    q = q.reshape(B, S, cfg.num_heads, hd)
+    k = k.reshape(B, S, cfg.num_kv_heads, hd)
+    v = v.reshape(B, S, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = L.rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = L.rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    q = shard_logical(q, ("batch", "seq", "heads", "head_dim"))
+    k = shard_logical(k, ("batch", "seq", None, "head_dim"))
+    v = shard_logical(v, ("batch", "seq", None, "head_dim"))
+    return q, k, v
+
+
+def _expand_kv(k, n_heads):
+    """(B, T, H_kv, D) -> (B, T, H, D) by repetition (GQA groups)."""
+    reps = n_heads // k.shape[2]
+    if reps == 1:
+        return k
+    return jnp.repeat(k, reps, axis=2)
+
+
+def _naive_attention(q, k, v, bias, scale):
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = s + bias
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v,
+                      preferred_element_type=jnp.float32).astype(q.dtype)
+
+
+def attention(params, x, cfg: ModelConfig, positions: Optional[jax.Array] = None):
+    """Self-attention over a full sequence (training / prefill).
+
+    x: (B, S, d_model); positions: (S,) or None -> arange.
+    """
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)
+    q, k, v = _qkv(params, x, cfg)
+    cos, sin = L.rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+    q = L.apply_rope(q, cos, sin)
+    k = L.apply_rope(k, cos, sin)
+    k = _expand_kv(k, cfg.num_heads)
+    v = _expand_kv(v, cfg.num_heads)
+    k = shard_logical(k, ("batch", "seq", "heads", "head_dim"))
+    v = shard_logical(v, ("batch", "seq", "heads", "head_dim"))
+    scale = cfg.head_dim ** -0.5
+
+    if cfg.causal:
+        bias_fn = causal_bias(window=cfg.sliding_window)
+    else:
+        bias_fn = full_bias()
+
+    if cfg.attn_chunk and S > cfg.attn_chunk:
+        qc = min(cfg.attn_chunk, S)
+        o = flash_attention(q, k, v, bias_fn, scale, qc, qc,
+                            cfg.unroll_layers)
+    else:
+        bias = bias_fn(positions, positions)
+        o = _naive_attention(q, k, v, bias, scale)
+    o = shard_logical(o, ("batch", "seq", "heads", "head_dim"))
+    o = o.reshape(B, S, cfg.num_heads * cfg.head_dim)
+    out = o @ params["wo"].astype(x.dtype)
+    return shard_logical(out, ("batch", "seq", "embed"))
+
+
+def attention_prefill(params, x, cfg: ModelConfig, cache: KVCache):
+    """Prefill: same as attention() but also writes the KV cache.
+
+    Assumes x fills positions [0, S) and S <= cache length (full attention)
+    or writes the last `window` positions (SWA rolling buffer).
+    """
+    B, S, _ = x.shape
+    positions = jnp.arange(S)
+    q, k, v = _qkv(params, x, cfg)
+    cos, sin = L.rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+    q = L.apply_rope(q, cos, sin)
+    k = L.apply_rope(k, cos, sin)
+
+    smax = cache.k.shape[1]
+    if S >= smax:  # rolling buffer: keep the trailing window
+        start = S - smax
+        new_k = k[:, start:]
+        new_v = v[:, start:]
+        new_pos = jnp.broadcast_to(positions[start:], (B, smax))
+        # rotate so that slot = pos % smax
+        slots = (positions[start:] % smax).argsort()
+        new_k = new_k[:, slots]
+        new_v = new_v[:, slots]
+        new_pos = new_pos[:, slots]
+        new_cache = KVCache(new_k.astype(cache.k.dtype),
+                            new_v.astype(cache.v.dtype), new_pos)
+    else:
+        new_cache = KVCache(
+            jax.lax.dynamic_update_slice(
+                cache.k, k.astype(cache.k.dtype), (0, 0, 0, 0)),
+            jax.lax.dynamic_update_slice(
+                cache.v, v.astype(cache.v.dtype), (0, 0, 0, 0)),
+            jax.lax.dynamic_update_slice(
+                cache.key_pos,
+                jnp.broadcast_to(positions, (B, S)).astype(jnp.int32),
+                (0, 0)),
+        )
+    new_cache = KVCache(
+        shard_logical(new_cache.k, ("batch", "cache_seq", None, "head_dim")),
+        shard_logical(new_cache.v, ("batch", "cache_seq", None, "head_dim")),
+        shard_logical(new_cache.key_pos, ("batch", "cache_seq")),
+    )
+
+    ke = shard_logical(_expand_kv(k, cfg.num_heads),
+                       ("batch", "seq", "heads", "head_dim"))
+    ve = shard_logical(_expand_kv(v, cfg.num_heads),
+                       ("batch", "seq", "heads", "head_dim"))
+    scale = cfg.head_dim ** -0.5
+    bias_fn = causal_bias(window=cfg.sliding_window)
+    if cfg.attn_chunk and S > cfg.attn_chunk:
+        qc = min(cfg.attn_chunk, S)
+        o = flash_attention(q, ke, ve, bias_fn, scale, qc, qc,
+                            cfg.unroll_layers)
+    else:
+        o = _naive_attention(q, ke, ve, bias_fn(positions, positions), scale)
+    o = o.reshape(B, S, cfg.num_heads * cfg.head_dim)
+    out = o @ params["wo"].astype(x.dtype)
+    return shard_logical(out, ("batch", "seq", "embed")), new_cache
+
+
+def attention_decode(params, x, cfg: ModelConfig, cache: KVCache,
+                     positions: jax.Array):
+    """One-token decode step.  x: (B, 1, d); positions: (B,) int32.
+
+    Writes (k, v) into slot `pos % S_max` (identity for full caches sized to
+    the max sequence) and attends over every cached key with
+    key_pos in (pos - window, pos].
+    """
+    B = x.shape[0]
+    smax = cache.k.shape[1]
+    q, k, v = _qkv(params, x, cfg)          # (B, 1, h, d)
+    cos, sin = L.rope_angles(positions[:, None], cfg.head_dim, cfg.rope_theta)
+    q = L.apply_rope(q, cos, sin)
+    k = L.apply_rope(k, cos, sin)
+
+    slots = positions % smax                # (B,)
+    barange = jnp.arange(B)
+    new_k = cache.k.at[barange, slots].set(k[:, 0].astype(cache.k.dtype))
+    new_v = cache.v.at[barange, slots].set(v[:, 0].astype(cache.v.dtype))
+    new_pos = cache.key_pos.at[barange, slots].set(positions.astype(jnp.int32))
+    new_cache = KVCache(
+        shard_logical(new_k, ("batch", "cache_seq", None, "head_dim")),
+        shard_logical(new_v, ("batch", "cache_seq", None, "head_dim")),
+        shard_logical(new_pos, ("batch", "cache_seq")),
+    )
+
+    # Grouped attention read: no GQA expansion of the cache — decode is
+    # memory-bound, so the cache is read once at its native kv-head width.
+    hkv = cfg.num_kv_heads
+    g = cfg.num_heads // hkv
+    qg = q.reshape(B, 1, hkv, g, cfg.head_dim)
+    scale = cfg.head_dim ** -0.5
+    kp = new_cache.key_pos                  # (B, smax)
+    ok = (kp >= 0) & (kp <= positions[:, None])
+    if cfg.sliding_window is not None:
+        ok &= kp > (positions[:, None] - cfg.sliding_window)
+    bias = jnp.where(ok, 0.0, NEG_INF)[:, None, None, None, :]  # (B,1,1,1,T)
+
+    kc = new_cache.k.astype(x.dtype)
+    vc = new_cache.v.astype(x.dtype)
+    s = jnp.einsum("bqhgd,bthd->bhgqt", qg, kc,
+                   preferred_element_type=jnp.float32) * scale
+    s = s + bias
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqt,bthd->bqhgd", p.astype(vc.dtype), vc,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    o = o.reshape(B, 1, cfg.num_heads * cfg.head_dim)
+    out = o @ params["wo"].astype(x.dtype)
+    return shard_logical(out, ("batch", "seq", "embed")), new_cache

@@ -1,0 +1,100 @@
+"""Minimal functional NN substrate (no flax dependency).
+
+Modules are plain functions over *param trees* (nested dicts of jax arrays).
+Each module declares a *spec tree*: nested dicts whose leaves are `Spec`s —
+(shape, logical axes, initializer).  Generic helpers turn a spec tree into an
+initialized param tree, an axes tree (for sharding rules) or a
+ShapeDtypeStruct tree (for dry-runs that must never allocate).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+Initializer = Callable[[jax.Array, tuple, Any], jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    shape: tuple
+    axes: tuple  # logical axis names, same length as shape
+    init: str = "fan_in"  # fan_in | normal | zeros | ones | embed | small
+    scale: float = 1.0
+    dtype: Any = None  # None -> use the model-wide param dtype
+    # where the (rows | cols) boundary sits among the non-stack dims when the
+    # leaf is viewed as a matrix (LIFT / PEFT operate on this 2-D view)
+    matrix_split: int = 1
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def _init_leaf(key: jax.Array, spec: Spec, dtype) -> jax.Array:
+    dt = spec.dtype or dtype
+    shape = spec.shape
+    if spec.init == "zeros":
+        return jnp.zeros(shape, dt)
+    if spec.init == "ones":
+        return jnp.ones(shape, dt)
+    if spec.init == "normal":
+        return (spec.scale * jax.random.normal(key, shape)).astype(dt)
+    if spec.init == "embed":
+        return (jax.random.normal(key, shape)).astype(dt)
+    if spec.init == "small":
+        return (0.02 * spec.scale * jax.random.normal(key, shape)).astype(dt)
+    if spec.init == "fan_in":
+        # weight matrices: last axis is the output dim by convention; fan-in is
+        # the product of all other dims that participate in the contraction.
+        fan_in = max(1, math.prod(shape[:-1]))
+        std = spec.scale / math.sqrt(fan_in)
+        return (std * jax.random.normal(key, shape)).astype(dt)
+    raise ValueError(f"unknown init {spec.init}")
+
+
+def init_params(key: jax.Array, spec_tree, dtype=jnp.float32):
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = [_init_leaf(k, s, dtype) for k, s in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def axes_tree(spec_tree):
+    return jax.tree.map(lambda s: s.axes, spec_tree, is_leaf=is_spec)
+
+
+def shape_tree(spec_tree, dtype=jnp.float32):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype or dtype),
+        spec_tree, is_leaf=is_spec)
+
+
+def stack_specs(spec_tree, n: int, axis_name: str = "layers"):
+    """Prepend a stacking dim (for scan-over-layers) to every Spec."""
+    return jax.tree.map(
+        lambda s: Spec((n,) + s.shape, (axis_name,) + s.axes, s.init, s.scale,
+                       s.dtype, s.matrix_split),
+        spec_tree, is_leaf=is_spec)
+
+
+def param_count(tree) -> int:
+    leaves = jax.tree.leaves(tree)
+    return sum(int(math.prod(x.shape)) for x in leaves)
+
+
+def param_bytes(tree) -> int:
+    leaves = jax.tree.leaves(tree)
+    return sum(int(math.prod(x.shape)) * x.dtype.itemsize for x in leaves)
+
+
+def cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree)

@@ -1,0 +1,192 @@
+"""Pure-JAX flash attention (online softmax, custom VJP, O(S) memory).
+
+This is the TPU-idiomatic streaming attention the framework uses whenever the
+naive (B, H, S, T) score tensor would not fit (32k prefill / 4k train shapes).
+Forward saves only (q, k, v, o, lse); backward recomputes scores per KV chunk
+— FlashAttention-2 dataflow expressed with lax.scan so XLA keeps the working
+set in VMEM-sized tiles.
+
+`unroll=True` replaces the scans with python loops: used by the dry-run cost
+lowering so `cost_analysis()` sees every block (scan bodies are counted once
+regardless of trip count — DESIGN.md §5).
+
+Inputs are already GQA-expanded: q (B, S, H, D), k/v (B, T, H, D).
+`bias_fn(qpos, kpos)` returns an additive mask block for the given position
+blocks — causality / sliding windows / padding are all expressed through it.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _chunk(x, axis, size):
+    n = x.shape[axis] // size
+    new_shape = x.shape[:axis] + (n, size) + x.shape[axis + 1:]
+    return jnp.moveaxis(x.reshape(new_shape), axis, 0)
+
+
+def _scan(f, init, xs, unroll):
+    if not unroll:
+        return jax.lax.scan(f, init, xs)
+    carry = init
+    ys = []
+    n = jax.tree.leaves(xs)[0].shape[0]
+    for i in range(n):
+        xi = jax.tree.map(lambda a: a[i], xs)
+        carry, y = f(carry, xi)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def _map(f, xs, unroll):
+    if not unroll:
+        return jax.lax.map(f, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    outs = [f(jax.tree.map(lambda a: a[i], xs)) for i in range(n)]
+    return jax.tree.map(lambda *a: jnp.stack(a), *outs)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention(q, k, v, bias_fn, scale, q_chunk, kv_chunk, unroll=False):
+    o, _ = _flash_fwd_impl(q, k, v, bias_fn, scale, q_chunk, kv_chunk, unroll)
+    return o
+
+
+def _flash_fwd_impl(q, k, v, bias_fn, scale, q_chunk, kv_chunk, unroll):
+    B, S, H, D = q.shape
+    T = k.shape[1]
+    nq, nk = S // q_chunk, T // kv_chunk
+    assert S % q_chunk == 0 and T % kv_chunk == 0, (S, T, q_chunk, kv_chunk)
+
+    qc = _chunk(q, 1, q_chunk)          # (nq, B, qc, H, D)
+    kc = _chunk(k, 1, kv_chunk)         # (nk, B, kc, H, D)
+    vc = _chunk(v, 1, kv_chunk)
+
+    def one_q_chunk(qi_and_q):
+        qi, qb = qi_and_q                # qb: (B, qc, H, D)
+        qpos = qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, kj_and_kv):
+            m, l, acc = carry
+            kj, kb, vb = kj_and_kv
+            kpos = kj * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            s = s + bias_fn(qpos, kpos)  # (.., q_chunk, kv_chunk) additive
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhqk,bkhd->bqhd", p.astype(vb.dtype), vb,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr.transpose(0, 2, 1)[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, H, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, q_chunk, H, D), jnp.float32)
+        (m, l, acc), _ = _scan(kv_step, (m0, l0, a0),
+                               (jnp.arange(nk), kc, vc), unroll)
+        l = jnp.maximum(l, 1e-37)
+        o = acc / l.transpose(0, 2, 1)[..., None]
+        lse = m + jnp.log(l)             # (B, H, qc)
+        return o.astype(q.dtype), lse
+
+    o_c, lse_c = _map(one_q_chunk, (jnp.arange(nq), qc), unroll)
+    o = jnp.moveaxis(o_c, 0, 1).reshape(B, S, H, D)
+    lse = jnp.moveaxis(lse_c, 0, 2).reshape(B, H, S)
+    return o, lse
+
+
+def _flash_fwd(q, k, v, bias_fn, scale, q_chunk, kv_chunk, unroll):
+    o, lse = _flash_fwd_impl(q, k, v, bias_fn, scale, q_chunk, kv_chunk, unroll)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_bwd(bias_fn, scale, q_chunk, kv_chunk, unroll, res, do):
+    q, k, v, o, lse = res
+    B, S, H, D = q.shape
+    T = k.shape[1]
+    nq, nk = S // q_chunk, T // kv_chunk
+
+    qc = _chunk(q, 1, q_chunk)
+    doc = _chunk(do, 1, q_chunk)
+    oc = _chunk(o, 1, q_chunk)
+    lsec = _chunk(lse, 2, q_chunk)      # (nq, B, H, qc)
+    kc = _chunk(k, 1, kv_chunk)
+    vc = _chunk(v, 1, kv_chunk)
+
+    # delta_i = sum_d o_i * do_i  (rowwise)
+    delta_c = jnp.einsum("nbqhd,nbqhd->nbhq", oc.astype(jnp.float32),
+                         doc.astype(jnp.float32))
+
+    def one_q_chunk(carry, args):
+        dk_acc, dv_acc = carry          # (B, T, H, D) fp32 accumulators
+        qi, qb, dob, lseb, deltab = args
+        qpos = qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(dq_acc, kj_and_kv):
+            kj, kb, vb = kj_and_kv
+            kpos = kj * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            s = s + bias_fn(qpos, kpos)
+            p = jnp.exp(s - lseb[..., None])                       # (B,H,q,k)
+            dp = jnp.einsum("bqhd,bkhd->bhqk", dob, vb,
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - deltab[..., None]) * scale
+            dq_acc = dq_acc + jnp.einsum("bhqk,bkhd->bqhd",
+                                         ds.astype(kb.dtype), kb,
+                                         preferred_element_type=jnp.float32)
+            dk = jnp.einsum("bhqk,bqhd->bkhd", ds.astype(qb.dtype), qb,
+                            preferred_element_type=jnp.float32)
+            dv = jnp.einsum("bhqk,bqhd->bkhd", p.astype(dob.dtype), dob,
+                            preferred_element_type=jnp.float32)
+            return dq_acc, (dk, dv)
+
+        dq0 = jnp.zeros((B, q_chunk, H, D), jnp.float32)
+        dq, (dk_c, dv_c) = _scan(kv_step, dq0, (jnp.arange(nk), kc, vc),
+                                 unroll)
+        # accumulate into (B, T, H, D) — stacking (nq, nk, B, kc, H, D)
+        # would blow activation memory up by nq (EXPERIMENTS.md §Perf)
+        dk_acc = dk_acc + jnp.moveaxis(dk_c, 0, 1).reshape(B, T, H, D)
+        dv_acc = dv_acc + jnp.moveaxis(dv_c, 0, 1).reshape(B, T, H, D)
+        return (dk_acc, dv_acc), dq
+
+    zkv = jnp.zeros((B, T, H, D), jnp.float32)
+    (dk, dv), dq_c = _scan(one_q_chunk, (zkv, zkv),
+                           (jnp.arange(nq), qc, doc, lsec, delta_c), unroll)
+    dq = jnp.moveaxis(dq_c, 0, 1).reshape(B, S, H, D).astype(q.dtype)
+    return dq, dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+# ------------------------------------------------------------- bias builders
+def causal_bias(q_offset: int = 0, window: Optional[int] = None) -> Callable:
+    def bias_fn(qpos, kpos):
+        qp = (qpos + q_offset)[:, None]
+        kp = kpos[None, :]
+        ok = kp <= qp
+        if window is not None:
+            ok &= kp > qp - window
+        return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+    return bias_fn
+
+
+def full_bias() -> Callable:
+    def bias_fn(qpos, kpos):
+        return jnp.zeros((qpos.shape[0], kpos.shape[0]), jnp.float32)
+    return bias_fn

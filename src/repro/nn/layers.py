@@ -1,0 +1,134 @@
+"""Basic layers: norms, embeddings, RoPE, chunked cross-entropy."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.core import Spec
+from repro.parallel.sharding import shard_logical
+
+
+# ---------------------------------------------------------------- RMSNorm
+def rmsnorm_spec(dim: int, axis: str = "embed"):
+    return {"scale": Spec((dim,), (axis,), init="ones")}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_spec(dim: int, axis: str = "embed"):
+    return {"scale": Spec((dim,), (axis,), init="ones"),
+            "bias": Spec((dim,), (axis,), init="zeros")}
+
+
+def layernorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------- Embedding
+def embedding_spec(vocab: int, dim: int):
+    return {"table": Spec((vocab, dim), ("vocab", "embed"), init="small")}
+
+
+def embed(params, tokens, scale: Optional[float] = None, compute_dtype=None):
+    table = params["table"]
+    if compute_dtype is not None:
+        table = table.astype(compute_dtype)
+    x = jnp.take(table, tokens, axis=0)
+    if scale is not None:
+        x = x * jnp.asarray(scale, x.dtype)
+    return shard_logical(x, ("batch", "seq", "embed"))
+
+
+def lm_head_spec(dim: int, vocab: int):
+    return {"w": Spec((dim, vocab), ("embed", "vocab"), init="fan_in")}
+
+
+# ---------------------------------------------------------------- RoPE
+def rope_angles(positions: jax.Array, head_dim: int, theta: float):
+    """positions: (..., S) int -> (cos, sin) with shape (..., S, head_dim//2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array):
+    """x: (B, S, H, D); cos/sin: (B, S, D//2) or (S, D//2). LLaMA half-split."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:  # (S, half) -> broadcast over batch and heads
+        cos_ = cos[None, :, None, :]
+        sin_ = sin[None, :, None, :]
+    else:  # (B, S, half)
+        cos_ = cos[:, :, None, :]
+        sin_ = sin[:, :, None, :]
+    out = jnp.concatenate([x1 * cos_ - x2 * sin_, x2 * cos_ + x1 * sin_], axis=-1)
+    return out.astype(dt)
+
+
+# ------------------------------------------------- chunked cross-entropy
+def _ce_of_logits(logits, labels, weights):
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * weights
+    return jnp.sum(nll), jnp.sum(weights)
+
+
+def cross_entropy(h, w_head, labels, weights=None, chunk: int = 0,
+                  unroll: bool = False):
+    """Mean CE of h @ w_head vs labels.
+
+    h: (B, S, D); w_head: (D, V); labels: (B, S) int32;
+    weights: (B, S) loss mask (defaults to all-ones).
+    chunk > 0 streams the sequence dim so the full (B, S, V) logits tensor is
+    never materialized (crucial for 150k-vocab models at 4k sequence).
+    unroll=True replaces the scan with a python loop (dry-run cost mode).
+    """
+    B, S, D = h.shape
+    if weights is None:
+        weights = jnp.ones((B, S), jnp.float32)
+    weights = weights.astype(jnp.float32)
+    if chunk <= 0 or S <= chunk:
+        logits = (h @ w_head.astype(h.dtype))
+        logits = shard_logical(logits, ("batch", "seq", "vocab"))
+        total, denom = _ce_of_logits(logits, labels, weights)
+        return total / jnp.maximum(denom, 1.0)
+
+    n = S // chunk
+    assert S % chunk == 0, (S, chunk)
+    h_c = h.reshape(B, n, chunk, D).swapaxes(0, 1)
+    l_c = labels.reshape(B, n, chunk).swapaxes(0, 1)
+    w_c = weights.reshape(B, n, chunk).swapaxes(0, 1)
+
+    def body(carry, xs):
+        hc, lc, wc = xs
+        logits = hc @ w_head.astype(hc.dtype)
+        logits = shard_logical(logits, ("batch", "seq", "vocab"))
+        t, d = _ce_of_logits(logits, lc, wc)
+        return (carry[0] + t, carry[1] + d), None
+
+    if unroll:
+        carry = (0.0, 0.0)
+        for i in range(n):
+            carry, _ = body(carry, (h_c[i], l_c[i], w_c[i]))
+        total, denom = carry
+    else:
+        (total, denom), _ = jax.lax.scan(body, (0.0, 0.0), (h_c, l_c, w_c))
+    return total / jnp.maximum(denom, 1.0)

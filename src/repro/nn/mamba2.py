@@ -1,0 +1,189 @@
+"""Mamba-2 block (SSD: state-space duality, scalar per-head decay).
+
+Recurrence per head (P = head dim, N = state dim):
+    h_t = a_t h_{t-1} + dt_t * (B_t  x_t^T)        h: (N, P)
+    y_t = C_t h_t + D * x_t
+with a_t = exp(dt_t * A_h),  A_h < 0 learned scalar per head, dt_t > 0 from a
+softplus-parameterized projection.  Chunked evaluation mirrors the Mamba-2
+paper's SSD algorithm: intra-chunk "attention-like" term with decay-weighted
+scores, cross-chunk scanned state.  A causal depthwise conv (width 4) runs on
+the x / B / C streams; decode carries a (conv_width-1)-deep conv cache and
+the (H, N, P) state.
+
+TP note: the reference fuses x|B|C into one conv stream; we keep three
+separate depthwise convs (mathematically identical) so the big x stream
+shards over "model" while the small B/C streams stay replicated — no
+cross-shard slicing.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.nn.core import Spec
+from repro.parallel.sharding import shard_logical
+
+
+def mamba2_spec(cfg: ModelConfig):
+    d = cfg.d_model
+    din = cfg.ssm_d_inner
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    W = cfg.ssm_conv
+    return {
+        "in_z": Spec((d, din), ("embed", "mlp")),
+        "in_x": Spec((d, din), ("embed", "mlp")),
+        "in_b": Spec((d, N), ("embed", "state")),
+        "in_c": Spec((d, N), ("embed", "state")),
+        "in_dt": Spec((d, H), ("embed", "heads"), init="small"),
+        "conv_x_w": Spec((W, din), ("conv", "mlp"), init="fan_in"),
+        "conv_x_b": Spec((din,), ("mlp",), init="zeros"),
+        "conv_b_w": Spec((W, N), ("conv", "state"), init="fan_in"),
+        "conv_b_b": Spec((N,), ("state",), init="zeros"),
+        "conv_c_w": Spec((W, N), ("conv", "state"), init="fan_in"),
+        "conv_c_b": Spec((N,), ("state",), init="zeros"),
+        "a_log": Spec((H,), ("heads",), init="zeros"),
+        "dt_bias": Spec((H,), ("heads",), init="zeros"),
+        "d_skip": Spec((H,), ("heads",), init="ones"),
+        "norm": Spec((din,), ("mlp",), init="ones"),
+        "out": Spec((din, d), ("mlp", "embed")),
+    }
+
+
+class MambaState(NamedTuple):
+    conv_x: jax.Array  # (B, W-1, din)
+    conv_b: jax.Array  # (B, W-1, N)
+    conv_c: jax.Array  # (B, W-1, N)
+    ssm: jax.Array     # (B, H, N, P) fp32
+
+    @staticmethod
+    def init(batch: int, cfg: ModelConfig, dtype):
+        W = cfg.ssm_conv
+        return MambaState(
+            conv_x=jnp.zeros((batch, W - 1, cfg.ssm_d_inner), dtype),
+            conv_b=jnp.zeros((batch, W - 1, cfg.ssm_state), dtype),
+            conv_c=jnp.zeros((batch, W - 1, cfg.ssm_state), dtype),
+            ssm=jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state,
+                           cfg.ssm_head_dim), jnp.float32),
+        )
+
+
+def _causal_conv(x, w, b, cache: Optional[jax.Array]):
+    """Depthwise causal conv + silu.  x: (B, S, C); w: (W, C)."""
+    B, S, C = x.shape
+    W = w.shape[0]
+    pad = jnp.zeros((B, W - 1, C), x.dtype) if cache is None \
+        else cache.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)            # (B, S+W-1, C)
+    out = sum(xp[:, i:i + S, :] * w[i].astype(x.dtype) for i in range(W))
+    new_cache = xp[:, S:, :]          # trailing W-1 inputs
+    return jax.nn.silu(out + b.astype(x.dtype)), new_cache
+
+
+def _chunked_ssd(x, B_, C_, la, dt, S0, chunk: int, unroll: bool = False):
+    """Chunked SSD, batched formulation (Mamba-2 paper algorithm):
+    the intra-chunk quadratic term is computed for ALL chunks at once
+    (one set of einsums with the chunk index as a batch dim — MXU-friendly,
+    tiny HLO), and the inter-chunk state recurrence
+        S_k = a_k * S_{k-1} + b_k
+    is an affine associative scan (log-depth, no while loop — which also
+    makes `cost_analysis()` exact without unrolling; DESIGN.md §5).
+
+    x: (B,T,H,P); B_/C_: (B,T,N); la/dt: (B,T,H); S0: (B,H,N,P).
+    """
+    del unroll  # batched form has no sequential loop to unroll
+    Bb, T, H, P = x.shape
+    if T % chunk != 0:
+        chunk = T
+    n, c = T // chunk, min(chunk, T)
+
+    def ch(a):
+        return a.reshape(Bb, n, c, *a.shape[2:])
+
+    xc, Bc, Cc, lac, dtc = map(ch, (x, B_, C_, la, dt))
+    mask = (jnp.arange(c)[:, None] >= jnp.arange(c)[None, :])
+
+    ca = jnp.cumsum(lac, axis=2)                      # (B, n, c, H)
+    dif = ca[:, :, :, None] - ca[:, :, None, :]       # (B, n, t, s, H)
+    L = jnp.exp(jnp.minimum(dif, 0.0)) * mask[None, None, :, :, None]
+    cb = jnp.einsum("bntk,bnsk->bnts", Cc, Bc)
+    w = L * cb[..., None] * dtc[:, :, None, :, :]     # (B, n, t, s, H)
+    y_intra = jnp.einsum("bntsh,bnshp->bnthp", w, xc)
+
+    # per-chunk state contribution and decay
+    b_dec = (Bc[:, :, :, None, :]
+             * jnp.exp(ca[:, :, -1:, :, None] - ca[..., None])
+             * dtc[..., None])                        # (B, n, s, H, N)
+    contrib = jnp.einsum("bnshk,bnshp->bnhkp", b_dec, xc)  # (B,n,H,N,P)
+    a = jnp.exp(ca[:, :, -1])                         # (B, n, H)
+
+    # affine associative scan over chunks, seeded with S0
+    a_all = jnp.concatenate([jnp.ones((Bb, 1, H), a.dtype), a], axis=1)
+    b_all = jnp.concatenate([S0[:, None], contrib], axis=1)  # (B,n+1,H,N,P)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2[..., None, None] * b1 + b2
+
+    A, S_all = jax.lax.associative_scan(combine, (a_all, b_all), axis=1)
+    S_prev = S_all[:, :-1]                            # state BEFORE chunk k
+    S_final = S_all[:, -1]
+
+    c_dec = Cc[:, :, :, None, :] * jnp.exp(ca)[..., None]   # (B,n,t,H,N)
+    y_cross = jnp.einsum("bnthk,bnhkp->bnthp", c_dec, S_prev)
+    y = (y_intra + y_cross).reshape(Bb, T, H, P)
+    return y, S_final
+
+
+def mamba2(params, x, cfg: ModelConfig, state: Optional[MambaState] = None,
+           chunk: int = 0, unroll: bool = False):
+    """x: (B, S, d_model) -> (out, new_state)."""
+    B, S, d = x.shape
+    dt_ = x.dtype
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    din = cfg.ssm_d_inner
+
+    z = shard_logical(x @ params["in_z"].astype(dt_), ("batch", "seq", "mlp"))
+    xin = shard_logical(x @ params["in_x"].astype(dt_), ("batch", "seq", "mlp"))
+    bin_ = x @ params["in_b"].astype(dt_)
+    cin = x @ params["in_c"].astype(dt_)
+    dt_raw = x @ params["in_dt"].astype(dt_)                   # (B, S, H)
+
+    cx = state.conv_x if state is not None else None
+    cb = state.conv_b if state is not None else None
+    cc = state.conv_c if state is not None else None
+    xin, ncx = _causal_conv(xin, params["conv_x_w"], params["conv_x_b"], cx)
+    bin_, ncb = _causal_conv(bin_, params["conv_b_w"], params["conv_b_b"], cb)
+    cin, ncc = _causal_conv(cin, params["conv_c_w"], params["conv_c_b"], cc)
+
+    xs = xin.reshape(B, S, H, P)
+    B_ = bin_.astype(jnp.float32)
+    C_ = cin.astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))          # (H,) < 0
+    la = dt * A[None, None, :]                                 # log decay < 0
+
+    S0 = state.ssm if state is not None \
+        else jnp.zeros((B, H, N, P), jnp.float32)
+    y, S_new = _chunked_ssd(xs.astype(jnp.float32), B_, C_, la, dt,
+                            S0, chunk or S, unroll)
+    y = y + params["d_skip"].astype(jnp.float32)[None, None, :, None] \
+        * xs.astype(jnp.float32)
+    y = y.reshape(B, S, din).astype(dt_)
+
+    # gated RMSNorm (Mamba-2 norm before out proj)
+    g = jax.nn.silu(z)
+    y32 = (y * g).astype(jnp.float32)
+    var = jnp.mean(jnp.square(y32), axis=-1, keepdims=True)
+    y = (y32 * jax.lax.rsqrt(var + cfg.norm_eps)
+         * params["norm"].astype(jnp.float32)).astype(dt_)
+    out = y @ params["out"].astype(dt_)
+    out = shard_logical(out, ("batch", "seq", "embed"))
+    sd = state.conv_x.dtype if state is not None else dt_
+    return out, MambaState(ncx.astype(sd), ncb.astype(sd), ncc.astype(sd),
+                           S_new)

@@ -1,0 +1,41 @@
+"""Feed-forward blocks: SwiGLU / GeGLU / plain, Megatron col+row parallel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.nn.core import Spec
+from repro.parallel.sharding import shard_logical
+
+_ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+}
+
+
+def mlp_spec(cfg: ModelConfig, d_ff: int = 0):
+    d, f = cfg.d_model, (d_ff or cfg.d_ff)
+    spec = {
+        "up": Spec((d, f), ("embed", "mlp")),
+        "down": Spec((f, d), ("mlp", "embed")),
+    }
+    if cfg.mlp_glu:
+        spec["gate"] = Spec((d, f), ("embed", "mlp"))
+    return spec
+
+
+def mlp(params, x, cfg: ModelConfig):
+    dt = x.dtype
+    act = _ACTS[cfg.mlp_act]
+    up = x @ params["up"].astype(dt)
+    up = shard_logical(up, ("batch", "seq", "mlp"))
+    if cfg.mlp_glu:
+        gate = x @ params["gate"].astype(dt)
+        gate = shard_logical(gate, ("batch", "seq", "mlp"))
+        h = act(gate) * up
+    else:
+        h = act(up)
+    out = h @ params["down"].astype(dt)
+    return shard_logical(out, ("batch", "seq", "embed"))

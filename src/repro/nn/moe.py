@@ -1,0 +1,122 @@
+"""Mixture-of-Experts block: top-k router, sort-based capacity dispatch,
+expert-parallel over the "model" mesh axis, GROUPED dispatch over the
+"data" axis.
+
+Dispatch is the sort/compaction formulation (no one-hot matmuls).  The
+token set is split into G groups that align with the data-parallel shards
+(cfg.moe_groups == mesh data size in production, 1 on a laptop).  Each group
+sorts ITS tokens and fills per-(group, expert) capacity buffers — so the
+sort, capacity logic and gathers are shard-LOCAL, matching how real MoE
+systems give every data shard its own capacity.  The (G, E, C, d) dispatch
+buffer shards as (data, model, -, -); the only cross-shard traffic is the
+combine reduction over the sharded expert dim (one activation-sized psum
+per layer).  Without the grouping the capacity dim replicates across the
+data axis — a silent DPx expert-FLOP blowup (EXPERIMENTS.md §Perf cell C).
+
+The Switch-style auxiliary load-balancing loss is returned so train_step
+can add `router_aux_coef * aux`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.nn.core import Spec
+from repro.nn.mlp import _ACTS
+from repro.parallel.sharding import shard_logical
+
+
+def moe_spec(cfg: ModelConfig):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    return {
+        "router": Spec((d, e), ("embed", None)),
+        "gate": Spec((e, d, f), ("experts", "embed", "expert_mlp")),
+        "up": Spec((e, d, f), ("experts", "embed", "expert_mlp")),
+        "down": Spec((e, f, d), ("experts", "expert_mlp", "embed")),
+    }
+
+
+def _capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    c = int(cfg.capacity_factor * n_tokens * cfg.num_experts_per_tok
+            / cfg.num_experts)
+    return max(8, ((c + 127) // 128) * 128 if c > 128 else c)
+
+
+def moe(params, x, cfg: ModelConfig):
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar)."""
+    B, S, d = x.shape
+    E, K = cfg.num_experts, cfg.num_experts_per_tok
+    act = _ACTS[cfg.mlp_act]
+    dt = x.dtype
+    T = B * S
+
+    # dispatch groups: align with the data shards; degrade gracefully
+    G = max(1, min(cfg.moe_groups, T))
+    while T % G:
+        G //= 2
+    Tg = T // G
+
+    xt = x.reshape(G, Tg, d)
+    xt = shard_logical(xt, ("capacity", None, "embed"))
+
+    logits = (xt @ params["router"].astype(dt)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                 # (G, Tg, E)
+    top_p, top_e = jax.lax.top_k(probs, K)                  # (G, Tg, K)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # Switch aux loss (global)
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jax.nn.one_hot(top_e[..., 0], E, dtype=jnp.float32),
+                  axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+
+    # ---- per-group sort-based dispatch -----------------------------------
+    C = _capacity(cfg, Tg)
+    flat_e = top_e.reshape(G, Tg * K)
+    flat_t = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(Tg), K)[None], (G, Tg * K))
+    flat_p = top_p.reshape(G, Tg * K)
+
+    order = jnp.argsort(flat_e, axis=1, stable=True)
+    se = jnp.take_along_axis(flat_e, order, axis=1)
+    st = jnp.take_along_axis(flat_t, order, axis=1)
+    sp = jnp.take_along_axis(flat_p, order, axis=1)
+
+    ar = jnp.arange(Tg * K)[None]
+    start_of_expert = jax.vmap(
+        lambda row: jnp.searchsorted(row, jnp.arange(E), side="left"))(se)
+    pos_in_e = ar - jnp.take_along_axis(start_of_expert, se, axis=1)
+    keep = pos_in_e < C
+
+    # scatter pairs into per-group buffers (dropped pairs go out of range)
+    goff = (jnp.arange(G) * (E * C))[:, None]
+    slot = jnp.where(keep, se * C + pos_in_e, G * E * C) + goff
+    slot = jnp.where(keep, slot, G * E * C)
+    buf_tok = jnp.zeros((G * E * C,), jnp.int32).at[slot.reshape(-1)].set(
+        st.reshape(-1).astype(jnp.int32), mode="drop")
+    buf_w = jnp.zeros((G * E * C,), jnp.float32).at[slot.reshape(-1)].set(
+        sp.reshape(-1), mode="drop")
+    buf_tok = buf_tok.reshape(G, E, C)
+    buf_w = buf_w.reshape(G, E, C)
+
+    xe = jnp.take_along_axis(
+        xt, buf_tok.reshape(G, E * C)[..., None], axis=1).reshape(G, E, C, d)
+    xe = xe * (buf_w[..., None] > 0)
+    xe = shard_logical(xe, ("capacity", "experts", None, "embed"))
+
+    # ---- expert computation (E over "model", G over "data") -------------
+    g = jnp.einsum("gecd,edf->gecf", xe, params["gate"].astype(dt))
+    u = jnp.einsum("gecd,edf->gecf", xe, params["up"].astype(dt))
+    h = act(g) * u
+    ye = jnp.einsum("gecf,efd->gecd", h, params["down"].astype(dt))
+    ye = shard_logical(ye, ("capacity", "experts", None, "embed"))
+
+    # ---- combine: scatter-add back per group (psum over the sharded E) --
+    ye_w = ye * buf_w[..., None].astype(dt)
+    out = jnp.zeros((G, Tg, d), dt).at[
+        jnp.arange(G)[:, None], buf_tok.reshape(G, E * C)].add(
+        ye_w.reshape(G, E * C, d), mode="drop")
+    out = shard_logical(out, ("capacity", None, "embed"))
+    out = out.reshape(B, S, d)
+    return shard_logical(out, ("batch", "seq", "embed")), aux

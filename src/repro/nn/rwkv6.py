@@ -1,0 +1,213 @@
+"""RWKV-6 "Finch" block: data-dependent decay linear attention (attention-
+free), implemented in the numerically-safe chunked form.
+
+Recurrence per head (K = V = head_dim):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t          (S: K x V state)
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+with per-channel decay w_t in (0,1) produced from the token-shifted input via
+a low-rank "decay LoRA" (the data-dependent part that distinguishes v6 from
+v5).  Chunked evaluation factors exp-sums of log-decays so every exponent is
+<= 0; intra-chunk uses a pairwise log-decay difference tensor, cross-chunk a
+scanned (B, H, K, V) state.
+
+Token shift (RWKV's 1-step conv) makes decode need a (B, d) "last hidden"
+cache per mixer in addition to the wkv state.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.nn.core import Spec
+from repro.parallel.sharding import shard_logical
+
+_STREAMS = 5  # r, k, v, w, g
+
+
+def time_mix_spec(cfg: ModelConfig):
+    d = cfg.d_model
+    H, K = cfg.rwkv_heads, cfg.rwkv_head_dim
+    dl, ml = cfg.rwkv_decay_lora, cfg.rwkv_mix_lora
+    return {
+        "mu": Spec((_STREAMS, d), (None, "embed"), init="zeros"),
+        "mix_a": Spec((d, _STREAMS * ml), ("embed", None), init="small"),
+        "mix_b": Spec((_STREAMS, ml, d), (None, None, "embed"), init="small"),
+        "wr": Spec((d, H, K), ("embed", "heads", "head_dim")),
+        "wk": Spec((d, H, K), ("embed", "heads", "head_dim")),
+        "wv": Spec((d, H, K), ("embed", "heads", "head_dim")),
+        "wg": Spec((d, H, K), ("embed", "heads", "head_dim")),
+        "wo": Spec((H, K, d), ("heads", "head_dim", "embed"), matrix_split=2),
+        "decay_a": Spec((d, dl), ("embed", None), init="small"),
+        "decay_b": Spec((dl, d), (None, "embed"), init="small"),
+        "decay_base": Spec((d,), ("embed",), init="zeros"),
+        "bonus_u": Spec((H, K), ("heads", "head_dim"), init="zeros"),
+        "ln_x": Spec((d,), ("embed",), init="ones"),
+    }
+
+
+def channel_mix_spec(cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mu": Spec((2, d), (None, "embed"), init="zeros"),  # k, r streams
+        "wk": Spec((d, f), ("embed", "mlp")),
+        "wv": Spec((f, d), ("mlp", "embed")),
+        "wr": Spec((d, d), ("embed", "embed")),
+    }
+
+
+class RwkvState(NamedTuple):
+    """Per-layer decode state."""
+    tm_last: jax.Array   # (B, d)  last input to time-mix (token shift)
+    cm_last: jax.Array   # (B, d)  last input to channel-mix
+    wkv: jax.Array       # (B, H, K, V) linear-attention state (fp32)
+
+    @staticmethod
+    def init(batch: int, cfg: ModelConfig, dtype):
+        H, K = cfg.rwkv_heads, cfg.rwkv_head_dim
+        return RwkvState(
+            tm_last=jnp.zeros((batch, cfg.d_model), dtype),
+            cm_last=jnp.zeros((batch, cfg.d_model), dtype),
+            wkv=jnp.zeros((batch, H, K, K), jnp.float32),
+        )
+
+
+def _ddlerp(params, x, prev):
+    """Data-dependent lerp between x and prev -> the 5 streams (5, B, S, d)."""
+    dt = x.dtype
+    delta = prev - x
+    base = x[None] + delta[None] * params["mu"].astype(dt)[:, None, None, :]
+    ml = params["mix_b"].shape[1]
+    lora = jnp.tanh(x @ params["mix_a"].astype(dt))               # (B,S,5*ml)
+    lora = lora.reshape(*lora.shape[:-1], _STREAMS, ml)           # (B,S,5,ml)
+    extra = jnp.einsum("bsnm,nmd->nbsd", lora, params["mix_b"].astype(dt))
+    return base + extra * delta[None]
+
+
+def _decay(params, xw):
+    """Per-channel log-decay, guaranteed < 0.  xw: (B, S, d) -> fp32."""
+    dt = jnp.float32
+    lora = jnp.tanh(xw.astype(dt) @ params["decay_a"].astype(dt)) \
+        @ params["decay_b"].astype(dt)
+    raw = params["decay_base"].astype(dt) + lora
+    return -jax.nn.softplus(-(raw - 0.5)) - 1e-3
+
+
+def _chunked_wkv(r, k, v, lw, u, S0, chunk: int, unroll: bool = False):
+    """Chunked WKV, batched formulation: the intra-chunk quadratic term is
+    evaluated for ALL chunks at once (chunk index = batch dim) and the
+    inter-chunk state recurrence S_k = diag(a_k) S_{k-1} + b_k is an affine
+    associative scan — no while loops, exact `cost_analysis()` accounting
+    (DESIGN.md §5).
+
+    r,k,v,lw: (B, T, H, K) fp32 (lw = log-decay < 0); u: (H, K).
+    S0: (B, H, K, V) initial state.  Returns (o (B,T,H,K) fp32, S_final)."""
+    del unroll
+    B, T, H, K = r.shape
+    if T % chunk != 0:
+        chunk = T  # fall back to a single chunk
+    n, c = T // chunk, min(chunk, T)
+
+    def ch(a):
+        return a.reshape(B, n, c, H, K)
+
+    rc, kc, vc, lwc = map(ch, (r, k, v, lw))
+    mask = (jnp.arange(c)[:, None] > jnp.arange(c)[None, :])
+
+    cw = jnp.cumsum(lwc, axis=2)                     # (B, n, c, H, K)
+    # A[t, s, k] = exp(cw[t-1, k] - cw[s, k]) for s < t  (exponent <= 0)
+    dif = cw[:, :, :, None] - lwc[:, :, :, None] - cw[:, :, None, :]
+    A = jnp.exp(jnp.minimum(dif, 0.0)) \
+        * mask[None, None, :, :, None, None]
+    scores = jnp.einsum("bnthk,bntshk,bnshk->bnhts", rc, A, kc)
+    o_intra = jnp.einsum("bnhts,bnshv->bnthv", scores, vc)
+    diag = jnp.einsum("bnthk,hk,bnthk->bnth", rc, u, kc)
+    o_diag = diag[..., None] * vc
+
+    # per-chunk state contribution and decay
+    k_dec = kc * jnp.exp(cw[:, :, -1:] - cw)         # k_s * exp(cw[-1]-cw[s])
+    contrib = jnp.einsum("bnshk,bnshv->bnhkv", k_dec, vc)
+    a = jnp.exp(cw[:, :, -1])                        # (B, n, H, K)
+
+    a_all = jnp.concatenate([jnp.ones((B, 1, H, K), a.dtype), a], axis=1)
+    b_all = jnp.concatenate([S0[:, None], contrib], axis=1)  # (B,n+1,H,K,V)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2[..., None] * b1 + b2
+
+    _, S_all = jax.lax.associative_scan(combine, (a_all, b_all), axis=1)
+    S_prev = S_all[:, :-1]
+    S_final = S_all[:, -1]
+
+    r_dec = rc * jnp.exp(cw - lwc)                   # r_t * exp(cw[t-1])
+    o_cross = jnp.einsum("bnthk,bnhkv->bnthv", r_dec, S_prev)
+    o = (o_intra + o_diag + o_cross).reshape(B, T, H, K)
+    return o, S_final
+
+
+def _group_norm(o, scale, eps):
+    """Per-head normalization (RWKV ln_x).  o: (B, T, H, K)."""
+    mu = jnp.mean(o, axis=-1, keepdims=True)
+    var = jnp.var(o, axis=-1, keepdims=True)
+    o = (o - mu) * jax.lax.rsqrt(var + eps)
+    B, T, H, K = o.shape
+    return o.reshape(B, T, H * K) * scale.astype(o.dtype)
+
+
+def time_mix(params, x, cfg: ModelConfig, last=None, state=None,
+             chunk: int = 0, unroll: bool = False):
+    """x: (B, S, d).  last/state: decode caches (None during training).
+
+    Returns (out (B, S, d), new_last (B, d), new_state)."""
+    B, S, d = x.shape
+    dt = x.dtype
+    H, K = cfg.rwkv_heads, cfg.rwkv_head_dim
+    if last is None:
+        last = jnp.zeros((B, d), dt)
+    prev = jnp.concatenate([last[:, None, :].astype(dt), x[:, :-1, :]], axis=1)
+    xr, xk, xv, xw, xg = _ddlerp(params, x, prev)
+
+    r = jnp.einsum("bsd,dhk->bshk", xr, params["wr"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", xk, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", xv, params["wv"].astype(dt))
+    g = jnp.einsum("bsd,dhk->bshk", xg, params["wg"].astype(dt))
+    r = shard_logical(r, ("batch", "seq", "heads", "head_dim"))
+    k = shard_logical(k, ("batch", "seq", "heads", "head_dim"))
+    v = shard_logical(v, ("batch", "seq", "heads", "head_dim"))
+    lw = _decay(params, xw).reshape(B, S, H, K)       # fp32, < 0
+
+    S0 = state if state is not None \
+        else jnp.zeros((B, H, K, K), jnp.float32)
+    o, S_new = _chunked_wkv(r.astype(jnp.float32), k.astype(jnp.float32),
+                            v.astype(jnp.float32), lw,
+                            params["bonus_u"].astype(jnp.float32),
+                            S0, chunk or S, unroll)
+    o = _group_norm(o, params["ln_x"], cfg.norm_eps).astype(dt)
+    o = o.reshape(B, S, H, K) * jax.nn.silu(g)
+    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(dt))
+    out = shard_logical(out, ("batch", "seq", "embed"))
+    return out, x[:, -1, :], S_new
+
+
+def channel_mix(params, x, cfg: ModelConfig, last=None):
+    """RWKV channel mix (square-ReLU MLP).  Returns (out, new_last)."""
+    B, S, d = x.shape
+    dt = x.dtype
+    if last is None:
+        last = jnp.zeros((B, d), dt)
+    prev = jnp.concatenate([last[:, None, :].astype(dt), x[:, :-1, :]], axis=1)
+    delta = prev - x
+    mu = params["mu"].astype(dt)
+    xk = x + delta * mu[0]
+    xr = x + delta * mu[1]
+    kk = jnp.square(jax.nn.relu(xk @ params["wk"].astype(dt)))
+    kk = shard_logical(kk, ("batch", "seq", "mlp"))
+    vv = kk @ params["wv"].astype(dt)
+    rr = jax.nn.sigmoid(xr @ params["wr"].astype(dt))
+    out = shard_logical(rr * vv, ("batch", "seq", "embed"))
+    return out, x[:, -1, :]

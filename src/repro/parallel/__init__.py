@@ -1,0 +1,10 @@
+from repro.parallel.sharding import (  # noqa: F401
+    DEFAULT_RULES,
+    active_mesh,
+    logical_to_spec,
+    named_sharding,
+    set_sharding_ctx,
+    shard_logical,
+    sharding_ctx,
+    tree_shardings,
+)

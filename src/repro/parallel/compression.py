@@ -1,0 +1,72 @@
+"""Gradient compression for the cross-pod (DCI) hop.
+
+Running compute in bf16 already halves the wire format (the in-graph
+all-reduces are bf16 — see EXPERIMENTS.md §Dry-run); this module adds the
+classic *error-feedback top-k* compressor for the slow pod-to-pod hop:
+
+    residual += grad
+    (vals, idx) = top-k(|residual|)          k = ratio * n
+    residual   -= scatter(vals, idx)         (error feedback)
+    wire        = all-reduce of the k-sparse representation
+
+Error feedback guarantees every gradient coordinate is eventually applied
+(the compressor is a contraction, Stich et al. 2018) — the unit tests assert
+that contract.  `compressed_psum` expresses the exchange with
+shard_map-friendly primitives; on the 2-pod mesh it cuts the DCI bytes to
+~2*ratio of the dense all-reduce (indices + values).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    residual: jax.Array  # same shape as the gradient
+
+
+def init_ef(grad_like) -> EFState:
+    return EFState(jnp.zeros_like(grad_like, jnp.float32))
+
+
+def compress(g: jax.Array, ef: EFState, ratio: float):
+    """-> (vals (k,), idx (k,), new_ef).  g is flattened internally."""
+    flat = g.reshape(-1).astype(jnp.float32) + ef.residual.reshape(-1)
+    k = max(1, int(ratio * flat.size))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    vals = flat[idx]
+    new_res = flat.at[idx].set(0.0)
+    return vals, idx.astype(jnp.int32), EFState(new_res.reshape(g.shape))
+
+
+def decompress(vals: jax.Array, idx: jax.Array, shape) -> jax.Array:
+    n = 1
+    for d in shape:
+        n *= d
+    return jnp.zeros((n,), jnp.float32).at[idx].add(vals).reshape(shape)
+
+
+def compressed_psum(g: jax.Array, ef: EFState, ratio: float,
+                    axis_name: str):
+    """Top-k + error-feedback all-reduce over `axis_name` (use inside
+    shard_map).  Exchanges (vals, idx) via all_gather — 2*ratio*n words on
+    the wire instead of n."""
+    vals, idx, new_ef = compress(g, ef, ratio)
+    all_vals = jax.lax.all_gather(vals, axis_name)    # (P, k)
+    all_idx = jax.lax.all_gather(idx, axis_name)
+    P = all_vals.shape[0]
+    out = jnp.zeros((g.size,), jnp.float32)
+    out = out.at[all_idx.reshape(-1)].add(all_vals.reshape(-1))
+    return (out / P).reshape(g.shape).astype(g.dtype), new_ef
+
+
+def wire_bytes(n: int, ratio: float, pods: int = 2) -> dict:
+    """Modeled DCI traffic per step for an n-parameter gradient."""
+    dense = 2 * (pods - 1) / pods * n * 2          # bf16 ring all-reduce
+    k = int(ratio * n)
+    sparse = (pods - 1) * k * (4 + 4)              # vals f32 + idx i32
+    return {"dense_bf16": dense, "topk": sparse,
+            "saving": 1.0 - sparse / dense}

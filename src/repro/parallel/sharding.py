@@ -1,0 +1,130 @@
+"""Logical-axis based sharding.
+
+Every parameter / activation in the framework is annotated with *logical* axis
+names ("embed", "mlp", "heads", "vocab", "batch", ...).  A rule table maps the
+logical names onto physical mesh axes.  Model code never mentions physical
+axes, so the same model definition runs on a laptop CPU (no mesh), a single
+pod (data, model) or the multi-pod (pod, data, model) mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Logical axis -> tuple of mesh axes (in priority order).  A mesh axis that is
+# absent from the active mesh is silently dropped, which is what makes the
+# multi-pod rules degrade gracefully to the single-pod / single-device cases.
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    # data-like
+    "batch": ("pod", "data"),
+    "seq": (),           # replicated by default; "seq_sharded" opts in
+    "seq_sharded": ("model",),   # sequence parallelism for long prefill
+    "cache_seq": ("model",),     # decode context parallelism for KV caches
+    # weight-like
+    "vocab": ("model",),
+    "embed": (),
+    "mlp": ("model",),
+    "heads": ("model",),
+    "heads_flat": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "experts": ("model",),
+    "expert_mlp": (),
+    "capacity": ("data",),   # MoE dispatch slots: data-parallel over tokens
+    "layers": (),
+    "state": (),
+    "conv": (),
+    "lora_rank": (),
+    # LIFT sparse-state axes
+    "shards": ("model",),
+    "topk": ("model", "data"),
+    None: (),
+}
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: dict[str, tuple[str, ...]] = dict(DEFAULT_RULES)
+
+
+_CTX = _Ctx()
+
+
+def set_sharding_ctx(mesh: Optional[Mesh], rules: Optional[dict] = None) -> None:
+    _CTX.mesh = mesh
+    _CTX.rules = dict(DEFAULT_RULES)
+    if rules:
+        _CTX.rules.update(rules)
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    prev_mesh, prev_rules = _CTX.mesh, _CTX.rules
+    set_sharding_ctx(mesh, rules)
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev_mesh, prev_rules
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def logical_to_spec(axes: Sequence[Union[str, None]],
+                    mesh: Optional[Mesh] = None,
+                    rules: Optional[dict] = None) -> P:
+    """Map a tuple of logical axis names to a PartitionSpec for `mesh`."""
+    mesh = mesh if mesh is not None else _CTX.mesh
+    rules = rules if rules is not None else _CTX.rules
+    if mesh is None:
+        return P()
+    mesh_axes = set(mesh.axis_names)
+    used: set[str] = set()
+    out = []
+    for ax in axes:
+        cand = rules.get(ax, ())
+        picked = tuple(a for a in cand if a in mesh_axes and a not in used)
+        used.update(picked)
+        if len(picked) == 0:
+            out.append(None)
+        elif len(picked) == 1:
+            out.append(picked[0])
+        else:
+            out.append(picked)
+    return P(*out)
+
+
+def named_sharding(axes: Sequence[Union[str, None]],
+                   mesh: Optional[Mesh] = None) -> Optional[NamedSharding]:
+    mesh = mesh if mesh is not None else _CTX.mesh
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, logical_to_spec(axes, mesh))
+
+
+def shard_logical(x: jax.Array, axes: Sequence[Union[str, None]]) -> jax.Array:
+    """with_sharding_constraint by logical axes; no-op without an active mesh."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    spec = logical_to_spec(axes, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def tree_shardings(axes_tree, mesh: Optional[Mesh] = None):
+    """Map an axes-tree (tuples of logical names at the leaves) to shardings."""
+    mesh = mesh if mesh is not None else _CTX.mesh
+    if mesh is None:
+        return None
+    return jax.tree.map(
+        lambda axes: NamedSharding(mesh, logical_to_spec(axes, mesh)),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(a, str) or a is None for a in x),
+    )

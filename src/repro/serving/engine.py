@@ -1,0 +1,138 @@
+"""Continuous-batching serving engine.
+
+vLLM-style slot scheduler on top of the model's prefill/decode steps:
+  * fixed B decode slots; the decode step always runs the full batch
+    (inactive slots are masked),
+  * new requests prefill with batch=1 and are spliced into a free slot of
+    the batched cache (tree-wide dynamic_update_slice on the batch axis),
+  * finished sequences (EOS / max_new_tokens) free their slot immediately.
+
+Greedy or temperature sampling; deterministic under a seed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # (S,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0      # 0 -> greedy
+    out_tokens: Optional[list] = None
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    batch_slots: int = 4
+    max_len: int = 256
+    eos_id: int = 2
+    seed: int = 0
+
+
+def _cache_batch_size(cache) -> int:
+    leaf = jax.tree.leaves(cache)[0]
+    return leaf.shape[1]  # (L, B, ...)
+
+
+def _splice(cache_batched, cache_one, slot: int):
+    """Insert batch=1 cache into slot `slot` of the batched cache."""
+    def ins(big, small):
+        return jax.lax.dynamic_update_slice_in_dim(big, small, slot, axis=1)
+    return jax.tree.map(ins, cache_batched, cache_one)
+
+
+class Engine:
+    def __init__(self, model, params, cfg: EngineConfig):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.cache = model.init_cache(cfg.batch_slots, cfg.max_len)
+        self.positions = np.zeros((cfg.batch_slots,), np.int32)
+        self.active: list[Optional[Request]] = [None] * cfg.batch_slots
+        self.tokens = np.zeros((cfg.batch_slots, 1), np.int32)
+        self.budget = np.zeros((cfg.batch_slots,), np.int32)
+        self.rng = np.random.default_rng(cfg.seed)
+        self.queue: list[Request] = []
+        self.done: list[Request] = []
+
+        self._prefill = jax.jit(
+            lambda p, b, c: model.prefill(p, b, c))
+        self._decode = jax.jit(
+            lambda p, t, c, pos: model.decode(p, t, c, pos))
+
+    # ----------------------------------------------------------- client
+    def submit(self, req: Request):
+        req.out_tokens = []
+        self.queue.append(req)
+
+    def run(self, max_steps: int = 10_000) -> list[Request]:
+        steps = 0
+        while (self.queue or any(a is not None for a in self.active)) \
+                and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.done
+
+    # --------------------------------------------------------- scheduler
+    def step(self):
+        self._admit()
+        if any(a is not None for a in self.active):
+            self._decode_step()
+
+    def _admit(self):
+        for slot in range(self.cfg.batch_slots):
+            if self.active[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            prompt = jnp.asarray(req.prompt[None, :], jnp.int32)
+            one_cache = self.model.init_cache(1, self.cfg.max_len)
+            logits, one_cache = self._prefill(
+                self.params, {"tokens": prompt}, one_cache)
+            self.cache = _splice(self.cache, one_cache, slot)
+            nxt = self._sample(np.asarray(logits[0, -1]), req.temperature)
+            req.out_tokens.append(int(nxt))
+            self.active[slot] = req
+            self.tokens[slot, 0] = nxt
+            self.positions[slot] = len(req.prompt)
+            self.budget[slot] = req.max_new_tokens - 1
+
+    def _decode_step(self):
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(self.tokens), self.cache,
+            jnp.asarray(self.positions))
+        logits = np.asarray(logits[:, 0])
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            self.positions[slot] += 1
+            if req.out_tokens and req.out_tokens[-1] == self.cfg.eos_id:
+                self._finish(slot)
+                continue
+            if self.budget[slot] <= 0:
+                self._finish(slot)
+                continue
+            nxt = self._sample(logits[slot], req.temperature)
+            req.out_tokens.append(int(nxt))
+            self.tokens[slot, 0] = nxt
+            self.budget[slot] -= 1
+
+    def _finish(self, slot: int):
+        req = self.active[slot]
+        if req.out_tokens and req.out_tokens[-1] == self.cfg.eos_id:
+            req.out_tokens = req.out_tokens[:-1]
+        self.done.append(req)
+        self.active[slot] = None
+
+    def _sample(self, logits: np.ndarray, temperature: float) -> int:
+        if temperature <= 0.0:
+            return int(np.argmax(logits))
+        p = np.exp((logits - logits.max()) / temperature)
+        p = p / p.sum()
+        return int(self.rng.choice(len(p), p=p))

@@ -1,0 +1,260 @@
+"""Train-step factory: one code path for Full FT, LIFT, sparse-FT baselines
+and PEFT adapters (LoRA / PiSSA / DoRA).
+
+Key property for LIFT: gradients are computed ONLY w.r.t. the trainable
+subtree (planned tensors), so frozen-parameter backward work (e.g. the
+embedding table) is dead-code-eliminated by XLA; optimizer state is the
+sparse (k,)-vector state of core/sparse_adam.py.
+
+The mask-refresh program (LIFT's update_interval) is a *separate* jitted
+function — the host loop calls it every N steps (paper App. B.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import peft as peftmod
+from repro.core import sparse_adam as sa
+from repro.core.lift import (LiftConfig, compute_indices, get_by_path,
+                             make_plan, set_by_path)
+from repro.core.peft import PeftConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class MethodConfig:
+    """How the model is tuned."""
+    kind: str = "full"        # full | lift | sparse | lora | pissa | dora
+    lift: LiftConfig = LiftConfig()
+    peft: PeftConfig = PeftConfig()
+
+    def replace(self, **kw):
+        return dataclasses.replace(self, **kw)
+
+
+def warmup_linear(total_steps: int, warmup_ratio: float = 0.03,
+                  peak: float = 1e-4):
+    warm = max(1, int(total_steps * warmup_ratio))
+
+    def sched(step):
+        s = step.astype(jnp.float32)
+        up = s / warm
+        down = jnp.maximum(0.0, (total_steps - s) / max(1, total_steps - warm))
+        return peak * jnp.minimum(up, down)
+
+    return sched
+
+
+def constant_lr(peak: float = 1e-4):
+    return lambda step: jnp.full((), peak, jnp.float32)
+
+
+# -------------------------------------------------------------- partition
+def subtree(params, paths):
+    return {p: get_by_path(params, p) for p in paths}
+
+
+def merge_subtree(params, sub):
+    out = params
+    for p, leaf in sub.items():
+        out = set_by_path(out, p, leaf)
+    return out
+
+
+# ------------------------------------------------------------------ setup
+def init_train_state(model, params, method: MethodConfig, key,
+                     sample_grads=None):
+    """Build the initial TrainState dict for any method."""
+    mcfg = method
+    state: dict[str, Any] = {"step": jnp.zeros((), jnp.int32)}
+    if mcfg.kind == "full":
+        state["opt"] = sa.dense_init(params)
+    elif mcfg.kind in ("lift", "sparse"):
+        lcfg = mcfg.lift
+        plan = make_plan(model.spec(), lcfg)
+        idx = compute_indices(params, plan, lcfg, key, grads=sample_grads)
+        use_master = params_dtype_isnt_f32(params)
+        state["opt"] = sa.init_state(params, idx, plan,
+                                     use_master=use_master)
+        if lcfg.train_other:
+            other = other_paths(model, plan)
+            state["opt_other"] = sa.dense_init(subtree(params, other))
+    elif mcfg.kind in ("lora", "pissa", "dora"):
+        pcfg = mcfg.peft.replace(kind=mcfg.kind)
+        plan = make_plan(model.spec(),
+                         LiftConfig(scope=mcfg.lift.scope,
+                                    min_dim=mcfg.lift.min_dim))
+        adapters, params = peftmod.init_adapters(params, plan, pcfg, key)
+        state["adapters"] = adapters
+        state["opt"] = sa.dense_init(adapters)
+    else:
+        raise ValueError(mcfg.kind)
+    return params, state
+
+
+def params_dtype_isnt_f32(params) -> bool:
+    leaf = jax.tree.leaves(params)[0]
+    return leaf.dtype != jnp.float32
+
+
+def other_paths(model, plan):
+    """Paths of non-planned trainable extras (norms, biases...)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(model.spec())
+    from repro.core.lift import _path_str
+    out = []
+    for path, _ in flat:
+        ps = _path_str(path)
+        if ps not in plan and "embed" not in ps:
+            out.append(ps)
+    return out
+
+
+# ------------------------------------------------------------- train step
+def make_train_step(model, method: MethodConfig, adam: sa.AdamConfig,
+                    lr_sched: Callable, microbatch: int = 0):
+    """Returns train_step(params, state, batch) -> (params, state, metrics)."""
+    mcfg = method
+
+    def loss_for(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    def value_and_grad(f2, tree, batch):
+        """(loss, metrics), grads of f2(tree, batch); optional microbatch
+        gradient accumulation (scan over batch splits, one psum total —
+        grads sum locally across microbatches before the data-parallel
+        reduction)."""
+        if not microbatch or microbatch <= 1:
+            return jax.value_and_grad(lambda t: f2(t, batch),
+                                      has_aux=True)(tree)
+        n = microbatch
+        B = jax.tree.leaves(batch)[0].shape[0]
+        assert B % n == 0, (B, n)
+        mbatch = jax.tree.map(
+            lambda x: x.reshape(n, B // n, *x.shape[1:]), batch)
+        gf = jax.value_and_grad(f2, has_aux=True)
+
+        def body(carry, mb):
+            (ls, ms, gs) = carry
+            (loss, metrics), g = gf(tree, mb)
+            gs = jax.tree.map(jnp.add, gs, g)
+            ms = jax.tree.map(jnp.add, ms, metrics)
+            return (ls + loss, ms, gs), None
+
+        zero_g = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), tree)
+        (loss0, metrics0), g0 = gf(tree, jax.tree.map(lambda x: x[0], mbatch))
+        (loss, metrics, g), _ = jax.lax.scan(
+            body, (loss0, metrics0, jax.tree.map(
+                lambda a, b: a.astype(jnp.float32) + b, g0, zero_g)),
+            jax.tree.map(lambda x: x[1:], mbatch))
+        inv = 1.0 / n
+        return ((loss * inv, jax.tree.map(lambda x: x * inv, metrics)),
+                jax.tree.map(lambda x: (x * inv).astype(jnp.float32), g))
+
+    if mcfg.kind == "full":
+        def train_step(params, state, batch):
+            lr = lr_sched(state["step"])
+            (loss, metrics), g = value_and_grad(
+                lambda p, b: loss_for(p, b), params, batch)
+            if adam.grad_clip:
+                g, gn = sa.clip_by_global_norm(g, adam.grad_clip)
+            else:
+                gn = sa.global_norm(g)
+            params, opt = sa.dense_apply(params, g, state["opt"], adam, lr)
+            new_state = {"step": state["step"] + 1, "opt": opt}
+            metrics = dict(metrics, loss=loss, grad_norm=gn, lr=lr)
+            return params, new_state, metrics
+        return train_step
+
+    if mcfg.kind in ("lift", "sparse"):
+        lcfg = mcfg.lift
+        plan = make_plan(model.spec(), lcfg)
+        paths = sorted(plan.keys())
+        extra = other_paths(model, plan) if lcfg.train_other else []
+
+        def train_step(params, state, batch):
+            lr = lr_sched(state["step"])
+            train_tree = subtree(params, paths + extra)
+            (loss, metrics), g = value_and_grad(
+                lambda t, b: loss_for(merge_subtree(params, t), b),
+                train_tree, batch)
+            if adam.grad_clip:
+                g, gn = sa.clip_by_global_norm(g, adam.grad_clip)
+            else:
+                gn = sa.global_norm(g)
+            new_sub, opt = sa.apply_updates(
+                subtree(train_tree, paths), subtree(g, paths), state["opt"],
+                plan, adam, lr)
+            new_state = dict(state, step=state["step"] + 1, opt=opt)
+            if extra:  # dense AdamW on norms/biases (LIFT extension)
+                dense_sub, opt_o = sa.dense_apply(
+                    subtree(train_tree, extra), subtree(g, extra),
+                    state["opt_other"], adam, lr)
+                new_sub = dict(new_sub, **dense_sub)
+                new_state["opt_other"] = opt_o
+            params = merge_subtree(params, new_sub)
+            metrics = dict(metrics, loss=loss, grad_norm=gn, lr=lr)
+            return params, new_state, metrics
+        return train_step
+
+    # PEFT adapters
+    pcfg = mcfg.peft.replace(kind=mcfg.kind)
+    plan = make_plan(model.spec(), LiftConfig(scope=mcfg.lift.scope,
+                                              min_dim=mcfg.lift.min_dim))
+
+    def train_step(params, state, batch):
+        lr = lr_sched(state["step"])
+
+        def f(adapters, b):
+            eff = peftmod.merge(params, adapters, plan, pcfg)
+            return loss_for(eff, b)
+
+        (loss, metrics), g = value_and_grad(f, state["adapters"], batch)
+        if adam.grad_clip:
+            g, gn = sa.clip_by_global_norm(g, adam.grad_clip)
+        else:
+            gn = sa.global_norm(g)
+        adapters, opt = sa.dense_apply(state["adapters"], g, state["opt"],
+                                       adam, lr)
+        new_state = dict(state, step=state["step"] + 1, opt=opt,
+                         adapters=adapters)
+        metrics = dict(metrics, loss=loss, grad_norm=gn, lr=lr)
+        return params, new_state, metrics
+
+    return train_step
+
+
+# ------------------------------------------------------------ mask refresh
+def make_refresh_step(model, method: MethodConfig):
+    """LIFT mask refresh (separate jitted program, App. B.1).
+
+    Gradient/movement selections need a gradient sample, which the refresh
+    program doesn't carry — those baselines keep their initial mask (the
+    paper treats them as fixed-mask baselines)."""
+    assert method.kind in ("lift", "sparse")
+    lcfg = method.lift
+    plan = make_plan(model.spec(), lcfg)
+    if lcfg.selection in ("gradient", "movement"):
+        return lambda params, state, key: state
+
+    def refresh(params, state, key):
+        idx = compute_indices(params, plan, lcfg, key)
+        opt = sa.migrate(subtree(params, sorted(plan.keys())), state["opt"],
+                         idx, plan)
+        return dict(state, opt=opt)
+
+    return refresh
+
+
+def effective_params(model, params, state, method: MethodConfig):
+    """Inference-time params for any method (merges adapters if present)."""
+    if method.kind in ("lora", "pissa", "dora"):
+        pcfg = method.peft.replace(kind=method.kind)
+        plan = make_plan(model.spec(), LiftConfig(scope=method.lift.scope,
+                                                  min_dim=method.lift.min_dim))
+        return peftmod.merge(params, state["adapters"], plan, pcfg)
+    return params

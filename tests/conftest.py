@@ -1,0 +1,13 @@
+import os
+import sys
+
+# src/ layout import path (tests run as `PYTHONPATH=src pytest tests/`,
+# but make it work without the env var too)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: no XLA_FLAGS here on purpose — tests must see the real single
+# device; only launch/dryrun.py requests 512 placeholder devices.
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

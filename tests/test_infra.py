@@ -1,0 +1,251 @@
+"""Infrastructure: data loader, checkpointing (atomicity, pruning, async,
+elastic restore), fault tolerance (preemption resume bit-exactness,
+straggler detection), serving engine, HLO collective parser."""
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import sparse_adam as sa
+from repro.core.lift import LiftConfig
+from repro.data.loader import LoaderState, ShardedLoader
+from repro.data.synthetic import EOS, VOCAB_SIZE, generate
+from repro.ft import PreemptionSimulator, StragglerMonitor
+from repro.launch.hlo import analyze_collectives
+from repro.models import ModelConfig, build_model
+from repro.serving.engine import Engine, EngineConfig, Request
+from repro.training import trainer as T
+
+CFG = ModelConfig(family="dense", num_layers=2, d_model=32, num_heads=4,
+                  num_kv_heads=2, head_dim=8, d_ff=64,
+                  vocab_size=max(97, VOCAB_SIZE))
+
+
+# ------------------------------------------------------------------ data
+def test_loader_deterministic_and_resumable():
+    data = generate("arith", 128, 32, seed=0)
+    l1 = ShardedLoader(data, batch_size=16, seed=1)
+    batches = [l1.next_batch() for _ in range(6)]
+    l2 = ShardedLoader(data, batch_size=16, seed=1,
+                       state=LoaderState(0, 3))
+    for i in range(3, 6):
+        b = l2.next_batch()
+        assert np.array_equal(b["tokens"], batches[i]["tokens"])
+
+
+def test_loader_shards_disjoint_cover():
+    data = generate("arith", 64, 32, seed=0)
+    la = ShardedLoader(data, batch_size=16, seed=3, shard_id=0, num_shards=4)
+    lb = ShardedLoader(data, batch_size=16, seed=3, shard_id=1, num_shards=4)
+    ba, bb = la.next_batch(), lb.next_batch()
+    assert ba["tokens"].shape[0] == 4 and bb["tokens"].shape[0] == 4
+    sa_ = {r.tobytes() for r in ba["tokens"]}
+    sb_ = {r.tobytes() for r in bb["tokens"]}
+    assert not (sa_ & sb_)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from([1, 2, 4, 8, 16]), st.integers(0, 40),
+       st.integers(0, 2 ** 10))
+def test_prop_loader_elastic_reshard_covers_batch(shards, step, seed):
+    """Union of per-shard batches == global batch for any shard count that
+    divides the global batch (the framework's elastic contract)."""
+    n = 128
+    data = {"x": np.arange(n * 3).reshape(n, 3)}
+    bs = 16
+    full = ShardedLoader(data, batch_size=bs, seed=seed,
+                         state=LoaderState(0, step % 8))
+    want = full.next_batch()["x"]
+    got = []
+    for sid in range(shards):
+        ld = ShardedLoader(data, batch_size=bs, seed=seed, shard_id=sid,
+                           num_shards=shards,
+                           state=LoaderState(0, step % 8))
+        got.append(ld.next_batch()["x"])
+    got = np.concatenate(got)
+    assert sorted(map(tuple, got.tolist())) == sorted(map(tuple,
+                                                          want.tolist()))
+
+
+# ------------------------------------------------------------ checkpoint
+def test_checkpoint_roundtrip_prune_async():
+    m = build_model(CFG)
+    params = m.init(jax.random.PRNGKey(0))
+    cache = m.init_cache(2, 8)
+    tree = {"params": params, "cache": cache, "step": jnp.asarray(3)}
+    with tempfile.TemporaryDirectory() as td:
+        cm = CheckpointManager(td, keep=2)
+        cm.save(1, tree, meta={"loader": {"epoch": 0, "step": 1}})
+        cm.save_async(2, tree)
+        cm.wait()
+        cm.save(3, tree)
+        assert cm.all_steps() == [2, 3]
+        r = cm.restore(3, tree)
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(r)):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+        assert cm.restore_meta(1) if 1 in cm.all_steps() else True
+
+
+def test_checkpoint_atomicity_partial_write_invisible():
+    with tempfile.TemporaryDirectory() as td:
+        cm = CheckpointManager(td, keep=5)
+        cm.save(1, {"x": jnp.ones(4)})
+        # simulate a crashed mid-write: stray .tmp dir must be ignored
+        os.makedirs(os.path.join(td, "step_00000002.tmp"))
+        with open(os.path.join(td, "step_00000002.tmp", "garbage"),
+                  "w") as f:
+            f.write("boom")
+        assert cm.all_steps() == [1]
+        assert cm.latest_step() == 1
+
+
+def test_checkpoint_corrupt_manifest_ignored():
+    with tempfile.TemporaryDirectory() as td:
+        cm = CheckpointManager(td, keep=5)
+        cm.save(1, {"x": jnp.ones(4)})
+        os.makedirs(os.path.join(td, "step_00000005"))
+        # step_5 has no manifest -> incomplete, ignored
+        assert cm.latest_step() == 1
+
+
+# -------------------------------------------------------- fault tolerance
+def test_preemption_resume_bit_exact():
+    """Crash at step 6, auto-resume, final params == uninterrupted run."""
+    m = build_model(CFG)
+    mcfg = T.MethodConfig(kind="lift",
+                          lift=LiftConfig(rank=4, match_rank=1,
+                                          method="exact", min_dim=16))
+    data = generate("arith", 64, 24, seed=0)
+
+    def fresh():
+        params = m.init(jax.random.PRNGKey(0))
+        params, state = T.init_train_state(m, params, mcfg,
+                                           jax.random.PRNGKey(1))
+        step = jax.jit(T.make_train_step(m, mcfg, sa.AdamConfig(lr=1e-3),
+                                         T.constant_lr(1e-3)))
+        return params, state, step
+
+    def run(steps, ckpt=None, resume=False, crash_at=None):
+        params, state, step = fresh()
+        loader = ShardedLoader(data, batch_size=8, seed=2)
+        start = 0
+        if resume:
+            latest = ckpt.latest_step()
+            r = ckpt.restore(latest, {"params": params, "state": state})
+            params, state = r["params"], r["state"]
+            loader.state = LoaderState.from_dict(
+                ckpt.restore_meta(latest)["loader"])
+            start = latest
+        pre = PreemptionSimulator(crash_at)
+        for i in range(start, steps):
+            b = {k: jnp.asarray(v) for k, v in loader.next_batch().items()}
+            params, state, _ = step(params, state, b)
+            if ckpt is not None and (i + 1) % 3 == 0:
+                ckpt.save(i + 1, {"params": params, "state": state},
+                          meta={"loader": loader.state.to_dict()})
+            try:
+                pre.check(i + 1)
+            except SystemExit:
+                return None, None
+        return params, state
+
+    p_ref, _ = run(10)
+    with tempfile.TemporaryDirectory() as td:
+        cm = CheckpointManager(td, keep=3)
+        out = run(10, ckpt=cm, crash_at=6)
+        assert out[0] is None  # crashed
+        p_res, _ = run(10, ckpt=cm, resume=True)
+    for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p_res)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_straggler_monitor_flags_slow_rank():
+    sm = StragglerMonitor(z_threshold=3.0, patience=2)
+    rng = np.random.default_rng(0)
+    for _ in range(30):
+        v = sm.observe(0, 1.0 + 0.02 * rng.standard_normal())
+        assert not v.is_straggler
+    assert not sm.observe(1, 2.5).is_straggler  # first strike
+    assert sm.observe(1, 2.5).is_straggler      # second strike -> flagged
+    # healthy rank unaffected
+    assert not sm.observe(0, 1.0).is_straggler
+
+
+def test_straggler_baseline_not_poisoned():
+    sm = StragglerMonitor(z_threshold=3.0, patience=1)
+    for _ in range(20):
+        sm.observe(0, 1.0)
+    base = sm.mean
+    for _ in range(5):
+        sm.observe(1, 50.0)
+    assert sm.mean == pytest.approx(base, rel=0.05)
+
+
+# ---------------------------------------------------------------- serving
+def test_engine_continuous_batching_completes_all():
+    m = build_model(CFG)
+    params = m.init(jax.random.PRNGKey(0))
+    eng = Engine(m, params, EngineConfig(batch_slots=2, max_len=48,
+                                         eos_id=EOS))
+    for i in range(5):
+        eng.submit(Request(uid=i, prompt=np.arange(3 + i) % 50,
+                           max_new_tokens=6))
+    done = eng.run()
+    assert sorted(r.uid for r in done) == [0, 1, 2, 3, 4]
+    assert all(0 < len(r.out_tokens) <= 6 for r in done)
+
+
+def test_engine_greedy_matches_manual_decode():
+    m = build_model(CFG)
+    params = m.init(jax.random.PRNGKey(0))
+    prompt = np.arange(5) % 50
+    eng = Engine(m, params, EngineConfig(batch_slots=1, max_len=32,
+                                         eos_id=EOS))
+    eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=4))
+    got = eng.run()[0].out_tokens
+
+    ctx = list(prompt)
+    want = []
+    for _ in range(4):
+        lg = m.logits(params, {"tokens": jnp.asarray([ctx], jnp.int32)})
+        nxt = int(jnp.argmax(lg[0, -1]))
+        want.append(nxt)
+        if nxt == EOS:
+            break
+        ctx.append(nxt)
+    if EOS in want:
+        want = want[:want.index(EOS)]
+    assert got == want, (got, want)
+
+
+# ------------------------------------------------------------- HLO parser
+HLO_SAMPLE = """
+HloModule test
+ENTRY %main (p: f32[16,128]) -> f32[16,128] {
+  %ar = f32[16,128]{1,0} all-reduce(%p), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag = bf16[64,128]{1,0} all-gather(%x), replica_groups=[4,2]<=[8], dimensions={0}
+  %rs = f32[4,128]{1,0} reduce-scatter(%y), replica_groups={{0,1,2,3}}, to_apply=%add
+  %a2a = bf16[16,128]{1,0} all-to-all(%z), replica_groups={{0,1,2,3,4,5,6,7}}
+  %cp = f32[8,8]{1,0} collective-permute(%w), source_target_pairs={{0,1}}
+  %prom = f32[32,32]{1,0} all-reduce(%q), replica_groups={{0,1}}, to_apply=%add.clone_promoted
+}
+"""
+
+
+def test_hlo_collective_parser_factors():
+    st_ = analyze_collectives(HLO_SAMPLE, 8)
+    by = st_.by_kind
+    assert by["all-reduce"] == pytest.approx(
+        2 * 3 / 4 * 16 * 128 * 4        # plain f32 AR over groups of 4
+        + 2 * 1 / 2 * 32 * 32 * 2)      # promoted: counted at bf16 width
+    assert by["all-gather"] == pytest.approx(1 / 2 * 64 * 128 * 2)
+    assert by["reduce-scatter"] == pytest.approx(3 * 4 * 128 * 4)
+    assert by["all-to-all"] == pytest.approx(7 / 8 * 16 * 128 * 2)
+    assert by["collective-permute"] == pytest.approx(8 * 8 * 4)
+    assert st_.count == 6

@@ -1,0 +1,149 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the ref.py oracles
+(interpret=True executes the kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+def _factors(m, n, r, dtype, seed=0):
+    a = jax.random.normal(jax.random.PRNGKey(seed), (m, r)).astype(dtype)
+    b = jax.random.normal(jax.random.PRNGKey(seed + 1), (n, r)).astype(dtype)
+    return a, b
+
+
+SHAPES = [(128, 128, 8), (256, 128, 16), (384, 512, 24), (512, 256, 33)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("m,n,r", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_lowrank_abs_sweep(m, n, r, dtype):
+    a, b = _factors(m, n, r, dtype)
+    got = ops.lowrank_abs(a, b, bm=128, bn=128)
+    want = ref.lowrank_abs(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("m,n,r", SHAPES)
+def test_lowrank_count_and_absmax_sweep(m, n, r):
+    a, b = _factors(m, n, r, jnp.float32, seed=7)
+    s = ref.lowrank_abs(a, b)
+    for q in (0.5, 0.95, 0.999):
+        tau = float(jnp.quantile(s, q))
+        got = int(ops.lowrank_count(a, b, tau, bm=128, bn=128))
+        want = int(ref.lowrank_count(a, b, tau))
+        assert got == want, (q, got, want)
+    np.testing.assert_allclose(float(ops.lowrank_absmax(a, b, bm=128, bn=128)),
+                               float(ref.lowrank_absmax(a, b)), rtol=1e-6)
+
+
+@pytest.mark.parametrize("nbins", [16, 64, 256])
+def test_lowrank_hist_sweep(nbins):
+    a, b = _factors(256, 384, 16, jnp.float32, seed=3)
+    hi = float(ref.lowrank_absmax(a, b)) * 1.000001
+    got = ops.lowrank_hist(a, b, 0.0, hi, nbins=nbins, bm=128, bn=128)
+    want = ref.lowrank_hist(a, b, 0.0, hi, nbins)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+    assert int(got.sum()) == 256 * 384
+
+
+@pytest.mark.parametrize("density", [0.01, 0.05, 0.2])
+def test_lift_mask_threshold_accuracy(density):
+    a, b = _factors(384, 512, 24, jnp.float32, seed=11)
+    k = int(density * 384 * 512)
+    mask, tau = ops.lift_mask(a, b, k, bm=128, bn=128)
+    cnt = int(mask.sum())
+    assert k <= cnt <= k * 1.001 + 8, (k, cnt)  # within the final bin
+    # top-k of the oracle must all be inside the kernel mask
+    s = np.asarray(ref.lowrank_abs(a, b)).ravel()
+    top = np.argpartition(-s, k - 1)[:k]
+    assert np.asarray(mask).ravel()[top].all()
+
+
+@pytest.mark.parametrize("N,k,bn,cap", [
+    (4096, 128, 1024, 0), (4096, 128, 1024, 8), (10000, 500, 2048, 0),
+    (1000, 37, 512, 0), (65536, 4096, 4096, 0),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sparse_adam_sweep(N, k, bn, cap, dtype):
+    key = jax.random.PRNGKey(N + k)
+    p = jax.random.normal(key, (N,)).astype(dtype)
+    g = jax.random.normal(jax.random.PRNGKey(1), (N,)).astype(dtype)
+    idx = jnp.sort(jax.random.choice(jax.random.PRNGKey(2), N, (k,),
+                                     replace=False)).astype(jnp.int32)
+    m = jax.random.uniform(jax.random.PRNGKey(3), (k,))
+    v = jax.random.uniform(jax.random.PRNGKey(4), (k,))
+    kw = dict(lr=1e-2, b1=0.9, b2=0.999, eps=1e-8, wd=0.01)
+    pk, mk, vk = ops.sparse_adam(p, g, idx, m, v, 5, bn=bn, capacity=cap,
+                                 **kw)
+    pr, mr, vr = ref.sparse_adam(p, g, idx, m, v, step=5, **kw)
+    np.testing.assert_allclose(np.asarray(mk), np.asarray(mr),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(vk), np.asarray(vr),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(pk, np.float32),
+                               np.asarray(pr, np.float32),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 2e-5,
+                               atol=2e-2 if dtype == jnp.bfloat16 else 2e-5)
+    # untouched entries bit-identical
+    mask = np.ones(N, bool)
+    mask[np.asarray(idx)] = False
+    assert np.array_equal(np.asarray(pk)[mask], np.asarray(p)[mask])
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(100, 3000), st.integers(1, 200), st.integers(0, 2 ** 16))
+def test_prop_sparse_adam_matches_oracle(N, k, seed):
+    k = min(k, N)
+    rng = np.random.default_rng(seed)
+    p = jnp.asarray(rng.normal(size=N), jnp.float32)
+    g = jnp.asarray(rng.normal(size=N), jnp.float32)
+    idx = jnp.asarray(np.sort(rng.choice(N, k, replace=False)), jnp.int32)
+    m = jnp.asarray(rng.uniform(size=k), jnp.float32)
+    v = jnp.asarray(rng.uniform(size=k), jnp.float32)
+    kw = dict(lr=1e-3, b1=0.9, b2=0.99, eps=1e-8, wd=0.0)
+    pk, mk, vk = ops.sparse_adam(p, g, idx, m, v, 2, bn=256, **kw)
+    pr, mr, vr = ref.sparse_adam(p, g, idx, m, v, step=2, **kw)
+    np.testing.assert_allclose(np.asarray(pk), np.asarray(pr), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(mk), np.asarray(mr), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(vk), np.asarray(vr), atol=1e-6)
+
+
+# ---------------------------------------------------- flash attention kernel
+from repro.kernels.flash_attention import flash_attention_fwd
+
+
+@pytest.mark.parametrize("S,D,H,causal", [
+    (128, 64, 2, True), (256, 128, 1, True), (128, 80, 2, False),
+    (256, 256, 1, True),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_kernel_sweep(S, D, H, causal, dtype):
+    B = 2
+    key = jax.random.PRNGKey(S + D)
+    q = jax.random.normal(key, (B, S, H, D)).astype(dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, H, D)).astype(dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, H, D)).astype(dtype)
+    got = flash_attention_fwd(q, k, v, causal=causal, q_blk=64, kv_blk=64)
+    want = ref.naive_attention(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_kernel_matches_jax_flash():
+    from repro.nn.flash import causal_bias, flash_attention
+    B, S, H, D = 1, 128, 2, 64
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, S, H, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, H, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, H, D))
+    got = flash_attention_fwd(q, k, v, causal=True, q_blk=32, kv_blk=32)
+    want = flash_attention(q, k, v, causal_bias(), D ** -0.5, 32, 32, False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,241 @@
+"""LIFT core invariants: low-rank approximation, Principal-Weight masks,
+sparse AdamW, state migration (paper Algorithm 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lowrank, sparse_adam as sa
+from repro.core.lift import (LiftConfig, compute_indices, make_plan,
+                             mask_from_indices, topk_indices, get_by_path,
+                             scores_for)
+from repro.models import ModelConfig, build_model
+
+CFG = ModelConfig(family="dense", num_layers=2, d_model=64, num_heads=4,
+                  num_kv_heads=2, head_dim=16, d_ff=128, vocab_size=97)
+
+
+def _rand(m, n, seed=0, rank=None):
+    k = jax.random.PRNGKey(seed)
+    if rank is None:
+        return jax.random.normal(k, (m, n))
+    a = jax.random.normal(k, (m, rank))
+    b = jax.random.normal(jax.random.PRNGKey(seed + 1), (rank, n))
+    return a @ b / np.sqrt(rank)
+
+
+# ------------------------------------------------------------- lowrank
+def test_exact_lowrank_is_eckart_young():
+    w = _rand(48, 64, seed=1)
+    a, b = lowrank.exact_lowrank(w, 8)
+    w8 = a @ b.T
+    u, s, vt = np.linalg.svd(np.asarray(w), full_matrices=False)
+    best = (u[:, :8] * s[:8]) @ vt[:8]
+    assert np.allclose(np.asarray(w8), best, atol=1e-4)
+
+
+def test_randomized_matches_exact_on_lowrank_matrix():
+    w = _rand(96, 80, seed=2, rank=6)  # exactly rank 6
+    a, b = lowrank.randomized_lowrank(w, 6, key=jax.random.PRNGKey(3))
+    assert np.allclose(np.asarray(a @ b.T), np.asarray(w), atol=1e-3)
+
+
+def test_randomized_spectral_error_bound():
+    w = _rand(128, 96, seed=4)
+    r = 16
+    a, b = lowrank.randomized_lowrank(w, r, key=jax.random.PRNGKey(5),
+                                      oversample=8, iters=2)
+    err = np.linalg.norm(np.asarray(w - a @ b.T), 2)
+    s = np.linalg.svd(np.asarray(w), compute_uv=False)
+    # sigma_{r+1} is the optimum; subspace iteration should be within 1.5x
+    assert err <= 1.5 * s[r] + 1e-5, (err, s[r])
+
+
+def test_rank_strategies_select_expected_spectrum():
+    w = _rand(40, 40, seed=6)
+    s = np.linalg.svd(np.asarray(w), compute_uv=False)
+    a, b = lowrank.exact_lowrank(w, 4, strategy="smallest")
+    # reconstruction built from the smallest singular values has tiny norm
+    assert np.linalg.norm(np.asarray(a @ b.T), 2) <= s[-4] + 1e-4
+    a, b = lowrank.exact_lowrank(w, 4, strategy="hybrid")
+    assert np.linalg.norm(np.asarray(a @ b.T), 2) >= s[0] - 1e-4
+
+
+def test_spectral_norm_power_iteration():
+    w = _rand(64, 48, seed=7)
+    sn = float(lowrank.spectral_norm(w, iters=64))
+    ref = float(np.linalg.svd(np.asarray(w), compute_uv=False)[0])
+    assert abs(sn - ref) / ref < 1e-3
+
+
+# ---------------------------------------------------------------- masks
+def test_topk_indices_match_numpy():
+    s = jnp.abs(_rand(32, 48, seed=8))
+    idx = np.asarray(topk_indices(s, 100))
+    ref = np.sort(np.argpartition(-np.asarray(s).ravel(), 100)[:100])
+    assert np.array_equal(idx, ref)
+    assert np.all(np.diff(idx) > 0)  # sorted unique
+
+
+def test_structured_mask_blocks():
+    s = jnp.abs(_rand(32, 32, seed=9))
+    idx = np.asarray(topk_indices(s, 64, block_size=4))
+    mask = np.zeros(32 * 32, bool)
+    mask[idx] = True
+    mask = mask.reshape(32, 32)
+    blocks = mask.reshape(8, 4, 8, 4).sum((1, 3))
+    assert set(np.unique(blocks)) <= {0, 16}  # whole 4x4 blocks only
+    assert blocks.sum() == 64
+
+
+def test_lift_mask_is_topk_of_lowrank_abs():
+    w = _rand(64, 96, seed=10)
+    cfg = LiftConfig(rank=8, method="exact")
+    s = scores_for(w, cfg, "lift")
+    ref = jnp.abs(jnp.asarray(
+        np.linalg.svd(np.asarray(w), full_matrices=False)[0][:, :8]
+        * np.linalg.svd(np.asarray(w), compute_uv=False)[:8]) @
+        np.linalg.svd(np.asarray(w), full_matrices=False)[2][:8])
+    assert np.allclose(np.asarray(s), np.asarray(ref), atol=1e-4)
+
+
+def test_plan_geometry_and_budget():
+    m = build_model(CFG)
+    lcfg = LiftConfig(rank=8, match_rank=2, method="exact")
+    plan = make_plan(m.spec(), lcfg)
+    # attention + mlp tensors planned; embeddings/norms excluded
+    assert "blocks/attn/wq" in plan and "blocks/mlp/up" in plan
+    assert not any("embed" in p for p in plan)
+    assert not any("ln" in p for p in plan)
+    p = plan["blocks/mlp/up"]
+    assert (p.rows, p.cols) == (64, 128)
+    assert p.k == 2 * (64 + 128)
+    p = plan["blocks/attn/wo"]  # flat storage: (heads*hd, d)
+    assert (p.rows, p.cols) == (64, 64)
+
+
+def test_scope_mlp_restricts_plan():
+    m = build_model(CFG)
+    plan = make_plan(m.spec(), LiftConfig(scope="mlp", match_rank=2))
+    assert all("mlp" in p for p in plan)
+
+
+# --------------------------------------------------------- sparse adam
+def _setup_state(seed=0, use_master=False):
+    m = build_model(CFG)
+    lcfg = LiftConfig(rank=8, match_rank=2, method="exact")
+    plan = make_plan(m.spec(), lcfg)
+    params = m.init(jax.random.PRNGKey(seed))
+    idx = compute_indices(params, plan, lcfg, jax.random.PRNGKey(seed + 1))
+    state = sa.init_state(params, idx, plan, use_master=use_master)
+    return m, lcfg, plan, params, idx, state
+
+
+def test_sparse_adam_equals_dense_masked_adam():
+    """THE key paper invariant: LIFT's (k,)-vector optimizer is bit-
+    equivalent to dense AdamW with a frozen binary mask."""
+    m, lcfg, plan, params, idx, state = _setup_state()
+    batch = {"tokens": jnp.ones((2, 16), jnp.int32),
+             "labels": jnp.zeros((2, 16), jnp.int32),
+             "loss_mask": jnp.ones((2, 16))}
+    grads = jax.grad(lambda p: m.loss(p, batch)[0])(params)
+    opt = sa.AdamConfig(lr=1e-3, weight_decay=0.01)
+
+    sparse_p, _ = sa.apply_updates(params, grads, state, plan, opt)
+
+    # dense reference: adam on everything, then mask the delta
+    dstate = sa.dense_init(params)
+    dense_p, _ = sa.dense_apply(params, grads, dstate, opt)
+    for path, p in plan.items():
+        ns = int(np.prod(p.stack)) if p.stack else 1
+        mask = np.zeros((ns, p.rows * p.cols), bool)
+        np.put_along_axis(mask, np.asarray(idx[path]), True, axis=1)
+        got = np.asarray(get_by_path(sparse_p, path)).reshape(ns, -1)
+        want_dense = np.asarray(get_by_path(dense_p, path)).reshape(ns, -1)
+        orig = np.asarray(get_by_path(params, path)).reshape(ns, -1)
+        want = np.where(mask, want_dense, orig)
+        assert np.allclose(got, want, atol=1e-6), path
+
+
+def test_update_touches_only_masked_entries():
+    m, lcfg, plan, params, idx, state = _setup_state()
+    batch = {"tokens": jnp.ones((2, 16), jnp.int32),
+             "labels": jnp.zeros((2, 16), jnp.int32),
+             "loss_mask": jnp.ones((2, 16))}
+    grads = jax.grad(lambda p: m.loss(p, batch)[0])(params)
+    new_p, _ = sa.apply_updates(params, grads, state, plan,
+                                sa.AdamConfig(lr=1e-2))
+    for path, p in plan.items():
+        ns = int(np.prod(p.stack)) if p.stack else 1
+        delta = (np.asarray(get_by_path(new_p, path))
+                 - np.asarray(get_by_path(params, path))).reshape(ns, -1)
+        changed = {(i, j) for i, j in zip(*np.nonzero(delta))}
+        allowed = {(i, int(j)) for i in range(ns)
+                   for j in np.asarray(idx[path])[i]}
+        assert changed <= allowed, path
+
+
+def test_migration_keeps_surviving_moments():
+    m, lcfg, plan, params, idx, state = _setup_state()
+    # fabricate distinctive moments
+    for path in plan:
+        t = state["tensors"][path]
+        t["m"] = jnp.arange(t["m"].size, dtype=jnp.float32
+                            ).reshape(t["m"].shape) + 1.0
+        t["v"] = t["m"] * 10.0
+    new_idx = compute_indices(params, plan,
+                              lcfg.replace(selection="magnitude"),
+                              jax.random.PRNGKey(99))
+    new_state = sa.migrate(params, state, new_idx, plan)
+    for path, p in plan.items():
+        old_i = np.asarray(idx[path])
+        new_i = np.asarray(new_idx[path])
+        old_m = np.asarray(state["tensors"][path]["m"])
+        new_m = np.asarray(new_state["tensors"][path]["m"])
+        for r in range(old_i.shape[0]):
+            lut = {int(ii): float(mm) for ii, mm in zip(old_i[r], old_m[r])}
+            for jj, mm in zip(new_i[r], new_m[r]):
+                expect = lut.get(int(jj), 0.0)
+                assert mm == pytest.approx(expect), (path, r, int(jj))
+
+
+# ------------------------------------------------------ hypothesis props
+@settings(max_examples=25, deadline=None)
+@given(st.integers(8, 64), st.integers(8, 64), st.integers(1, 60),
+       st.integers(0, 2 ** 16))
+def test_prop_topk_count_and_range(m, n, k, seed):
+    k = min(k, m * n)
+    s = jnp.abs(_rand(m, n, seed=seed))
+    idx = np.asarray(topk_indices(s, k))
+    assert idx.shape == (k,)
+    assert idx.min() >= 0 and idx.max() < m * n
+    assert len(np.unique(idx)) == k
+    # every selected score >= every unselected score
+    flat = np.asarray(s).ravel()
+    sel = np.zeros(m * n, bool)
+    sel[idx] = True
+    if k < m * n:
+        assert flat[sel].min() >= flat[~sel].max() - 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 16), st.integers(1, 30), st.integers(1, 30))
+def test_prop_migration_is_projection(seed, k_old, k_new):
+    """Migrated moments are exactly the old moments where indices survive,
+    zero elsewhere (Algorithm 1)."""
+    rng = np.random.default_rng(seed)
+    N = 64
+    k_old, k_new = min(k_old, N), min(k_new, N)
+    old_idx = np.sort(rng.choice(N, k_old, replace=False))
+    new_idx = np.sort(rng.choice(N, k_new, replace=False))
+    m_old = rng.normal(size=k_old).astype(np.float32)
+
+    pos = np.searchsorted(old_idx, new_idx)
+    pos_c = np.minimum(pos, k_old - 1)
+    hit = old_idx[pos_c] == new_idx
+    got = np.where(hit, m_old[pos_c], 0.0)
+
+    lut = dict(zip(old_idx.tolist(), m_old.tolist()))
+    want = np.asarray([lut.get(int(j), 0.0) for j in new_idx], np.float32)
+    assert np.array_equal(got, want)

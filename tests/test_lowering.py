@@ -1,0 +1,77 @@
+"""Lowering machinery on the local 1-device mesh: every builder must
+lower+compile for a smoke config (the 512-device production sweep runs via
+launch/dryrun.py; this guards the plumbing in-process)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import LM_SHAPES, get_arch
+from repro.configs.base import ShapeSpec
+from repro.launch.lowering import (build_cell, build_refresh, DEFAULT_LIFT)
+from repro.launch.mesh import make_host_mesh
+
+TINY_TRAIN = ShapeSpec("train_tiny", 32, 4, "train")
+TINY_PREFILL = ShapeSpec("prefill_tiny", 32, 2, "prefill")
+TINY_DECODE = ShapeSpec("decode_tiny", 32, 2, "decode")
+
+ARCH_SAMPLE = ["qwen3-1.7b", "moonshot-16b-a3b", "rwkv6-1.6b",
+               "zamba2-1.2b", "hubert-xlarge"]
+
+
+def _lower(low):
+    jfn = jax.jit(low.fn, in_shardings=low.in_shardings,
+                  out_shardings=low.out_shardings,
+                  donate_argnums=low.donate)
+    return jfn.lower(*low.args).compile()
+
+
+@pytest.mark.parametrize("arch", ARCH_SAMPLE)
+def test_train_lowering_smoke_config(arch):
+    bundle = get_arch(arch)
+    cfg = bundle.smoke
+    mesh = make_host_mesh(1, 1)
+    lcfg = DEFAULT_LIFT.replace(rank=4, density=0.05, min_dim=8,
+                                k_multiple=8)
+    compiled = _lower(build_cell(bundle, cfg, mesh, TINY_TRAIN,
+                                 method="lift", lcfg=lcfg))
+    ca = compiled.cost_analysis()
+    assert ca.get("flops", 0) > 0
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "rwkv6-1.6b",
+                                  "zamba2-1.2b"])
+def test_serve_lowerings_smoke_config(arch):
+    bundle = get_arch(arch)
+    cfg = bundle.smoke
+    mesh = make_host_mesh(1, 1)
+    _lower(build_cell(bundle, cfg, mesh, TINY_PREFILL))
+    _lower(build_cell(bundle, cfg, mesh, TINY_DECODE))
+
+
+def test_refresh_lowering_smoke():
+    bundle = get_arch("qwen3-1.7b")
+    mesh = make_host_mesh(1, 1)
+    lcfg = DEFAULT_LIFT.replace(rank=4, min_dim=8, k_multiple=8,
+                                method="randomized")
+    _lower(build_refresh(bundle, bundle.smoke, mesh, lcfg=lcfg))
+
+
+def test_encoder_prefill_is_logits():
+    bundle = get_arch("hubert-xlarge")
+    mesh = make_host_mesh(1, 1)
+    low = build_cell(bundle, bundle.smoke, mesh, TINY_PREFILL)
+    assert low.meta.get("encoder")
+    _lower(low)
+
+
+def test_shape_table_covers_assignment():
+    assert set(LM_SHAPES) == {"train_4k", "prefill_32k", "decode_32k",
+                              "long_500k"}
+    s = LM_SHAPES["train_4k"]
+    assert (s.seq_len, s.global_batch) == (4096, 256)
+    s = LM_SHAPES["prefill_32k"]
+    assert (s.seq_len, s.global_batch) == (32768, 32)
+    s = LM_SHAPES["decode_32k"]
+    assert (s.seq_len, s.global_batch) == (32768, 128)
+    s = LM_SHAPES["long_500k"]
+    assert (s.seq_len, s.global_batch) == (524288, 1)

@@ -1,0 +1,171 @@
+"""Trainer integration: every tuning method learns, microbatch accumulation
+is exact, LIFT refresh works inside the loop, PEFT merge round-trips."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sparse_adam as sa
+from repro.core.lift import LiftConfig, get_by_path, make_plan
+from repro.core.peft import PeftConfig
+from repro.models import ModelConfig, build_model
+from repro.training import trainer as T
+
+CFG = ModelConfig(family="dense", num_layers=2, d_model=64, num_heads=4,
+                  num_kv_heads=2, head_dim=16, d_ff=128, vocab_size=97)
+ADAM = sa.AdamConfig(lr=1e-3)
+
+
+def _setup(kind, selection="lift"):
+    m = build_model(CFG)
+    params = m.init(jax.random.PRNGKey(0))
+    mcfg = T.MethodConfig(
+        kind=kind,
+        lift=LiftConfig(rank=8, match_rank=2, method="exact",
+                        selection=selection, min_dim=16),
+        peft=PeftConfig(rank=4))
+    params, state = T.init_train_state(m, params, mcfg,
+                                       jax.random.PRNGKey(1))
+    step = jax.jit(T.make_train_step(m, mcfg, ADAM, T.constant_lr(1e-3)))
+    key = jax.random.PRNGKey(2)
+    batch = {"tokens": jax.random.randint(key, (4, 16), 0, 97),
+             "labels": jax.random.randint(key, (4, 16), 0, 97),
+             "loss_mask": jnp.ones((4, 16))}
+    return m, mcfg, params, state, step, batch
+
+
+@pytest.mark.parametrize("kind", ["full", "lift", "sparse", "lora",
+                                  "pissa", "dora"])
+def test_method_reduces_loss(kind):
+    m, mcfg, params, state, step, batch = _setup(kind)
+    losses = []
+    for _ in range(8):
+        params, state, metrics = step(params, state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0], (kind, losses)
+    assert np.isfinite(losses).all()
+
+
+def test_lift_freezes_everything_else():
+    m, mcfg, params0, state, step, batch = _setup("lift")
+    plan = make_plan(m.spec(), mcfg.lift)
+    params, state, _ = step(params0, state, batch)
+    # embeddings and norms untouched
+    for path in ["embed/table", "final_norm/scale", "blocks/ln1/scale"]:
+        a = np.asarray(get_by_path(params0, path))
+        b = np.asarray(get_by_path(params, path))
+        assert np.array_equal(a, b), path
+    # planned tensors changed
+    assert not np.array_equal(
+        np.asarray(get_by_path(params0, "blocks/mlp/up")),
+        np.asarray(get_by_path(params, "blocks/mlp/up")))
+
+
+def test_refresh_mid_training():
+    m, mcfg, params, state, step, batch = _setup("lift")
+    refresh = jax.jit(T.make_refresh_step(m, mcfg))
+    for i in range(4):
+        params, state, metrics = step(params, state, batch)
+    old_idx = {p: np.asarray(state["opt"]["tensors"][p]["idx"])
+               for p in state["opt"]["tensors"]}
+    state = refresh(params, state, jax.random.PRNGKey(7))
+    # training continues fine after migration
+    for i in range(4):
+        params, state, metrics = step(params, state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    # indices refreshed (weights changed -> some movement expected)
+    moved = any(not np.array_equal(old_idx[p],
+                                   np.asarray(state["opt"]["tensors"][p]["idx"]))
+                for p in old_idx)
+    assert moved
+
+
+def test_microbatch_accumulation_exact():
+    m = build_model(CFG)
+    params = m.init(jax.random.PRNGKey(0))
+    mcfg = T.MethodConfig(kind="full")
+    params0, state0 = T.init_train_state(m, params, mcfg,
+                                         jax.random.PRNGKey(1))
+    key = jax.random.PRNGKey(2)
+    batch = {"tokens": jax.random.randint(key, (4, 16), 0, 97),
+             "labels": jax.random.randint(key, (4, 16), 0, 97),
+             "loss_mask": jnp.ones((4, 16))}
+    s1 = jax.jit(T.make_train_step(m, mcfg, ADAM, T.constant_lr(1e-3)))
+    s2 = jax.jit(T.make_train_step(m, mcfg, ADAM, T.constant_lr(1e-3),
+                                   microbatch=2))
+    pa, _, _ = s1(params0, state0, batch)
+    pb, _, _ = s2(params0, state0, batch)
+    err = max(float(jnp.max(jnp.abs(a - b)))
+              for a, b in zip(jax.tree.leaves(pa), jax.tree.leaves(pb)))
+    assert err < 2e-5, err
+
+
+def test_peft_effective_params_differ_from_base():
+    m, mcfg, params, state, step, batch = _setup("lora")
+    params, state, _ = step(params, state, batch)
+    eff = T.effective_params(m, params, state, mcfg)
+    # base params frozen, effective differ through adapters
+    assert not np.array_equal(
+        np.asarray(get_by_path(eff, "blocks/mlp/up")),
+        np.asarray(get_by_path(params, "blocks/mlp/up")))
+
+
+def test_pissa_base_plus_adapter_preserves_function():
+    """PiSSA init: W_res + A0 B0 == W, so the initial model is unchanged."""
+    m = build_model(CFG)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.arange(16, dtype=jnp.int32)[None] % 97,
+             "labels": jnp.zeros((1, 16), jnp.int32),
+             "loss_mask": jnp.ones((1, 16))}
+    l0 = float(m.loss(params, batch)[0])
+    mcfg = T.MethodConfig(kind="pissa", peft=PeftConfig(rank=16),
+                          lift=LiftConfig(min_dim=16))
+    base, state = T.init_train_state(m, params, mcfg, jax.random.PRNGKey(1))
+    eff = T.effective_params(m, base, state, mcfg)
+    l1 = float(m.loss(eff, batch)[0])
+    assert abs(l0 - l1) < 5e-3, (l0, l1)
+
+
+def test_lift_train_other_updates_norms():
+    m = build_model(CFG)
+    params0 = m.init(jax.random.PRNGKey(0))
+    mcfg = T.MethodConfig(kind="lift", lift=LiftConfig(
+        rank=8, match_rank=2, method="exact", min_dim=16, train_other=True))
+    params, state = T.init_train_state(m, params0, mcfg,
+                                       jax.random.PRNGKey(1))
+    step = jax.jit(T.make_train_step(m, mcfg, ADAM, T.constant_lr(1e-3)))
+    key = jax.random.PRNGKey(2)
+    batch = {"tokens": jax.random.randint(key, (4, 16), 0, 97),
+             "labels": jax.random.randint(key, (4, 16), 0, 97),
+             "loss_mask": jnp.ones((4, 16))}
+    params, state, metrics = step(params, state, batch)
+    # norms now train (dense), embeddings still frozen
+    assert not np.array_equal(
+        np.asarray(get_by_path(params0, "final_norm/scale")),
+        np.asarray(get_by_path(params, "final_norm/scale")))
+    assert np.array_equal(np.asarray(get_by_path(params0, "embed/table")),
+                          np.asarray(get_by_path(params, "embed/table")))
+
+
+def test_moe_grouped_dispatch_matches_ungrouped():
+    """G>1 grouped dispatch == G=1 when capacity is non-binding."""
+    base = dict(num_layers=1, d_model=32, num_heads=4, num_kv_heads=2,
+                head_dim=8, d_ff=48, vocab_size=97, num_experts=4,
+                num_experts_per_tok=2, capacity_factor=8.0)
+    m1 = build_model(ModelConfig(family="moe", moe_groups=1, **base))
+    m4 = build_model(ModelConfig(family="moe", moe_groups=4, **base))
+    params = m1.init(jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(3)
+    batch = {"tokens": jax.random.randint(key, (4, 16), 0, 97),
+             "labels": jax.random.randint(key, (4, 16), 0, 97),
+             "loss_mask": jnp.ones((4, 16))}
+    l1 = float(m1.loss(params, batch)[0])
+    l4 = float(m4.loss(params, batch)[0])
+    assert abs(l1 - l4) < 1e-5, (l1, l4)
+
+
+def test_schedules():
+    sched = T.warmup_linear(100, warmup_ratio=0.1, peak=1e-3)
+    assert float(sched(jnp.asarray(0))) < 2e-4
+    assert float(sched(jnp.asarray(10))) == pytest.approx(1e-3, rel=1e-3)
+    assert float(sched(jnp.asarray(99))) < 2e-4
