@@ -80,15 +80,17 @@ def train_method(cfg: ModelConfig, method: T.MethodConfig, *,
         b0 = {k: jnp.asarray(v) for k, v in loader.next_batch().items()}
         sample_grads = jax.grad(lambda p: model.loss(p, b0)[0])(params0)
 
+    engine = T.selection_engine(model, method)  # ONE engine: init+refresh
     params, state = T.init_train_state(model, params0, method,
                                        jax.random.PRNGKey(seed + 1),
-                                       sample_grads=sample_grads)
+                                       sample_grads=sample_grads,
+                                       engine=engine)
     step_fn = jax.jit(T.make_train_step(model, method,
                                         sa.AdamConfig(lr=lr),
                                         T.constant_lr(lr)))
     refresh = None
     if method.kind in ("lift", "sparse") and refresh_every:
-        refresh = jax.jit(T.make_refresh_step(model, method))
+        refresh = T.make_refresh_step(model, method, engine=engine)
 
     t0 = time.perf_counter()
     losses = []

@@ -44,12 +44,13 @@ def run(size: str, method_kind: str, steps: int, batch: int, seq: int,
         rank=16, density=0.05, method="randomized", min_dim=16,
         update_interval=50))
     params = model.init(jax.random.PRNGKey(0))
+    engine = T.selection_engine(model, method)  # shared: init + refresh
     params, state = T.init_train_state(model, params, method,
-                                       jax.random.PRNGKey(1))
+                                       jax.random.PRNGKey(1), engine=engine)
     step_fn = jax.jit(T.make_train_step(
         model, method, sa.AdamConfig(lr=lr),
         T.warmup_linear(steps, 0.03, lr)))
-    refresh = jax.jit(T.make_refresh_step(model, method)) \
+    refresh = T.make_refresh_step(model, method, engine=engine) \
         if method_kind == "lift" else None
 
     loader = ShardedLoader(generate("arith", 4096, seq, seed=0),

@@ -30,11 +30,12 @@ method = T.MethodConfig(kind="lift", lift=LiftConfig(
 
 params = model.init(jax.random.PRNGKey(0))
 params0 = params
+engine = T.selection_engine(model, method)  # shared: init + every refresh
 params, state = T.init_train_state(model, params, method,
-                                   jax.random.PRNGKey(1))
+                                   jax.random.PRNGKey(1), engine=engine)
 step = jax.jit(T.make_train_step(model, method, sa.AdamConfig(lr=2e-3),
                                  T.constant_lr(2e-3)))
-refresh = jax.jit(T.make_refresh_step(model, method))
+refresh = T.make_refresh_step(model, method, engine=engine)
 
 loader = ShardedLoader(generate("arith", 512, 40, seed=0), batch_size=16)
 for i in range(50):

@@ -170,3 +170,12 @@ class CheckpointManager:
         path = os.path.join(self.dir, f"step_{step:08d}", "manifest.json")
         with open(path) as f:
             return json.load(f)["meta"]
+
+    def restore_selection(self, step: int) -> Optional[dict]:
+        """The SelectionEngine plan fingerprint stored with this step
+        (`meta["selection"]`, see SelectionEngine.plan_meta), or None for
+        checkpoints written before the engine existed / by non-LIFT runs.
+        Callers pass it to `SelectionEngine.validate_meta` so a resumed run
+        proves the restored (ns, k) optimizer state matches its current
+        selection geometry before training on it."""
+        return self.restore_meta(step).get("selection")

@@ -42,7 +42,9 @@ class LiftConfig:
     block_size: int = 1           # App. G.7 structured LIFT (e.g. 4)
     oversample: int = 8
     power_iters: int = 2
-    use_kernel: bool = False      # Pallas fused mask kernel (kernels/)
+    use_kernel: bool = False      # Pallas streaming selection (kernels/)
+    compact_factor: int = 8       # compaction-kernel slot budget, x the
+                                  # uniform per-tile share of k
     k_multiple: int = 8           # k rounded up (1024 in production so the
                                   # (ns, k) state shards evenly over the mesh)
 
@@ -105,7 +107,14 @@ def make_plan(spec_tree, cfg: LiftConfig) -> dict[str, TensorPlan]:
         k = -(-k // mult) * mult
         k = int(min(max(k, 1), rows * cols))
         if cfg.block_size > 1:
-            bs2 = cfg.block_size ** 2
+            bs = cfg.block_size
+            if rows % bs != 0 or cols % bs != 0:
+                raise ValueError(
+                    f"structured LIFT block_size={bs} does not tile tensor "
+                    f"{ps!r}: matrix geometry is rows={rows}, cols={cols} "
+                    f"(both must be divisible by block_size) — adjust "
+                    f"block_size or exclude the tensor via min_dim/scope")
+            bs2 = bs ** 2
             k = max(bs2, (k // bs2) * bs2)
         plan[ps] = TensorPlan(ps, tuple(shape), tuple(shape[:n_stack]),
                               rows, cols, k)
@@ -212,28 +221,14 @@ def compute_indices(params, plan: dict[str, TensorPlan], cfg: LiftConfig,
                     key: jax.Array, grads=None) -> dict[str, jax.Array]:
     """Principal-Weight indices for every planned tensor.
 
+    Thin wrapper over `core.selection.SelectionEngine` (the single mask
+    pipeline: geometry-grouped batching, and with `cfg.use_kernel` the
+    streaming threshold+compaction path that never materializes the
+    (rows, cols) score matrix).  Callers holding the engine should use it
+    directly — this constructs a fresh one per call.
+
     Returns {path: (n_stack, k) int32} (flat indices into rows*cols,
     sorted ascending per matrix).
     """
-    out = {}
-    paths = sorted(plan.keys())
-    keys = jax.random.split(key, len(paths))
-    for kk, path in zip(keys, paths):
-        p = plan[path]
-        w = _leaf_matrices(get_by_path(params, path), p)
-        g = None
-        if grads is not None:
-            g = _leaf_matrices(get_by_path(grads, path), p)
-        ns = w.shape[0]
-        subkeys = jax.random.split(kk, ns)
-
-        def one(w2d, key1, g2d=None):
-            s = scores_for(w2d, cfg, cfg.selection, key1, g2d)
-            return topk_indices(s, p.k, cfg.block_size)
-
-        if g is None:
-            idx = jax.vmap(lambda a, b: one(a, b))(w, subkeys)
-        else:
-            idx = jax.vmap(lambda a, b, c: one(a, b, c))(w, subkeys, g)
-        out[path] = idx.astype(jnp.int32)
-    return out
+    from repro.core.selection import SelectionEngine
+    return SelectionEngine(plan, cfg).select(params, key, grads)

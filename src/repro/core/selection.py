@@ -1,0 +1,216 @@
+"""Streaming Principal-Weight SelectionEngine (DESIGN.md §3).
+
+The single mask-selection path for the whole codebase.  Everything that
+needs Principal-Weight indices — trainer init, periodic mask refresh,
+checkpoint round-trips, benchmarks — goes through one engine so the
+low-rank factorization, score statistics, index extraction and
+optimizer-state migration are fused into ONE jitted program per use
+(init-select / refresh) instead of a per-tensor Python dispatch loop.
+
+Pipeline per eligible tensor (paper §3.2, Algorithm 1):
+
+    W --(lowrank_factors)--> (A, B) --> score |A B^T| --> top-k indices
+
+with two interchangeable backends for the score->indices step:
+
+  * "dense"     — materialize the (rows, cols) score matrix, `lax.top_k`
+                  (the paper's literal method; exact, memory-heavy);
+  * "streaming" — Pallas histogram threshold search (`lift_threshold`)
+                  followed by the blockwise compaction kernel
+                  (`lift_indices`): W' and the score matrix never touch
+                  HBM, every intermediate is O(k) or O(tiles).
+
+Backend choice is `LiftConfig.use_kernel` — streaming requires the "lift"
+selection rule and unstructured masks (block_size == 1); anything else
+falls back to dense inside the same engine program.
+
+Batching: tensors are grouped by (rows, cols, k) geometry; each group is
+stacked into one (ns_total, rows, cols) batch so the factorization vmaps
+across layers/experts/paths and the selection kernel runs under one
+`lax.map` — one XLA program for the whole plan, not N dispatches.
+
+Per-matrix PRNG keys are derived exactly as the historical
+`compute_indices` did (split over sorted paths, then over the stack), so
+dense-backend results are bit-identical to the pre-engine code.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lift as liftmod
+from repro.core import lowrank
+from repro.core.lift import (LiftConfig, TensorPlan, get_by_path, make_plan,
+                             _leaf_matrices)
+
+PLAN_META_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupSpec:
+    """Tensors sharing (rows, cols, k) — selected as one stacked batch."""
+    rows: int
+    cols: int
+    k: int
+    paths: tuple          # sorted-path order
+    stacks: tuple         # matrices per path (prod of stack dims)
+
+
+def _num_stack(plan: TensorPlan) -> int:
+    return int(np.prod(plan.stack)) if plan.stack else 1
+
+
+class SelectionEngine:
+    """Batched, kernel-backed Principal-Weight selection over a plan."""
+
+    def __init__(self, plan: dict[str, TensorPlan], cfg: LiftConfig):
+        self.cfg = cfg
+        self.plan = dict(plan)
+        self.paths = sorted(plan)
+        self.backend = ("streaming"
+                        if (cfg.use_kernel and cfg.selection == "lift"
+                            and cfg.block_size == 1)
+                        else "dense")
+        groups: dict[tuple, list] = {}
+        for path in self.paths:
+            p = self.plan[path]
+            groups.setdefault((p.rows, p.cols, p.k), []).append(path)
+        self.groups = tuple(
+            GroupSpec(rows=r, cols=c, k=k, paths=tuple(ps),
+                      stacks=tuple(_num_stack(self.plan[q]) for q in ps))
+            for (r, c, k), ps in groups.items())
+        # jitted lazily at first call so tests can patch the score path
+        # before tracing; one program per entry point.
+        self._select_jit = jax.jit(self._select_impl)
+        self._refresh_jit = jax.jit(self._refresh_impl)
+
+    @classmethod
+    def from_spec(cls, spec_tree, cfg: LiftConfig) -> "SelectionEngine":
+        return cls(make_plan(spec_tree, cfg), cfg)
+
+    # ----------------------------------------------------------- selection
+    def select(self, params, key, grads=None) -> dict[str, jax.Array]:
+        """{path: (n_stack, k) int32} — flat indices, sorted per matrix."""
+        return self.select_with_stats(params, key, grads)[0]
+
+    def select_with_stats(self, params, key, grads=None):
+        """(indices, stats) where stats = {"overflow": i32 scalar} counts
+        candidate entries dropped by compaction-capacity overflow (always 0
+        on the dense backend; investigate `compact_factor` if nonzero)."""
+        return self._select_jit(params, key, grads)
+
+    def refresh_opt(self, params, opt_state, key):
+        """Fused mask refresh: select new indices AND migrate the sparse
+        optimizer state (Algorithm 1 lines 5-12) in one jitted program.
+        `params` may be the planned subtree or the full tree."""
+        return self._refresh_jit(params, opt_state, key)
+
+    # ------------------------------------------------------ jitted bodies
+    def _select_impl(self, params, key, grads):
+        keys = dict(zip(self.paths, jax.random.split(key, len(self.paths))))
+        out: dict[str, jax.Array] = {}
+        overflow = jnp.zeros((), jnp.int32)
+        for g in self.groups:
+            ws, gs, ks = [], [], []
+            for path in g.paths:
+                p = self.plan[path]
+                ws.append(_leaf_matrices(get_by_path(params, path), p))
+                ks.append(jax.random.split(keys[path], _num_stack(p)))
+                if grads is not None:
+                    gs.append(_leaf_matrices(get_by_path(grads, path), p))
+            w = jnp.concatenate(ws) if len(ws) > 1 else ws[0]
+            kk = jnp.concatenate(ks) if len(ks) > 1 else ks[0]
+            gg = None
+            if grads is not None:
+                gg = jnp.concatenate(gs) if len(gs) > 1 else gs[0]
+            if self.backend == "streaming":
+                idx, ovf = self._stream_group(w, kk, g)
+                overflow = overflow + jnp.sum(ovf)
+            else:
+                idx = self._dense_group(w, kk, gg, g)
+            off = 0
+            for path, ns in zip(g.paths, g.stacks):
+                out[path] = idx[off:off + ns].astype(jnp.int32)
+                off += ns
+        return out, {"overflow": overflow}
+
+    def _stream_group(self, w, kk, g: GroupSpec):
+        """Streaming selection for one (ns, rows, cols) stacked batch:
+        factorize (vmapped), then threshold + compaction kernels under one
+        lax.map — no (rows, cols) score intermediate anywhere."""
+        cfg = self.cfg
+        a, b = jax.vmap(
+            lambda w2d, k1: lowrank.lowrank_factors(
+                w2d, cfg.rank, method=cfg.method, strategy=cfg.strategy,
+                key=k1, oversample=cfg.oversample, iters=cfg.power_iters)
+        )(w, kk)
+        from repro.kernels import ops as kops
+        bm, bn = kops.pick_block(g.rows), kops.pick_block(g.cols)
+        capacity = kops.compact_capacity(g.rows, g.cols, g.k, bm, bn,
+                                         cfg.compact_factor)
+
+        def one(ab):
+            idx, _tau, ovf = kops.lift_indices(
+                ab[0], ab[1], g.k, capacity=capacity, bm=bm, bn=bn)
+            return idx, ovf
+
+        return jax.lax.map(one, (a, b))
+
+    def _dense_group(self, w, kk, gg, g: GroupSpec):
+        cfg = self.cfg
+
+        def one(w2d, key1, g2d=None):
+            s = liftmod.scores_for(w2d, cfg, cfg.selection, key1, g2d)
+            return liftmod.topk_indices(s, g.k, cfg.block_size)
+
+        if gg is None:
+            return jax.vmap(lambda a, b: one(a, b))(w, kk)
+        return jax.vmap(lambda a, b, c: one(a, b, c))(w, kk, gg)
+
+    def _refresh_impl(self, params, opt_state, key):
+        from repro.core import sparse_adam as sa
+        idx, stats = self._select_impl(params, key, None)
+        return sa.migrate(params, opt_state, idx, self.plan), stats
+
+    # ------------------------------------------------- checkpoint metadata
+    def plan_meta(self) -> dict:
+        """JSON-able plan fingerprint stored alongside checkpoints so a
+        resumed run can prove its selection geometry matches the (ns, k)
+        optimizer state on disk before restoring it."""
+        return {
+            "version": PLAN_META_VERSION,
+            "backend": self.backend,
+            "selection": self.cfg.selection,
+            "block_size": self.cfg.block_size,
+            "tensors": {
+                path: {"shape": list(p.shape), "stack": list(p.stack),
+                       "rows": p.rows, "cols": p.cols, "k": p.k}
+                for path, p in self.plan.items()},
+        }
+
+    def validate_meta(self, meta: Optional[dict]) -> None:
+        """Raise ValueError if a checkpoint's selection metadata is
+        incompatible with this engine's plan (geometry or k mismatch —
+        e.g. the density/rank flags changed between runs)."""
+        if not meta:
+            return
+        saved = meta.get("tensors", {})
+        missing = sorted(set(saved) ^ set(self.plan))
+        if missing:
+            raise ValueError(
+                f"checkpoint selection plan covers different tensors than "
+                f"the current config (first mismatch: {missing[0]!r})")
+        for path, p in self.plan.items():
+            s = saved[path]
+            got = (list(p.shape), p.rows, p.cols, p.k)
+            want = (list(s["shape"]), s["rows"], s["cols"], s["k"])
+            if got != want:
+                raise ValueError(
+                    f"checkpoint selection geometry mismatch for {path!r}: "
+                    f"saved shape/rows/cols/k {want} vs current {got} — "
+                    f"restart with the original density/rank/block flags "
+                    f"or discard the checkpoint")

@@ -129,21 +129,33 @@ def apply_updates(params, grads, state, plan: dict[str, TensorPlan],
     return new_params, {"step": step, "tensors": new_tensors}
 
 
+def remap_moments(old_idx: jax.Array, new_idx: jax.Array,
+                  *moments: jax.Array):
+    """Project (ns, k) moment vectors from `old_idx` onto `new_idx`
+    (both sorted ascending per matrix): entries whose index survives the
+    mask refresh keep their value, fresh entries restart at zero.
+    The searchsorted probe is O(k log k) — never O(rows*cols)."""
+    k = old_idx.shape[-1]
+    pos = jax.vmap(jnp.searchsorted)(old_idx, new_idx)
+    pos_c = jnp.clip(pos, 0, k - 1)
+    hit = jnp.take_along_axis(old_idx, pos_c, axis=1) == new_idx
+    return tuple(
+        jnp.where(hit, jnp.take_along_axis(mom, pos_c, axis=1), 0.0)
+        for mom in moments)
+
+
 def migrate(params, state, new_indices: dict[str, jax.Array],
             plan: dict[str, TensorPlan]):
-    """Mask refresh (Algorithm 1 lines 5–12): remap m/v onto the new mask."""
+    """Mask refresh (Algorithm 1 lines 5–12): remap m/v onto the new mask.
+
+    `new_indices` is SelectionEngine output ({path: (ns, k) int32, sorted
+    ascending per matrix} — `compute_indices` has the same contract)."""
     new_tensors = {}
     for path, p in plan.items():
         entry = state["tensors"][path]
         old_idx, new_idx = entry["idx"], new_indices[path]
-        k = old_idx.shape[-1]
-        pos = jax.vmap(jnp.searchsorted)(old_idx, new_idx)
-        pos_c = jnp.clip(pos, 0, k - 1)
-        hit = jnp.take_along_axis(old_idx, pos_c, axis=1) == new_idx
-        new_m = jnp.where(hit, jnp.take_along_axis(entry["m"], pos_c, axis=1),
-                          0.0)
-        new_v = jnp.where(hit, jnp.take_along_axis(entry["v"], pos_c, axis=1),
-                          0.0)
+        new_m, new_v = remap_moments(old_idx, new_idx,
+                                     entry["m"], entry["v"])
         new_entry = {"idx": new_idx, "m": new_m, "v": new_v}
         if "master" in entry:
             w = _stacked_flat(get_by_path(params, path), p)

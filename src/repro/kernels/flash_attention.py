@@ -47,10 +47,12 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, *, q_blk: int, kv_blk: int,
 
     def body(kj, carry):
         m, l, acc = carry
-        k = pl.load(k_ref, (0, pl.dslice(kj * kv_blk, kv_blk),
-                            slice(None))).astype(jnp.float32)
-        v = pl.load(v_ref, (0, pl.dslice(kj * kv_blk, kv_blk),
-                            slice(None))).astype(jnp.float32)
+        # pl.dslice(0, 1) + [0] rather than a bare int index: integer
+        # entries in a pl.load index tuple break on some jax releases
+        k = pl.load(k_ref, (pl.dslice(0, 1), pl.dslice(kj * kv_blk, kv_blk),
+                            slice(None)))[0].astype(jnp.float32)
+        v = pl.load(v_ref, (pl.dslice(0, 1), pl.dslice(kj * kv_blk, kv_blk),
+                            slice(None)))[0].astype(jnp.float32)
         s = q @ k.T                                   # (q_blk, kv_blk)
         if causal:
             qpos = qi * q_blk + jax.lax.broadcasted_iota(

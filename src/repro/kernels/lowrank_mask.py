@@ -6,11 +6,25 @@ m*n fp32 round-trip per refresh (0.97 GB for qwen2-72b's down-proj).  This
 kernel computes each (bm x bn) tile of W' in VMEM straight off the MXU and
 immediately reduces it to the requested statistic — W' never leaves VMEM:
 
-  * mode "abs"    -> |W'| tile (materializing variant, for tests/fallback)
-  * mode "count"  -> per-tile count of |W'| > tau        (threshold search)
-  * mode "hist"   -> per-tile histogram of |W'| on [lo,hi) (2-pass search)
-  * mode "absmax" -> per-tile max |W'|                    (range finding)
-  * mode "mask"   -> bool tile of |W'| > tau              (final mask)
+  * mode "abs"     -> |W'| tile (materializing variant, for tests/fallback)
+  * mode "count"   -> per-tile count of |W'| > tau        (threshold search)
+  * mode "hist"    -> per-tile histogram of |W'| on [lo,hi) (2-pass search)
+  * mode "absmax"  -> per-tile max |W'|                    (range finding)
+  * mode "mask"    -> bool tile of |W'| > tau              (final mask)
+  * mode "compact" -> per-tile compacted flat indices of |W'| > tau
+                      (streaming index extraction; see below)
+
+"compact" is the selection-engine fast path: each tile emits the GLOBAL
+flat indices (row-major into the full (m, n) matrix) of its above-threshold
+entries, ascending, left-packed into a fixed `capacity`-slot buffer and
+sentinel-padded (INT32_MAX), plus the tile's true count.  The caller
+concatenates all tile buffers and sorts once — O(tiles * capacity), sized
+by k, never by m*n — so neither W' nor a full score/mask matrix is ever
+written to HBM.  Counts above `capacity` mean dropped entries; callers
+surface sum(max(count - capacity, 0)) as an overflow diagnostic.
+Compaction is scatter-free (TPU has no VPU scatter): per row of the tile,
+a cumsum assigns output slots and a (bn x capacity) one-hot reduction
+deposits the indices, fori_loop-carried across rows.
 
 Grid is (m/bm, n/bn); A tiles are revisited along j (read m*r*gn values
 total — negligible vs m*n).  MXU work per tile is a (bm, r) x (r, bn)
@@ -63,6 +77,36 @@ def _tile_kernel_hist(lohi_ref, a_ref, b_ref, out_ref, *, nbins: int):
     out_ref[0, :] = jnp.sum(onehot, axis=0)
 
 
+INT32_SENTINEL = 2 ** 31 - 1
+
+
+def _tile_kernel_compact(tau_ref, a_ref, b_ref, idx_ref, cnt_ref, *,
+                         capacity: int, n_cols: int, bm: int, bn: int):
+    i, j = pl.program_id(0), pl.program_id(1)
+    w = jnp.dot(a_ref[...], b_ref[...].T,
+                preferred_element_type=jnp.float32)
+    hit = jnp.abs(w) > tau_ref[0, 0]                       # (bm, bn)
+    row0 = i * bm
+    col_ids = j * bn + jax.lax.broadcasted_iota(jnp.int32, (1, bn), 1)
+    slots = jax.lax.broadcasted_iota(jnp.int32, (1, capacity), 1)
+    idx_ref[0, :] = jnp.zeros((capacity,), jnp.int32)
+
+    def body(r, filled):
+        h = hit[r, :]                                      # (bn,) bool
+        h32 = h.astype(jnp.int32)
+        pos = filled + jnp.cumsum(h32) - h32               # output slot/hit
+        gidx = (row0 + r) * n_cols + col_ids[0]            # (bn,) int32
+        onehot = (pos[:, None] == slots) & h[:, None]      # (bn, capacity)
+        idx_ref[0, :] += jnp.sum(
+            jnp.where(onehot, gidx[:, None], 0), axis=0).astype(jnp.int32)
+        return filled + jnp.sum(h32)
+
+    cnt = jax.lax.fori_loop(0, bm, body, jnp.int32(0))
+    cnt_ref[0, 0] = cnt
+    idx_ref[0, :] = jnp.where(slots[0] < jnp.minimum(cnt, capacity),
+                              idx_ref[0, :], INT32_SENTINEL)
+
+
 def _grid(m, n, bm, bn):
     assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
     return m // bm, n // bn
@@ -70,13 +114,15 @@ def _grid(m, n, bm, bn):
 
 def lowrank_stat(a: jax.Array, b: jax.Array, mode: str, *,
                  tau=None, lo=None, hi=None, nbins: int = 256,
+                 capacity: int = 1024,
                  bm: int = 256, bn: int = 256,
                  interpret: bool = True):
     """Dispatch one fused pass over the implicit W' = A B^T.
 
     Returns: abs -> (m, n) f32;  mask -> (m, n) bool;
              count -> (gm, gn) i32;  absmax -> (gm, gn) f32;
-             hist -> (gm*gn, nbins) i32 (sum over axis 0 for the total).
+             hist -> (gm*gn, nbins) i32 (sum over axis 0 for the total);
+             compact -> ((gm*gn, capacity) i32 indices, (gm, gn) i32 counts).
     """
     m, r = a.shape
     n, _ = b.shape
@@ -118,6 +164,20 @@ def lowrank_stat(a: jax.Array, b: jax.Array, mode: str, *,
             out_specs=pl.BlockSpec((1, 1), lambda i, j: (i, j)),
             out_shape=jax.ShapeDtypeStruct((gm, gn), jnp.float32),
             **common)(a, b)
+    if mode == "compact":
+        tau_arr = jnp.asarray(tau, jnp.float32).reshape(1, 1)
+        capacity = int(min(capacity, bm * bn))
+        return pl.pallas_call(
+            functools.partial(_tile_kernel_compact, capacity=capacity,
+                              n_cols=n, bm=bm, bn=bn),
+            in_specs=[pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+                      a_spec, b_spec],
+            out_specs=(pl.BlockSpec((1, capacity),
+                                    lambda i, j: (i * gn + j, 0)),
+                       pl.BlockSpec((1, 1), lambda i, j: (i, j))),
+            out_shape=(jax.ShapeDtypeStruct((gm * gn, capacity), jnp.int32),
+                       jax.ShapeDtypeStruct((gm, gn), jnp.int32)),
+            **common)(tau_arr, a, b)
     if mode == "hist":
         lohi = jnp.asarray([lo, hi], jnp.float32).reshape(1, 2)
         return pl.pallas_call(

@@ -65,6 +65,14 @@ def lift_threshold(a, b, k: int, passes: int = 2, nbins: int = 512,
 
     Multi-pass histogram refinement: W' never materializes in HBM.
     """
+    return _lift_threshold_lohi(a, b, k, passes, nbins, bm, bn, interpret)[0]
+
+
+def _lift_threshold_lohi(a, b, k: int, passes: int = 2, nbins: int = 512,
+                         bm: int = 256, bn: int = 256,
+                         interpret: Optional[bool] = None):
+    """(lo, hi) of the final histogram bin: count(>= lo) >= k > count(>= hi)
+    up to histogram-binning float rounding (one bin width)."""
     interpret = _default_interpret() if interpret is None else interpret
     lo = jnp.float32(0.0)
     hi = lowrank_absmax(a, b, bm, bn, interpret) * (1 + 1e-6)
@@ -79,7 +87,7 @@ def lift_threshold(a, b, k: int, passes: int = 2, nbins: int = 512,
         new_lo = lo + j * width
         new_hi = new_lo + width
         lo, hi = new_lo, new_hi
-    return lo
+    return lo, hi
 
 
 @functools.partial(jax.jit,
@@ -94,6 +102,114 @@ def lift_mask(a, b, k: int, passes: int = 2, nbins: int = 512,
     mask = lrm.lowrank_stat(a, b, "mask", tau=tau, bm=bm, bn=bn,
                             interpret=interpret)
     return mask, tau
+
+
+def pick_block(dim: int, target: int = 256) -> int:
+    """Largest divisor of `dim` in [16, target] (the Pallas grid needs
+    exact tiling).  Model matrix dims are overwhelmingly
+    power-of-two-ish, so this lands on `target` or close; a dim with no
+    usable divisor (prime / awkward odd) gets one full-dim tile rather
+    than a degenerate per-element grid."""
+    if dim <= target:
+        return dim
+    for c in range(target, 15, -1):
+        if dim % c == 0:
+            return c
+    return dim
+
+
+def compact_capacity(m: int, n: int, k: int, bm: int, bn: int,
+                     factor: int = 8) -> int:
+    """Per-tile slot budget for the compaction kernel.
+
+    `factor` x the uniform per-tile share of k, rounded up to a lane
+    multiple (128) and clamped to the tile size — so tiles*capacity >= k
+    always holds and the candidate buffer stays O(k), never O(m*n)."""
+    bm, bn = min(bm, m), min(bn, n)
+    tiles = (m // bm) * (n // bn)
+    per_tile = -(-k // max(tiles, 1))
+    cap = -(-(factor * per_tile) // 128) * 128
+    return int(max(128, min(cap, bm * bn)))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("capacity", "bm", "bn", "interpret"))
+def lowrank_compact(a, b, tau, capacity: int = 1024,
+                    bm: int = 256, bn: int = 256,
+                    interpret: Optional[bool] = None):
+    """Per-tile compacted flat indices of |A B^T| > tau (+ per-tile counts)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return lrm.lowrank_stat(a, b, "compact", tau=tau, capacity=capacity,
+                            bm=bm, bn=bn, interpret=interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "passes", "nbins", "capacity",
+                                    "bm", "bn", "interpret"))
+def lift_indices(a, b, k: int, passes: int = 3, nbins: int = 512,
+                 capacity: int = 0, bm: int = 256, bn: int = 256,
+                 interpret: Optional[bool] = None):
+    """Streaming Principal-Weight selection: exactly-k sorted flat indices
+    of the top-|A B^T| entries, without ever materializing the (m, n)
+    score matrix (the SelectionEngine fast path).
+
+    Three fused stages, all O(k)-sized outputs:
+      1. `lift_threshold` — multi-pass histogram search for tau with
+         count(|W'| > tau) in [k, k + final-bin ties);
+      2. "compact" kernel — per-tile above-tau indices, left-packed into
+         `capacity` slots (0 -> heuristic via `compact_capacity`);
+      3. one sort over the tiles*capacity candidate buffer; sentinel
+         padding sinks to the end, truncate to k.
+
+    Ties inside the final histogram bin are broken by LOWEST flat index
+    (dense `top_k` breaks by highest score then lowest index), so parity
+    with the dense path is exact except among final-bin ties — tighten
+    with more `passes`/`nbins`.
+
+    Returns (idx (k,) int32 sorted ascending, tau f32, overflow i32) where
+    overflow counts entries dropped by tiles whose above-tau population
+    exceeded `capacity` (0 in healthy runs; raise `capacity` if not).
+    Whenever fewer than k real candidates exist — capacity overflow, or
+    the degenerate case count(>tau) < k (k larger than the number of
+    nonzero scores) — the tail pads with slot positions [0, k), which are
+    in-range but may duplicate selected indices; treat a nonzero overflow
+    as a degraded mask, not a cosmetic stat.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    m, n = a.shape[0], b.shape[0]
+    if m % min(bm, m) or n % min(bn, n):
+        bm, bn = pick_block(m, bm), pick_block(n, bn)
+    if capacity <= 0:
+        capacity = compact_capacity(m, n, k, bm, bn)
+    tiles_total = (m // min(bm, m)) * (n // min(bn, n))
+    if tiles_total * capacity < k:
+        raise ValueError(
+            f"compaction candidate buffer {tiles_total}x{capacity} < k={k}")
+    lo, hi = _lift_threshold_lohi(a, b, k, passes, nbins, bm, bn, interpret)
+    # back off one final-bin width: the histogram counts bin membership
+    # (>= lo) while the compact kernel compares strictly (> tau), and the
+    # bin-id rounding can disagree with the direct comparison by a few ulps
+    # — a full bin below lo re-covers every counted entry, adding only
+    # final-bin ties that the sort+truncate drops again.  The bin width can
+    # underflow to 0 in f32 once the passes exhaust the mantissa, so floor
+    # the backoff at ~8 ulp of lo.
+    width = jnp.maximum(hi - lo, jnp.abs(lo) * 1e-6)
+    tau = jnp.maximum(lo - width, 0.0)
+    tiles, counts = lowrank_compact(a, b, tau, capacity, bm, bn, interpret)
+    cand = jnp.sort(tiles.reshape(-1))
+    # `stored`, not sum(counts): a tile whose above-tau population exceeds
+    # capacity DROPS the excess, so the sorted buffer holds only
+    # min(count, capacity) real entries per tile — guarding with the raw
+    # total would hand sentinel padding out as selected indices.
+    stored = jnp.sum(jnp.minimum(counts, capacity))
+    slot = jnp.arange(k, dtype=jnp.int32)
+    idx = jnp.where(slot < stored, cand[:k], slot)
+    # re-sort: pad slots sort below real candidates, and downstream
+    # consumers (moment remap, near-sequential scatter) require ascending
+    # order; duplicates remain possible in the degraded case only.
+    idx = jnp.sort(idx)
+    overflow = jnp.sum(jnp.maximum(counts - capacity, 0))
+    return idx.astype(jnp.int32), tau, overflow
 
 
 # ----------------------------------------------------------- sparse adam

@@ -32,6 +32,17 @@ def lowrank_absmax(a, b) -> jax.Array:
     return jnp.max(lowrank_abs(a, b))
 
 
+def threshold_indices(a, b, tau, k: int) -> jax.Array:
+    """Flat indices of the k smallest-index entries with |A B^T| > tau,
+    sorted ascending, padded with slot positions when fewer than k exist —
+    the oracle for the streaming compact path (`ops.lift_indices`)."""
+    s = lowrank_abs(a, b).reshape(-1)
+    cand = jnp.sort(jnp.where(s > tau, jnp.arange(s.size, dtype=jnp.int32),
+                              jnp.int32(2 ** 31 - 1)))
+    slot = jnp.arange(k, dtype=jnp.int32)
+    return jnp.where(slot < jnp.sum(s > tau), cand[:k], slot)
+
+
 # ------------------------------------------------------------- sparse_adam
 def sparse_adam(p, g, idx, m, v, *, lr, b1, b2, eps, wd, step):
     """Reference sparse AdamW on flat vectors.

@@ -106,7 +106,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, method: str,
     import jax
     from repro.configs import LM_SHAPES, get_arch
     from repro.launch import hlo as hlomod
-    from repro.launch.lowering import build_cell
+    from repro.launch.lowering import build_cell, cost_analysis_dict
     from repro.launch.mesh import make_production_mesh
 
     bundle = get_arch(arch)
@@ -154,7 +154,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, method: str,
     out["per_device_input_bytes"] = per_arg
     out["per_device_input_gib"] = round(sum(per_arg.values()) / 2**30, 3)
 
-    ca_full = compiled.cost_analysis() or {}
+    ca_full = cost_analysis_dict(compiled)
     out["cost_full_scanned"] = {
         "flops": float(ca_full.get("flops", -1)),
         "bytes": float(ca_full.get("bytes accessed", -1)),
@@ -175,7 +175,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, method: str,
                            out_shardings=low2.out_shardings,
                            donate_argnums=low2.donate)
             comp2 = jfn2.lower(*low2.args).compile()
-            ca = comp2.cost_analysis() or {}
+            ca = cost_analysis_dict(comp2)
             colls = hlomod.analyze_collectives(comp2.as_text(), n_dev)
             costs[depth] = {
                 "flops": float(ca.get("flops", 0)),

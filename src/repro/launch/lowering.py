@@ -28,6 +28,15 @@ I32 = jnp.int32
 F32 = jnp.float32
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """`Compiled.cost_analysis()` returns a dict on recent jax but a
+    one-dict-per-device list on older releases — normalize to a dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
 def safe_shardings(sds_tree, sharding_tree, mesh):
     """jit in_shardings require every sharded dim to divide evenly; null out
     the axes that don't (e.g. hubert's 504-way vocab head, batch=1 decode).

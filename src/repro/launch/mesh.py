@@ -13,20 +13,26 @@ The "pod" axis is outer data parallelism — batch shards over
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5 names explicit/auto axis types; older releases have none
+    from jax.sharding import AxisType
+
+    def _axis_types(n: int) -> dict:
+        return {"axis_types": (AxisType.Auto,) * n}
+except ImportError:  # pre-AxisType jax: every mesh axis is already "auto"
+    def _axis_types(n: int) -> dict:
+        return {}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_types(len(axes)))
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh for tests on the local host's devices."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return jax.make_mesh((data, model), ("data", "model"), **_axis_types(2))
 
 
 # hardware constants for the roofline (per chip) — TPU v5e-like

@@ -36,6 +36,10 @@ def main():
     ap.add_argument("--lift-rank", type=int, default=16)
     ap.add_argument("--lift-density", type=float, default=0.05)
     ap.add_argument("--update-interval", type=int, default=20)
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="streaming Pallas selection (threshold + "
+                         "compaction kernels; no (rows, cols) score "
+                         "matrix is ever materialized)")
     ap.add_argument("--task", default="arith")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=10)
@@ -68,19 +72,24 @@ def main():
         kind=args.method,
         lift=LiftConfig(rank=args.lift_rank, density=args.lift_density,
                         method="exact", update_interval=args.update_interval,
-                        min_dim=16),
+                        min_dim=16, use_kernel=args.use_kernel),
         peft=PeftConfig(rank=args.lift_rank))
     adam = sa.AdamConfig(lr=args.lr, grad_clip=1.0)
 
     key = jax.random.PRNGKey(args.seed)
     params = model.init(key)
+    # one SelectionEngine instance serves init, every refresh, and the
+    # checkpoint plan fingerprint (single jitted selection program)
+    engine = T.selection_engine(model, method)
     params, state = T.init_train_state(model, params, method,
-                                       jax.random.PRNGKey(args.seed + 1))
+                                       jax.random.PRNGKey(args.seed + 1),
+                                       engine=engine)
     train_step = jax.jit(T.make_train_step(model, method, adam,
                                            T.constant_lr(args.lr)))
     refresh = None
     if args.method in ("lift", "sparse"):
-        refresh = jax.jit(T.make_refresh_step(model, method))
+        # already jitted by the engine — selection + state migration fused
+        refresh = T.make_refresh_step(model, method, engine=engine)
 
     data = generate(args.task, args.data_size, args.seq, seed=args.seed)
     if cfg.input_mode == "embeddings":  # frontend stub: embed via random proj
@@ -98,8 +107,12 @@ def main():
         if latest is not None:
             like = {"params": params, "state": state}
             restored = ckpt.restore(latest, like)
-            params, state = restored["params"], restored["state"]
             meta = ckpt.restore_meta(latest)
+            if engine is not None:
+                # fail BEFORE overwriting live state if the on-disk (ns, k)
+                # optimizer state was selected under a different plan
+                engine.validate_meta(ckpt.restore_selection(latest))
+            params, state = restored["params"], restored["state"]
             loader.state = LoaderState.from_dict(meta["loader"])
             start_step = latest
             print(f"[resume] restored step {latest}")
@@ -108,21 +121,56 @@ def main():
     monitor = StragglerMonitor()
     timer = StepTimer()
 
+    ckpt_meta = {"loader": None}
+    if engine is not None:
+        ckpt_meta["selection"] = engine.plan_meta()
+
+    # The loop never calls jax.block_until_ready: train_step and refresh
+    # are dispatched asynchronously, the next batch is prepared on the
+    # host while the device works, and metric printing is deferred one
+    # step so a refresh dispatch is never followed by an immediate sync —
+    # mask refresh overlaps the host loop instead of stalling it.
+    pending = None                # (step, metrics, refreshed_flag)
+    batch = {k: jnp.asarray(v) for k, v in loader.next_batch().items()}
     for step in range(start_step, args.steps):
-        batch = {k: jnp.asarray(v) for k, v in loader.next_batch().items()}
         params, state, metrics = train_step(params, state, batch)
-        if refresh is not None and (step + 1) % args.update_interval == 0:
+        refreshed = refresh is not None \
+            and (step + 1) % args.update_interval == 0
+        if refreshed:
             state = refresh(params, state, jax.random.PRNGKey(1000 + step))
-            print(f"[lift] mask refreshed at step {step + 1}")
+        # snapshot BEFORE prefetching: it must record batches 0..step
+        # consumed so a resumed run re-fetches exactly batch step+1
+        loader_snap = loader.state.to_dict()
+        if step + 1 < args.steps:
+            batch = {k: jnp.asarray(v)
+                     for k, v in loader.next_batch().items()}
+        if pending is not None:
+            pstep, pmetrics, pdt = pending
+            print(f"step {pstep:5d} loss {float(pmetrics['loss']):.4f} "
+                  f"gnorm {float(pmetrics['grad_norm']):.3f} {pdt*1e3:.0f}ms")
+        pending = None
         dt = timer.lap()
         monitor.observe(0, dt)
+        if refreshed:
+            print(f"[lift] mask refresh dispatched at step {step + 1}")
         if step % 10 == 0 or step == args.steps - 1:
-            print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
-                  f"gnorm {float(metrics['grad_norm']):.3f} {dt*1e3:.0f}ms")
+            pending = (step, metrics, dt)
         if ckpt is not None and (step + 1) % args.ckpt_every == 0:
+            ckpt_meta["loader"] = loader_snap
             ckpt.save_async(step + 1, {"params": params, "state": state},
-                            meta={"loader": loader.state.to_dict()})
+                            meta=dict(ckpt_meta))
         preempt.check(step + 1)
+
+    if pending is not None:
+        pstep, pmetrics, pdt = pending
+        print(f"step {pstep:5d} loss {float(pmetrics['loss']):.4f} "
+              f"gnorm {float(pmetrics['grad_norm']):.3f} {pdt*1e3:.0f}ms")
+    if refresh is not None and refresh.overflow_history:
+        ovf = sum(int(x) for x in refresh.overflow_history)
+        if ovf:
+            print(f"[lift] WARNING: compaction overflow dropped {ovf} "
+                  f"candidates across {len(refresh.overflow_history)} "
+                  f"refreshes — raise LiftConfig.compact_factor")
 
     if ckpt is not None:
         ckpt.wait()

@@ -20,9 +20,9 @@ import jax.numpy as jnp
 
 from repro.core import peft as peftmod
 from repro.core import sparse_adam as sa
-from repro.core.lift import (LiftConfig, compute_indices, get_by_path,
-                             make_plan, set_by_path)
+from repro.core.lift import (LiftConfig, get_by_path, make_plan, set_by_path)
 from repro.core.peft import PeftConfig
+from repro.core.selection import SelectionEngine
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,8 +66,20 @@ def merge_subtree(params, sub):
 
 
 # ------------------------------------------------------------------ setup
+def selection_engine(model, method: MethodConfig) -> Optional[SelectionEngine]:
+    """The (lift/sparse) method's SelectionEngine; None for other methods.
+
+    Build this ONCE per run and pass it to `init_train_state` /
+    `make_refresh_step` so init and every refresh share one jitted
+    selection program (and one plan fingerprint for checkpoints)."""
+    if method.kind not in ("lift", "sparse"):
+        return None
+    return SelectionEngine.from_spec(model.spec(), method.lift)
+
+
 def init_train_state(model, params, method: MethodConfig, key,
-                     sample_grads=None):
+                     sample_grads=None,
+                     engine: Optional[SelectionEngine] = None):
     """Build the initial TrainState dict for any method."""
     mcfg = method
     state: dict[str, Any] = {"step": jnp.zeros((), jnp.int32)}
@@ -75,8 +87,10 @@ def init_train_state(model, params, method: MethodConfig, key,
         state["opt"] = sa.dense_init(params)
     elif mcfg.kind in ("lift", "sparse"):
         lcfg = mcfg.lift
-        plan = make_plan(model.spec(), lcfg)
-        idx = compute_indices(params, plan, lcfg, key, grads=sample_grads)
+        if engine is None:
+            engine = selection_engine(model, mcfg)
+        plan = engine.plan
+        idx = engine.select(params, key, grads=sample_grads)
         use_master = params_dtype_isnt_f32(params)
         state["opt"] = sa.init_state(params, idx, plan,
                                      use_master=use_master)
@@ -229,24 +243,44 @@ def make_train_step(model, method: MethodConfig, adam: sa.AdamConfig,
 
 
 # ------------------------------------------------------------ mask refresh
-def make_refresh_step(model, method: MethodConfig):
-    """LIFT mask refresh (separate jitted program, App. B.1).
+def make_refresh_step(model, method: MethodConfig,
+                      engine: Optional[SelectionEngine] = None):
+    """LIFT mask refresh: selection + optimizer-state migration fused into
+    the SelectionEngine's single jitted program (App. B.1).  The returned
+    callable is already jitted — do not re-wrap it in jax.jit.
+
+    After each call, `refresh.last_stats` holds the engine's stats dict
+    ({"overflow": i32 scalar}, an *async* device value — reading it does
+    not force a sync) and `refresh.overflow_history` accumulates the
+    overflow scalar of EVERY refresh (sum it at end of run — a single
+    overflowing refresh degrades the mask for good).
 
     Gradient/movement selections need a gradient sample, which the refresh
     program doesn't carry — those baselines keep their initial mask (the
     paper treats them as fixed-mask baselines)."""
     assert method.kind in ("lift", "sparse")
     lcfg = method.lift
-    plan = make_plan(model.spec(), lcfg)
+    if engine is None:
+        engine = selection_engine(model, method)
     if lcfg.selection in ("gradient", "movement"):
-        return lambda params, state, key: state
+        def refresh(params, state, key):
+            return state
+        refresh.engine = engine
+        refresh.last_stats = None
+        refresh.overflow_history = []
+        return refresh
 
     def refresh(params, state, key):
-        idx = compute_indices(params, plan, lcfg, key)
-        opt = sa.migrate(subtree(params, sorted(plan.keys())), state["opt"],
-                         idx, plan)
+        opt, stats = engine.refresh_opt(
+            subtree(params, engine.paths), state["opt"], key)
+        if not isinstance(stats["overflow"], jax.core.Tracer):
+            refresh.last_stats = stats  # skipped under an outer jit trace
+            refresh.overflow_history.append(stats["overflow"])
         return dict(state, opt=opt)
 
+    refresh.engine = engine
+    refresh.last_stats = None
+    refresh.overflow_history = []
     return refresh
 
 

@@ -1,0 +1,68 @@
+"""Deterministic stand-in for `hypothesis` when it isn't installed.
+
+The CI image pins hypothesis (requirements.txt), but the bare container
+this repo sometimes runs on does not ship it, and a module-level
+`from hypothesis import ...` kills collection for the WHOLE file —
+including the non-property tests.  Test modules therefore do:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from hypothesis_fallback import given, settings, st
+
+This shim re-implements just the strategy surface those tests use
+(`st.integers`, `st.floats`, `st.sampled_from`) with a fixed-seed RNG:
+each @given test runs `max_examples` deterministic samples.  No shrinking,
+no database — strictly weaker than hypothesis, strictly stronger than
+skipping the module.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self.sample = sample
+
+
+class st:  # noqa: N801 — mimics `hypothesis.strategies` module naming
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(
+            lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(
+            lambda rng: elements[int(rng.integers(len(elements)))])
+
+
+def given(*strategies):
+    def deco(fn):
+        # deliberately NOT functools.wraps: pytest must see a zero-arg
+        # signature (hypothesis likewise swallows the generated params),
+        # otherwise it hunts for fixtures named after them
+        def run():
+            rng = np.random.default_rng(0)
+            for _ in range(getattr(run, "_max_examples", 10)):
+                fn(*(s.sample(rng) for s in strategies))
+        run.__name__ = fn.__name__
+        run.__doc__ = fn.__doc__
+        run.__module__ = fn.__module__
+        run._max_examples = getattr(fn, "_max_examples", 10)
+        return run
+    return deco
+
+
+def settings(max_examples: int = 10, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco

@@ -2,7 +2,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.parallel.compression import (EFState, compress, compressed_psum,
                                         decompress, init_ef, wire_bytes)

@@ -9,7 +9,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container lacks hypothesis: deterministic shim
+    from hypothesis_fallback import given, settings, st
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.core import sparse_adam as sa

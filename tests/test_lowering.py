@@ -7,7 +7,8 @@ import pytest
 
 from repro.configs import LM_SHAPES, get_arch
 from repro.configs.base import ShapeSpec
-from repro.launch.lowering import (build_cell, build_refresh, DEFAULT_LIFT)
+from repro.launch.lowering import (build_cell, build_refresh, DEFAULT_LIFT,
+                                   cost_analysis_dict)
 from repro.launch.mesh import make_host_mesh
 
 TINY_TRAIN = ShapeSpec("train_tiny", 32, 4, "train")
@@ -34,7 +35,7 @@ def test_train_lowering_smoke_config(arch):
                                 k_multiple=8)
     compiled = _lower(build_cell(bundle, cfg, mesh, TINY_TRAIN,
                                  method="lift", lcfg=lcfg))
-    ca = compiled.cost_analysis()
+    ca = cost_analysis_dict(compiled)
     assert ca.get("flops", 0) > 0
 
 

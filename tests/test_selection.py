@@ -1,0 +1,233 @@
+"""SelectionEngine contracts: streaming/dense parity, no-score-matrix
+guarantee, fused migration, plan validation and checkpoint metadata."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sparse_adam as sa
+from repro.core.lift import LiftConfig, TensorPlan, make_plan
+from repro.core.selection import SelectionEngine
+from repro.models import ModelConfig, build_model
+
+CFG = ModelConfig(family="dense", num_layers=2, d_model=64, num_heads=4,
+                  num_kv_heads=2, head_dim=16, d_ff=128, vocab_size=97)
+
+
+def _plan_1tensor(stack, rows, cols, k):
+    shape = tuple(stack) + (rows, cols)
+    return {"t": TensorPlan("t", shape, tuple(stack), rows, cols, k)}
+
+
+def _rand_params(stack, rows, cols, dtype, seed=0, rank=None):
+    shape = tuple(stack) + (rows, cols)
+    key = jax.random.PRNGKey(seed)
+    if rank is None:
+        w = jax.random.normal(key, shape)
+    else:  # soft low-rank structure: realistic for trained weights
+        a = jax.random.normal(key, tuple(stack) + (rows, rank))
+        b = jax.random.normal(jax.random.PRNGKey(seed + 1),
+                              tuple(stack) + (rank, cols))
+        w = a @ b / np.sqrt(rank) \
+            + 0.1 * jax.random.normal(jax.random.PRNGKey(seed + 2), shape)
+    return {"t": w.astype(dtype)}
+
+
+def _agreement(idx_a, idx_b):
+    """Min per-matrix fraction of shared indices for (ns, k) index sets."""
+    a, b = np.asarray(idx_a), np.asarray(idx_b)
+    assert a.shape == b.shape
+    return min(len(np.intersect1d(a[i], b[i])) / a.shape[-1]
+               for i in range(a.shape[0]))
+
+
+# ------------------------------------------------------ streaming parity
+@pytest.mark.parametrize("density", [0.01, 0.05, 0.2])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_streaming_matches_dense_topk(density, dtype):
+    rows, cols = 128, 192
+    k = max(1, int(density * rows * cols))
+    plan = _plan_1tensor((), rows, cols, k)
+    params = _rand_params((), rows, cols, dtype, seed=hash(density) % 97,
+                          rank=12)
+    base = LiftConfig(rank=8, method="exact", min_dim=16)
+    dense = SelectionEngine(plan, base).select(params, jax.random.PRNGKey(0))
+    eng = SelectionEngine(plan, base.replace(use_kernel=True))
+    assert eng.backend == "streaming"
+    stream, stats = eng.select_with_stats(params, jax.random.PRNGKey(0))
+    assert int(stats["overflow"]) == 0
+    si = np.asarray(stream["t"])
+    assert np.all(np.diff(si, axis=-1) > 0)  # sorted unique per matrix
+    assert _agreement(dense["t"], stream["t"]) >= 1 - 1e-3
+
+
+def test_streaming_parity_stacked_tensors():
+    """Stacked (layers, experts) leaves go through the same batched
+    program; every matrix in the stack must agree with dense top-k."""
+    stack, rows, cols = (2, 3), 96, 64
+    k = int(0.05 * rows * cols)
+    plan = _plan_1tensor(stack, rows, cols, k)
+    params = _rand_params(stack, rows, cols, jnp.float32, seed=5, rank=10)
+    base = LiftConfig(rank=8, method="exact", min_dim=16)
+    dense = SelectionEngine(plan, base).select(params, jax.random.PRNGKey(1))
+    stream = SelectionEngine(plan, base.replace(use_kernel=True)).select(
+        params, jax.random.PRNGKey(1))
+    assert dense["t"].shape == stream["t"].shape == (6, k)
+    assert _agreement(dense["t"], stream["t"]) >= 1 - 1e-3
+
+
+def test_engine_dense_is_bit_identical_to_legacy_contract():
+    """compute_indices (now a thin engine wrapper) and a model-spec engine
+    must produce identical indices for the dense backend."""
+    from repro.core.lift import compute_indices
+    m = build_model(CFG)
+    lcfg = LiftConfig(rank=8, match_rank=2, method="exact", min_dim=16)
+    plan = make_plan(m.spec(), lcfg)
+    params = m.init(jax.random.PRNGKey(0))
+    via_wrapper = compute_indices(params, plan, lcfg, jax.random.PRNGKey(7))
+    via_engine = SelectionEngine(plan, lcfg).select(params,
+                                                    jax.random.PRNGKey(7))
+    for path in plan:
+        assert np.array_equal(np.asarray(via_wrapper[path]),
+                              np.asarray(via_engine[path])), path
+
+
+# --------------------------------------------- no-score-matrix guarantee
+def test_streaming_path_is_exercised(monkeypatch):
+    """With use_kernel=True the engine must never call the dense scoring
+    path: poisoning scores_for and the materializing |A B^T| kernel proves
+    no (rows, cols) score matrix is ever formed."""
+    import repro.core.lift as liftmod
+    import repro.kernels.ops as kops
+
+    def boom(*a, **kw):
+        raise AssertionError("dense score path reached under use_kernel")
+
+    monkeypatch.setattr(liftmod, "scores_for", boom)
+    monkeypatch.setattr(kops, "lowrank_abs", boom)
+
+    m = build_model(CFG)
+    lcfg = LiftConfig(rank=8, match_rank=2, method="exact", min_dim=16,
+                      use_kernel=True)
+    eng = SelectionEngine.from_spec(m.spec(), lcfg)
+    assert eng.backend == "streaming"
+    params = m.init(jax.random.PRNGKey(0))
+    idx = eng.select(params, jax.random.PRNGKey(1))
+    assert set(idx) == set(eng.plan)
+    for path, p in eng.plan.items():
+        assert idx[path].shape[-1] == p.k
+
+
+def test_structured_or_nonlift_falls_back_to_dense():
+    assert SelectionEngine(
+        _plan_1tensor((), 64, 64, 64),
+        LiftConfig(use_kernel=True, block_size=4)).backend == "dense"
+    assert SelectionEngine(
+        _plan_1tensor((), 64, 64, 64),
+        LiftConfig(use_kernel=True, selection="magnitude")).backend == "dense"
+
+
+# ------------------------------------------------------ fused migration
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_fused_refresh_preserves_surviving_moments(use_kernel):
+    """refresh_opt (select + migrate in one program) keeps the moments of
+    every surviving index and zeroes fresh ones — under both backends."""
+    rows, cols = 96, 128
+    k = int(0.05 * rows * cols)
+    plan = _plan_1tensor((1,), rows, cols, k)
+    params = _rand_params((1,), rows, cols, jnp.float32, seed=3, rank=10)
+    lcfg = LiftConfig(rank=8, method="exact", min_dim=16,
+                      use_kernel=use_kernel)
+    eng = SelectionEngine(plan, lcfg)
+    idx0 = eng.select(params, jax.random.PRNGKey(0))
+    state = sa.init_state(params, idx0, plan)
+    t = state["tensors"]["t"]
+    t["m"] = jnp.arange(t["m"].size, dtype=jnp.float32
+                        ).reshape(t["m"].shape) + 1.0
+    t["v"] = t["m"] * 10.0
+
+    # perturb params so the refreshed mask differs
+    params = {"t": params["t"] + 0.3 * jax.random.normal(
+        jax.random.PRNGKey(9), params["t"].shape)}
+    new_opt, stats = eng.refresh_opt(params, state, jax.random.PRNGKey(5))
+    assert int(stats["overflow"]) == 0
+
+    old_i = np.asarray(idx0["t"])[0]
+    new_i = np.asarray(new_opt["tensors"]["t"]["idx"])[0]
+    old_m = np.asarray(t["m"])[0]
+    new_m = np.asarray(new_opt["tensors"]["t"]["m"])[0]
+    lut = dict(zip(old_i.tolist(), old_m.tolist()))
+    for j, mm in zip(new_i, new_m):
+        assert mm == pytest.approx(lut.get(int(j), 0.0)), int(j)
+    # the refresh changed something (otherwise the test proves nothing)
+    assert set(new_i.tolist()) != set(old_i.tolist())
+
+
+def test_lift_indices_overflow_never_leaks_sentinels():
+    """Force compaction-capacity overflow (all mass in one tile): the
+    overflow must be reported AND every returned index must still be a
+    valid flat position — sentinels never leak into the mask."""
+    from repro.kernels import ops
+    m = n = 256
+    # rank-1 factors with one dominant row/col block -> one hot tile
+    a = jnp.ones((m, 1)).at[128:].set(1e-3)
+    b = jnp.ones((n, 1)).at[128:].set(1e-3)
+    k = 512
+    idx, _tau, ovf = ops.lift_indices(a, b, k, capacity=128, bm=128, bn=128)
+    assert int(ovf) > 0  # the probe really overflowed
+    idx = np.asarray(idx)
+    assert idx.shape == (k,)
+    assert idx.min() >= 0 and idx.max() < m * n
+
+
+# ------------------------------------------------------- plan validation
+def test_make_plan_rejects_nondivisible_block_size():
+    m = build_model(CFG)
+    with pytest.raises(ValueError) as ei:
+        make_plan(m.spec(), LiftConfig(match_rank=2, block_size=5,
+                                       min_dim=16))
+    msg = str(ei.value)
+    assert "block_size=5" in msg
+    assert "blocks/" in msg  # names the offending tensor path
+
+
+def test_plan_meta_roundtrip_and_mismatch():
+    m = build_model(CFG)
+    lcfg = LiftConfig(rank=8, match_rank=2, method="exact", min_dim=16)
+    eng = SelectionEngine.from_spec(m.spec(), lcfg)
+    meta = json.loads(json.dumps(eng.plan_meta()))  # JSON round-trip
+    eng.validate_meta(meta)          # self-consistent
+    eng.validate_meta(None)          # pre-engine checkpoints pass through
+
+    bad = json.loads(json.dumps(meta))
+    path = sorted(bad["tensors"])[0]
+    bad["tensors"][path]["k"] += 8
+    with pytest.raises(ValueError, match="geometry mismatch"):
+        eng.validate_meta(bad)
+
+    bad2 = json.loads(json.dumps(meta))
+    bad2["tensors"]["not/a/tensor"] = bad2["tensors"][path]
+    with pytest.raises(ValueError, match="different tensors"):
+        eng.validate_meta(bad2)
+
+
+# ------------------------------------------------------------ end-to-end
+def test_smoke_train_streaming_subprocess():
+    """`launch.train --smoke --method lift --use-kernel` must run init +
+    refresh through the streaming SelectionEngine end-to-end."""
+    cmd = [sys.executable, "-m", "repro.launch.train",
+           "--arch", "qwen3-1.7b", "--smoke", "--method", "lift",
+           "--use-kernel", "--steps", "2", "--batch", "2", "--seq", "16",
+           "--update-interval", "2", "--data-size", "64"]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                         timeout=540)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "mask refresh dispatched at step 2" in out.stdout
+    assert "done" in out.stdout
