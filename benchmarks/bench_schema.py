@@ -1,0 +1,127 @@
+"""Machine-readable benchmark artifact schema (docs/CI.md).
+
+`BENCH_<suite>.json` documents look like:
+
+    {
+      "schema_version": 1,
+      "suite": "kernels_micro",
+      "rows": [
+        {"name": "sel/512x512-d0.05-streaming",
+         "us_per_call": 123.4,
+         "derived": "hbm_bytes_modeled=...;agree=0.99987",
+         "metrics": {"hbm_bytes_modeled": 274432, "agree": 0.99987}}
+      ]
+    }
+
+`metrics` carries the machine-readable values (numbers / bools / short
+strings); `derived` keeps the human CSV string.  CI validates the schema
+and the SEMANTIC invariants below and fails on violations — it never
+fails on absolute timings (interpret-mode wall time is noise; the
+trajectory lives in the uploaded artifacts, DESIGN.md §7).
+
+Semantic invariants for suite "kernels_micro":
+  * every `sel/*-streaming` row reports `agree` in [0, 1] and
+    agree >= 0.99 (streaming selection may differ from dense top-k only
+    in final-histogram-bin ties);
+  * every `shardsel/*` row reports `within_bound` == true — the modeled
+    per-device candidate buffer of sharded streaming selection must stay
+    within its O(compact_factor * k / n_shards) bound.
+
+Usage: python -m benchmarks.bench_schema BENCH_kernels_micro.json [...]
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+SCHEMA_VERSION = 1
+
+
+def validate(doc) -> list:
+    """Returns a list of human-readable schema violations (empty = valid)."""
+    errs = []
+    if not isinstance(doc, dict):
+        return [f"document must be a JSON object, got {type(doc).__name__}"]
+    if doc.get("schema_version") != SCHEMA_VERSION:
+        errs.append(f"schema_version must be {SCHEMA_VERSION}, "
+                    f"got {doc.get('schema_version')!r}")
+    suite = doc.get("suite")
+    if not isinstance(suite, str) or not suite:
+        errs.append(f"suite must be a non-empty string, got {suite!r}")
+    rows = doc.get("rows")
+    if not isinstance(rows, list) or not rows:
+        return errs + ["rows must be a non-empty list"]
+    for i, row in enumerate(rows):
+        where = f"rows[{i}]"
+        if not isinstance(row, dict):
+            errs.append(f"{where} must be an object")
+            continue
+        name = row.get("name")
+        if not isinstance(name, str) or not name:
+            errs.append(f"{where}.name must be a non-empty string")
+            name = f"<row {i}>"
+        us = row.get("us_per_call")
+        if not isinstance(us, (int, float)) or isinstance(us, bool) \
+                or us < 0:
+            errs.append(f"{where} ({name}): us_per_call must be a "
+                        f"number >= 0, got {us!r}")
+        metrics = row.get("metrics", {})
+        if not isinstance(metrics, dict):
+            errs.append(f"{where} ({name}): metrics must be an object")
+            continue
+        for mk, mv in metrics.items():
+            if not isinstance(mv, (int, float, str, bool)):
+                errs.append(f"{where} ({name}): metric {mk!r} must be a "
+                            f"scalar, got {type(mv).__name__}")
+        if suite == "kernels_micro":
+            errs.extend(_kernels_micro_row(name, metrics))
+    return errs
+
+
+def _kernels_micro_row(name: str, metrics: dict) -> list:
+    errs = []
+    if name.startswith("sel/") and name.endswith("-streaming"):
+        agree = metrics.get("agree")
+        if not isinstance(agree, (int, float)) or not 0.0 <= agree <= 1.0:
+            errs.append(f"{name}: streaming row needs metric agree in "
+                        f"[0, 1], got {agree!r}")
+        elif agree < 0.99:
+            errs.append(f"{name}: streaming/dense index agreement {agree} "
+                        f"< 0.99 — beyond final-bin ties, selection broke")
+    if name.startswith("shardsel/"):
+        if metrics.get("within_bound") is not True:
+            errs.append(
+                f"{name}: within_bound must be true — per-device candidate "
+                f"buffer exceeded its O(compact_factor * k / n_shards) "
+                f"bound ({metrics.get('buffer_slots_per_device')} slots vs "
+                f"bound {metrics.get('bound_slots_per_device')})")
+    return errs
+
+
+def main(argv) -> int:
+    if not argv:
+        print("usage: python -m benchmarks.bench_schema BENCH_*.json",
+              file=sys.stderr)
+        return 2
+    bad = 0
+    for path in argv:
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"{path}: unreadable: {e}", file=sys.stderr)
+            bad += 1
+            continue
+        errs = validate(doc)
+        if errs:
+            bad += 1
+            for e in errs:
+                print(f"{path}: {e}", file=sys.stderr)
+        else:
+            print(f"{path}: OK ({len(doc['rows'])} rows, "
+                  f"suite {doc['suite']})")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -113,3 +113,53 @@ def train_method(cfg: ModelConfig, method: T.MethodConfig, *,
 def csv_rows(rows):
     for r in rows:
         print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+
+
+# -------------------------------------------------- JSON bench artifacts
+def _parse_derived(derived: str) -> dict:
+    """Best-effort "k1=v1;k2=v2" -> scalar dict for legacy rows that don't
+    carry an explicit `metrics` payload."""
+    out = {}
+    for part in str(derived).split(";"):
+        if "=" not in part:
+            continue
+        key, val = part.split("=", 1)
+        try:
+            out[key.strip()] = int(val)
+        except ValueError:
+            try:
+                out[key.strip()] = float(val)
+            except ValueError:
+                out[key.strip()] = val.strip()
+    return out
+
+
+def bench_doc(rows, suite: str) -> dict:
+    """rows -> the machine-readable artifact document CI uploads
+    (schema: benchmarks/bench_schema.py, docs/CI.md)."""
+    from benchmarks.bench_schema import SCHEMA_VERSION
+    doc_rows = []
+    for r in rows:
+        metrics = dict(r.get("metrics") or _parse_derived(r.get("derived",
+                                                                "")))
+        doc_rows.append({"name": r["name"],
+                         "us_per_call": float(r["us_per_call"]),
+                         "derived": str(r.get("derived", "")),
+                         "metrics": metrics})
+    return {"schema_version": SCHEMA_VERSION, "suite": suite,
+            "rows": doc_rows}
+
+
+def write_bench_json(path: str, rows, suite: str) -> None:
+    """Write BENCH_<suite>.json, refusing to emit a schema-invalid doc."""
+    import json
+
+    from benchmarks.bench_schema import validate
+    doc = bench_doc(rows, suite)
+    errs = validate(doc)
+    if errs:
+        raise ValueError(f"benchmark rows violate the artifact schema: "
+                         f"{'; '.join(errs)}")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")

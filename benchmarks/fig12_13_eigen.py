@@ -3,7 +3,6 @@ update-matrix rank (App. G.3) per layer type, for LIFT vs Full FT vs LoRA.
 Paper: LIFT rotates the top eigenspace of Up/Down/O far more than LoRA and
 its update rank is near-full (LoRA's is capped at r).
 derived = alignment score + update rank for the mlp/up matrix."""
-import numpy as np
 
 from benchmarks.common import SMALL, csv_rows, make_method, train_method
 from repro.core.analysis import alignment_score, update_rank

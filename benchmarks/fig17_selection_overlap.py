@@ -2,7 +2,6 @@
 parameters (paper: small — 5-20 % on MLP, up to 40 % on Q/K — and growing
 with the LRA rank), PLUS the framework's local-quota-vs-global overlap
 (DESIGN.md §3 distributed selection).  derived = overlap fractions."""
-import jax
 import numpy as np
 
 from benchmarks.common import SMALL, csv_rows, make_method, train_method

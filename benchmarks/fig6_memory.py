@@ -45,7 +45,6 @@ def run():
                             f"({100 * lift_b / full_b:.1f}%);"
                             f"LoRA={lora_b * g:.2f}GB"})
     # measured on the smoke model
-    import jax.numpy as jnp
 
     def opt_bytes(state):
         return sum(x.size * x.dtype.itemsize

@@ -14,22 +14,35 @@ The `sel/` rows compare the two SelectionEngine backends end-to-end
     spills the kernel's VMEM-resident intermediates into XLA temps, so
     measured temps would overstate the TPU number by orders of magnitude;
   * index agreement between the two backends is MEASURED per row.
+
+The `shardsel/` rows MODEL the per-device footprint of sharded streaming
+selection (DESIGN.md §3): for each density and shard count they record
+the compaction candidate-buffer slots one device holds and the
+O(compact_factor * k / n_shards) bound it must respect — the schema
+validator fails CI if the bound is ever exceeded (`within_bound`), and
+the uploaded `BENCH_kernels_micro.json` artifact is the perf trajectory.
+
+Machine-readable output: `python -m benchmarks.kernels_micro --json
+BENCH_kernels_micro.json` (schema: benchmarks/bench_schema.py).
 """
+import argparse
+
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import csv_rows, timer
+from benchmarks.common import csv_rows, timer, write_bench_json
 from repro.kernels import ops, ref
+
+SEL_CASES = [(512, 512, 16, 0.01), (512, 512, 16, 0.05),
+             (256, 384, 16, 0.2)]
 
 
 def _selection_rows():
     """Dense top-k vs streaming selection across densities and sizes."""
     rows = []
-    cases = [(512, 512, 16, 0.01), (512, 512, 16, 0.05),
-             (256, 384, 16, 0.2)]
-    for m, n, r, density in cases:
+    for m, n, r, density in SEL_CASES:
         k = int(density * m * n)
         a = jax.random.normal(jax.random.PRNGKey(0), (m, r))
         b = jax.random.normal(jax.random.PRNGKey(1), (n, r))
@@ -57,12 +70,43 @@ def _selection_rows():
         name = f"sel/{m}x{n}-d{density}"
         rows.append({
             "name": name + "-dense_topk", "us_per_call": us_dense,
-            "derived": f"temp_bytes_measured={dense_temp};k={k}"})
+            "derived": f"temp_bytes_measured={dense_temp};k={k}",
+            "metrics": {"temp_bytes_measured": int(dense_temp), "k": k,
+                        "density": density}})
         rows.append({
             "name": name + "-streaming", "us_per_call": us_stream,
             "derived": f"hbm_bytes_modeled={stream_bytes};"
                        f"dense_bytes_modeled={m * n * 4 * 2};"
-                       f"agree={agree:.5f}"})
+                       f"agree={agree:.5f}",
+            "metrics": {"hbm_bytes_modeled": int(stream_bytes),
+                        "dense_bytes_modeled": int(m * n * 4 * 2),
+                        "agree": float(agree), "k": k,
+                        "density": density}})
+    return rows
+
+
+def _sharded_rows():
+    """Per-device candidate-buffer model for sharded streaming selection.
+
+    Pure capacity arithmetic (no devices needed, so the single-device CI
+    job records it too): one row per (geometry, density, n_shards) with
+    the modeled buffer and its bound.  `within_bound` is a CI-enforced
+    invariant — sharded selection must never materialize a per-device
+    buffer beyond O(compact_factor * k / n_shards)."""
+    rows = []
+    for m, n, _r, density in SEL_CASES:
+        k = int(density * m * n)
+        for n_shards in (2, 4, 8):
+            if n % n_shards:
+                continue
+            rec = ops.shard_buffer_model(m, n, k, n_shards)
+            rows.append({
+                "name": f"shardsel/{m}x{n}-d{density}-s{n_shards}",
+                "us_per_call": 0.0,
+                "derived": f"buffer_slots={rec['buffer_slots_per_device']};"
+                           f"bound_slots={rec['bound_slots_per_device']};"
+                           f"within_bound={rec['within_bound']}",
+                "metrics": {**rec, "k": k, "density": density}})
     return rows
 
 
@@ -84,7 +128,9 @@ def run():
     rows.append({"name": "kern/lift_mask-1024x1024",
                  "us_per_call": us_mask,
                  "derived": f"hbm_saved={(base_bytes - fused_bytes)/2**20:.1f}"
-                            f"MiB;ref_abs_us={us_ref:.0f}"})
+                            f"MiB;ref_abs_us={us_ref:.0f}",
+                 "metrics": {"hbm_saved_bytes": int(base_bytes - fused_bytes),
+                             "ref_abs_us": float(us_ref)}})
 
     N, kk = 2 ** 20, 2 ** 15
     p = jax.random.normal(jax.random.PRNGKey(2), (N,))
@@ -105,10 +151,26 @@ def run():
     rows.append({"name": "kern/sparse_adam-1M",
                  "us_per_call": us_k,
                  "derived": f"state_saved={saved/2**20:.1f}MiB;"
-                            f"ref_us={us_r:.0f}"})
+                            f"ref_us={us_r:.0f}",
+                 "metrics": {"state_saved_bytes": int(saved),
+                             "ref_us": float(us_r)}})
     rows.extend(_selection_rows())
+    rows.extend(_sharded_rows())
     return rows
 
 
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="",
+                    help="also write the machine-readable artifact "
+                         "(BENCH_kernels_micro.json; docs/CI.md)")
+    args = ap.parse_args()
+    rows = run()
+    csv_rows(rows)
+    if args.json:
+        write_bench_json(args.json, rows, suite="kernels_micro")
+        print(f"# wrote {args.json}")
+
+
 if __name__ == "__main__":
-    csv_rows(run())
+    main()

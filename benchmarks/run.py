@@ -1,7 +1,11 @@
 """Benchmark harness — one module per paper table/figure (DESIGN.md §8).
-Prints ``name,us_per_call,derived`` CSV.  ``--only <prefix>`` filters."""
+Prints ``name,us_per_call,derived`` CSV.  ``--only <prefix>`` filters;
+``--json-dir DIR`` additionally writes one machine-readable
+``BENCH_<module>.json`` per module (schema: benchmarks/bench_schema.py,
+uploaded by CI as the perf-trajectory artifacts — docs/CI.md)."""
 import argparse
 import importlib
+import os
 import sys
 import time
 import traceback
@@ -28,7 +32,11 @@ MODULES = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument("--json-dir", default="",
+                    help="write BENCH_<module>.json per module here")
     args = ap.parse_args()
+    if args.json_dir:
+        os.makedirs(args.json_dir, exist_ok=True)
     print("name,us_per_call,derived")
     failures = 0
     for modname in MODULES:
@@ -37,9 +45,16 @@ def main() -> None:
         t0 = time.time()
         try:
             mod = importlib.import_module(modname)
-            for r in mod.run():
+            rows = list(mod.run())
+            for r in rows:
                 print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}",
                       flush=True)
+            if args.json_dir:
+                from benchmarks.common import write_bench_json
+                suite = modname.rsplit(".", 1)[-1]
+                write_bench_json(
+                    os.path.join(args.json_dir, f"BENCH_{suite}.json"),
+                    rows, suite=suite)
         except Exception as e:
             failures += 1
             print(f"{modname},0,ERROR:{e}", flush=True)

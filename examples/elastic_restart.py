@@ -6,7 +6,6 @@ has (DESIGN.md §4).  Runs each phase in a subprocess with a different
 
     PYTHONPATH=src python examples/elastic_restart.py
 """
-import json
 import os
 import subprocess
 import sys
@@ -83,7 +82,6 @@ def run_phase(ndev, dp, tp, ckpt, steps, out):
 
 
 if __name__ == "__main__":
-    import numpy as np
     with tempfile.TemporaryDirectory() as td:
         ck = os.path.join(td, "ckpt")
         a, b = os.path.join(td, "a.npy"), os.path.join(td, "b.npy")

@@ -14,14 +14,14 @@ dims fold into rows vs cols comes from each Spec's `matrix_split`.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import lowrank
-from repro.nn.core import Spec, is_spec
+from repro.nn.core import is_spec
 
 STACK_AXES = ("layers", "experts")
 
@@ -45,6 +45,11 @@ class LiftConfig:
     use_kernel: bool = False      # Pallas streaming selection (kernels/)
     compact_factor: int = 8       # compaction-kernel slot budget, x the
                                   # uniform per-tile share of k
+    quota: str = "global"         # global | local — "local" gives every
+                                  # column-slab shard an exact k/n quota
+                                  # (collective-free selection, DESIGN.md §3)
+    quota_shards: int = 0         # "local" slab count; 0 = infer from the
+                                  # active mesh's "shards" logical axis
     k_multiple: int = 8           # k rounded up (1024 in production so the
                                   # (ns, k) state shards evenly over the mesh)
 

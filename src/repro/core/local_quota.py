@@ -15,30 +15,39 @@ The math is mesh-independent (pure reshape); the launcher picks n_shards =
 TP degree.  Index convention: GLOBAL flat indices, sorted ascending —
 identical contract to `lift.topk_indices`, so sparse_adam/migrate work
 unchanged.
+
+Since the SelectionEngine grew a `quota="local"` mode this module is the
+dense per-slab MATH (`local_topk_indices`) plus the deviation analysis
+(`overlap_with_global`); `compute_indices_local` is a thin compatibility
+wrapper over the engine so there is exactly one selection pipeline —
+batched, kernel-backed and mesh-aware — for both quota modes.
 """
 from __future__ import annotations
-
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.lift import (LiftConfig, TensorPlan, _leaf_matrices,
-                             get_by_path, scores_for)
+from repro.core.lift import LiftConfig, TensorPlan
 
 
 def local_topk_indices(scores2d: jax.Array, k: int, n_shards: int,
                        axis: int = 1) -> jax.Array:
     """Per-shard-quota top-k.  scores2d: (rows, cols); the sharded dim is
     `axis` (1 = column slabs, the framework's TP layout).  Returns (k,)
-    GLOBAL flat indices, sorted ascending.  k must divide by n_shards."""
+    GLOBAL flat indices, sorted ascending.  Raises ValueError when the
+    sharded dim or k does not divide by n_shards (a ragged quota would
+    silently select the wrong count per slab)."""
     rows, cols = scores2d.shape
     if axis == 0:
         idx_t = local_topk_indices(scores2d.T, k, n_shards, axis=1)
         r, c = idx_t // rows, idx_t % rows
         return jnp.sort(c * cols + r)
-    assert cols % n_shards == 0 and k % n_shards == 0, (cols, k, n_shards)
+    if cols % n_shards or k % n_shards:
+        raise ValueError(
+            f"local-quota selection needs the sharded dim and k divisible "
+            f"by n_shards: rows={rows}, cols={cols}, k={k}, "
+            f"n_shards={n_shards} (axis={axis})")
     kq = k // n_shards
     w = cols // n_shards
     # (n_shards, rows*w) local score slabs
@@ -55,30 +64,18 @@ def local_topk_indices(scores2d: jax.Array, k: int, n_shards: int,
 def compute_indices_local(params, plan: dict[str, TensorPlan],
                           cfg: LiftConfig, key: jax.Array,
                           n_shards: int, grads=None) -> dict[str, jax.Array]:
-    """Drop-in for lift.compute_indices with per-shard quotas."""
-    out = {}
-    paths = sorted(plan.keys())
-    keys = jax.random.split(key, len(paths))
-    for kk, path in zip(keys, paths):
-        p = plan[path]
-        w = _leaf_matrices(get_by_path(params, path), p)
-        g = None if grads is None else \
-            _leaf_matrices(get_by_path(grads, path), p)
-        ns = w.shape[0]
-        eff = n_shards if (p.cols % n_shards == 0
-                           and p.k % n_shards == 0) else 1
-        subkeys = jax.random.split(kk, ns)
+    """Drop-in for lift.compute_indices with per-shard quotas.
 
-        def one(w2d, key1, g2d=None):
-            s = scores_for(w2d, cfg, cfg.selection, key1, g2d)
-            return local_topk_indices(s, p.k, eff)
-
-        if g is None:
-            idx = jax.vmap(lambda a, b: one(a, b))(w, subkeys)
-        else:
-            idx = jax.vmap(one)(w, subkeys, g)
-        out[path] = idx.astype(jnp.int32)
-    return out
+    Thin wrapper over `SelectionEngine(quota="local")` — one selection
+    pipeline for both quota modes.  Raises ValueError naming the first
+    tensor whose cols/k do not divide by `n_shards` (the engine's
+    construction-time validation); the historical behavior silently fell
+    back to a global top-k for such tensors, which made the selected set
+    depend on geometry in a way no caller could observe."""
+    from repro.core.selection import SelectionEngine
+    eng = SelectionEngine(
+        plan, cfg.replace(quota="local", quota_shards=n_shards))
+    return eng.select(params, key, grads)
 
 
 def overlap_with_global(scores2d: jax.Array, k: int, n_shards: int) -> float:

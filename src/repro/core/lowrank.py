@@ -14,7 +14,6 @@ spectrum to keep: largest / smallest / random / hybrid.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax

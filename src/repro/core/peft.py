@@ -8,7 +8,6 @@ adapter-only training — no module surgery.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -32,11 +32,33 @@ across layers/experts/paths and the selection kernel runs under one
 Per-matrix PRNG keys are derived exactly as the historical
 `compute_indices` did (split over sorted paths, then over the stack), so
 dense-backend results are bit-identical to the pre-engine code.
+
+Sharding (DESIGN.md §3): the engine captures the active mesh
+(`parallel/sharding.py` ctx) at construction.  When the mesh maps the
+"shards" logical axis onto >1 devices and the backend is streaming, each
+geometry group whose cols divide over the shard axis runs as a shard_map
+collective: per-shard histograms psum into the threshold search,
+compaction stays shard-local, and the merge is one O(k) all-gather of
+candidate indices (`kernels.ops.lift_indices_sharded`) — factors are
+consumed where the weights live, never gathered.  Quota modes:
+
+  * quota="global" — one global top-k; the sharded run is
+    bitwise-identical to single-device selection (psum'd integer
+    histograms -> same tau -> same candidate set);
+  * quota="local"  — every column slab gets an exact k/n_shards budget
+    (per-shard threshold search, NO cross-shard reduction); unifies the
+    former `core/local_quota.py` side path into this engine, on both
+    backends (dense `local_topk_indices` / streaming
+    `lift_indices_local` / collective `lift_indices_sharded`).
+
+Groups whose geometry does not divide over the mesh fall back to the
+unsharded program (see `group_exec`); selected (ns, k) index sets are
+constrained along the "topk" logical axis when k divides.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -46,6 +68,8 @@ from repro.core import lift as liftmod
 from repro.core import lowrank
 from repro.core.lift import (LiftConfig, TensorPlan, get_by_path, make_plan,
                              _leaf_matrices)
+from repro.core.local_quota import local_topk_indices
+from repro.parallel import sharding as shd
 
 PLAN_META_VERSION = 1
 
@@ -75,6 +99,37 @@ class SelectionEngine:
                         if (cfg.use_kernel and cfg.selection == "lift"
                             and cfg.block_size == 1)
                         else "dense")
+        # mesh snapshot: the engine's jitted programs bake the sharding
+        # decision at construction (set the ctx BEFORE building the engine)
+        if cfg.quota not in ("global", "local"):
+            raise ValueError(f"unknown quota mode {cfg.quota!r} "
+                             f"(expected 'global' or 'local')")
+        self.mesh = shd.active_mesh()
+        axes = shd.mesh_axes_for("shards", self.mesh)
+        self.shard_axis = axes[0] if len(axes) == 1 else None
+        self.mesh_shards = (int(self.mesh.shape[self.shard_axis])
+                            if (self.mesh is not None and self.shard_axis)
+                            else 1)
+        self.quota_shards = 1
+        if cfg.quota == "local":
+            self.quota_shards = int(cfg.quota_shards) or self.mesh_shards
+            if self.quota_shards < 1:
+                raise ValueError(
+                    f"quota='local' needs quota_shards >= 1 "
+                    f"(got {cfg.quota_shards})")
+            if cfg.block_size != 1 and self.quota_shards > 1:
+                raise ValueError(
+                    "quota='local' is unstructured-only (block_size == 1); "
+                    "structured LIFT has no per-slab quota path yet")
+            for path in self.paths:
+                p = self.plan[path]
+                if p.cols % self.quota_shards or p.k % self.quota_shards:
+                    raise ValueError(
+                        f"quota='local' with n_shards={self.quota_shards} "
+                        f"does not tile tensor {path!r}: cols={p.cols}, "
+                        f"k={p.k} must both be divisible by n_shards — "
+                        f"adjust quota_shards / k_multiple or exclude the "
+                        f"tensor via min_dim/scope")
         groups: dict[tuple, list] = {}
         for path in self.paths:
             p = self.plan[path]
@@ -83,10 +138,29 @@ class SelectionEngine:
             GroupSpec(rows=r, cols=c, k=k, paths=tuple(ps),
                       stacks=tuple(_num_stack(self.plan[q]) for q in ps))
             for (r, c, k), ps in groups.items())
+        # {(rows, cols, k): how the group's selection executes} — the
+        # parity tests and plan_meta introspect this
+        self.group_exec = {
+            (g.rows, g.cols, g.k): self._exec_mode(g) for g in self.groups}
         # jitted lazily at first call so tests can patch the score path
         # before tracing; one program per entry point.
         self._select_jit = jax.jit(self._select_impl)
         self._refresh_jit = jax.jit(self._refresh_impl)
+
+    def _exec_mode(self, g: GroupSpec) -> str:
+        """dense | streaming | streaming-local | sharded | sharded-local."""
+        if self.backend == "dense":
+            return "dense"
+        local = self.cfg.quota == "local" and self.quota_shards > 1
+        sharded = (self.mesh is not None and self.shard_axis is not None
+                   and self.mesh_shards > 1
+                   and g.cols % self.mesh_shards == 0
+                   # a local quota only stays collective-free if the slab
+                   # count IS the mesh's shard count
+                   and (not local or self.quota_shards == self.mesh_shards))
+        if sharded:
+            return "sharded-local" if local else "sharded"
+        return "streaming-local" if local else "streaming"
 
     @classmethod
     def from_spec(cls, spec_tree, cfg: LiftConfig) -> "SelectionEngine":
@@ -134,14 +208,34 @@ class SelectionEngine:
                 idx = self._dense_group(w, kk, gg, g)
             off = 0
             for path, ns in zip(g.paths, g.stacks):
-                out[path] = idx[off:off + ns].astype(jnp.int32)
+                sel = idx[off:off + ns].astype(jnp.int32)
+                if self.mesh is not None:
+                    # (ns, k) index sets shard along the "topk" logical
+                    # axis when k divides the mapped mesh axes
+                    sel = shd.shard_logical_if_divisible(
+                        sel, (None, "topk"), mesh=self.mesh)
+                out[path] = sel
                 off += ns
         return out, {"overflow": overflow}
+
+    def _local_capacity(self, g: GroupSpec) -> int:
+        """Per-slab compaction budget for quota='local' — computed once
+        here so the single-device (`lift_indices_local`) and collective
+        (`lift_indices_sharded`) paths use the identical value and stay
+        bitwise-comparable."""
+        from repro.kernels import ops as kops
+        w = g.cols // self.quota_shards
+        bm, bn = kops.pick_block(g.rows), kops.pick_block(w)
+        return kops.compact_capacity(g.rows, w, g.k // self.quota_shards,
+                                     bm, bn, self.cfg.compact_factor)
 
     def _stream_group(self, w, kk, g: GroupSpec):
         """Streaming selection for one (ns, rows, cols) stacked batch:
         factorize (vmapped), then threshold + compaction kernels under one
-        lax.map — no (rows, cols) score intermediate anywhere."""
+        lax.map — no (rows, cols) score intermediate anywhere.  Groups
+        whose cols divide over the mesh's "shards" axis run the whole
+        pipeline as a shard_map collective instead (per-shard histograms,
+        shard-local compaction, O(k) all-gather merge)."""
         cfg = self.cfg
         a, b = jax.vmap(
             lambda w2d, k1: lowrank.lowrank_factors(
@@ -149,6 +243,19 @@ class SelectionEngine:
                 key=k1, oversample=cfg.oversample, iters=cfg.power_iters)
         )(w, kk)
         from repro.kernels import ops as kops
+        mode = self.group_exec[(g.rows, g.cols, g.k)]
+        if mode in ("sharded", "sharded-local"):
+            return self._stream_group_sharded(a, b, g, mode)
+        if mode == "streaming-local":
+            capacity = self._local_capacity(g)
+
+            def one_local(ab):
+                idx, _taus, ovf = kops.lift_indices_local(
+                    ab[0], ab[1], g.k, n_shards=self.quota_shards,
+                    capacity=capacity)
+                return idx, ovf
+
+            return jax.lax.map(one_local, (a, b))
         bm, bn = kops.pick_block(g.rows), kops.pick_block(g.cols)
         capacity = kops.compact_capacity(g.rows, g.cols, g.k, bm, bn,
                                          cfg.compact_factor)
@@ -160,11 +267,40 @@ class SelectionEngine:
 
         return jax.lax.map(one, (a, b))
 
+    def _stream_group_sharded(self, a, b, g: GroupSpec, mode: str):
+        """Collective selection for one stacked factor batch: B slabs stay
+        sharded over the "shards" mesh axis (in_specs) and each matrix in
+        the stack runs `lift_indices_sharded` under the mapped mesh —
+        per-device memory is O(rows/n_shards · r) factors plus the
+        O(compact_factor · k / n_shards) candidate buffer."""
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.kernels import ops as kops
+        quota = "local" if mode == "sharded-local" else "global"
+        capacity = self._local_capacity(g) if quota == "local" else 0
+        axis, n_shards, cfg = self.shard_axis, self.mesh_shards, self.cfg
+
+        def body(a3, b3):
+            def one(ab):
+                idx, _tau, ovf = kops.lift_indices_sharded(
+                    ab[0], ab[1], g.k, axis_name=axis, n_shards=n_shards,
+                    cols_global=g.cols, quota=quota, capacity=capacity,
+                    compact_factor=cfg.compact_factor)
+                return idx, ovf
+
+            return jax.lax.map(one, (a3, b3))
+
+        bspec = shd.logical_to_spec((None, "shards", None), self.mesh)
+        return shard_map(body, mesh=self.mesh, in_specs=(P(), bspec),
+                         out_specs=(P(), P()), check_rep=False)(a, b)
+
     def _dense_group(self, w, kk, gg, g: GroupSpec):
         cfg = self.cfg
 
         def one(w2d, key1, g2d=None):
             s = liftmod.scores_for(w2d, cfg, cfg.selection, key1, g2d)
+            if self.quota_shards > 1:
+                return local_topk_indices(s, g.k, self.quota_shards)
             return liftmod.topk_indices(s, g.k, cfg.block_size)
 
         if gg is None:
@@ -186,6 +322,13 @@ class SelectionEngine:
             "backend": self.backend,
             "selection": self.cfg.selection,
             "block_size": self.cfg.block_size,
+            "quota": self.cfg.quota,
+            "quota_shards": self.quota_shards,
+            "mesh": ({"shard_axis": self.shard_axis,
+                      "n_shards": self.mesh_shards}
+                     if self.mesh is not None else None),
+            "group_exec": {f"{r}x{c}k{k}": mode
+                           for (r, c, k), mode in self.group_exec.items()},
             "tensors": {
                 path: {"shape": list(p.shape), "stack": list(p.stack),
                        "rows": p.rows, "cols": p.cols, "k": p.k}
@@ -194,10 +337,21 @@ class SelectionEngine:
 
     def validate_meta(self, meta: Optional[dict]) -> None:
         """Raise ValueError if a checkpoint's selection metadata is
-        incompatible with this engine's plan (geometry or k mismatch —
-        e.g. the density/rank flags changed between runs)."""
+        incompatible with this engine's plan (geometry, k or quota-policy
+        mismatch — e.g. the density/rank/quota flags changed between
+        runs)."""
         if not meta:
             return
+        if "quota" in meta:  # pre-quota checkpoints pass through
+            saved_q = (meta["quota"], meta.get("quota_shards", 1))
+            got_q = (self.cfg.quota, self.quota_shards)
+            if saved_q != got_q:
+                raise ValueError(
+                    f"checkpoint selection quota mismatch: saved "
+                    f"quota/shards {saved_q} vs current {got_q} — the "
+                    f"(ns, k) optimizer state on disk was selected under a "
+                    f"different quota policy; restart with the original "
+                    f"--quota/--mesh flags or discard the checkpoint")
         saved = meta.get("tensors", {})
         missing = sorted(set(saved) ^ set(self.plan))
         if missing:

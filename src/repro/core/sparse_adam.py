@@ -15,13 +15,13 @@ refresh keep their moments, fresh entries restart at zero.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.lift import LiftConfig, TensorPlan, get_by_path, set_by_path
+from repro.core.lift import TensorPlan, get_by_path, set_by_path
 
 
 @dataclasses.dataclass(frozen=True)

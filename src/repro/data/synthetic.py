@@ -13,7 +13,6 @@ seeded and reproducible across hosts.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional
 
 import numpy as np
 

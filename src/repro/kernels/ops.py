@@ -68,6 +68,36 @@ def lift_threshold(a, b, k: int, passes: int = 2, nbins: int = 512,
     return _lift_threshold_lohi(a, b, k, passes, nbins, bm, bn, interpret)[0]
 
 
+def hist_refine(hist, k: int, lo, hi, nbins: int):
+    """One histogram-refinement step of the threshold binary search:
+    narrow (lo, hi) to the single bin whose lower edge keeps >= k entries
+    above it.  `hist` may be a single-device histogram or the psum of
+    per-shard histograms — the search only sees the (nbins,) counts, which
+    is what makes the sharded threshold search bitwise-identical to the
+    single-device one (integer counts are exact under any reduction
+    order)."""
+    # count of entries strictly above each bin's lower edge
+    above = jnp.cumsum(hist[::-1])[::-1]          # above[i] = sum(hist[i:])
+    # smallest bin whose lower edge keeps >= k entries above it
+    ok = above >= k
+    j = jnp.maximum(jnp.sum(ok) - 1, 0)           # last True index
+    width = (hi - lo) / nbins
+    new_lo = lo + j * width
+    return new_lo, new_lo + width
+
+
+def tau_from_lohi(lo, hi):
+    """Back off one final-bin width: the histogram counts bin membership
+    (>= lo) while the compact kernel compares strictly (> tau), and the
+    bin-id rounding can disagree with the direct comparison by a few ulps
+    — a full bin below lo re-covers every counted entry, adding only
+    final-bin ties that the sort+truncate drops again.  The bin width can
+    underflow to 0 in f32 once the passes exhaust the mantissa, so floor
+    the backoff at ~8 ulp of lo."""
+    width = jnp.maximum(hi - lo, jnp.abs(lo) * 1e-6)
+    return jnp.maximum(lo - width, 0.0)
+
+
 def _lift_threshold_lohi(a, b, k: int, passes: int = 2, nbins: int = 512,
                          bm: int = 256, bn: int = 256,
                          interpret: Optional[bool] = None):
@@ -78,15 +108,7 @@ def _lift_threshold_lohi(a, b, k: int, passes: int = 2, nbins: int = 512,
     hi = lowrank_absmax(a, b, bm, bn, interpret) * (1 + 1e-6)
     for _ in range(passes):
         hist = lowrank_hist(a, b, lo, hi, nbins, bm, bn, interpret)
-        # count of entries strictly above each bin's lower edge
-        above = jnp.cumsum(hist[::-1])[::-1]          # above[i] = sum(hist[i:])
-        # smallest bin whose lower edge keeps >= k entries above it
-        ok = above >= k
-        j = jnp.maximum(jnp.sum(ok) - 1, 0)           # last True index
-        width = (hi - lo) / nbins
-        new_lo = lo + j * width
-        new_hi = new_lo + width
-        lo, hi = new_lo, new_hi
+        lo, hi = hist_refine(hist, k, lo, hi, nbins)
     return lo, hi
 
 
@@ -176,6 +198,15 @@ def lift_indices(a, b, k: int, passes: int = 3, nbins: int = 512,
     as a degraded mask, not a cosmetic stat.
     """
     interpret = _default_interpret() if interpret is None else interpret
+    return _lift_indices_body(a, b, k, passes, nbins, capacity, bm, bn,
+                              interpret)
+
+
+def _lift_indices_body(a, b, k: int, passes: int, nbins: int, capacity: int,
+                       bm: int, bn: int, interpret: bool):
+    """Un-jitted `lift_indices` body, shared verbatim by the single-device,
+    per-slab local-quota and shard_map'd collective entry points so their
+    per-slab arithmetic is bit-identical."""
     m, n = a.shape[0], b.shape[0]
     if m % min(bm, m) or n % min(bn, n):
         bm, bn = pick_block(m, bm), pick_block(n, bn)
@@ -186,15 +217,7 @@ def lift_indices(a, b, k: int, passes: int = 3, nbins: int = 512,
         raise ValueError(
             f"compaction candidate buffer {tiles_total}x{capacity} < k={k}")
     lo, hi = _lift_threshold_lohi(a, b, k, passes, nbins, bm, bn, interpret)
-    # back off one final-bin width: the histogram counts bin membership
-    # (>= lo) while the compact kernel compares strictly (> tau), and the
-    # bin-id rounding can disagree with the direct comparison by a few ulps
-    # — a full bin below lo re-covers every counted entry, adding only
-    # final-bin ties that the sort+truncate drops again.  The bin width can
-    # underflow to 0 in f32 once the passes exhaust the mantissa, so floor
-    # the backoff at ~8 ulp of lo.
-    width = jnp.maximum(hi - lo, jnp.abs(lo) * 1e-6)
-    tau = jnp.maximum(lo - width, 0.0)
+    tau = tau_from_lohi(lo, hi)
     tiles, counts = lowrank_compact(a, b, tau, capacity, bm, bn, interpret)
     cand = jnp.sort(tiles.reshape(-1))
     # `stored`, not sum(counts): a tile whose above-tau population exceeds
@@ -209,6 +232,173 @@ def lift_indices(a, b, k: int, passes: int = 3, nbins: int = 512,
     # order; duplicates remain possible in the degraded case only.
     idx = jnp.sort(idx)
     overflow = jnp.sum(jnp.maximum(counts - capacity, 0))
+    return idx.astype(jnp.int32), tau, overflow
+
+
+# ------------------------------------------------- sharded / local quota
+def _slab_to_global(idx_local, cols_local: int, cols_global: int, col0):
+    """Map local flat indices of a (rows, cols_local) column slab into the
+    (rows, cols_global) matrix whose columns [col0, col0 + cols_local) the
+    slab holds.  Sentinel entries stay sentinel.  Pad slots (positions
+    [0, k) emitted by the degraded path) map like real indices — still
+    in-range, preserving `lift_indices`' pad contract."""
+    r = idx_local // cols_local
+    c = idx_local % cols_local
+    g = r * cols_global + col0 + c
+    return jnp.where(idx_local == lrm.INT32_SENTINEL, lrm.INT32_SENTINEL,
+                     g).astype(jnp.int32)
+
+
+def shard_buffer_model(m: int, n: int, k: int, n_shards: int,
+                       factor: int = 8) -> dict:
+    """Modeled per-device candidate-buffer footprint of sharded streaming
+    selection (benchmarks + DESIGN.md).  The compaction buffer is the only
+    per-device intermediate that scales with k; everything else is O(tiles)
+    counts or O(nbins) histograms.  Returns slot counts, bytes and the
+    O(compact_factor * k / n_shards) bound it must respect."""
+    nl = n // n_shards
+    bm, bn = pick_block(m), pick_block(nl)
+    kq = -(-k // n_shards)
+    cap = compact_capacity(m, nl, kq, bm, bn, factor)
+    tiles = (m // bm) * (nl // bn)
+    buffer_slots = tiles * cap
+    # compact_capacity rounds the per-tile budget up to a 128-lane multiple
+    # and floors it at 128 slots, so the worst case is the exact
+    # factor * kq share plus one lane-rounding per tile plus the floor.
+    bound_slots = factor * kq + tiles * (128 + factor)
+    return {
+        "n_shards": n_shards, "tiles_per_device": tiles,
+        "capacity_per_tile": cap,
+        "buffer_slots_per_device": buffer_slots,
+        "buffer_bytes_per_device": 4 * buffer_slots,
+        "bound_slots_per_device": bound_slots,
+        "within_bound": bool(buffer_slots <= bound_slots),
+    }
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "n_shards", "passes", "nbins",
+                                    "capacity", "bm", "bn", "interpret"))
+def lift_indices_local(a, b, k: int, n_shards: int, passes: int = 3,
+                       nbins: int = 512, capacity: int = 0,
+                       bm: int = 256, bn: int = 256,
+                       interpret: Optional[bool] = None):
+    """Local-quota streaming selection on a single device (DESIGN.md §3
+    "local" mode): the columns are split into `n_shards` slabs and each
+    slab runs the full threshold+compaction pipeline for its exact
+    k/n_shards quota — the streaming analogue of
+    `core.local_quota.local_topk_indices`, and the single-device reference
+    the shard_map'd collective path must match bitwise.
+
+    Returns (idx (k,) int32 sorted ascending GLOBAL flat indices,
+    tau (n_shards,) per-slab thresholds, overflow i32 total)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    m, n = a.shape[0], b.shape[0]
+    if n % n_shards or k % n_shards:
+        raise ValueError(
+            f"local-quota selection needs cols and k divisible by n_shards: "
+            f"cols={n}, k={k}, n_shards={n_shards}")
+    w = n // n_shards
+    kq = k // n_shards
+    slabs = b.reshape(n_shards, w, b.shape[1])
+    col0 = jnp.arange(n_shards, dtype=jnp.int32) * w
+
+    def one(args):
+        b_slab, c0 = args
+        idx_l, tau, ovf = _lift_indices_body(a, b_slab, kq, passes, nbins,
+                                             capacity, bm, bn, interpret)
+        return _slab_to_global(idx_l, w, n, c0), tau, ovf
+
+    g, taus, ovfs = jax.lax.map(one, (slabs, col0))
+    return jnp.sort(g.reshape(-1)), taus, jnp.sum(ovfs)
+
+
+def lift_indices_sharded(a, b_local, k: int, *, axis_name: str,
+                         n_shards: int, cols_global: int,
+                         quota: str = "global", passes: int = 3,
+                         nbins: int = 512, capacity: int = 0,
+                         compact_factor: int = 8,
+                         bm: int = 256, bn: int = 256,
+                         interpret: Optional[bool] = None):
+    """Collective streaming selection over column-slab-sharded factors.
+
+    MUST run inside `shard_map` with `axis_name` bound: `a` is the
+    replicated (rows, r) factor, `b_local` the shard's (cols/n_shards, r)
+    slab of B — the shard's slice of where the weights live.  Neither W',
+    the score matrix, nor a gathered B ever materializes; the only
+    cross-shard traffic is O(nbins) histogram psums, one scalar pmax and
+    one O(k)-entry all-gather of candidate indices.
+
+    quota="global": per-shard histograms psum into the threshold search
+    (bitwise-identical counts to the single-device search), each shard
+    compacts its own above-tau candidates with an O(k / n_shards) buffer,
+    and the merge is one all-gather + sort of the O(k) survivors —
+    bitwise-identical indices to single-device `lift_indices` whenever no
+    tile overflows its capacity.
+
+    quota="local": no cross-shard reduction at all — each shard runs the
+    exact-k/n_shards pipeline on its slab (bitwise-identical per slab to
+    `lift_indices_local`); the single all-gather only assembles the (k,)
+    output vector.
+
+    Returns (idx (k,) int32 sorted ascending GLOBAL flat indices,
+    replicated; tau f32 — this shard's threshold under "local", the global
+    threshold under "global"; overflow i32 summed over shards)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    m, nl = a.shape[0], b_local.shape[0]
+    shard = jax.lax.axis_index(axis_name)
+    col0 = (shard * nl).astype(jnp.int32)
+
+    if quota == "local":
+        if k % n_shards:
+            raise ValueError(
+                f"local-quota selection needs k divisible by n_shards: "
+                f"k={k}, n_shards={n_shards}")
+        kq = k // n_shards
+        idx_l, tau, ovf = _lift_indices_body(a, b_local, kq, passes, nbins,
+                                             capacity, bm, bn, interpret)
+        g = _slab_to_global(idx_l, nl, cols_global, col0)
+        gall = jax.lax.all_gather(g, axis_name).reshape(-1)
+        return (jnp.sort(gall), tau, jax.lax.psum(ovf, axis_name))
+    if quota != "global":
+        raise ValueError(f"unknown quota mode {quota!r}")
+
+    if m % min(bm, m) or nl % min(bn, nl):
+        bm, bn = pick_block(m, bm), pick_block(nl, bn)
+    if capacity <= 0:
+        # per-shard slot budget sized by this shard's uniform share of k:
+        # the whole candidate buffer stays O(compact_factor * k / n_shards)
+        # per device (shard_buffer_model documents the exact bound)
+        capacity = compact_capacity(m, nl, -(-k // n_shards), bm, bn,
+                                    compact_factor)
+    tiles_local = (m // min(bm, m)) * (nl // min(bn, nl))
+    if tiles_local * n_shards * capacity < k:
+        raise ValueError(
+            f"sharded compaction candidate buffer "
+            f"{n_shards}x{tiles_local}x{capacity} < k={k}")
+
+    # global threshold search over psum'd per-shard histograms: the bin
+    # counts (integers) are exact under any reduction order, so lo/hi/tau
+    # match the single-device search bit for bit
+    hi = jax.lax.pmax(lowrank_absmax(a, b_local, bm, bn, interpret),
+                      axis_name) * (1 + 1e-6)
+    lo = jnp.float32(0.0)
+    for _ in range(passes):
+        hist = lowrank_hist(a, b_local, lo, hi, nbins, bm, bn, interpret)
+        hist = jax.lax.psum(hist, axis_name)
+        lo, hi = hist_refine(hist, k, lo, hi, nbins)
+    tau = tau_from_lohi(lo, hi)
+
+    # shard-local compaction -> O(k) all-gather merge (never the scores)
+    tiles, counts = lowrank_compact(a, b_local, tau, capacity, bm, bn,
+                                    interpret)
+    g = _slab_to_global(tiles.reshape(-1), nl, cols_global, col0)
+    cand = jnp.sort(jax.lax.all_gather(g, axis_name).reshape(-1))
+    stored = jax.lax.psum(jnp.sum(jnp.minimum(counts, capacity)), axis_name)
+    slot = jnp.arange(k, dtype=jnp.int32)
+    idx = jnp.sort(jnp.where(slot < stored, cand[:k], slot))
+    overflow = jax.lax.psum(jnp.sum(jnp.maximum(counts - capacity, 0)),
+                            axis_name)
     return idx.astype(jnp.int32), tau, overflow
 
 

@@ -258,7 +258,7 @@ def main():
 
 def orchestrate(args):
     """Run every cell in a subprocess (isolates XLA state + memory)."""
-    from repro.configs import ARCHS, ASSIGNED, LM_SHAPES
+    from repro.configs import ASSIGNED, LM_SHAPES
     meshes = ["single", "multi"] if args.both_meshes else \
         (["multi"] if args.multi_pod else ["single"])
     cells = []

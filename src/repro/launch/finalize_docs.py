@@ -1,5 +1,4 @@
 """Splice the generated §Dry-run and §Roofline tables into EXPERIMENTS.md."""
-import re
 
 from repro.launch.report import dryrun_markdown
 from repro.launch.roofline import markdown as roofline_markdown

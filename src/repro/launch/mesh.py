@@ -35,6 +35,38 @@ def make_host_mesh(data: int = 1, model: int = 1):
     return jax.make_mesh((data, model), ("data", "model"), **_axis_types(2))
 
 
+def parse_mesh_spec(spec: str):
+    """"DATAxMODEL" (e.g. "1x8", "4x2") -> host mesh, for the launcher's
+    `--mesh` flag.  Validates against the visible device count so a typo
+    fails with the topology instead of a deep jax error."""
+    parts = spec.lower().replace("x", ",").split(",")
+    if len(parts) != 2:
+        raise ValueError(
+            f"--mesh expects DATAxMODEL (e.g. 1x8), got {spec!r}")
+    try:
+        data, model = int(parts[0]), int(parts[1])
+    except ValueError:
+        raise ValueError(
+            f"--mesh expects two integers DATAxMODEL, got {spec!r}") from None
+    if data < 1 or model < 1:
+        raise ValueError(f"--mesh axes must be >= 1, got {spec!r}")
+    avail = jax.device_count()
+    if data * model > avail:
+        raise ValueError(
+            f"--mesh {spec!r} needs {data * model} devices but only "
+            f"{avail} are visible (set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=N for host "
+            f"meshes)")
+    return make_host_mesh(data, model)
+
+
+def selection_shards(mesh) -> int:
+    """Shard count the SelectionEngine will see on `mesh` (the size of the
+    mesh axes behind the "shards" logical axis)."""
+    from repro.parallel.sharding import logical_axis_size
+    return logical_axis_size("shards", mesh)
+
+
 # hardware constants for the roofline (per chip) — TPU v5e-like
 PEAK_FLOPS_BF16 = 197e12       # FLOP/s
 HBM_BW = 819e9                 # bytes/s

@@ -1,10 +1,8 @@
 """Generate the EXPERIMENTS.md §Dry-run table from results/dryrun/."""
 from __future__ import annotations
 
-import json
-import os
 
-from repro.launch.roofline import RESULTS_DIR, load_results
+from repro.launch.roofline import load_results
 
 
 def dryrun_markdown() -> str:

@@ -13,8 +13,6 @@ mesh comes from jax.devices()).
 from __future__ import annotations
 
 import argparse
-import os
-import time
 
 import jax
 import jax.numpy as jnp
@@ -40,6 +38,16 @@ def main():
                     help="streaming Pallas selection (threshold + "
                          "compaction kernels; no (rows, cols) score "
                          "matrix is ever materialized)")
+    ap.add_argument("--mesh", default="",
+                    help="DATAxMODEL device mesh (e.g. 1x8): shards params "
+                         "by logical axes and runs mask selection/refresh "
+                         "as a shard_map collective over the model axis "
+                         "(per-shard histograms + O(k) index all-gather)")
+    ap.add_argument("--quota", default="global",
+                    choices=["global", "local"],
+                    help="'local' gives every model-parallel shard an "
+                         "exact k/n_shards selection budget — "
+                         "collective-free refresh (DESIGN.md §3)")
     ap.add_argument("--task", default="arith")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=10)
@@ -62,25 +70,45 @@ def main():
     from repro.models import build_model
     from repro.training import trainer as T
 
+    from repro.launch.mesh import parse_mesh_spec, selection_shards
+    from repro.parallel.sharding import set_sharding_ctx, tree_shardings
+
     bundle = get_arch(args.arch)
     cfg = bundle.smoke if args.smoke else bundle.full
     if cfg.vocab_size < VOCAB_SIZE:
         cfg = cfg.replace(vocab_size=128)
     model = build_model(cfg)
 
+    mesh = parse_mesh_spec(args.mesh) if args.mesh else None
+    if mesh is not None:
+        # the ctx must be live BEFORE the engine is built: the engine
+        # snapshots it to decide which groups run as shard_map collectives
+        set_sharding_ctx(mesh)
+        print(f"[mesh] {dict(mesh.shape)} — selection shards over "
+              f"{selection_shards(mesh)} device(s)")
+
     method = T.MethodConfig(
         kind=args.method,
         lift=LiftConfig(rank=args.lift_rank, density=args.lift_density,
                         method="exact", update_interval=args.update_interval,
-                        min_dim=16, use_kernel=args.use_kernel),
+                        min_dim=16, use_kernel=args.use_kernel,
+                        quota=args.quota),
         peft=PeftConfig(rank=args.lift_rank))
     adam = sa.AdamConfig(lr=args.lr, grad_clip=1.0)
 
     key = jax.random.PRNGKey(args.seed)
     params = model.init(key)
+    if mesh is not None:
+        sh = tree_shardings(model.axes(), mesh)
+        params = jax.tree.map(jax.device_put, params, sh)
     # one SelectionEngine instance serves init, every refresh, and the
     # checkpoint plan fingerprint (single jitted selection program)
-    engine = T.selection_engine(model, method)
+    engine = T.selection_engine(model, method, mesh=mesh)
+    if engine is not None and mesh is not None:
+        sharded = sorted(m for m in engine.group_exec.values()
+                         if m.startswith("sharded"))
+        print(f"[mesh] selection groups: "
+              f"{len(sharded)}/{len(engine.group_exec)} sharded")
     params, state = T.init_train_state(model, params, method,
                                        jax.random.PRNGKey(args.seed + 1),
                                        engine=engine)

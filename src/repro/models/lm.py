@@ -14,8 +14,6 @@ advances one token.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +26,6 @@ from repro.nn import moe as moemod
 from repro.nn import rwkv6 as rwkvmod
 from repro.nn.attention import (KVCache, attention, attention_decode,
                                 attention_prefill, attention_spec)
-from repro.nn.core import Spec
 from repro.parallel.sharding import shard_logical
 
 

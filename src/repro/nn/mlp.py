@@ -2,7 +2,6 @@
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.models.config import ModelConfig
 from repro.nn.core import Spec

@@ -17,7 +17,6 @@ shard_map-friendly primitives; on the 2-pod mesh it cuts the DCI bytes to
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax

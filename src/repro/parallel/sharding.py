@@ -108,13 +108,60 @@ def named_sharding(axes: Sequence[Union[str, None]],
     return NamedSharding(mesh, logical_to_spec(axes, mesh))
 
 
-def shard_logical(x: jax.Array, axes: Sequence[Union[str, None]]) -> jax.Array:
+def shard_logical(x: jax.Array, axes: Sequence[Union[str, None]],
+                  mesh: Optional[Mesh] = None) -> jax.Array:
     """with_sharding_constraint by logical axes; no-op without an active mesh."""
-    mesh = _CTX.mesh
+    mesh = mesh if mesh is not None else _CTX.mesh
     if mesh is None:
         return x
     spec = logical_to_spec(axes, mesh)
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def mesh_axes_for(logical: Optional[str],
+                  mesh: Optional[Mesh] = None,
+                  rules: Optional[dict] = None) -> tuple:
+    """Physical mesh axes a single logical axis resolves to (may be ())."""
+    mesh = mesh if mesh is not None else _CTX.mesh
+    if mesh is None:
+        return ()
+    entry = logical_to_spec((logical,), mesh, rules)[0]
+    if entry is None:
+        return ()
+    return (entry,) if isinstance(entry, str) else tuple(entry)
+
+
+def logical_axis_size(logical: Optional[str],
+                      mesh: Optional[Mesh] = None,
+                      rules: Optional[dict] = None) -> int:
+    """Number of shards the logical axis spreads over on the mesh (1 when
+    unmapped or no mesh is active).  The SelectionEngine uses
+    logical_axis_size("shards") to size its per-shard selection quota."""
+    mesh = mesh if mesh is not None else _CTX.mesh
+    if mesh is None:
+        return 1
+    size = 1
+    for ax in mesh_axes_for(logical, mesh, rules):
+        size *= mesh.shape[ax]
+    return size
+
+
+def shard_logical_if_divisible(x: jax.Array,
+                               axes: Sequence[Union[str, None]],
+                               mesh: Optional[Mesh] = None) -> jax.Array:
+    """`shard_logical` that nulls any dim whose mapped mesh-axis product
+    does not divide the dim size (e.g. a (ns, k) index set whose k is not
+    a multiple of the "topk" axes) instead of tripping an XLA error."""
+    mesh = mesh if mesh is not None else _CTX.mesh
+    if mesh is None:
+        return x
+    eff = []
+    for dim, ax in zip(x.shape, axes):
+        n = 1
+        for a in mesh_axes_for(ax, mesh):
+            n *= mesh.shape[a]
+        eff.append(ax if (n > 1 and dim % n == 0) else None)
+    return shard_logical(x, tuple(eff), mesh)
 
 
 def tree_shardings(axes_tree, mesh: Optional[Mesh] = None):

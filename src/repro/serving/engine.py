@@ -12,7 +12,7 @@ Greedy or temperature sampling; deterministic under a seed.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,6 @@ function — the host loop calls it every N steps (paper App. B.1).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Optional
 
 import jax
@@ -66,14 +65,25 @@ def merge_subtree(params, sub):
 
 
 # ------------------------------------------------------------------ setup
-def selection_engine(model, method: MethodConfig) -> Optional[SelectionEngine]:
+def selection_engine(model, method: MethodConfig,
+                     mesh=None) -> Optional[SelectionEngine]:
     """The (lift/sparse) method's SelectionEngine; None for other methods.
 
     Build this ONCE per run and pass it to `init_train_state` /
     `make_refresh_step` so init and every refresh share one jitted
-    selection program (and one plan fingerprint for checkpoints)."""
+    selection program (and one plan fingerprint for checkpoints).
+
+    `mesh` (optional) builds the engine under that sharding ctx so
+    selection runs as a shard_map collective where the weights live
+    (per-shard histograms -> psum'd threshold search -> shard-local
+    compaction -> O(k) all-gather; DESIGN.md §3).  Without it the engine
+    snapshots whatever ctx is already active."""
     if method.kind not in ("lift", "sparse"):
         return None
+    if mesh is not None:
+        from repro.parallel.sharding import sharding_ctx
+        with sharding_ctx(mesh):
+            return SelectionEngine.from_spec(model.spec(), method.lift)
     return SelectionEngine.from_spec(model.spec(), method.lift)
 
 

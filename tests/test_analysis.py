@@ -1,6 +1,5 @@
 """Analysis toolkit: alignment score, update rank, perturbation locality."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.analysis import (alignment_score, perturb_at_indices,

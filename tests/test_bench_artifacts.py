@@ -1,0 +1,71 @@
+"""Benchmark artifact schema (docs/CI.md): the BENCH_*.json documents CI
+uploads must validate, and the validator must catch the semantic
+invariants (index agreement, per-device buffer bound) — those gate the
+job; absolute timings never do."""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.bench_schema import SCHEMA_VERSION, validate  # noqa: E402
+from benchmarks.common import (_parse_derived, bench_doc,  # noqa: E402
+                               write_bench_json)
+
+
+def _rows():
+    return [
+        {"name": "kern/x", "us_per_call": 1.5, "derived": "a=1;b=2.5;c=z",
+         "metrics": {"a": 1, "b": 2.5, "c": "z"}},
+        {"name": "sel/64x64-d0.05-streaming", "us_per_call": 2.0,
+         "derived": "agree=1.00000", "metrics": {"agree": 1.0}},
+        {"name": "shardsel/64x64-d0.05-s4", "us_per_call": 0.0,
+         "derived": "within_bound=True",
+         "metrics": {"within_bound": True, "buffer_slots_per_device": 10,
+                     "bound_slots_per_device": 20}},
+    ]
+
+
+def test_valid_doc_roundtrips(tmp_path):
+    path = tmp_path / "BENCH_kernels_micro.json"
+    write_bench_json(str(path), _rows(), suite="kernels_micro")
+    doc = json.loads(path.read_text())
+    assert doc["schema_version"] == SCHEMA_VERSION
+    assert validate(doc) == []
+    assert doc["rows"][0]["metrics"] == {"a": 1, "b": 2.5, "c": "z"}
+
+
+def test_parse_derived_fallback_for_legacy_rows():
+    assert _parse_derived("k=3;f=0.5;s=abc;malformed") == {
+        "k": 3, "f": 0.5, "s": "abc"}
+    doc = bench_doc([{"name": "fig/x", "us_per_call": 0.0,
+                      "derived": "r4=0.17;r8=0.22"}], suite="fig17")
+    assert doc["rows"][0]["metrics"] == {"r4": 0.17, "r8": 0.22}
+    assert validate(doc) == []
+
+
+@pytest.mark.parametrize("mutate, expect", [
+    (lambda d: d.pop("rows"), "rows"),
+    (lambda d: d.update(schema_version=99), "schema_version"),
+    (lambda d: d["rows"][0].update(us_per_call=-1), "us_per_call"),
+    (lambda d: d["rows"][1]["metrics"].update(agree=0.5), "agreement"),
+    (lambda d: d["rows"][2]["metrics"].update(within_bound=False),
+     "within_bound"),
+])
+def test_validator_catches_violations(mutate, expect):
+    doc = bench_doc(_rows(), suite="kernels_micro")
+    assert validate(doc) == []
+    mutate(doc)
+    errs = validate(doc)
+    assert errs and any(expect in e for e in errs), (expect, errs)
+
+
+def test_writer_refuses_invalid_rows(tmp_path):
+    bad = [{"name": "shardsel/overflowing", "us_per_call": 0.0,
+            "derived": "", "metrics": {"within_bound": False}}]
+    with pytest.raises(ValueError, match="within_bound"):
+        write_bench_json(str(tmp_path / "x.json"), bad,
+                         suite="kernels_micro")
+    assert not (tmp_path / "x.json").exists()

@@ -1,7 +1,6 @@
 """Infrastructure: data loader, checkpointing (atomicity, pruning, async,
 elastic restore), fault tolerance (preemption resume bit-exactness,
 straggler detection), serving engine, HLO collective parser."""
-import json
 import os
 import tempfile
 

@@ -10,9 +10,8 @@ except ImportError:  # container lacks hypothesis: deterministic shim
     from hypothesis_fallback import given, settings, st
 
 from repro.core import lowrank, sparse_adam as sa
-from repro.core.lift import (LiftConfig, compute_indices, make_plan,
-                             mask_from_indices, topk_indices, get_by_path,
-                             scores_for)
+from repro.core.lift import (
+    LiftConfig, compute_indices, make_plan, topk_indices, get_by_path, scores_for)
 from repro.models import ModelConfig, build_model
 
 CFG = ModelConfig(family="dense", num_layers=2, d_model=64, num_heads=4,

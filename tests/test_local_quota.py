@@ -78,6 +78,29 @@ def test_compute_indices_local_plugs_into_plan():
         assert a.min() >= 0 and a.max() < p.rows * p.cols
 
 
+def test_compute_indices_local_rejects_ragged_with_tensor_path():
+    """A plan tensor whose cols or k don't divide by n_shards must raise
+    at once, naming the tensor — the historical silent fallback to a
+    global top-k made 'local' selection geometry-dependent in a way no
+    caller could observe."""
+    from repro.core.lift import TensorPlan
+    plan = {"blocks/mlp/up": TensorPlan("blocks/mlp/up", (64, 100), (),
+                                        64, 100, 200)}
+    params = {"blocks/mlp/up": jax.random.normal(jax.random.PRNGKey(0),
+                                                 (64, 100))}
+    with pytest.raises(ValueError, match="blocks/mlp/up"):
+        compute_indices_local(params, plan, LiftConfig(rank=4, min_dim=16),
+                              jax.random.PRNGKey(1), n_shards=8)
+
+
+def test_overlap_with_global_rejects_ragged():
+    s = jnp.abs(jax.random.normal(jax.random.PRNGKey(5), (32, 60)))
+    with pytest.raises(ValueError, match="divisible"):
+        overlap_with_global(s, 64, 8)     # cols 60 % 8 != 0
+    with pytest.raises(ValueError, match="divisible"):
+        overlap_with_global(s, 63, 4)     # k 63 % 4 != 0
+
+
 def test_overlap_high_on_lowrank_spectra():
     """On low-rank-structured scores (LIFT's actual regime) the quota
     deviation is small."""

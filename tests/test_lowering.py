@@ -2,7 +2,6 @@
 lower+compile for a smoke config (the 512-device production sweep runs via
 launch/dryrun.py; this guards the plumbing in-process)."""
 import jax
-import numpy as np
 import pytest
 
 from repro.configs import LM_SHAPES, get_arch

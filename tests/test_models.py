@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ARCHS, ASSIGNED, get_arch
+from repro.configs import ASSIGNED, get_arch
 from repro.models import ModelConfig, build_model
 
 BASE = dict(num_layers=2, d_model=32, num_heads=4, num_kv_heads=2,

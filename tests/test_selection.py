@@ -216,6 +216,31 @@ def test_plan_meta_roundtrip_and_mismatch():
         eng.validate_meta(bad2)
 
 
+def test_validate_meta_rejects_quota_policy_change():
+    """A checkpoint selected under one quota policy must not restore
+    under another: the tensor geometry is identical in both modes, but
+    the (ns, k) index sets were chosen by a different rule."""
+    m = build_model(CFG)
+    lcfg = LiftConfig(rank=8, match_rank=2, method="exact", min_dim=16)
+    eng = SelectionEngine.from_spec(m.spec(), lcfg)
+    local = SelectionEngine.from_spec(
+        m.spec(), lcfg.replace(quota="local", quota_shards=4))
+    with pytest.raises(ValueError, match="quota mismatch"):
+        eng.validate_meta(local.plan_meta())
+    with pytest.raises(ValueError, match="quota mismatch"):
+        local.validate_meta(eng.plan_meta())
+    # a different LOCAL shard count is a different policy too
+    local8 = SelectionEngine.from_spec(
+        m.spec(), lcfg.replace(quota="local", quota_shards=8))
+    with pytest.raises(ValueError, match="quota mismatch"):
+        local.validate_meta(local8.plan_meta())
+    local.validate_meta(local.plan_meta())   # self-consistent
+    # pre-quota checkpoints (no "quota" key) still pass through
+    old = json.loads(json.dumps(eng.plan_meta()))
+    del old["quota"], old["quota_shards"]
+    eng.validate_meta(old)
+
+
 # ------------------------------------------------------------ end-to-end
 def test_smoke_train_streaming_subprocess():
     """`launch.train --smoke --method lift --use-kernel` must run init +

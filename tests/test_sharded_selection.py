@@ -1,0 +1,260 @@
+"""Sharded streaming selection parity (DESIGN.md §3).
+
+The shard_map'd SelectionEngine path (per-shard histograms psum'd into
+the threshold search, shard-local compaction, O(k) all-gather merge) must
+return IDENTICAL index sets to the single-device engine:
+
+  * quota="global": bitwise-identical — the psum'd integer histograms
+    drive the same binary search to the same tau, so the candidate set
+    (and its sorted k-prefix) cannot differ;
+  * quota="local": bitwise-identical per construction — each shard runs
+    the exact single-device per-slab pipeline (`_lift_indices_body`);
+  * dense reference: the streaming paths agree with |A Bᵀ| -> lax.top_k
+    up to final-histogram-bin ties (bounded at 1e-3 of k).
+
+Runs in a subprocess (like test_distributed) so the 8 placeholder host
+devices never leak into other tests; the multi-device parity matrix
+(2, 4, 8 shards) lives in ONE subprocess to amortize jax startup.
+In-process tests cover the single-device pieces: ragged-quota
+validation, the per-slab streaming-local kernel, and the engine's
+quota="local" unification with core/local_quota.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.lift import LiftConfig, TensorPlan
+from repro.core.local_quota import compute_indices_local, local_topk_indices
+from repro.core.selection import SelectionEngine
+from repro.kernels import ops as kops
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from functools import partial
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+from repro.core.lift import LiftConfig, TensorPlan
+from repro.core.selection import SelectionEngine
+from repro.kernels import ops as kops
+from repro.launch.mesh import make_host_mesh
+from repro.parallel.sharding import sharding_ctx
+
+GEOMS = [((2,), 128, 192, 0.05),   # stacked batch, rectangular
+         ((), 96, 128, 0.02)]      # single matrix, second kernel geometry
+
+
+def make_case(stack, rows, cols, density, seed):
+    k = max(8, int(density * rows * cols) // 8 * 8)
+    shape = tuple(stack) + (rows, cols)
+    plan = {"t": TensorPlan("t", shape, tuple(stack), rows, cols, k)}
+    w = jax.random.normal(jax.random.PRNGKey(seed), shape)
+    return plan, {"t": w}, k
+
+
+CFG = LiftConfig(rank=8, method="exact", min_dim=16, use_kernel=True)
+
+# ---- global quota: sharded == single-device, bitwise, per geometry group
+for gi, (stack, rows, cols, density) in enumerate(GEOMS):
+    plan, params, k = make_case(stack, rows, cols, density, seed=10 + gi)
+    ref_eng = SelectionEngine(plan, CFG)
+    assert ref_eng.group_exec == {(rows, cols, k): "streaming"}
+    ref_idx, ref_stats = ref_eng.select_with_stats(params,
+                                                   jax.random.PRNGKey(3))
+    assert int(ref_stats["overflow"]) == 0
+    # dense reference (|A B^T| -> lax.top_k) for the same group
+    dense_idx = SelectionEngine(plan, CFG.replace(use_kernel=False)).select(
+        params, jax.random.PRNGKey(3))
+    ns = max(1, int(np.prod(stack)))
+    agree = min(
+        len(np.intersect1d(np.asarray(dense_idx["t"]).reshape(ns, k)[i],
+                           np.asarray(ref_idx["t"]).reshape(ns, k)[i])) / k
+        for i in range(ns))
+    assert agree >= 1 - 1e-3, agree
+    for n_model in (2, 4, 8):
+        mesh = make_host_mesh(8 // n_model, n_model)
+        with sharding_ctx(mesh):
+            eng = SelectionEngine(plan, CFG)
+        assert eng.group_exec == {(rows, cols, k): "sharded"}, eng.group_exec
+        idx, stats = eng.select_with_stats(params, jax.random.PRNGKey(3))
+        assert np.array_equal(np.asarray(idx["t"]), np.asarray(ref_idx["t"])), \
+            (stack, rows, cols, n_model)
+        assert int(stats["overflow"]) == 0
+print("PARITY-GLOBAL-OK")
+
+# ---- local quota: sharded-local == streaming-local, bitwise
+for n_model in (2, 4, 8):
+    plan, params, k = make_case((2,), 128, 192, 0.05, seed=21)
+    cfgl = CFG.replace(quota="local", quota_shards=n_model)
+    ref_eng = SelectionEngine(plan, cfgl)
+    assert ref_eng.group_exec == {(128, 192, k): "streaming-local"}
+    ref_idx = ref_eng.select(params, jax.random.PRNGKey(5))
+    mesh = make_host_mesh(8 // n_model, n_model)
+    with sharding_ctx(mesh):
+        eng = SelectionEngine(plan, cfgl)
+    assert eng.group_exec == {(128, 192, k): "sharded-local"}
+    idx = eng.select(params, jax.random.PRNGKey(5))
+    assert np.array_equal(np.asarray(idx["t"]), np.asarray(ref_idx["t"])), \
+        n_model
+    # dense local-quota reference agrees up to final-bin ties
+    dl = SelectionEngine(plan, cfgl.replace(use_kernel=False)).select(
+        params, jax.random.PRNGKey(5))
+    agree = min(
+        len(np.intersect1d(np.asarray(dl["t"])[i],
+                           np.asarray(idx["t"])[i])) / k for i in range(2))
+    assert agree >= 1 - 1e-3, agree
+print("PARITY-LOCAL-OK")
+
+# ---- geometry that does not divide over the mesh falls back, same result
+plan, params, k = make_case((), 96, 100, 0.05, seed=31)   # 100 % 8 != 0
+ref_idx = SelectionEngine(plan, CFG).select(params, jax.random.PRNGKey(7))
+mesh = make_host_mesh(1, 8)
+with sharding_ctx(mesh):
+    eng = SelectionEngine(plan, CFG)
+assert eng.group_exec == {(96, 100, k): "streaming"}, eng.group_exec
+idx = eng.select(params, jax.random.PRNGKey(7))
+assert np.array_equal(np.asarray(idx["t"]), np.asarray(ref_idx["t"]))
+print("FALLBACK-OK")
+
+# ---- overflow path: adversarial mass in one tile, tiny capacity — both
+# paths must report the overflow and still return only in-range indices
+m = n = 256
+a = jnp.ones((m, 1)).at[128:].set(1e-3)
+b = jnp.ones((n, 1)).at[128:].set(1e-3)
+k = 512
+s_idx, _tau, s_ovf = kops.lift_indices(a, b, k, capacity=128, bm=128, bn=128)
+assert int(s_ovf) > 0
+mesh = make_host_mesh(1, 8)
+f = jax.jit(shard_map(
+    partial(kops.lift_indices_sharded, k=k, axis_name="model", n_shards=8,
+            cols_global=n, capacity=128, bm=128, bn=128),
+    mesh=mesh, in_specs=(P(), P("model", None)),
+    out_specs=(P(), P(), P()), check_rep=False))
+d_idx, _tau, d_ovf = f(a, b)
+assert int(d_ovf) > 0, int(d_ovf)
+d_idx = np.asarray(d_idx)
+assert d_idx.shape == (k,)
+assert d_idx.min() >= 0 and d_idx.max() < m * n   # sentinels never leak
+print("OVERFLOW-OK")
+
+# ---- fused refresh (select + migrate) under the mesh matches unsharded
+from repro.core import sparse_adam as sa
+plan, params, k = make_case((2,), 128, 192, 0.05, seed=41)
+ref_eng = SelectionEngine(plan, CFG)
+idx0 = ref_eng.select(params, jax.random.PRNGKey(0))
+state = sa.init_state(params, idx0, plan)
+params2 = {"t": params["t"] + 0.3 * jax.random.normal(
+    jax.random.PRNGKey(9), params["t"].shape)}
+ref_opt, _ = ref_eng.refresh_opt(params2, state, jax.random.PRNGKey(2))
+mesh = make_host_mesh(2, 4)
+with sharding_ctx(mesh):
+    eng = SelectionEngine(plan, CFG)
+opt, _ = eng.refresh_opt(params2, state, jax.random.PRNGKey(2))
+for leaf in ("idx", "m", "v"):
+    assert np.array_equal(np.asarray(opt["tensors"]["t"][leaf]),
+                          np.asarray(ref_opt["tensors"]["t"][leaf])), leaf
+print("REFRESH-OK")
+"""
+
+
+def test_sharded_selection_parity_matrix():
+    """2/4/8-shard engine parity vs single device: global quota bitwise,
+    local quota bitwise, dense-ref agreement, fallback, overflow, fused
+    refresh — one subprocess so the 8 host devices stay contained."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stderr[-3000:]
+    for marker in ("PARITY-GLOBAL-OK", "PARITY-LOCAL-OK", "FALLBACK-OK",
+                   "OVERFLOW-OK", "REFRESH-OK"):
+        assert marker in r.stdout, (marker, r.stdout)
+
+
+# --------------------------------------------- single-device local pieces
+def _plan(stack, rows, cols, k):
+    shape = tuple(stack) + (rows, cols)
+    return {"t": TensorPlan("t", shape, tuple(stack), rows, cols, k)}
+
+
+def test_lift_indices_local_matches_per_slab_reference():
+    """The fused local-quota kernel path == running `lift_indices` slab by
+    slab with offset columns (the definition of a per-shard quota)."""
+    rows, cols, k, n_shards = 96, 128, 256, 4
+    a = jax.random.normal(jax.random.PRNGKey(0), (rows, 8))
+    b = jax.random.normal(jax.random.PRNGKey(1), (cols, 8))
+    idx, taus, ovf = kops.lift_indices_local(a, b, k, n_shards)
+    assert int(ovf) == 0
+    w = cols // n_shards
+    parts = []
+    for j in range(n_shards):
+        ij, _t, _o = kops.lift_indices(a, b[j * w:(j + 1) * w], k // n_shards)
+        parts.append(np.asarray(ij) // w * cols + j * w + np.asarray(ij) % w)
+    ref = np.sort(np.concatenate(parts))
+    assert np.array_equal(np.asarray(idx), ref)
+    assert taus.shape == (n_shards,)
+
+
+def test_engine_local_quota_unifies_compute_indices_local():
+    """`compute_indices_local` (the historical side path) now routes
+    through SelectionEngine(quota='local') — both entry points must give
+    the same indices, and the dense engine must satisfy the per-slab
+    budget exactly."""
+    rows, cols, k, n = 64, 96, 192, 4
+    plan = _plan((1,), rows, cols, k)
+    params = {"t": jax.random.normal(jax.random.PRNGKey(2), (1, rows, cols))}
+    cfg = LiftConfig(rank=8, method="exact", min_dim=16)
+    via_wrapper = compute_indices_local(params, plan, cfg,
+                                        jax.random.PRNGKey(3), n_shards=n)
+    eng = SelectionEngine(plan, cfg.replace(quota="local", quota_shards=n))
+    assert eng.group_exec == {(rows, cols, k): "dense"}
+    via_engine = eng.select(params, jax.random.PRNGKey(3))
+    assert np.array_equal(np.asarray(via_wrapper["t"]),
+                          np.asarray(via_engine["t"]))
+    sel = np.asarray(via_engine["t"])[0]
+    shard = (sel % cols) // (cols // n)
+    assert (np.bincount(shard, minlength=n) == k // n).all()
+
+
+def test_engine_rejects_ragged_local_quota_with_tensor_path():
+    """cols or k not divisible by the quota shards must fail LOUDLY at
+    engine construction, naming the offending tensor."""
+    plan = _plan((), 64, 100, 200)        # cols 100 % 8 != 0
+    with pytest.raises(ValueError, match=r"'t'"):
+        SelectionEngine(plan, LiftConfig(quota="local", quota_shards=8))
+    plan2 = _plan((), 64, 96, 200)        # k 200 % 16 != 0
+    with pytest.raises(ValueError, match="divisible"):
+        SelectionEngine(plan2, LiftConfig(quota="local", quota_shards=16))
+    with pytest.raises(ValueError, match="quota mode"):
+        SelectionEngine(plan2, LiftConfig(quota="nope"))
+
+
+def test_local_topk_indices_rejects_ragged():
+    s = jnp.abs(jax.random.normal(jax.random.PRNGKey(0), (32, 60)))
+    with pytest.raises(ValueError, match="divisible"):
+        local_topk_indices(s, 64, 8)      # 60 % 8 != 0
+    with pytest.raises(ValueError, match="divisible"):
+        local_topk_indices(s, 30, 4)      # k 30 % 4 != 0
+    with pytest.raises(ValueError, match="divisible"):
+        local_topk_indices(s.T, 64, 8, axis=0)   # ragged rows via axis=0
+
+
+def test_shard_buffer_model_stays_within_bound():
+    """The modeled per-device compaction buffer respects the
+    O(compact_factor * k / n_shards) bound for every shard count the CI
+    matrix exercises (the acceptance invariant the benchmark records)."""
+    for m, n, density in [(512, 512, 0.01), (512, 512, 0.05),
+                          (256, 384, 0.2), (1024, 4096, 0.05)]:
+        k = int(density * m * n)
+        for n_shards in (1, 2, 4, 8):
+            if n % n_shards:
+                continue
+            rec = kops.shard_buffer_model(m, n, k, n_shards)
+            assert rec["within_bound"], (m, n, k, n_shards, rec)
+            assert rec["buffer_slots_per_device"] * n_shards >= k
