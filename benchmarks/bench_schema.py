@@ -17,7 +17,7 @@
 strings); `derived` keeps the human CSV string.  CI validates the schema
 and the SEMANTIC invariants below and fails on violations — it never
 fails on absolute timings (interpret-mode wall time is noise; the
-trajectory lives in the uploaded artifacts, DESIGN.md §7).
+trajectory lives in the uploaded artifacts, DESIGN.md §8).
 
 Semantic invariants for suite "kernels_micro":
   * every `sel/*-streaming` row reports `agree` in [0, 1] and
@@ -26,6 +26,13 @@ Semantic invariants for suite "kernels_micro":
   * every `shardsel/*` row reports `within_bound` == true — the modeled
     per-device candidate buffer of sharded streaming selection must stay
     within its O(compact_factor * k / n_shards) bound.
+
+Semantic invariants for suite "delta_merge" (DESIGN.md §4):
+  * every `merge/*-kernel` row reports `matches_ref` == true — the Pallas
+    scatter-merge must stay bitwise-identical to the dense reference;
+  * every `ratio/*` row reports `bytes_ratio`, and rows at the paper's
+    operating density (metric density <= 0.05) must keep the on-disk
+    delta artifact within 12 % of the dense checkpoint bytes.
 
 Usage: python -m benchmarks.bench_schema BENCH_kernels_micro.json [...]
 """
@@ -75,6 +82,8 @@ def validate(doc) -> list:
                             f"scalar, got {type(mv).__name__}")
         if suite == "kernels_micro":
             errs.extend(_kernels_micro_row(name, metrics))
+        if suite == "delta_merge":
+            errs.extend(_delta_merge_row(name, metrics))
     return errs
 
 
@@ -95,6 +104,28 @@ def _kernels_micro_row(name: str, metrics: dict) -> list:
                 f"buffer exceeded its O(compact_factor * k / n_shards) "
                 f"bound ({metrics.get('buffer_slots_per_device')} slots vs "
                 f"bound {metrics.get('bound_slots_per_device')})")
+    return errs
+
+
+def _delta_merge_row(name: str, metrics: dict) -> list:
+    errs = []
+    if name.startswith("merge/") and name.endswith("-kernel"):
+        if metrics.get("matches_ref") is not True:
+            errs.append(f"{name}: matches_ref must be true — the Pallas "
+                        f"scatter-merge diverged from the dense reference")
+    if name.startswith("ratio/"):
+        ratio = metrics.get("bytes_ratio")
+        if not isinstance(ratio, (int, float)) or isinstance(ratio, bool):
+            errs.append(f"{name}: ratio row needs numeric metric "
+                        f"bytes_ratio, got {ratio!r}")
+        else:
+            density = metrics.get("density")
+            if isinstance(density, (int, float)) and density <= 0.05 \
+                    and ratio > 0.12:
+                errs.append(
+                    f"{name}: delta artifact is {ratio:.3f}x the dense "
+                    f"checkpoint at density {density} — exceeds the 12% "
+                    f"O(k)-artifact bound (DESIGN.md §4)")
     return errs
 
 

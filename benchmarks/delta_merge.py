@@ -1,0 +1,116 @@
+"""DeltaHub merge benchmarks (DESIGN.md §4) — BENCH_delta_merge.json.
+
+Per density: the Pallas scatter-merge latency vs the dense jnp reference
+(interpret-mode wall time, regression tracking only) with a MEASURED
+bitwise-parity bit, and the artifact-size story — on-disk bytes of the
+saved `(indices, values)` artifact vs the dense planned-tensor bytes.
+The `ratio/` rows carry the CI-gated invariant (bench_schema.py): at the
+paper's operating density (<= 5 %) the artifact must stay within 12 % of
+the dense checkpoint — the O(k) distribution-unit claim that makes
+many-adapters-per-base serving viable.
+
+Machine-readable output: `python -m benchmarks.delta_merge --json
+BENCH_delta_merge.json` (schema: benchmarks/bench_schema.py).
+"""
+import argparse
+import os
+import tempfile
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_rows, timer, write_bench_json
+from repro.deltas.format import DeltaArtifact, make_manifest
+from repro.kernels import ops, ref
+
+CASES = [
+    # (ns, rows, cols, density)
+    (4, 256, 512, 0.01),
+    (4, 256, 512, 0.05),
+    (4, 256, 512, 0.10),
+]
+
+
+def _artifact(ns, rows, cols, k, seed=0):
+    rng = np.random.default_rng(seed)
+    base = rng.normal(size=(ns, rows * cols)).astype(np.float32)
+    idx = np.sort(np.stack([rng.choice(rows * cols, k, replace=False)
+                            for _ in range(ns)]), -1).astype(np.int32)
+    val = rng.normal(size=(ns, k)).astype(np.float32)
+    meta = {"t": {"shape": [ns, rows, cols], "stack": [ns], "rows": rows,
+                  "cols": cols, "k": k, "dtype": "float32"}}
+    art = DeltaArtifact(
+        manifest=make_manifest(mode="replace", base_hash="bench",
+                               selection=None, tensors_meta=meta, step=0),
+        tensors={"t": {"idx": idx, "val": val}})
+    return base, idx, val, art
+
+
+def _disk_bytes(art: DeltaArtifact, base: np.ndarray):
+    """On-disk artifact bytes vs the dense npz the checkpoint would ship."""
+    with tempfile.TemporaryDirectory() as d:
+        art.save(os.path.join(d, "delta"))
+        art_bytes = sum(
+            os.path.getsize(os.path.join(d, "delta", f))
+            for f in os.listdir(os.path.join(d, "delta")))
+        np.savez(os.path.join(d, "dense.npz"), t=base)
+        dense_bytes = os.path.getsize(os.path.join(d, "dense.npz"))
+    return art_bytes, dense_bytes
+
+
+def run():
+    rows = []
+    for ns, m, n, density in CASES:
+        k = max(128, int(density * m * n) // 128 * 128)
+        base_np, idx_np, val_np, art = _artifact(ns, m, n, k)
+        base = jnp.asarray(base_np)
+        idx = jnp.asarray(idx_np)
+        val = jnp.asarray(val_np)
+        name = f"{ns}x{m}x{n}-d{density}"
+
+        kern = jax.jit(lambda b, i, v: ops.sparse_scatter_merge(b, i, v))
+        dense = jax.jit(lambda b, i, v: ref.sparse_scatter_merge(b, i, v))
+        us_k, out_k = timer(kern, base, idx, val)
+        us_d, out_d = timer(dense, base, idx, val)
+        matches = bool(np.array_equal(np.asarray(out_k), np.asarray(out_d)))
+
+        art_bytes, dense_bytes = _disk_bytes(art, base_np)
+        ratio = art_bytes / dense_bytes
+        rows.append({
+            "name": f"merge/{name}-kernel", "us_per_call": us_k,
+            "derived": f"matches_ref={matches};k={k}",
+            "metrics": {"matches_ref": matches, "k": k,
+                        "density": density}})
+        rows.append({
+            "name": f"merge/{name}-ref", "us_per_call": us_d,
+            "derived": f"k={k}",
+            "metrics": {"k": k, "density": density}})
+        rows.append({
+            "name": f"ratio/{name}", "us_per_call": 0.0,
+            "derived": f"artifact_bytes={art_bytes};"
+                       f"dense_bytes={dense_bytes};"
+                       f"bytes_ratio={ratio:.4f}",
+            "metrics": {"artifact_bytes": int(art_bytes),
+                        "dense_bytes": int(dense_bytes),
+                        "bytes_ratio": float(ratio),
+                        "density": density}})
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="",
+                    help="write the machine-readable artifact here "
+                         "(BENCH_delta_merge.json; docs/CI.md)")
+    args = ap.parse_args()
+    rows = run()
+    csv_rows(rows)
+    if args.json:
+        write_bench_json(args.json, rows, suite="delta_merge")
+        print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

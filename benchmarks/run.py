@@ -1,4 +1,4 @@
-"""Benchmark harness — one module per paper table/figure (DESIGN.md §8).
+"""Benchmark harness — one module per paper table/figure (DESIGN.md §9).
 Prints ``name,us_per_call,derived`` CSV.  ``--only <prefix>`` filters;
 ``--json-dir DIR`` additionally writes one machine-readable
 ``BENCH_<module>.json`` per module (schema: benchmarks/bench_schema.py,
@@ -26,6 +26,7 @@ MODULES = [
     "benchmarks.fig16_rank_grid",         # Figure 16
     "benchmarks.fig17_selection_overlap", # Figure 17 / App G.9
     "benchmarks.kernels_micro",           # kernel hot-spots
+    "benchmarks.delta_merge",             # DeltaHub scatter-merge + bytes
 ]
 
 

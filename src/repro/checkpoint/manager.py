@@ -166,6 +166,27 @@ class CheckpointManager:
             tree = jax.tree.map(jax.numpy.asarray, tree)
         return tree
 
+    def restore_leaves(self, step: int, paths) -> dict:
+        """Partial restore: only the named leaf paths, as host arrays.
+
+        npz members decompress lazily per key, so unrelated leaves are
+        never read into memory — delta extraction pulls the planned
+        params plus the (ns, k) selection index leaves out of a multi-GB
+        checkpoint at O(touched bytes) cost instead of `restore`'s full
+        `arrays.npz` load.  Unknown paths raise KeyError (naming the
+        step), so a caller can't silently extract against a checkpoint
+        written by a different plan."""
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        out = {}
+        with np.load(os.path.join(path, "arrays.npz")) as z:
+            for p in paths:
+                key = p.replace("/", "\x1f")
+                if key not in z:
+                    raise KeyError(
+                        f"checkpoint step {step} has no leaf {p!r}")
+                out[p] = z[key]
+        return out
+
     def restore_meta(self, step: int) -> dict:
         path = os.path.join(self.dir, f"step_{step:08d}", "manifest.json")
         with open(path) as f:

@@ -45,6 +45,10 @@ class LiftConfig:
     use_kernel: bool = False      # Pallas streaming selection (kernels/)
     compact_factor: int = 8       # compaction-kernel slot budget, x the
                                   # uniform per-tile share of k
+    overflow_retry: bool = True   # auto-retry overflowed tensors with a
+                                  # doubled compact_factor (host-side,
+                                  # off the hot path; one scalar D2H per
+                                  # refresh — see engine.retry_overflow)
     quota: str = "global"         # global | local — "local" gives every
                                   # column-slab shard an exact k/n quota
                                   # (collective-free selection, DESIGN.md §3)

@@ -146,6 +146,8 @@ class SelectionEngine:
         # before tracing; one program per entry point.
         self._select_jit = jax.jit(self._select_impl)
         self._refresh_jit = jax.jit(self._refresh_impl)
+        # per-(geometry, compact_factor) retry programs (overflow recovery)
+        self._retry_cache: dict = {}
 
     def _exec_mode(self, g: GroupSpec) -> str:
         """dense | streaming | streaming-local | sharded | sharded-local."""
@@ -172,9 +174,12 @@ class SelectionEngine:
         return self.select_with_stats(params, key, grads)[0]
 
     def select_with_stats(self, params, key, grads=None):
-        """(indices, stats) where stats = {"overflow": i32 scalar} counts
-        candidate entries dropped by compaction-capacity overflow (always 0
-        on the dense backend; investigate `compact_factor` if nonzero)."""
+        """(indices, stats) where stats = {"overflow": i32 scalar,
+        "overflow_by_path": {path: i32 scalar}} counts candidate entries
+        dropped by compaction-capacity overflow (always 0 on the dense
+        backend).  A nonzero count means a degraded mask for that tensor —
+        `retry_overflow` recovers it host-side with a doubled
+        `compact_factor`."""
         return self._select_jit(params, key, grads)
 
     def refresh_opt(self, params, opt_state, key):
@@ -183,11 +188,83 @@ class SelectionEngine:
         `params` may be the planned subtree or the full tree."""
         return self._refresh_jit(params, opt_state, key)
 
+    # -------------------------------------------- overflow-adaptive retry
+    def retry_overflow(self, params, key, indices, stats, *,
+                       max_factor: int = 256):
+        """Overflow-adaptive compaction capacity (ROADMAP item): when the
+        fused program reports dropped candidates for a tensor, re-run
+        ONLY that tensor's selection host-side with a doubled
+        `compact_factor` (doubling again until clean or `max_factor`),
+        off the hot path.  `key` MUST be the key the degraded selection
+        ran with — per-path PRNG keys are re-derived identically, so a
+        clean retry returns exactly the indices the fused program would
+        have returned with enough capacity.
+
+        Returns (new_indices, retried, unresolved): `indices` with the
+        affected paths replaced, the retried path names (log these), and
+        the paths still overflowing at `max_factor` (degraded masks).
+        Reading the overflow stat forces a device sync — ONE scalar D2H
+        in the (overwhelmingly common) clean case, plus one batched
+        transfer of the per-path counts only when it is nonzero; callers
+        gate the whole call behind `LiftConfig.overflow_retry`."""
+        if self.backend != "streaming":
+            return indices, [], []
+        if int(jax.device_get(stats["overflow"])) == 0:
+            return indices, [], []
+        by_path = jax.device_get(stats.get("overflow_by_path") or {})
+        bad = [p for p in self.paths if int(by_path.get(p, 0)) > 0]
+        if not bad:
+            return indices, [], []
+        keys = dict(zip(self.paths, jax.random.split(key, len(self.paths))))
+        out = dict(indices)
+        unresolved = []
+        for path in bad:
+            p = self.plan[path]
+            w = _leaf_matrices(get_by_path(params, path), p)
+            kk = jax.random.split(keys[path], _num_stack(p))
+            factor = self.cfg.compact_factor
+            while True:                  # always at least one doubling
+                factor *= 2
+                idx, ovf = self._retry_one(w, kk, p, factor)
+                if int(jax.device_get(ovf)) == 0 or factor >= max_factor:
+                    break
+            sel = idx.astype(jnp.int32)
+            if self.mesh is not None:
+                sel = shd.shard_logical_if_divisible(
+                    sel, (None, "topk"), mesh=self.mesh)
+            out[path] = sel
+            if int(jax.device_get(ovf)) > 0:
+                unresolved.append(path)
+        return out, bad, unresolved
+
+    def _retry_one(self, w, kk, plan: TensorPlan, factor: int):
+        """One tensor's streaming selection at an enlarged compaction
+        capacity (jitted per (geometry, factor), cached) — the SAME
+        `_factors` + `_stream_select` body as the fused program, only
+        with a bigger factor.  Runs unsharded even for collective groups:
+        off the hot path, and a clean global-quota selection is
+        capacity-independent, so the result matches what the collective
+        path would return un-overflowed."""
+        key_t = (plan.rows, plan.cols, plan.k, factor)
+        fn = self._retry_cache.get(key_t)
+        if fn is None:
+            rows, cols, k = plan.rows, plan.cols, plan.k
+
+            def body(w, kk):
+                a, b = self._factors(w, kk)
+                idx, ovf = self._stream_select(a, b, rows, cols, k, factor)
+                return idx.astype(jnp.int32), jnp.sum(ovf)
+
+            fn = jax.jit(body)
+            self._retry_cache[key_t] = fn
+        return fn(w, kk)
+
     # ------------------------------------------------------ jitted bodies
     def _select_impl(self, params, key, grads):
         keys = dict(zip(self.paths, jax.random.split(key, len(self.paths))))
         out: dict[str, jax.Array] = {}
         overflow = jnp.zeros((), jnp.int32)
+        by_path: dict[str, jax.Array] = {}
         for g in self.groups:
             ws, gs, ks = [], [], []
             for path in g.paths:
@@ -201,6 +278,7 @@ class SelectionEngine:
             gg = None
             if grads is not None:
                 gg = jnp.concatenate(gs) if len(gs) > 1 else gs[0]
+            ovf = None
             if self.backend == "streaming":
                 idx, ovf = self._stream_group(w, kk, g)
                 overflow = overflow + jnp.sum(ovf)
@@ -215,19 +293,64 @@ class SelectionEngine:
                     sel = shd.shard_logical_if_divisible(
                         sel, (None, "topk"), mesh=self.mesh)
                 out[path] = sel
+                by_path[path] = (jnp.sum(ovf[off:off + ns])
+                                 if ovf is not None
+                                 else jnp.zeros((), jnp.int32))
                 off += ns
-        return out, {"overflow": overflow}
+        return out, {"overflow": overflow, "overflow_by_path": by_path}
 
-    def _local_capacity(self, g: GroupSpec) -> int:
+    def _factors(self, w, kk):
+        """vmapped low-rank factorization of a (ns, rows, cols) stack —
+        the one place the lowrank_factors call is spelled out, shared by
+        the fused group program and the overflow retry."""
+        cfg = self.cfg
+        return jax.vmap(
+            lambda w2d, k1: lowrank.lowrank_factors(
+                w2d, cfg.rank, method=cfg.method, strategy=cfg.strategy,
+                key=k1, oversample=cfg.oversample, iters=cfg.power_iters)
+        )(w, kk)
+
+    def _local_capacity(self, rows: int, cols: int, k: int,
+                        factor: Optional[int] = None) -> int:
         """Per-slab compaction budget for quota='local' — computed once
         here so the single-device (`lift_indices_local`) and collective
         (`lift_indices_sharded`) paths use the identical value and stay
         bitwise-comparable."""
         from repro.kernels import ops as kops
-        w = g.cols // self.quota_shards
-        bm, bn = kops.pick_block(g.rows), kops.pick_block(w)
-        return kops.compact_capacity(g.rows, w, g.k // self.quota_shards,
-                                     bm, bn, self.cfg.compact_factor)
+        factor = self.cfg.compact_factor if factor is None else factor
+        w = cols // self.quota_shards
+        bm, bn = kops.pick_block(rows), kops.pick_block(w)
+        return kops.compact_capacity(rows, w, k // self.quota_shards,
+                                     bm, bn, factor)
+
+    def _stream_select(self, a, b, rows: int, cols: int, k: int,
+                       factor: int):
+        """Unsharded streaming selection over a stacked factor batch at
+        the given compaction factor: threshold + compaction kernels per
+        matrix under one lax.map, honoring the quota mode.  The SINGLE
+        body behind both the fused group program (factor =
+        cfg.compact_factor) and `retry_overflow`'s doubled factors — a
+        clean retry is bitwise-identical to a clean fused run because
+        they are literally this code."""
+        from repro.kernels import ops as kops
+        if self.cfg.quota == "local" and self.quota_shards > 1:
+            capacity = self._local_capacity(rows, cols, k, factor)
+
+            def one(ab):
+                idx, _taus, ovf = kops.lift_indices_local(
+                    ab[0], ab[1], k, n_shards=self.quota_shards,
+                    capacity=capacity)
+                return idx, ovf
+        else:
+            bm, bn = kops.pick_block(rows), kops.pick_block(cols)
+            capacity = kops.compact_capacity(rows, cols, k, bm, bn, factor)
+
+            def one(ab):
+                idx, _tau, ovf = kops.lift_indices(
+                    ab[0], ab[1], k, capacity=capacity, bm=bm, bn=bn)
+                return idx, ovf
+
+        return jax.lax.map(one, (a, b))
 
     def _stream_group(self, w, kk, g: GroupSpec):
         """Streaming selection for one (ns, rows, cols) stacked batch:
@@ -236,36 +359,12 @@ class SelectionEngine:
         whose cols divide over the mesh's "shards" axis run the whole
         pipeline as a shard_map collective instead (per-shard histograms,
         shard-local compaction, O(k) all-gather merge)."""
-        cfg = self.cfg
-        a, b = jax.vmap(
-            lambda w2d, k1: lowrank.lowrank_factors(
-                w2d, cfg.rank, method=cfg.method, strategy=cfg.strategy,
-                key=k1, oversample=cfg.oversample, iters=cfg.power_iters)
-        )(w, kk)
-        from repro.kernels import ops as kops
+        a, b = self._factors(w, kk)
         mode = self.group_exec[(g.rows, g.cols, g.k)]
         if mode in ("sharded", "sharded-local"):
             return self._stream_group_sharded(a, b, g, mode)
-        if mode == "streaming-local":
-            capacity = self._local_capacity(g)
-
-            def one_local(ab):
-                idx, _taus, ovf = kops.lift_indices_local(
-                    ab[0], ab[1], g.k, n_shards=self.quota_shards,
-                    capacity=capacity)
-                return idx, ovf
-
-            return jax.lax.map(one_local, (a, b))
-        bm, bn = kops.pick_block(g.rows), kops.pick_block(g.cols)
-        capacity = kops.compact_capacity(g.rows, g.cols, g.k, bm, bn,
-                                         cfg.compact_factor)
-
-        def one(ab):
-            idx, _tau, ovf = kops.lift_indices(
-                ab[0], ab[1], g.k, capacity=capacity, bm=bm, bn=bn)
-            return idx, ovf
-
-        return jax.lax.map(one, (a, b))
+        return self._stream_select(a, b, g.rows, g.cols, g.k,
+                                   self.cfg.compact_factor)
 
     def _stream_group_sharded(self, a, b, g: GroupSpec, mode: str):
         """Collective selection for one stacked factor batch: B slabs stay
@@ -277,7 +376,8 @@ class SelectionEngine:
         from jax.sharding import PartitionSpec as P
         from repro.kernels import ops as kops
         quota = "local" if mode == "sharded-local" else "global"
-        capacity = self._local_capacity(g) if quota == "local" else 0
+        capacity = (self._local_capacity(g.rows, g.cols, g.k)
+                    if quota == "local" else 0)
         axis, n_shards, cfg = self.shard_axis, self.mesh_shards, self.cfg
 
         def body(a3, b3):

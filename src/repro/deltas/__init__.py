@@ -1,0 +1,11 @@
+"""DeltaHub: sparse-delta artifacts — extract, ship, hot-swap (DESIGN.md §4)."""
+from repro.deltas.extract import apply_diff, diff, extract
+from repro.deltas.format import (DELTA_FORMAT_VERSION, DeltaArtifact,
+                                 DeltaMismatchError, tree_hash)
+from repro.deltas.merge import DeltaMerger, merge_delta
+
+__all__ = [
+    "DELTA_FORMAT_VERSION", "DeltaArtifact", "DeltaMismatchError",
+    "DeltaMerger", "apply_diff", "diff", "extract", "merge_delta",
+    "tree_hash",
+]

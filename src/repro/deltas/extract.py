@@ -1,0 +1,173 @@
+"""Delta extraction and diffing (DESIGN.md §4).
+
+Extraction builds a `DeltaArtifact` from a LIFT checkpoint step versus its
+base parameters using the **stored selection index sets** — the (ns, k)
+`idx` leaves the sparse optimizer carries.  Only the planned parameter
+leaves and those index leaves are read (`CheckpointManager.restore_leaves`
+partial reads), and values come from an O(k) gather per tensor: no dense
+subtraction tree ever materializes on the host.
+
+Exactness contract: LIFT's train step touches ONLY the currently-selected
+entries, so with mode="replace" `base + delta == fine-tuned checkpoint`
+bitwise **as long as the shipped index sets cover every entry that was
+ever trained** — i.e. the run's masks were fixed (no refresh between base
+and the extracted step), or deltas are extracted at least once per
+refresh interval and shipped via `diff`.  A refreshed-away entry keeps
+its trained value in the checkpoint but leaves the stored index set;
+persisting the mask *union* in the optimizer state is the documented
+follow-up (ROADMAP).
+
+`diff(a, b)` compares two artifacts of the same geometry over their index
+sets and returns the O(changed) patch that turns `a` into `b` — the
+shipping unit between checkpoint steps (`apply_diff` reconstructs `b`).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.core.lift import get_by_path
+from repro.deltas.format import (DeltaArtifact, DeltaMismatchError,
+                                 make_manifest, num_stack, tree_hash)
+
+PARAM_LEAF = "params/{path}"
+IDX_LEAF = "state/opt/tensors/{path}/idx"
+
+
+def extract(ckpt, step: int, base_params, *, mode: str = "replace",
+            base_hash: Optional[str] = None) -> DeltaArtifact:
+    """Build a sparse delta from checkpoint `step` against `base_params`.
+
+    `ckpt` is a `CheckpointManager` whose step was written by
+    `launch/train.py` ({"params", "state"} tree with the engine's
+    `plan_meta` under meta["selection"]).  `base_hash` short-circuits
+    re-hashing when the caller already fingerprinted the base."""
+    selection = ckpt.restore_selection(step)
+    if selection is None:
+        raise DeltaMismatchError(
+            f"checkpoint step {step} carries no selection plan fingerprint "
+            f"— not a LIFT/sparse run; there is no index set to extract")
+    plan_tensors = selection["tensors"]
+    leaves = ckpt.restore_leaves(
+        step,
+        [PARAM_LEAF.format(path=p) for p in plan_tensors]
+        + [IDX_LEAF.format(path=p) for p in plan_tensors])
+
+    tensors = {}
+    tensors_meta = {}
+    for path, meta in plan_tensors.items():
+        tuned = leaves[PARAM_LEAF.format(path=path)]
+        idx = leaves[IDX_LEAF.format(path=path)]
+        ns = num_stack(meta)
+        flat = tuned.reshape(ns, meta["rows"] * meta["cols"])
+        idx2 = idx.reshape(ns, meta["k"]).astype(np.int32)
+        val = np.take_along_axis(flat, idx2, axis=-1)
+        if mode == "add":
+            base_flat = np.asarray(get_by_path(base_params, path)).reshape(
+                ns, meta["rows"] * meta["cols"])
+            val = val - np.take_along_axis(base_flat, idx2, axis=-1)
+        tensors[path] = {"idx": idx2, "val": val}
+        tensors_meta[path] = dict(meta, dtype=str(tuned.dtype))
+
+    manifest = make_manifest(
+        mode=mode,
+        base_hash=base_hash or tree_hash(base_params),
+        selection=selection, tensors_meta=tensors_meta, step=step)
+    return DeltaArtifact(manifest=manifest, tensors=tensors)
+
+
+# ------------------------------------------------------------------ diff
+def _check_comparable(a: DeltaArtifact, b: DeltaArtifact) -> None:
+    if a.manifest["mode"] != b.manifest["mode"]:
+        raise DeltaMismatchError(
+            f"cannot diff deltas of different modes "
+            f"({a.manifest['mode']!r} vs {b.manifest['mode']!r})")
+    if a.manifest["base_hash"] != b.manifest["base_hash"]:
+        raise DeltaMismatchError(
+            "cannot diff deltas extracted against different bases")
+    if sorted(a.tensors) != sorted(b.tensors):
+        raise DeltaMismatchError("delta tensor sets differ")
+
+
+def diff(a: DeltaArtifact, b: DeltaArtifact) -> dict:
+    """Index-set diff turning artifact `a` into artifact `b`.
+
+    Per tensor, per stack row: `upsert` = entries of b that are new or
+    changed vs a (index + value), `drop` = indices of a absent from b.
+    Entries are stored flattened with explicit stack-row ids so the patch
+    is a plain {path: {"upsert_row", "upsert_idx", "upsert_val",
+    "drop_row", "drop_idx"}} dict of 1-D arrays — O(changed) bytes, the
+    delta-shipping unit between checkpoint steps.  `stats` accumulates
+    patch vs full-artifact bytes and the index-set Jaccard overlap."""
+    _check_comparable(a, b)
+    out: dict = {"tensors": {}, "stats": {}}
+    patch_bytes = 0
+    inter_total = union_total = 0
+    for path in sorted(a.tensors):
+        ta, tb = a.tensors[path], b.tensors[path]
+        u_row, u_idx, u_val, d_row, d_idx = [], [], [], [], []
+        for s in range(ta["idx"].shape[0]):
+            ia, va = ta["idx"][s], ta["val"][s]
+            ib, vb = tb["idx"][s], tb["val"][s]
+            common, pa, pb = np.intersect1d(ia, ib, assume_unique=False,
+                                            return_indices=True)
+            inter_total += common.size
+            union_total += ia.size + ib.size - common.size
+            changed = va[pa] != vb[pb]
+            new_mask = ~np.isin(ib, common)
+            ups_idx = np.concatenate([common[changed], ib[new_mask]])
+            ups_val = np.concatenate([vb[pb][changed], vb[new_mask]])
+            order = np.argsort(ups_idx, kind="stable")
+            u_row.append(np.full(ups_idx.size, s, np.int32))
+            u_idx.append(ups_idx[order].astype(np.int32))
+            u_val.append(ups_val[order])
+            gone = ia[~np.isin(ia, common)]
+            d_row.append(np.full(gone.size, s, np.int32))
+            d_idx.append(gone.astype(np.int32))
+        entry = {
+            "upsert_row": np.concatenate(u_row),
+            "upsert_idx": np.concatenate(u_idx),
+            "upsert_val": np.concatenate(u_val),
+            "drop_row": np.concatenate(d_row),
+            "drop_idx": np.concatenate(d_idx),
+        }
+        patch_bytes += sum(int(v.nbytes) for v in entry.values())
+        out["tensors"][path] = entry
+    out["step"] = b.manifest["step"]
+    out["stats"] = {
+        "patch_bytes": patch_bytes,
+        "full_bytes": b.nbytes(),
+        "index_jaccard": (inter_total / union_total) if union_total else 1.0,
+    }
+    return out
+
+
+def apply_diff(a: DeltaArtifact, patch: dict) -> DeltaArtifact:
+    """Reconstruct artifact `b` from `a` and `diff(a, b)` — the receiving
+    end of delta-shipping.  Round-trip property (tested):
+    `apply_diff(a, diff(a, b)).tensors == b.tensors` exactly."""
+    tensors = {}
+    for path, ta in a.tensors.items():
+        p = patch["tensors"][path]
+        ns, k = ta["idx"].shape
+        new_idx = np.empty_like(ta["idx"])
+        new_val = np.empty_like(ta["val"])
+        for s in range(ns):
+            keep = ~np.isin(ta["idx"][s], p["drop_idx"][p["drop_row"] == s])
+            ui = p["upsert_idx"][p["upsert_row"] == s]
+            uv = p["upsert_val"][p["upsert_row"] == s]
+            # surviving a-entries not overridden by an upsert, plus upserts
+            keep &= ~np.isin(ta["idx"][s], ui)
+            idx = np.concatenate([ta["idx"][s][keep], ui])
+            val = np.concatenate([ta["val"][s][keep], uv])
+            order = np.argsort(idx, kind="stable")
+            if idx.size != k:
+                raise DeltaMismatchError(
+                    f"patch for {path!r} row {s} yields {idx.size} entries, "
+                    f"expected k={k} — patch does not match this artifact")
+            new_idx[s] = idx[order]
+            new_val[s] = val[order]
+        tensors[path] = {"idx": new_idx, "val": new_val}
+    manifest = dict(a.manifest, step=patch.get("step", a.manifest["step"]))
+    return DeltaArtifact(manifest=manifest, tensors=tensors)

@@ -1,0 +1,181 @@
+"""DeltaHub artifact format (DESIGN.md §4).
+
+A LIFT fine-tune is fully described by its Principal Weights, so the unit
+DeltaHub ships is a **sparse delta artifact**: per planned tensor, the
+`(indices (ns, k) int32, values (ns, k))` pair keyed by the flattened
+checkpoint path, plus a manifest that pins everything needed to refuse a
+bad application:
+
+    delta.json          manifest (see below)
+    arrays.npz          "<path>\\x1fidx" / "<path>\\x1fval" members
+
+Manifest fields:
+  * format_version — this module's DELTA_FORMAT_VERSION;
+  * mode — "replace" (values are the fine-tuned entries; merging is
+    bitwise-exact) or "add" (values are differences; merging accumulates
+    in fp32);
+  * base_hash — `tree_hash` of the full base parameter tree the delta was
+    extracted against: a delta REFUSES to apply to any other base;
+  * selection — the producing run's `SelectionEngine.plan_meta()`
+    fingerprint verbatim (geometry, backend, quota policy), so a delta
+    refuses a consumer whose plan geometry or quota policy disagrees;
+  * tensors — {path: {shape, stack, rows, cols, k, dtype}} for the
+    shipped pairs;
+  * step — the source checkpoint step.
+
+The artifact is O(k) per tensor — ~2x density of the dense bytes at equal
+dtype (int32 index + value per entry), i.e. ≤ 12 % of the dense
+checkpoint at the paper's 5 % density (benchmarks/delta_merge.py tracks
+this ratio in CI).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+from typing import Optional
+
+import numpy as np
+
+from repro.checkpoint.manager import _flatten
+
+DELTA_FORMAT_VERSION = 1
+MANIFEST_NAME = "delta.json"
+ARRAYS_NAME = "arrays.npz"
+MODES = ("replace", "add")
+
+
+class DeltaMismatchError(ValueError):
+    """A delta refused to apply: wrong base weights or wrong geometry."""
+
+
+def num_stack(meta: dict) -> int:
+    """Matrices per tensor (prod of the manifest entry's stack dims)."""
+    return int(np.prod(meta["stack"])) if meta["stack"] else 1
+
+
+def tree_hash(tree) -> str:
+    """Order-independent fingerprint of a parameter tree: sha256 over the
+    sorted flattened paths with each leaf's shape, dtype and raw bytes.
+    Two trees hash equal iff they are bitwise-identical leaf for leaf."""
+    h = hashlib.sha256()
+    flat = _flatten(tree)
+    for path in sorted(flat):
+        a = np.asarray(flat[path])
+        h.update(path.encode())
+        h.update(str(a.shape).encode())
+        h.update(str(a.dtype).encode())
+        h.update(np.ascontiguousarray(a).tobytes())
+    return h.hexdigest()
+
+
+@dataclasses.dataclass
+class DeltaArtifact:
+    """manifest (JSON-able dict) + tensors {path: {"idx", "val"}} on host."""
+    manifest: dict
+    tensors: dict
+
+    # ------------------------------------------------------------- sizes
+    def nbytes(self) -> int:
+        """Payload bytes of the shipped index+value pairs."""
+        return sum(int(t["idx"].nbytes) + int(t["val"].nbytes)
+                   for t in self.tensors.values())
+
+    def dense_nbytes(self) -> int:
+        """Bytes of the dense planned tensors this artifact replaces."""
+        total = 0
+        for path, meta in self.manifest["tensors"].items():
+            n = int(np.prod(meta["shape"]))
+            total += n * np.dtype(meta["dtype"]).itemsize
+        return total
+
+    # ------------------------------------------------------------ saving
+    def save(self, directory: str) -> None:
+        os.makedirs(directory, exist_ok=True)
+        arrays = {}
+        for path, t in self.tensors.items():
+            arrays[path.replace("/", "\x1f") + "\x1fidx"] = t["idx"]
+            arrays[path.replace("/", "\x1f") + "\x1fval"] = t["val"]
+        np.savez(os.path.join(directory, ARRAYS_NAME), **arrays)
+        with open(os.path.join(directory, MANIFEST_NAME), "w") as f:
+            json.dump(self.manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+
+    @classmethod
+    def load(cls, directory: str) -> "DeltaArtifact":
+        with open(os.path.join(directory, MANIFEST_NAME)) as f:
+            manifest = json.load(f)
+        if manifest.get("format_version") != DELTA_FORMAT_VERSION:
+            raise DeltaMismatchError(
+                f"delta artifact {directory!r} has format_version "
+                f"{manifest.get('format_version')!r}; this build reads "
+                f"version {DELTA_FORMAT_VERSION}")
+        tensors: dict = {}
+        with np.load(os.path.join(directory, ARRAYS_NAME)) as z:
+            for key in z.files:
+                path, kind = key.rsplit("\x1f", 1)
+                path = path.replace("\x1f", "/")
+                tensors.setdefault(path, {})[kind] = z[key]
+        missing = sorted(set(manifest["tensors"]) ^ set(tensors))
+        if missing:
+            raise DeltaMismatchError(
+                f"delta artifact {directory!r} manifest and arrays "
+                f"disagree on tensors (first mismatch: {missing[0]!r})")
+        return cls(manifest=manifest, tensors=tensors)
+
+    # --------------------------------------------------------- validation
+    def validate_base(self, base_params) -> None:
+        """Refuse to apply to the wrong base weights."""
+        got = tree_hash(base_params)
+        want = self.manifest["base_hash"]
+        if got != want:
+            raise DeltaMismatchError(
+                f"delta was extracted against base {want[:12]}… but is "
+                f"being applied to base {got[:12]}… — wrong base "
+                f"checkpoint (or the base was modified in place)")
+
+    def validate_plan(self, plan_meta: Optional[dict]) -> None:
+        """Refuse a consumer whose selection geometry / quota policy
+        disagrees with the producing run's `SelectionEngine.plan_meta()`
+        fingerprint (same checks as `SelectionEngine.validate_meta`,
+        from the artifact's side)."""
+        if plan_meta is None:
+            return
+        mine = self.manifest.get("selection") or {}
+        saved_q = (mine.get("quota"), mine.get("quota_shards", 1))
+        got_q = (plan_meta.get("quota"), plan_meta.get("quota_shards", 1))
+        if saved_q != got_q:
+            raise DeltaMismatchError(
+                f"delta quota policy mismatch: artifact was selected "
+                f"under quota/shards {saved_q}, consumer runs {got_q}")
+        saved = mine.get("tensors", {})
+        theirs = plan_meta.get("tensors", {})
+        missing = sorted(set(saved) ^ set(theirs))
+        if missing:
+            raise DeltaMismatchError(
+                f"delta plan covers different tensors than the consumer "
+                f"(first mismatch: {missing[0]!r})")
+        for path, s in saved.items():
+            t = theirs[path]
+            got = (list(t["shape"]), t["rows"], t["cols"], t["k"])
+            want = (list(s["shape"]), s["rows"], s["cols"], s["k"])
+            if got != want:
+                raise DeltaMismatchError(
+                    f"delta geometry mismatch for {path!r}: artifact "
+                    f"shape/rows/cols/k {want} vs consumer {got}")
+
+
+def make_manifest(*, mode: str, base_hash: str, selection: Optional[dict],
+                  tensors_meta: dict, step: int) -> dict:
+    if mode not in MODES:
+        raise ValueError(f"unknown delta mode {mode!r} (expected {MODES})")
+    return {
+        "format_version": DELTA_FORMAT_VERSION,
+        "mode": mode,
+        "base_hash": base_hash,
+        "selection": selection,
+        "tensors": tensors_meta,
+        "step": int(step),
+    }

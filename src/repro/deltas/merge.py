@@ -1,0 +1,153 @@
+"""Batched delta merge into base weights (DESIGN.md §4).
+
+Mirrors the SelectionEngine's batching: tensors are grouped by
+(rows, cols, k) geometry, each group's leaves stacked into one
+(ns_total, rows*cols) batch, and the whole merge runs as ONE jitted
+program per delta — one `sparse_scatter_merge` kernel launch per
+geometry group, not a per-tensor Python dispatch loop.
+
+Mesh-aware: the merger snapshots the active mesh (parallel/sharding ctx)
+at construction.  Groups whose cols divide over the "shards" logical axis
+scatter shard-locally under `shard_map`
+(`kernels.ops.sparse_scatter_merge_sharded`): each shard folds only the
+delta entries that land in its column slab — zero cross-shard traffic,
+because an index+value delta needs no gathered weights anywhere.  Groups
+that don't divide fall back to the unsharded kernel, exactly like the
+engine's `group_exec` fallback.
+
+Backends: "kernel" (Pallas scatter-merge, the serving path) and "ref"
+(`kernels.ref.sparse_scatter_merge`, the dense oracle) — both bitwise
+under mode="replace", which the delta round-trip tests prove.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lift import get_by_path, set_by_path
+from repro.core.selection import GroupSpec
+from repro.deltas.format import DeltaArtifact, num_stack
+from repro.parallel import sharding as shd
+
+
+def geometry_key(tensors_meta: dict, backend: str) -> tuple:
+    """Hashable geometry fingerprint of a manifest's tensors metadata —
+    computable WITHOUT building a merger, so caches (AdapterStore) can
+    look up an existing compiled merger before constructing one."""
+    return tuple(
+        (p, tuple(tensors_meta[p]["shape"]), tensors_meta[p]["rows"],
+         tensors_meta[p]["cols"], tensors_meta[p]["k"])
+        for p in sorted(tensors_meta)) + (backend,)
+
+
+class DeltaMerger:
+    """One jitted merge program for a fixed tensor geometry set.
+
+    Built from a delta manifest's `tensors` metadata; reusable across
+    every artifact of the same geometry (the AdapterStore caches mergers
+    by geometry fingerprint so loading N adapters compiles once)."""
+
+    def __init__(self, tensors_meta: dict, *, backend: str = "kernel",
+                 mesh=None):
+        if backend not in ("kernel", "ref"):
+            raise ValueError(f"unknown merge backend {backend!r}")
+        self.backend = backend
+        self.meta = {p: dict(m) for p, m in tensors_meta.items()}
+        self.paths = sorted(self.meta)
+        self.mesh = mesh if mesh is not None else shd.active_mesh()
+        axes = shd.mesh_axes_for("shards", self.mesh)
+        self.shard_axis = axes[0] if len(axes) == 1 else None
+        self.mesh_shards = (int(self.mesh.shape[self.shard_axis])
+                            if (self.mesh is not None and self.shard_axis)
+                            else 1)
+        groups: dict = {}
+        for path in self.paths:
+            m = self.meta[path]
+            groups.setdefault((m["rows"], m["cols"], m["k"]),
+                              []).append(path)
+        self.groups = tuple(
+            GroupSpec(rows=r, cols=c, k=k, paths=tuple(ps),
+                      stacks=tuple(num_stack(self.meta[q]) for q in ps))
+            for (r, c, k), ps in groups.items())
+        self.group_exec = {
+            (g.rows, g.cols, g.k): self._exec_mode(g) for g in self.groups}
+        self._merge_jit = jax.jit(self._impl, static_argnames=("mode",))
+
+    def geometry_key(self) -> tuple:
+        """Hashable fingerprint the AdapterStore caches mergers by."""
+        return geometry_key(self.meta, self.backend)
+
+    def _exec_mode(self, g: GroupSpec) -> str:
+        if self.backend == "ref":
+            return "ref"
+        if (self.mesh is not None and self.shard_axis is not None
+                and self.mesh_shards > 1
+                and g.cols % self.mesh_shards == 0):
+            return "sharded"
+        return "kernel"
+
+    # ------------------------------------------------------------- merge
+    def merge(self, base_params, delta: DeltaArtifact):
+        """base tree + artifact -> merged tree (one jitted program)."""
+        idx = {p: jnp.asarray(delta.tensors[p]["idx"]) for p in self.paths}
+        val = {p: jnp.asarray(delta.tensors[p]["val"]) for p in self.paths}
+        return self._merge_jit(base_params, idx, val,
+                               mode=delta.manifest["mode"])
+
+    def _impl(self, params, idx, val, *, mode: str):
+        from repro.kernels import ops as kops
+        from repro.kernels import ref as kref
+        out = params
+        for g in self.groups:
+            ws = [get_by_path(params, p).reshape(ns, g.rows * g.cols)
+                  for p, ns in zip(g.paths, g.stacks)]
+            base = jnp.concatenate(ws) if len(ws) > 1 else ws[0]
+            ii = jnp.concatenate([idx[p] for p in g.paths]) \
+                if len(g.paths) > 1 else idx[g.paths[0]]
+            vv = jnp.concatenate([val[p] for p in g.paths]) \
+                if len(g.paths) > 1 else val[g.paths[0]]
+            exec_mode = self.group_exec[(g.rows, g.cols, g.k)]
+            if exec_mode == "ref":
+                merged = kref.sparse_scatter_merge(base, ii, vv, mode=mode)
+            elif exec_mode == "sharded":
+                merged = self._merge_group_sharded(base, ii, vv, g, mode)
+            else:
+                merged = kops.sparse_scatter_merge(base, ii, vv, mode=mode)
+            off = 0
+            for p, ns in zip(g.paths, g.stacks):
+                leaf = merged[off:off + ns].reshape(self.meta[p]["shape"])
+                out = set_by_path(out, p, leaf)
+                off += ns
+        return out
+
+    def _merge_group_sharded(self, base, ii, vv, g: GroupSpec, mode: str):
+        from functools import partial
+
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        from repro.kernels import ops as kops
+        body = partial(kops.sparse_scatter_merge_sharded,
+                       axis_name=self.shard_axis, n_shards=self.mesh_shards,
+                       cols_global=g.cols, mode=mode)
+        bspec = shd.logical_to_spec((None, None, "shards"), self.mesh)
+        base3 = base.reshape(base.shape[0], g.rows, g.cols)
+        merged = shard_map(
+            lambda b, i, v: body(b, i, v), mesh=self.mesh,
+            in_specs=(bspec, P(), P()), out_specs=bspec,
+            check_rep=False)(base3, ii, vv)
+        return merged.reshape(base.shape[0], g.rows * g.cols)
+
+
+def merge_delta(base_params, delta: DeltaArtifact, *,
+                backend: str = "kernel", mesh=None, validate: bool = True,
+                plan_meta=None):
+    """One-shot convenience: validate (base hash + optional consumer
+    plan_meta), build a merger for the artifact's geometry, merge."""
+    if validate:
+        delta.validate_base(base_params)
+    if plan_meta is not None:
+        delta.validate_plan(plan_meta)
+    merger = DeltaMerger(delta.manifest["tensors"], backend=backend,
+                         mesh=mesh)
+    return merger.merge(base_params, delta)

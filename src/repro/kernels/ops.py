@@ -402,6 +402,131 @@ def lift_indices_sharded(a, b_local, k: int, *, axis_name: str,
     return idx.astype(jnp.int32), tau, overflow
 
 
+# ---------------------------------------------------------- scatter merge
+def _sorted_windows(idx, vals: tuple, nb: int, bn: int, capacity: int):
+    """Per-(stack, block) dense windows of sorted (ns, k) index sets.
+
+    The one implementation of the contiguous-window trick both sparse
+    kernels rely on: entries of a sorted flat index vector that land in
+    block b of a BN-blocked tensor occupy [starts[b], starts[b+1]), so a
+    searchsorted + clamped gather turns O(k) ragged windows into dense
+    (ns, nb, K) views.  `vals` is a tuple of (ns, k) arrays gathered into
+    the same windows (f32, 0.0-padded); idxw pads with -1.  Sentinel
+    entries (idx // bn >= nb) fall in no window.  Returns
+    (idxw, tuple(valws), starts (ns, nb))."""
+    ns, k = idx.shape
+    block_of = idx // bn                                  # (ns, k)
+    arangeb = jnp.arange(nb)
+    starts = jax.vmap(
+        lambda bo: jnp.searchsorted(bo, arangeb, side="left"))(block_of)
+    ends = jax.vmap(
+        lambda bo: jnp.searchsorted(bo, arangeb, side="right"))(block_of)
+    gpos = starts[:, :, None] + jnp.arange(capacity)[None, None, :]
+    in_win = gpos < ends[:, :, None]
+    gposc = jnp.minimum(gpos, k - 1)
+
+    def take(arr):  # (ns, k) gathered at (ns, nb, K) positions
+        return jnp.take_along_axis(arr[:, None, :], gposc, axis=-1)
+
+    idxw = jnp.where(in_win, take(idx), -1).astype(jnp.int32)
+    valws = tuple(jnp.where(in_win, take(v), 0.0).astype(jnp.float32)
+                  for v in vals)
+    return idxw, valws, starts
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "bn", "capacity",
+                                             "exact", "interpret"))
+def sparse_scatter_merge(base, idx, val, *, mode: str = "replace",
+                         bn: int = 2048, capacity: int = 0,
+                         exact: bool = True,
+                         interpret: Optional[bool] = None):
+    """Fold batched sparse deltas into stacked flat base weights.
+
+    base: (ns, N); idx: (ns, k) int32 sorted ascending per stack entry —
+    entries >= N are sentinel pads and write nothing (the shard-local path
+    marks foreign entries this way); val: (ns, k) in any float dtype.
+
+    mode "replace" writes val at idx bitwise (the DeltaHub contract:
+    base + replace-delta == fine-tuned checkpoint, bit for bit); mode
+    "add" accumulates in fp32 and casts back.  `capacity` is the per-block
+    window size (0 -> heuristic 4x mean occupancy); with exact=True an
+    O(k) XLA fallback corrects any windows that overflowed, so results
+    are exact regardless.  Returns (ns, N) in base dtype.
+    """
+    if mode not in ("replace", "add"):
+        raise ValueError(f"unknown merge mode {mode!r}")
+    interpret = _default_interpret() if interpret is None else interpret
+    from repro.kernels import scatter_merge as smk
+    ns, N = base.shape
+    k = idx.shape[1]
+    bn = min(bn, N)
+    nb = max(1, -(-N // bn))
+    padN = nb * bn
+    base_pad = jnp.pad(base, ((0, 0), (0, padN - N)))
+
+    if capacity <= 0:
+        capacity = int(min(k, max(128, 4 * -(-k // nb))))
+    idxw, (valw,), starts = _sorted_windows(idx, (val,), nb, bn, capacity)
+
+    out = smk.scatter_merge_blocks(
+        base_pad.reshape(ns, nb, bn), idxw, valw, bn=bn, mode=mode,
+        interpret=interpret).reshape(ns, padN)
+
+    if exact:
+        # entries beyond their window's capacity (or sentinels, dropped by
+        # the "drop" scatter mode) fall back to an O(k) XLA update
+        j = jnp.arange(k)[None, :]
+        block_of = jnp.clip(idx // bn, 0, nb - 1)
+        slot = j - jnp.take_along_axis(starts, block_of, axis=-1)
+        covered = (slot >= 0) & (slot < capacity) & (idx // bn < nb)
+
+        def fix(o, i, c, v):
+            if mode == "add":
+                add = jnp.where(c, 0.0, v.astype(jnp.float32))
+                return (o.astype(jnp.float32).at[i].add(add, mode="drop")
+                        ).astype(o.dtype)
+            cur = o.at[i].get(mode="fill", fill_value=0)
+            return o.at[i].set(
+                jnp.where(c, cur, v.astype(o.dtype)), mode="drop")
+
+        out = jax.vmap(fix)(out, idx, covered, val)
+    return out[:, :N]
+
+
+def sparse_scatter_merge_sharded(base_local, idx, val, *, axis_name: str,
+                                 n_shards: int, cols_global: int,
+                                 mode: str = "replace", bn: int = 2048,
+                                 interpret: Optional[bool] = None):
+    """Shard-local scatter merge over column-slab-sharded base weights.
+
+    MUST run inside `shard_map` with `axis_name` bound: `base_local` is
+    this shard's (ns, rows, cols_global/n_shards) slab, `idx`/`val` the
+    replicated (ns, k) GLOBAL flat delta.  Each shard keeps only the
+    entries whose column lands in its slab, remaps them to local flat
+    indices (the in-shard subsequence of a sorted global index set is
+    itself sorted — global and local flat orders agree lexicographically
+    on (row, col)) and scatters locally.  NO collectives: the merge needs
+    zero cross-shard traffic, which is the whole point of shipping deltas
+    as index+value pairs (DESIGN.md §4).
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    from repro.kernels import lowrank_mask as lrm
+    ns, rows, nl = base_local.shape
+    shard = jax.lax.axis_index(axis_name)
+    col0 = (shard * nl).astype(jnp.int32)
+
+    r = idx // cols_global
+    c = idx % cols_global - col0
+    mine = (c >= 0) & (c < nl) & (idx < rows * cols_global)
+    key = jnp.where(mine, r * nl + c, lrm.INT32_SENTINEL)
+    order = jnp.argsort(key, axis=-1)                 # stable: stays sorted
+    idx_l = jnp.take_along_axis(key, order, axis=-1).astype(jnp.int32)
+    val_l = jnp.take_along_axis(val, order, axis=-1)
+    return sparse_scatter_merge(
+        base_local.reshape(ns, rows * nl), idx_l, val_l, mode=mode, bn=bn,
+        interpret=interpret).reshape(ns, rows, nl)
+
+
 # ----------------------------------------------------------- sparse adam
 @functools.partial(jax.jit,
                    static_argnames=("bn", "capacity", "exact", "interpret"))
@@ -428,15 +553,9 @@ def sparse_adam(p, g, idx, m, v, step, *, lr, b1=0.9, b2=0.999, eps=1e-8,
     K = capacity
 
     block_of = idx // bn
-    arangeb = jnp.arange(nb)
-    starts = jnp.searchsorted(block_of, arangeb, side="left")
-    ends = jnp.searchsorted(block_of, arangeb, side="right")
-    gpos = starts[:, None] + jnp.arange(K)[None, :]
-    in_win = gpos < ends[:, None]
-    gposc = jnp.minimum(gpos, k - 1)
-    idxw = jnp.where(in_win, idx[gposc], -1).astype(jnp.int32)
-    mw = jnp.where(in_win, m[gposc], 0.0)
-    vw = jnp.where(in_win, v[gposc], 0.0)
+    idxw, (mw, vw), starts = _sorted_windows(idx[None], (m[None], v[None]),
+                                             nb, bn, K)
+    idxw, mw, vw, starts = idxw[0], mw[0], vw[0], starts[0]
 
     t = jnp.asarray(step, jnp.float32)
     c1 = 1.0 - b1 ** t

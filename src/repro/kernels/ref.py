@@ -43,6 +43,25 @@ def threshold_indices(a, b, tau, k: int) -> jax.Array:
     return jnp.where(slot < jnp.sum(s > tau), cand[:k], slot)
 
 
+# ---------------------------------------------------------- scatter merge
+def sparse_scatter_merge(base, idx, val, mode: str = "replace"):
+    """Dense oracle for `ops.sparse_scatter_merge`.
+
+    base: (ns, N); idx: (ns, k) int32 sorted ascending — entries >= N are
+    sentinel pads and write nothing; val: (ns, k).
+    mode "replace" writes val at idx bitwise; mode "add" accumulates in
+    fp32 and casts back to base dtype (the kernel's canonical semantics).
+    """
+    def one(b, i, v):
+        if mode == "add":
+            out = b.astype(jnp.float32).at[i].add(
+                v.astype(jnp.float32), mode="drop")
+            return out.astype(b.dtype)
+        return b.at[i].set(v.astype(b.dtype), mode="drop")
+
+    return jax.vmap(one)(base, idx, val)
+
+
 # ------------------------------------------------------------- sparse_adam
 def sparse_adam(p, g, idx, m, v, *, lr, b1, b2, eps, wd, step):
     """Reference sparse AdamW on flat vectors.

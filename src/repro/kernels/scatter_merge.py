@@ -1,0 +1,88 @@
+"""Sparse delta scatter-merge kernel (Pallas TPU).
+
+DeltaHub's serving-side hot spot (DESIGN.md §4): fold a (k,)-entry sparse
+delta `(indices, values)` into a flat base weight vector.  TPUs have no
+efficient random scatter, so the kernel exploits the one structural
+property every LIFT artifact guarantees: **indices are sorted ascending**.
+The flat vector is processed in contiguous blocks of BN entries; the delta
+entries landing in block b occupy a contiguous *window* of the (idx, val)
+vectors, [starts[b], starts[b+1]).  The XLA-side wrapper
+(`ops.sparse_scatter_merge`) pads each window to a fixed capacity K and
+hands the kernel windowed views, so all kernel memory access is dense —
+the same window trick as the sparse-Adam kernel:
+
+    grid = (NS, N / BN)
+    base_blk (BN,)   idxw/valw (K,) per (stack, block)
+
+In-block scatter is a one-hot reduction against iota (VPU work, no dynamic
+addressing):
+
+    onehot[e, i] = (idxw[e] - b*BN == i) & valid[e]
+    dep          = valw @ onehot                        # (BN,) deposited
+    out          = where(any_e onehot, dep, base)       # mode "replace"
+    out          = base + dep                           # mode "add"
+
+"replace" writes the delta value bitwise (ties never happen: indices are
+unique per matrix), which is what makes base + replace-delta reproduce the
+fine-tuned checkpoint exactly.  Entries beyond a window's capacity are
+corrected by an exact XLA fallback in ops.py — correctness never depends
+on the capacity heuristic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(idxw_ref, valw_ref, base_ref, out_ref, *, bn: int, mode: str):
+    b = pl.program_id(1)
+    idxw = idxw_ref[0, 0, :]                         # (K,) int32, -1 = pad
+    local = idxw - b * bn
+    valid = idxw >= 0
+    k = idxw.shape[0]
+
+    iota = jax.lax.broadcasted_iota(jnp.int32, (k, bn), 1)
+    onehot_b = (local[:, None] == iota) & valid[:, None]
+
+    base_blk = base_ref[0, 0, :].astype(jnp.float32)  # (BN,)
+    vals = valw_ref[0, 0, :].astype(jnp.float32)      # (K,)
+    # HIGHEST precision: the TPU default downcasts f32 matmul operands to
+    # bf16, which would truncate delta-value mantissas and silently break
+    # the bitwise-replace contract on the one backend that compiles this
+    dep = jax.lax.dot(vals, onehot_b.astype(jnp.float32),
+                      precision=jax.lax.Precision.HIGHEST)  # (BN,) scatter
+
+    if mode == "add":
+        out = base_blk + dep
+    else:                                             # replace
+        hit = jnp.any(onehot_b, axis=0)
+        out = jnp.where(hit, dep, base_blk)
+    out_ref[0, 0, :] = out.astype(out_ref.dtype)
+
+
+def scatter_merge_blocks(base, idxw, valw, *, bn: int, mode: str = "replace",
+                         interpret: bool = True):
+    """base: (NS, NB, BN); idxw/valw: (NS, NB, K).
+
+    Returns merged (NS, NB, BN) in base dtype.  idxw entries are GLOBAL
+    flat indices into the (NB*BN,) vector, -1 = padded window slot.
+    """
+    ns, nb, bn_ = base.shape
+    assert bn_ == bn, (bn_, bn)
+    k = idxw.shape[2]
+    kern = functools.partial(_kernel, bn=bn, mode=mode)
+    return pl.pallas_call(
+        kern,
+        grid=(ns, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, k), lambda s, b: (s, b, 0)),    # idx windows
+            pl.BlockSpec((1, 1, k), lambda s, b: (s, b, 0)),    # val windows
+            pl.BlockSpec((1, 1, bn), lambda s, b: (s, b, 0)),   # base blocks
+        ],
+        out_specs=pl.BlockSpec((1, 1, bn), lambda s, b: (s, b, 0)),
+        out_shape=jax.ShapeDtypeStruct((ns, nb, bn), base.dtype),
+        interpret=interpret,
+    )(idxw, valw, base)

@@ -2,6 +2,13 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
         --requests 8 --max-new 16
+
+DeltaHub (DESIGN.md §4): `--base <ckpt-dir>` restores the base weights
+from a checkpoint; `--delta <artifact-dir>` loads a sparse delta artifact
+into the engine's AdapterStore (refusing a wrong base hash) and serves
+every request through the merged adapter — token-identical to serving the
+dense fine-tuned checkpoint, at O(k) artifact bytes.  `--merge-mode`
+picks the scatter-merge backend (Pallas kernel vs dense reference).
 """
 from __future__ import annotations
 
@@ -22,13 +29,27 @@ def main():
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--base", default="",
+                    help="checkpoint dir to restore base weights from "
+                         "(latest step); default: fresh init")
+    ap.add_argument("--delta", default="",
+                    help="sparse delta artifact dir (DeltaHub) to merge "
+                         "and serve — refuses a wrong base")
+    ap.add_argument("--merge-mode", default="kernel",
+                    choices=["kernel", "ref"],
+                    help="delta scatter-merge backend: Pallas kernel or "
+                         "dense jnp reference")
+    ap.add_argument("--no-buckets", action="store_true",
+                    help="disable power-of-two prefill length buckets "
+                         "(compile per exact prompt length)")
     args = ap.parse_args()
 
     from repro.configs import get_arch
     from repro.data.synthetic import BOS, EOS, SEP, encode, decode, \
         make_arith_example
     from repro.models import build_model
-    from repro.serving.engine import Engine, EngineConfig, Request
+    from repro.serving.engine import (AdapterStore, Engine, EngineConfig,
+                                      Request)
 
     bundle = get_arch(args.arch)
     cfg = bundle.smoke if args.smoke else bundle.full
@@ -39,9 +60,32 @@ def main():
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
 
+    if args.base:
+        from repro.checkpoint.manager import CheckpointManager
+        ckpt = CheckpointManager(args.base)
+        step = ckpt.latest_step()
+        if step is None:
+            raise SystemExit(f"--base {args.base}: no checkpoint steps")
+        params = ckpt.restore(step, {"params": params})["params"]
+        print(f"[base] restored step {step} from {args.base}")
+
+    adapters = None
+    adapter_id = None
+    if args.delta:
+        from repro.deltas import DeltaArtifact
+        delta = DeltaArtifact.load(args.delta)
+        adapters = AdapterStore(params, backend=args.merge_mode)
+        adapter_id = "delta0"
+        adapters.load(adapter_id, delta)
+        print(f"[delta] merged {args.delta} ({delta.nbytes()} payload "
+              f"bytes, {100 * delta.nbytes() / delta.dense_nbytes():.1f}% "
+              f"of dense, mode={delta.manifest['mode']}, "
+              f"backend={args.merge_mode})")
+
     eng = Engine(model, params, EngineConfig(
         batch_slots=args.slots, max_len=args.max_len, eos_id=EOS,
-        seed=args.seed))
+        seed=args.seed, prefill_buckets=not args.no_buckets),
+        adapters=adapters)
     rng = np.random.default_rng(args.seed)
     t0 = time.time()
     for i in range(args.requests):
@@ -49,7 +93,8 @@ def main():
         prompt = np.asarray([BOS] + encode(q) + [SEP], np.int32)
         eng.submit(Request(uid=i, prompt=prompt,
                            max_new_tokens=args.max_new,
-                           temperature=args.temperature))
+                           temperature=args.temperature,
+                           adapter_id=adapter_id))
     done = eng.run()
     dt = time.time() - t0
     total_new = sum(len(r.out_tokens) for r in done)
@@ -57,7 +102,8 @@ def main():
         print(f"req {r.uid}: {decode(r.out_tokens)!r}")
     print(f"{len(done)} requests, {total_new} tokens in {dt:.2f}s "
           f"({total_new / max(dt, 1e-9):.1f} tok/s, "
-          f"{args.slots} slots continuous batching)")
+          f"{args.slots} slots continuous batching, "
+          f"{eng.prefill_compilations} prefill bucket(s))")
 
 
 if __name__ == "__main__":

@@ -48,6 +48,10 @@ def main():
                     help="'local' gives every model-parallel shard an "
                          "exact k/n_shards selection budget — "
                          "collective-free refresh (DESIGN.md §3)")
+    ap.add_argument("--no-overflow-retry", action="store_true",
+                    help="disable host-side auto-retry of compaction "
+                         "overflow (doubled compact_factor per affected "
+                         "tensor; default on)")
     ap.add_argument("--task", default="arith")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=10)
@@ -92,7 +96,8 @@ def main():
         lift=LiftConfig(rank=args.lift_rank, density=args.lift_density,
                         method="exact", update_interval=args.update_interval,
                         min_dim=16, use_kernel=args.use_kernel,
-                        quota=args.quota),
+                        quota=args.quota,
+                        overflow_retry=not args.no_overflow_retry),
         peft=PeftConfig(rank=args.lift_rank))
     adam = sa.AdamConfig(lr=args.lr, grad_clip=1.0)
 
@@ -156,9 +161,11 @@ def main():
     # The loop never calls jax.block_until_ready: train_step and refresh
     # are dispatched asynchronously, the next batch is prepared on the
     # host while the device works, and metric printing is deferred one
-    # step so a refresh dispatch is never followed by an immediate sync —
-    # mask refresh overlaps the host loop instead of stalling it.
+    # step.  The only refresh-time sync is overflow_retry's single
+    # scalar D2H (disable with --no-overflow-retry to keep refresh fully
+    # async) — mask refresh otherwise overlaps the host loop.
     pending = None                # (step, metrics, refreshed_flag)
+    n_retried = 0                 # overflow auto-retries logged so far
     batch = {k: jnp.asarray(v) for k, v in loader.next_batch().items()}
     for step in range(start_step, args.steps):
         params, state, metrics = train_step(params, state, batch)
@@ -181,6 +188,14 @@ def main():
         monitor.observe(0, dt)
         if refreshed:
             print(f"[lift] mask refresh dispatched at step {step + 1}")
+            if len(refresh.retried_history) > n_retried:
+                names, unresolved = refresh.retried_history[-1]
+                n_retried = len(refresh.retried_history)
+                print(f"[lift] compaction overflow at step {step + 1}: "
+                      f"auto-retried {len(names)} tensor(s) with doubled "
+                      f"compact_factor: {', '.join(names)}"
+                      + (f" (STILL overflowing: {list(unresolved)})"
+                         if unresolved else ""))
         if step % 10 == 0 or step == args.steps - 1:
             pending = (step, metrics, dt)
         if ckpt is not None and (step + 1) % args.ckpt_every == 0:
@@ -195,10 +210,16 @@ def main():
               f"gnorm {float(pmetrics['grad_norm']):.3f} {pdt*1e3:.0f}ms")
     if refresh is not None and refresh.overflow_history:
         ovf = sum(int(x) for x in refresh.overflow_history)
-        if ovf:
+        unresolved = [u for _, us in refresh.retried_history for u in us]
+        if ovf and not method.lift.overflow_retry:
             print(f"[lift] WARNING: compaction overflow dropped {ovf} "
                   f"candidates across {len(refresh.overflow_history)} "
-                  f"refreshes — raise LiftConfig.compact_factor")
+                  f"refreshes — raise LiftConfig.compact_factor or "
+                  f"re-enable overflow_retry")
+        elif unresolved:
+            print(f"[lift] WARNING: overflow retry exhausted max factor "
+                  f"for {sorted(set(unresolved))} — masks degraded; "
+                  f"raise LiftConfig.compact_factor")
 
     if ckpt is not None:
         ckpt.wait()

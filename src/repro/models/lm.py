@@ -189,8 +189,17 @@ class LM:
             lambda a: jnp.broadcast_to(a[None], (cfg.num_layers,) + a.shape)
             .copy(), one)
 
-    def prefill(self, params, batch, cache):
-        """batch: tokens/embeds (B, S).  Returns (last-token logits, cache)."""
+    def prefill(self, params, batch, cache, last_pos=None):
+        """batch: tokens/embeds (B, S).  Returns (last-token logits, cache).
+
+        `last_pos` (traced int32 scalar, optional) reads the logits at
+        that position instead of S-1 — the serving engine's bucketed
+        prefill right-pads prompts to a power-of-two length and gathers
+        the real last token here, so one compiled program serves every
+        prompt length in the bucket (mask-aware: causal attention keeps
+        positions <= last_pos blind to the padding, and decode never
+        attends a pad slot — its key_pos exceeds every query position
+        until the slot is overwritten)."""
         cfg = self.cfg
         x = self._embed_in(params, batch)
 
@@ -220,7 +229,12 @@ class LM:
 
         x, cache = self._scan_serve(params, x, cache, body)
         x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
-        logits = x[:, -1:, :] @ self._head_w(params).astype(x.dtype)
+        if last_pos is None:
+            x = x[:, -1:, :]
+        else:
+            x = jax.lax.dynamic_slice_in_dim(
+                x, jnp.asarray(last_pos, jnp.int32), 1, axis=1)
+        logits = x @ self._head_w(params).astype(x.dtype)
         return logits, cache
 
     def decode(self, params, tokens, cache, positions):

@@ -7,7 +7,7 @@ through a per-invocation linear.  The backbone layers are Mamba-2 blocks.
 
 The stack is non-uniform, so layers are a python loop (38 mamba bodies + ~6
 shared invocations still compile quickly); dry-run cost extrapolation uses
-depth P and 2P with P = shared_attn_period (DESIGN.md §5).
+depth P and 2P with P = shared_attn_period (DESIGN.md §6).
 """
 from __future__ import annotations
 
@@ -158,12 +158,20 @@ class ZambaLM(LM):
                                        (self.n_shared,) + a.shape).copy(), kv1)
         return ZambaCache(mamba, kv)
 
-    def prefill(self, params, batch, cache):
+    def prefill(self, params, batch, cache, last_pos=None):
         cfg = self.cfg
         x = self._embed_in(params, batch)
         x, cache = self._iter_layers(params, x, x, "prefill", cache)
         x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
-        logits = x[:, -1:, :] @ self._head_w(params).astype(x.dtype)
+        if last_pos is None:
+            x = x[:, -1:, :]
+        else:
+            # API parity with LM.prefill; the serving engine never pads
+            # hybrid models (mamba state is position-dependent), so
+            # last_pos is S-1 here
+            x = jax.lax.dynamic_slice_in_dim(
+                x, jnp.asarray(last_pos, jnp.int32), 1, axis=1)
+        logits = x @ self._head_w(params).astype(x.dtype)
         return logits, cache
 
     def decode(self, params, tokens, cache, positions):

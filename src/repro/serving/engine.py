@@ -1,4 +1,4 @@
-"""Continuous-batching serving engine.
+"""Continuous-batching serving engine, adapter-aware (DESIGN.md §4).
 
 vLLM-style slot scheduler on top of the model's prefill/decode steps:
   * fixed B decode slots; the decode step always runs the full batch
@@ -7,10 +7,30 @@ vLLM-style slot scheduler on top of the model's prefill/decode steps:
     the batched cache (tree-wide dynamic_update_slice on the batch axis),
   * finished sequences (EOS / max_new_tokens) free their slot immediately.
 
+Prefill compiles once per power-of-two length *bucket*, not once per
+prompt length: prompts are right-padded (mask-aware — causal attention
+keeps real positions blind to pads, `LM.prefill(last_pos=...)` gathers
+the real last-token logits, and decode never attends an un-overwritten
+pad slot because its key_pos exceeds every query position).  Families
+where padding changes real-token math opt out and keep the
+exact-length path: recurrent state (rwkv6 / zamba hybrids), rolling
+sliding-window caches, and MoE capacity-limited dispatch (pads consume
+expert capacity slots).
+
+Adapters (DeltaHub): an `AdapterStore` holds LRU-bounded merged variants
+of the base weights — each a sparse LIFT delta folded in by the
+scatter-merge kernel at load time (the single-adapter fast path: after
+the one-time merge, serving an adapter costs exactly what serving the
+base costs).  Requests carry an `adapter_id`; the scheduler batches
+same-adapter requests into the decode slots and switches the active
+parameter tree only when the batch drains — one set of weights per
+decode dispatch, no per-slot gather.
+
 Greedy or temperature sampling; deterministic under a seed.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Optional
 
@@ -25,7 +45,10 @@ class Request:
     prompt: np.ndarray            # (S,) int32
     max_new_tokens: int = 32
     temperature: float = 0.0      # 0 -> greedy
+    adapter_id: Optional[str] = None   # None -> base weights
     out_tokens: Optional[list] = None
+    error: Optional[str] = None   # set if the request failed (e.g. its
+                                  # adapter was evicted before scheduling)
 
 
 @dataclasses.dataclass
@@ -34,25 +57,92 @@ class EngineConfig:
     max_len: int = 256
     eos_id: int = 2
     seed: int = 0
+    prefill_buckets: bool = True  # power-of-two prompt padding
+    min_bucket: int = 16
 
 
-def _cache_batch_size(cache) -> int:
-    leaf = jax.tree.leaves(cache)[0]
-    return leaf.shape[1]  # (L, B, ...)
+class AdapterStore:
+    """LRU-bounded cache of merged (base + delta) parameter trees.
 
+    `load` folds a `DeltaArtifact` into the base weights with the
+    scatter-merge kernel (backend "kernel") or the dense reference
+    ("ref") — ONE jitted program per adapter geometry, compiled once and
+    reused across adapters (mergers are cached by geometry fingerprint).
+    Validation is on by default: a delta refuses the wrong base hash,
+    and — when the store is given the consumer's `plan_meta` — an
+    incompatible selection-plan fingerprint (geometry / quota policy).
+    """
 
-def _splice(cache_batched, cache_one, slot: int):
-    """Insert batch=1 cache into slot `slot` of the batched cache."""
-    def ins(big, small):
-        return jax.lax.dynamic_update_slice_in_dim(big, small, slot, axis=1)
-    return jax.tree.map(ins, cache_batched, cache_one)
+    def __init__(self, base_params, *, capacity: int = 4,
+                 backend: str = "kernel", mesh=None, validate: bool = True,
+                 plan_meta: Optional[dict] = None):
+        from repro.deltas.format import tree_hash
+        self.base = base_params
+        self.capacity = max(1, capacity)
+        self.backend = backend
+        self.mesh = mesh
+        self.validate = validate
+        self.plan_meta = plan_meta
+        self.base_hash = tree_hash(base_params) if validate else None
+        self._merged: collections.OrderedDict = collections.OrderedDict()
+        self._mergers: dict = {}
+        self.evictions = 0
+
+    def load(self, adapter_id: str, delta) -> None:
+        """Merge `delta` (a DeltaArtifact) and cache it under
+        `adapter_id`; evicts the least-recently-used adapter beyond
+        `capacity`.  Re-loading an id replaces it."""
+        from repro.deltas.format import DeltaMismatchError
+        from repro.deltas.merge import DeltaMerger
+        if self.validate:
+            want = delta.manifest["base_hash"]
+            if want != self.base_hash:
+                raise DeltaMismatchError(
+                    f"adapter {adapter_id!r} was extracted against base "
+                    f"{want[:12]}… but this store serves base "
+                    f"{self.base_hash[:12]}…")
+            if self.plan_meta is not None:
+                delta.validate_plan(self.plan_meta)
+        from repro.deltas.merge import geometry_key
+        key = geometry_key(delta.manifest["tensors"], self.backend)
+        merger = self._mergers.get(key)
+        if merger is None:
+            merger = self._mergers[key] = DeltaMerger(
+                delta.manifest["tensors"], backend=self.backend,
+                mesh=self.mesh)
+        self._merged.pop(adapter_id, None)
+        self._merged[adapter_id] = merger.merge(self.base, delta)
+        while len(self._merged) > self.capacity:
+            self._merged.popitem(last=False)
+            self.evictions += 1
+
+    def evict(self, adapter_id: str) -> None:
+        self._merged.pop(adapter_id, None)
+
+    def adapter_ids(self) -> list:
+        return list(self._merged)
+
+    def params_for(self, adapter_id: Optional[str]):
+        """Merged weights for `adapter_id` (None -> base); marks the
+        adapter most-recently-used.  Unknown ids raise KeyError — the
+        scheduler checks at submit time."""
+        if adapter_id is None:
+            return self.base
+        if adapter_id not in self._merged:
+            raise KeyError(f"adapter {adapter_id!r} is not loaded "
+                           f"(loaded: {list(self._merged)})")
+        self._merged.move_to_end(adapter_id)
+        return self._merged[adapter_id]
 
 
 class Engine:
-    def __init__(self, model, params, cfg: EngineConfig):
+    def __init__(self, model, params, cfg: EngineConfig,
+                 adapters: Optional[AdapterStore] = None):
         self.model = model
         self.params = params
         self.cfg = cfg
+        self.adapters = adapters
+        self.active_adapter: Optional[str] = None
         self.cache = model.init_cache(cfg.batch_slots, cfg.max_len)
         self.positions = np.zeros((cfg.batch_slots,), np.int32)
         self.active: list[Optional[Request]] = [None] * cfg.batch_slots
@@ -62,13 +152,31 @@ class Engine:
         self.queue: list[Request] = []
         self.done: list[Request] = []
 
+        # bucketing is only mask-safe for the dense KV family: recurrent
+        # state (rwkv6 / zamba mamba blocks) integrates pad tokens, a
+        # rolling sliding-window cache would evict real tokens in favor
+        # of pads, and MoE capacity-limited dispatch routes/drops by the
+        # PADDED token count (pads consume expert capacity slots)
+        mcfg = model.cfg
+        self._bucketing = (cfg.prefill_buckets
+                          and getattr(mcfg, "family", "") == "dense"
+                          and getattr(mcfg, "sliding_window", None) is None)
+        self.prefill_compilations = 0
+        self._seen_buckets: set = set()
+
         self._prefill = jax.jit(
-            lambda p, b, c: model.prefill(p, b, c))
+            lambda p, b, c, last: model.prefill(p, b, c, last_pos=last))
         self._decode = jax.jit(
             lambda p, t, c, pos: model.decode(p, t, c, pos))
 
     # ----------------------------------------------------------- client
     def submit(self, req: Request):
+        if req.adapter_id is not None:
+            if self.adapters is None:
+                raise ValueError(
+                    f"request {req.uid} names adapter {req.adapter_id!r} "
+                    f"but the engine has no AdapterStore")
+            self.adapters.params_for(req.adapter_id)  # fail fast if absent
         req.out_tokens = []
         self.queue.append(req)
 
@@ -86,21 +194,77 @@ class Engine:
         if any(a is not None for a in self.active):
             self._decode_step()
 
+    def _bucket_len(self, s: int) -> int:
+        """Power-of-two padded prefill length (>= s, <= max_len when s
+        allows); identity when bucketing is off."""
+        if not self._bucketing:
+            return s
+        b = self.cfg.min_bucket
+        while b < s:
+            b *= 2
+        return max(s, min(b, self.cfg.max_len))
+
+    def _next_request(self) -> Optional[Request]:
+        """Same-adapter slot batching: while any slot is busy only
+        requests matching the batch's active adapter are admitted (FIFO
+        within the adapter); an idle batch switches the active adapter to
+        the head of the queue.
+
+        The submit-time adapter check is a fast-fail, not a reservation:
+        the store's LRU may have evicted the adapter by the time the
+        request is scheduled.  That fails ONLY the affected request
+        (`req.error`, finished with no tokens) — never the whole run.
+        Requests matching the batch's CURRENT adapter are immune: the
+        engine holds the merged tree in `self.params` regardless of the
+        store's cache."""
+        while self.queue:
+            if not any(a is not None for a in self.active):
+                req = self.queue.pop(0)
+                try:
+                    self._activate(req.adapter_id)
+                except KeyError as e:
+                    req.error = str(e)
+                    req.out_tokens = req.out_tokens or []
+                    self.done.append(req)
+                    continue
+                return req
+            for i, r in enumerate(self.queue):
+                if r.adapter_id == self.active_adapter:
+                    return self.queue.pop(i)
+            return None
+        return None
+
+    def _activate(self, adapter_id: Optional[str]):
+        if adapter_id == self.active_adapter:
+            return
+        self.params = (self.adapters.params_for(adapter_id)
+                       if self.adapters is not None else self.params)
+        self.active_adapter = adapter_id
+
     def _admit(self):
         for slot in range(self.cfg.batch_slots):
-            if self.active[slot] is not None or not self.queue:
+            if self.active[slot] is not None:
                 continue
-            req = self.queue.pop(0)
-            prompt = jnp.asarray(req.prompt[None, :], jnp.int32)
+            req = self._next_request()
+            if req is None:
+                break
+            s = len(req.prompt)
+            padded = self._bucket_len(s)
+            prompt = np.zeros((1, padded), np.int32)
+            prompt[0, :s] = req.prompt
+            if padded not in self._seen_buckets:
+                self._seen_buckets.add(padded)
+                self.prefill_compilations += 1
             one_cache = self.model.init_cache(1, self.cfg.max_len)
             logits, one_cache = self._prefill(
-                self.params, {"tokens": prompt}, one_cache)
+                self.params, {"tokens": jnp.asarray(prompt)}, one_cache,
+                jnp.int32(s - 1))
             self.cache = _splice(self.cache, one_cache, slot)
             nxt = self._sample(np.asarray(logits[0, -1]), req.temperature)
             req.out_tokens.append(int(nxt))
             self.active[slot] = req
             self.tokens[slot, 0] = nxt
-            self.positions[slot] = len(req.prompt)
+            self.positions[slot] = s
             self.budget[slot] = req.max_new_tokens - 1
 
     def _decode_step(self):
@@ -136,3 +300,10 @@ class Engine:
         p = np.exp((logits - logits.max()) / temperature)
         p = p / p.sum()
         return int(self.rng.choice(len(p), p=p))
+
+
+def _splice(cache_batched, cache_one, slot: int):
+    """Insert batch=1 cache into slot `slot` of the batched cache."""
+    def ins(big, small):
+        return jax.lax.dynamic_update_slice_in_dim(big, small, slot, axis=1)
+    return jax.tree.map(ins, cache_batched, cache_one)

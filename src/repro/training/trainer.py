@@ -100,7 +100,17 @@ def init_train_state(model, params, method: MethodConfig, key,
         if engine is None:
             engine = selection_engine(model, mcfg)
         plan = engine.plan
-        idx = engine.select(params, key, grads=sample_grads)
+        idx, stats = engine.select_with_stats(params, key,
+                                              grads=sample_grads)
+        if lcfg.overflow_retry:
+            idx, retried, unresolved = engine.retry_overflow(
+                params, key, idx, stats)
+            if retried:
+                print(f"[lift] init selection overflow: retried "
+                      f"{len(retried)} tensor(s) with doubled "
+                      f"compact_factor: {', '.join(retried)}"
+                      + (f" (STILL overflowing: {unresolved})"
+                         if unresolved else ""))
         use_master = params_dtype_isnt_f32(params)
         state["opt"] = sa.init_state(params, idx, plan,
                                      use_master=use_master)
@@ -260,10 +270,17 @@ def make_refresh_step(model, method: MethodConfig,
     callable is already jitted — do not re-wrap it in jax.jit.
 
     After each call, `refresh.last_stats` holds the engine's stats dict
-    ({"overflow": i32 scalar}, an *async* device value — reading it does
-    not force a sync) and `refresh.overflow_history` accumulates the
-    overflow scalar of EVERY refresh (sum it at end of run — a single
-    overflowing refresh degrades the mask for good).
+    ({"overflow": i32 scalar, "overflow_by_path": {...}}, *async* device
+    values — reading them does not force a sync) and
+    `refresh.overflow_history` accumulates the overflow scalar of EVERY
+    refresh.  With `LiftConfig.overflow_retry` (default on), a nonzero
+    overflow triggers `SelectionEngine.retry_overflow` right here: the
+    affected tensors are re-selected with a doubled compact_factor and
+    their moments re-migrated from the pre-refresh state, so an
+    overflowing refresh no longer degrades the mask for good — at the
+    cost of one scalar D2H sync per refresh (refreshes are rare;
+    update_interval steps apart).  Retried path names accumulate in
+    `refresh.retried_history` for the launcher to log.
 
     Gradient/movement selections need a gradient sample, which the refresh
     program doesn't carry — those baselines keep their initial mask (the
@@ -278,20 +295,47 @@ def make_refresh_step(model, method: MethodConfig,
         refresh.engine = engine
         refresh.last_stats = None
         refresh.overflow_history = []
+        refresh.retried_history = []
         return refresh
 
     def refresh(params, state, key):
-        opt, stats = engine.refresh_opt(
-            subtree(params, engine.paths), state["opt"], key)
+        sub = subtree(params, engine.paths)
+        opt, stats = engine.refresh_opt(sub, state["opt"], key)
         if not isinstance(stats["overflow"], jax.core.Tracer):
             refresh.last_stats = stats  # skipped under an outer jit trace
             refresh.overflow_history.append(stats["overflow"])
+            if lcfg.overflow_retry:
+                opt = _refresh_overflow_retry(engine, sub, state["opt"],
+                                              opt, stats, key, refresh)
         return dict(state, opt=opt)
 
     refresh.engine = engine
     refresh.last_stats = None
     refresh.overflow_history = []
+    refresh.retried_history = []
     return refresh
+
+
+def _refresh_overflow_retry(engine, params_sub, old_opt, new_opt, stats,
+                            key, refresh):
+    """Recover overflow-degraded refreshes: re-select the affected tensors
+    at doubled capacity (engine.retry_overflow) and re-migrate their
+    moments from the PRE-refresh optimizer state, exactly as the fused
+    program would have with enough capacity."""
+    idx = {p: new_opt["tensors"][p]["idx"] for p in engine.paths}
+    fixed, retried, unresolved = engine.retry_overflow(
+        params_sub, key, idx, stats)
+    if not retried:
+        return new_opt
+    refresh.retried_history.append((tuple(retried), tuple(unresolved)))
+    mini_plan = {p: engine.plan[p] for p in retried}
+    mini_state = {"step": old_opt["step"],
+                  "tensors": {p: old_opt["tensors"][p] for p in retried}}
+    migrated = sa.migrate(params_sub, mini_state,
+                          {p: fixed[p] for p in retried}, mini_plan)
+    tensors = dict(new_opt["tensors"])
+    tensors.update(migrated["tensors"])
+    return dict(new_opt, tensors=tensors)
 
 
 def effective_params(model, params, state, method: MethodConfig):

@@ -62,6 +62,36 @@ def test_validator_catches_violations(mutate, expect):
     assert errs and any(expect in e for e in errs), (expect, errs)
 
 
+def _delta_rows():
+    return [
+        {"name": "merge/4x256x512-d0.05-kernel", "us_per_call": 1.0,
+         "derived": "matches_ref=True",
+         "metrics": {"matches_ref": True, "density": 0.05}},
+        {"name": "ratio/4x256x512-d0.05", "us_per_call": 0.0,
+         "derived": "bytes_ratio=0.1",
+         "metrics": {"bytes_ratio": 0.1, "density": 0.05}},
+        {"name": "ratio/4x256x512-d0.1", "us_per_call": 0.0,
+         "derived": "bytes_ratio=0.2",
+         "metrics": {"bytes_ratio": 0.2, "density": 0.1}},
+    ]
+
+
+@pytest.mark.parametrize("mutate, expect", [
+    (lambda d: d["rows"][0]["metrics"].update(matches_ref=False),
+     "matches_ref"),
+    (lambda d: d["rows"][1]["metrics"].update(bytes_ratio=0.15), "12%"),
+    (lambda d: d["rows"][1]["metrics"].pop("bytes_ratio"), "bytes_ratio"),
+])
+def test_delta_merge_invariants(mutate, expect):
+    """The delta-artifact size bound (<= 12% of dense at <= 5% density)
+    and kernel/ref parity gate CI; a 0.2 ratio at density 0.1 is fine."""
+    doc = bench_doc(_delta_rows(), suite="delta_merge")
+    assert validate(doc) == []
+    mutate(doc)
+    errs = validate(doc)
+    assert errs and any(expect in e for e in errs), (expect, errs)
+
+
 def test_writer_refuses_invalid_rows(tmp_path):
     bad = [{"name": "shardsel/overflowing", "us_per_call": 0.0,
             "derived": "", "metrics": {"within_bound": False}}]

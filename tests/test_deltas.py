@@ -1,0 +1,312 @@
+"""DeltaHub contracts (DESIGN.md §4): the delta round-trip
+extract -> save -> load -> merge reproduces the fine-tuned checkpoint
+BITWISE (dense ref and Pallas scatter-merge kernel), refusal on the wrong
+base hash / mismatched plan_meta, diff/apply_diff shipping round-trip,
+partial checkpoint reads, and shard-local merge parity on 1/2/8 host
+devices (subprocess, like test_sharded_selection, so the placeholder
+devices never leak into other tests)."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import sparse_adam as sa
+from repro.core.lift import LiftConfig
+from repro.data.loader import ShardedLoader
+from repro.data.synthetic import VOCAB_SIZE, generate
+from repro.deltas import (DeltaArtifact, DeltaMismatchError, apply_diff,
+                          diff, extract, merge_delta)
+from repro.kernels import ops, ref
+from repro.models import ModelConfig, build_model
+from repro.training import trainer as T
+
+CFG = ModelConfig(family="dense", num_layers=2, d_model=64, num_heads=4,
+                  num_kv_heads=2, head_dim=16, d_ff=128,
+                  vocab_size=max(VOCAB_SIZE, 97))
+
+
+def _train_lift(steps=5, seed=0, lr=1e-2):
+    """Tiny fixed-mask LIFT run; returns (model, base, tuned, state,
+    engine).  No refresh between init and the checkpoint, so the stored
+    index sets cover every trained entry (the extraction exactness
+    contract)."""
+    model = build_model(CFG)
+    method = T.MethodConfig(
+        kind="lift", lift=LiftConfig(rank=8, density=0.05, method="exact",
+                                     min_dim=16))
+    base = model.init(jax.random.PRNGKey(seed))
+    engine = T.selection_engine(model, method)
+    params, state = T.init_train_state(model, base, method,
+                                       jax.random.PRNGKey(seed + 1),
+                                       engine=engine)
+    step_fn = jax.jit(T.make_train_step(model, method, sa.AdamConfig(lr=lr),
+                                        T.constant_lr(lr)))
+    loader = ShardedLoader(generate("arith", 128, 32, seed=seed),
+                           batch_size=8, seed=seed)
+    for _ in range(steps):
+        b = {k: jnp.asarray(v) for k, v in loader.next_batch().items()}
+        params, state, _ = step_fn(params, state, b)
+    return model, base, params, state, engine
+
+
+def _save_ckpt(tmp_path, step, params, state, engine):
+    ck = CheckpointManager(str(tmp_path / "ckpt"))
+    ck.save(step, {"params": params, "state": state},
+            meta={"selection": engine.plan_meta()})
+    return ck
+
+
+def _trees_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ------------------------------------------------------------ round-trip
+@pytest.mark.parametrize("backend", ["ref", "kernel"])
+def test_delta_roundtrip_bitwise(tmp_path, backend):
+    """extract -> save -> load -> merge == the fine-tuned checkpoint,
+    bit for bit, on both merge backends."""
+    model, base, tuned, state, engine = _train_lift()
+    ck = _save_ckpt(tmp_path, 5, tuned, state, engine)
+    delta = extract(ck, 5, base)
+    assert delta.manifest["mode"] == "replace"
+    assert delta.nbytes() < delta.dense_nbytes() * 0.12  # ~2x density
+    delta.save(str(tmp_path / "delta"))
+    loaded = DeltaArtifact.load(str(tmp_path / "delta"))
+    merged = merge_delta(base, loaded, backend=backend,
+                         plan_meta=engine.plan_meta())
+    assert _trees_equal(merged, tuned)
+
+
+def test_delta_add_mode_close(tmp_path):
+    """mode="add" ships differences; merging accumulates in fp32 —
+    allclose, not bitwise (replace is the bitwise mode)."""
+    model, base, tuned, state, engine = _train_lift()
+    ck = _save_ckpt(tmp_path, 5, tuned, state, engine)
+    delta = extract(ck, 5, base, mode="add")
+    merged = merge_delta(base, delta, backend="kernel")
+    for a, b in zip(jax.tree.leaves(merged), jax.tree.leaves(tuned)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+# --------------------------------------------------------------- refusal
+def test_delta_refuses_wrong_base(tmp_path):
+    model, base, tuned, state, engine = _train_lift()
+    ck = _save_ckpt(tmp_path, 5, tuned, state, engine)
+    delta = extract(ck, 5, base)
+    wrong = jax.tree.map(lambda x: x + 1e-3, base)
+    with pytest.raises(DeltaMismatchError) as ei:
+        merge_delta(wrong, delta)
+    assert "base" in str(ei.value)
+    # the artifact hash pins the EXACT bytes: an equal copy passes
+    merge_delta(jax.tree.map(jnp.array, base), delta)
+
+
+def test_delta_refuses_mismatched_plan(tmp_path):
+    model, base, tuned, state, engine = _train_lift()
+    ck = _save_ckpt(tmp_path, 5, tuned, state, engine)
+    delta = extract(ck, 5, base)
+    # consumer with a different density -> different k per tensor
+    other = T.selection_engine(
+        model, T.MethodConfig(kind="lift",
+                              lift=LiftConfig(rank=8, density=0.10,
+                                              method="exact", min_dim=16)))
+    with pytest.raises(DeltaMismatchError) as ei:
+        delta.validate_plan(other.plan_meta())
+    assert "geometry" in str(ei.value) or "tensors" in str(ei.value)
+    # and a different quota policy
+    meta = dict(engine.plan_meta(), quota="local", quota_shards=4)
+    with pytest.raises(DeltaMismatchError) as ei:
+        delta.validate_plan(meta)
+    assert "quota" in str(ei.value)
+
+
+def test_delta_refuses_non_lift_checkpoint(tmp_path):
+    ck = CheckpointManager(str(tmp_path / "ckpt"))
+    ck.save(1, {"params": {"w": np.zeros((4, 4), np.float32)}}, meta={})
+    with pytest.raises(DeltaMismatchError):
+        extract(ck, 1, {"w": np.zeros((4, 4), np.float32)})
+
+
+def test_format_version_gate(tmp_path):
+    model, base, tuned, state, engine = _train_lift(steps=1)
+    ck = _save_ckpt(tmp_path, 1, tuned, state, engine)
+    delta = extract(ck, 1, base)
+    delta.manifest["format_version"] = 999
+    delta.save(str(tmp_path / "delta"))
+    with pytest.raises(DeltaMismatchError) as ei:
+        DeltaArtifact.load(str(tmp_path / "delta"))
+    assert "format_version" in str(ei.value)
+
+
+# ------------------------------------------------------------------ diff
+def test_diff_roundtrip(tmp_path):
+    model, base, tuned, state, engine = _train_lift(steps=3)
+    ck = _save_ckpt(tmp_path, 3, tuned, state, engine)
+    a = extract(ck, 3, base)
+    # three more steps -> second artifact against the SAME base
+    method = T.MethodConfig(
+        kind="lift", lift=LiftConfig(rank=8, density=0.05, method="exact",
+                                     min_dim=16))
+    step_fn = jax.jit(T.make_train_step(model, method,
+                                        sa.AdamConfig(lr=1e-2),
+                                        T.constant_lr(1e-2)))
+    loader = ShardedLoader(generate("arith", 128, 32, seed=7),
+                           batch_size=8, seed=7)
+    for _ in range(3):
+        bt = {k: jnp.asarray(v) for k, v in loader.next_batch().items()}
+        tuned, state, _ = step_fn(tuned, state, bt)
+    ck.save(6, {"params": tuned, "state": state},
+            meta={"selection": engine.plan_meta()})
+    b = extract(ck, 6, base)
+
+    patch = diff(a, b)
+    assert patch["stats"]["index_jaccard"] == 1.0  # fixed mask
+    rec = apply_diff(a, patch)
+    assert rec.manifest["step"] == 6
+    for p in b.tensors:
+        assert np.array_equal(rec.tensors[p]["idx"], b.tensors[p]["idx"])
+        assert np.array_equal(rec.tensors[p]["val"], b.tensors[p]["val"])
+    # diffing across different bases refuses
+    a2 = DeltaArtifact(manifest=dict(a.manifest, base_hash="deadbeef"),
+                       tensors=a.tensors)
+    with pytest.raises(DeltaMismatchError):
+        diff(a2, b)
+
+
+# -------------------------------------------------------- partial reads
+def test_restore_leaves_partial(tmp_path):
+    ck = CheckpointManager(str(tmp_path / "ckpt"))
+    tree = {"a": np.arange(6, dtype=np.float32).reshape(2, 3),
+            "nest": {"b": np.ones((4,), np.int32)}}
+    ck.save(1, tree)
+    out = ck.restore_leaves(1, ["nest/b"])
+    assert set(out) == {"nest/b"}
+    assert np.array_equal(out["nest/b"], tree["nest"]["b"])
+    with pytest.raises(KeyError):
+        ck.restore_leaves(1, ["nope"])
+
+
+# --------------------------------------------- scatter-merge kernel unit
+@pytest.mark.parametrize("mode", ["replace", "add"])
+@pytest.mark.parametrize("geom", [(3, 1000, 50), (1, 257, 17),
+                                  (2, 4096, 200)])
+def test_scatter_merge_kernel_matches_ref(mode, geom):
+    ns, N, k = geom
+    rng = np.random.default_rng(hash(geom) % 1000)
+    base = jnp.asarray(rng.normal(size=(ns, N)).astype(np.float32))
+    idx = jnp.asarray(np.sort(np.stack(
+        [rng.choice(N, k, replace=False) for _ in range(ns)]), -1)
+        .astype(np.int32))
+    val = jnp.asarray(rng.normal(size=(ns, k)).astype(np.float32))
+    want = ref.sparse_scatter_merge(base, idx, val, mode=mode)
+    got = ops.sparse_scatter_merge(base, idx, val, mode=mode, bn=256)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+    # capacity=1 forces the exact fallback for almost every entry
+    got2 = ops.sparse_scatter_merge(base, idx, val, mode=mode, bn=256,
+                                    capacity=1)
+    assert np.array_equal(np.asarray(got2), np.asarray(want))
+
+
+def test_scatter_merge_sentinels_write_nothing():
+    rng = np.random.default_rng(3)
+    base = jnp.asarray(rng.normal(size=(2, 300)).astype(np.float32))
+    idx = np.sort(np.stack([rng.choice(300, 20, replace=False)
+                            for _ in range(2)]), -1).astype(np.int32)
+    idx[:, -5:] = 2 ** 31 - 1                      # sentinel tail
+    val = jnp.asarray(rng.normal(size=(2, 20)).astype(np.float32))
+    got = ops.sparse_scatter_merge(base, jnp.asarray(idx), val, bn=128)
+    want = ref.sparse_scatter_merge(base, jnp.asarray(idx), val)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+    untouched = np.ones((2, 300), bool)
+    for s in range(2):
+        untouched[s, idx[s][idx[s] < 300]] = False
+    assert np.array_equal(np.asarray(got)[untouched],
+                          np.asarray(base)[untouched])
+
+
+def test_scatter_merge_bf16_replace_bitwise():
+    rng = np.random.default_rng(5)
+    base = jnp.asarray(rng.normal(size=(2, 512)), jnp.bfloat16)
+    idx = jnp.asarray(np.sort(np.stack(
+        [rng.choice(512, 30, replace=False) for _ in range(2)]), -1)
+        .astype(np.int32))
+    val = jnp.asarray(rng.normal(size=(2, 30)), jnp.bfloat16)
+    got = ops.sparse_scatter_merge(base, idx, val, bn=128)
+    want = ref.sparse_scatter_merge(base, idx, val)
+    assert got.dtype == jnp.bfloat16
+    assert np.array_equal(np.asarray(got, np.float32),
+                          np.asarray(want, np.float32))
+
+
+# ---------------------------------------------- sharded merge (1/2/8 dev)
+SHARDED_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from functools import partial
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+from repro.kernels import ops, ref
+from repro.launch.mesh import make_host_mesh
+from repro.parallel.sharding import sharding_ctx
+from repro.deltas.merge import DeltaMerger
+
+rng = np.random.default_rng(1)
+ns, rows, cols, k = 3, 64, 96, 128
+base = jnp.asarray(rng.normal(size=(ns, rows, cols)).astype(np.float32))
+idx = jnp.asarray(np.sort(np.stack(
+    [rng.choice(rows * cols, k, replace=False) for _ in range(ns)]), -1)
+    .astype(np.int32))
+val = jnp.asarray(rng.normal(size=(ns, k)).astype(np.float32))
+want = ref.sparse_scatter_merge(base.reshape(ns, -1), idx, val)
+want = np.asarray(want.reshape(ns, rows, cols))
+
+for nsh in (1, 2, 8):
+    mesh = make_host_mesh(1, nsh)
+    body = partial(ops.sparse_scatter_merge_sharded, axis_name="model",
+                   n_shards=nsh, cols_global=cols, bn=512)
+    out = shard_map(lambda b, i, v: body(b, i, v), mesh=mesh,
+                    in_specs=(P(None, None, "model"), P(), P()),
+                    out_specs=P(None, None, "model"),
+                    check_rep=False)(base, idx, val)
+    assert np.array_equal(np.asarray(out), want), nsh
+print("KERNEL-SHARDED-OK")
+
+# DeltaMerger picks the shard-local path under a mesh and stays bitwise
+meta = {"t": {"shape": [ns, rows, cols], "stack": [ns],
+              "rows": rows, "cols": cols, "k": k, "dtype": "float32"}}
+tensors = {"t": {"idx": np.asarray(idx), "val": np.asarray(val)}}
+from repro.deltas.format import DeltaArtifact, make_manifest
+art = DeltaArtifact(
+    manifest=make_manifest(mode="replace", base_hash="x", selection=None,
+                           tensors_meta=meta, step=0),
+    tensors=tensors)
+params = {"t": base}
+for nsh in (2, 8):
+    mesh = make_host_mesh(1, nsh)
+    with sharding_ctx(mesh):
+        merger = DeltaMerger(meta, backend="kernel")
+    assert merger.group_exec[(rows, cols, k)] == "sharded", merger.group_exec
+    merged = merger.merge(params, art)
+    assert np.array_equal(np.asarray(merged["t"]), want), nsh
+print("MERGER-SHARDED-OK")
+"""
+
+
+def test_sharded_merge_parity_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", SHARDED_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "KERNEL-SHARDED-OK" in out.stdout
+    assert "MERGER-SHARDED-OK" in out.stdout

@@ -1,0 +1,216 @@
+"""Adapter-aware serving (DESIGN.md §4): bucketed prefill compiles once
+per power-of-two length bucket and stays token-identical to exact-length
+prefill; the AdapterStore merges deltas on load (LRU-bounded) and the
+scheduler batches same-adapter requests; serving base + delta is
+token-identical to serving the dense fine-tuned checkpoint end to end
+(the launch/serve.py --base/--delta path, in process)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import sparse_adam as sa
+from repro.core.lift import LiftConfig
+from repro.data.loader import ShardedLoader
+from repro.data.synthetic import VOCAB_SIZE, generate
+from repro.deltas import DeltaArtifact, DeltaMismatchError, extract
+from repro.models import ModelConfig, build_model
+from repro.serving.engine import (AdapterStore, Engine, EngineConfig,
+                                  Request)
+from repro.training import trainer as T
+
+CFG = ModelConfig(family="dense", num_layers=2, d_model=64, num_heads=4,
+                  num_kv_heads=2, head_dim=16, d_ff=128,
+                  vocab_size=max(VOCAB_SIZE, 97))
+
+
+def _model_params(seed=0):
+    model = build_model(CFG)
+    return model, model.init(jax.random.PRNGKey(seed))
+
+
+def _prompts(n, seed=3, lo=3, hi=33):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(3, 90, size=int(s)).astype(np.int32)
+            for s in rng.integers(lo, hi, size=n)]
+
+
+def _serve(model, params, prompts, *, buckets=True, adapters=None,
+           adapter_ids=None, slots=2, max_new=8):
+    eng = Engine(model, params,
+                 EngineConfig(batch_slots=slots, max_len=64, eos_id=2,
+                              prefill_buckets=buckets), adapters=adapters)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(
+            uid=i, prompt=p, max_new_tokens=max_new,
+            adapter_id=adapter_ids[i] if adapter_ids else None))
+    done = eng.run()
+    assert len(done) == len(prompts)
+    return {r.uid: tuple(r.out_tokens) for r in done}, eng
+
+
+# -------------------------------------------------------- prefill buckets
+def test_bucketed_prefill_token_identical_fewer_compiles():
+    model, params = _model_params()
+    prompts = _prompts(8)
+    lens = {len(p) for p in prompts}
+    a, eng_b = _serve(model, params, prompts, buckets=True)
+    b, eng_e = _serve(model, params, prompts, buckets=False)
+    assert a == b
+    assert eng_e.prefill_compilations == len(lens)
+    assert eng_b.prefill_compilations <= len(
+        {max(16, 1 << (int(s) - 1).bit_length()) for s in lens})
+    assert eng_b.prefill_compilations < eng_e.prefill_compilations
+
+
+@pytest.mark.parametrize("family, kw", [
+    ("rwkv6", dict(num_heads=2, head_dim=32)),   # recurrent state
+    ("moe", dict(num_experts=4, num_experts_per_tok=2)),  # pads eat slots
+])
+def test_bucketing_disabled_for_pad_sensitive_families(family, kw):
+    """Families where pad tokens change real-token math (recurrent
+    state, MoE capacity-limited dispatch) must keep the exact-length
+    path."""
+    cfg = ModelConfig(family=family, num_layers=2, d_model=64,
+                      num_heads=kw.get("num_heads", 4), num_kv_heads=2,
+                      head_dim=kw.get("head_dim", 16), d_ff=128,
+                      vocab_size=max(VOCAB_SIZE, 97),
+                      **{k: v for k, v in kw.items()
+                         if k not in ("num_heads", "head_dim")})
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params, EngineConfig(batch_slots=1, max_len=64,
+                                             eos_id=2))
+    assert not eng._bucketing
+    assert eng._bucket_len(13) == 13
+
+
+# ----------------------------------------------------------- AdapterStore
+def _tiny_delta(model, base, seed, tmp_path, tag):
+    method = T.MethodConfig(
+        kind="lift", lift=LiftConfig(rank=8, density=0.05, method="exact",
+                                     min_dim=16))
+    engine = T.selection_engine(model, method)
+    params, state = T.init_train_state(model, base, method,
+                                       jax.random.PRNGKey(seed),
+                                       engine=engine)
+    step_fn = jax.jit(T.make_train_step(model, method,
+                                        sa.AdamConfig(lr=1e-2),
+                                        T.constant_lr(1e-2)))
+    loader = ShardedLoader(generate("arith", 64, 24, seed=seed),
+                           batch_size=8, seed=seed)
+    for _ in range(3):
+        b = {k: jnp.asarray(v) for k, v in loader.next_batch().items()}
+        params, state, _ = step_fn(params, state, b)
+    ck = CheckpointManager(str(tmp_path / f"ckpt_{tag}"))
+    ck.save(3, {"params": params, "state": state},
+            meta={"selection": engine.plan_meta()})
+    return extract(ck, 3, base), params
+
+
+def test_adapter_store_lru_and_refusal(tmp_path):
+    model, base = _model_params()
+    d1, tuned1 = _tiny_delta(model, base, 11, tmp_path, "a")
+    d2, tuned2 = _tiny_delta(model, base, 22, tmp_path, "b")
+    d3, _ = _tiny_delta(model, base, 33, tmp_path, "c")
+    store = AdapterStore(base, capacity=2, backend="kernel")
+    store.load("a", d1)
+    store.load("b", d2)
+    got = store.params_for("a")
+    assert all(np.array_equal(np.asarray(x), np.asarray(y)) for x, y in
+               zip(jax.tree.leaves(got), jax.tree.leaves(tuned1)))
+    # loading a third evicts the LRU ("b": "a" was touched more recently)
+    store.load("c", d3)
+    assert store.evictions == 1
+    assert set(store.adapter_ids()) == {"a", "c"}
+    with pytest.raises(KeyError):
+        store.params_for("b")
+    assert store.params_for(None) is base
+    # wrong-base refusal at load time
+    other = jax.tree.map(lambda x: x + 1e-3, base)
+    bad_store = AdapterStore(other, backend="kernel")
+    with pytest.raises(DeltaMismatchError):
+        bad_store.load("a", d1)
+    # plan-fingerprint refusal when the store knows the consumer's plan
+    wrong_plan = dict(d1.manifest["selection"], quota="local",
+                      quota_shards=4)
+    picky = AdapterStore(base, backend="kernel", plan_meta=wrong_plan)
+    with pytest.raises(DeltaMismatchError, match="quota"):
+        picky.load("a", d1)
+    ok = AdapterStore(base, backend="kernel",
+                      plan_meta=d1.manifest["selection"])
+    ok.load("a", d1)
+
+
+def test_same_adapter_slot_batching(tmp_path):
+    """Mixed-adapter queue: the scheduler batches per adapter; every
+    request's output equals the single-adapter run's output."""
+    model, base = _model_params()
+    d1, tuned1 = _tiny_delta(model, base, 11, tmp_path, "a")
+    d2, tuned2 = _tiny_delta(model, base, 22, tmp_path, "b")
+    store = AdapterStore(base, backend="kernel")
+    store.load("a", d1)
+    store.load("b", d2)
+    prompts = _prompts(6, seed=5)
+    ids = ["a", "b", None, "a", "b", None]
+    mixed, _ = _serve(model, base, prompts, adapters=store,
+                      adapter_ids=ids)
+    for aid, params_ref in (("a", tuned1), ("b", tuned2), (None, base)):
+        sub = [i for i, x in enumerate(ids) if x == aid]
+        solo, _ = _serve(model, params_ref,
+                         [prompts[i] for i in sub], max_new=8)
+        for j, i in enumerate(sub):
+            assert mixed[i] == solo[j], (aid, i)
+
+
+def test_evicted_adapter_fails_only_its_request(tmp_path):
+    """LRU eviction between submit and scheduling must fail ONLY the
+    affected request (req.error, no tokens) — never crash the run or
+    drop other requests."""
+    model, base = _model_params()
+    d1, _ = _tiny_delta(model, base, 11, tmp_path, "a")
+    d2, _ = _tiny_delta(model, base, 22, tmp_path, "b")
+    store = AdapterStore(base, capacity=1, backend="kernel")
+    store.load("a", d1)
+    eng = Engine(model, base, EngineConfig(batch_slots=2, max_len=64,
+                                           eos_id=2), adapters=store)
+    prompts = _prompts(3, seed=6)
+    eng.submit(Request(uid=0, prompt=prompts[0], max_new_tokens=4,
+                       adapter_id="a"))
+    store.load("b", d2)          # capacity=1 -> evicts "a"
+    eng.submit(Request(uid=1, prompt=prompts[1], max_new_tokens=4,
+                       adapter_id="b"))
+    eng.submit(Request(uid=2, prompt=prompts[2], max_new_tokens=4))
+    done = {r.uid: r for r in eng.run()}
+    assert len(done) == 3
+    assert done[0].error and "a" in done[0].error and not done[0].out_tokens
+    assert done[1].error is None and len(done[1].out_tokens) == 4
+    assert done[2].error is None and len(done[2].out_tokens) == 4
+
+
+def test_engine_rejects_adapter_without_store():
+    model, base = _model_params()
+    eng = Engine(model, base, EngineConfig(batch_slots=1, max_len=64))
+    with pytest.raises(ValueError):
+        eng.submit(Request(uid=0, prompt=np.arange(4, dtype=np.int32),
+                           adapter_id="ghost"))
+
+
+# ------------------------------------------------------------ end to end
+def test_serve_delta_token_identical_to_dense(tmp_path):
+    """The acceptance proof: base + delta artifact serves token-identical
+    to the dense fine-tuned checkpoint, via the saved artifact and both
+    merge backends."""
+    model, base = _model_params()
+    delta, tuned = _tiny_delta(model, base, 44, tmp_path, "e2e")
+    delta.save(str(tmp_path / "delta"))
+    loaded = DeltaArtifact.load(str(tmp_path / "delta"))
+    prompts = _prompts(5, seed=9)
+    want, _ = _serve(model, tuned, prompts)
+    for backend in ("kernel", "ref"):
+        store = AdapterStore(base, backend=backend)
+        store.load("ft", loaded)
+        got, _ = _serve(model, base, prompts, adapters=store,
+                        adapter_ids=["ft"] * len(prompts))
+        assert got == want, backend
