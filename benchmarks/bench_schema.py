@@ -17,7 +17,7 @@
 strings); `derived` keeps the human CSV string.  CI validates the schema
 and the SEMANTIC invariants below and fails on violations — it never
 fails on absolute timings (interpret-mode wall time is noise; the
-trajectory lives in the uploaded artifacts, DESIGN.md §8).
+trajectory lives in the uploaded artifacts, DESIGN.md §9).
 
 Semantic invariants for suite "kernels_micro":
   * every `sel/*-streaming` row reports `agree` in [0, 1] and
@@ -33,6 +33,15 @@ Semantic invariants for suite "delta_merge" (DESIGN.md §4):
   * every `ratio/*` row reports `bytes_ratio`, and rows at the paper's
     operating density (metric density <= 0.05) must keep the on-disk
     delta artifact within 12 % of the dense checkpoint bytes.
+
+Semantic invariants for suite "paged_decode" (DESIGN.md §5):
+  * every `decode/*` row reports `matches_dense` == true — the paged
+    engine must reproduce the dense-cache engine's token streams exactly
+    on the mixed-length request stream (greedy);
+  * every `kvbytes/*` row reports numeric `kv_bytes_ratio` < 1 (resident
+    paged KV at its peak stays below the dense slots x max_len cache on
+    mixed lengths) and `within_live_bound` == true (pool bytes track the
+    LIVE tokens plus page-rounding slack, never the worst case).
 
 Usage: python -m benchmarks.bench_schema BENCH_kernels_micro.json [...]
 """
@@ -84,6 +93,8 @@ def validate(doc) -> list:
             errs.extend(_kernels_micro_row(name, metrics))
         if suite == "delta_merge":
             errs.extend(_delta_merge_row(name, metrics))
+        if suite == "paged_decode":
+            errs.extend(_paged_decode_row(name, metrics))
     return errs
 
 
@@ -126,6 +137,32 @@ def _delta_merge_row(name: str, metrics: dict) -> list:
                     f"{name}: delta artifact is {ratio:.3f}x the dense "
                     f"checkpoint at density {density} — exceeds the 12% "
                     f"O(k)-artifact bound (DESIGN.md §4)")
+    return errs
+
+
+def _paged_decode_row(name: str, metrics: dict) -> list:
+    errs = []
+    if name.startswith("decode/"):
+        if metrics.get("matches_dense") is not True:
+            errs.append(f"{name}: matches_dense must be true — the paged "
+                        f"engine diverged from the dense-cache engine's "
+                        f"token streams")
+    if name.startswith("kvbytes/"):
+        ratio = metrics.get("kv_bytes_ratio")
+        if not isinstance(ratio, (int, float)) or isinstance(ratio, bool):
+            errs.append(f"{name}: kvbytes row needs numeric metric "
+                        f"kv_bytes_ratio, got {ratio!r}")
+        elif ratio >= 1.0:
+            errs.append(
+                f"{name}: peak paged KV is {ratio:.3f}x the dense "
+                f"slots x max_len cache — paging must be bounded by the "
+                f"live working set on mixed lengths (DESIGN.md §5)")
+        if metrics.get("within_live_bound") is not True:
+            errs.append(
+                f"{name}: within_live_bound must be true — the pool "
+                f"exceeded live tokens + page-rounding slack "
+                f"({metrics.get('peak_kv_bytes')} bytes at "
+                f"{metrics.get('peak_live_tokens')} live tokens)")
     return errs
 
 

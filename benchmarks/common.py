@@ -8,7 +8,7 @@ the paper-relevant quantity (accuracy, ppl ratio, bytes, rank...).
 Paper-scale models cannot train on this CPU container, so the comparisons
 (LIFT vs Full FT vs LoRA vs selection baselines) run at reduced scale on the
 synthetic reasoning corpus — the *orderings* are the reproduction target,
-not absolute numbers (DESIGN.md §8).
+not absolute numbers (DESIGN.md §9).
 """
 from __future__ import annotations
 

@@ -33,7 +33,7 @@ CASES = [
 ]
 
 
-def _artifact(ns, rows, cols, k, seed=0):
+def _artifact(ns, rows, cols, k, seed=0, value_dtype=None):
     rng = np.random.default_rng(seed)
     base = rng.normal(size=(ns, rows * cols)).astype(np.float32)
     idx = np.sort(np.stack([rng.choice(rows * cols, k, replace=False)
@@ -41,6 +41,9 @@ def _artifact(ns, rows, cols, k, seed=0):
     val = rng.normal(size=(ns, k)).astype(np.float32)
     meta = {"t": {"shape": [ns, rows, cols], "stack": [ns], "rows": rows,
                   "cols": cols, "k": k, "dtype": "float32"}}
+    if value_dtype is not None:
+        val = val.astype(np.dtype(value_dtype))
+        meta["t"]["value_dtype"] = value_dtype
     art = DeltaArtifact(
         manifest=make_manifest(mode="replace", base_hash="bench",
                                selection=None, tensors_meta=meta, step=0),
@@ -95,6 +98,24 @@ def run():
             "metrics": {"artifact_bytes": int(art_bytes),
                         "dense_bytes": int(dense_bytes),
                         "bytes_ratio": float(ratio),
+                        "density": density}})
+
+        # fp16-value artifact (format v2): the value half of the payload
+        # shrinks 2x for fp32 tensors; merging upcasts (DESIGN.md §4)
+        _, _, _, art16 = _artifact(ns, m, n, k, value_dtype="float16")
+        art16_bytes, dense16 = _disk_bytes(art16, base_np)
+        ratio16 = art16_bytes / dense16
+        rows.append({
+            "name": f"ratio/{name}-fp16", "us_per_call": 0.0,
+            "derived": f"artifact_bytes={art16_bytes};"
+                       f"dense_bytes={dense16};"
+                       f"bytes_ratio={ratio16:.4f};"
+                       f"vs_fp32={art16_bytes / art_bytes:.3f}",
+            "metrics": {"artifact_bytes": int(art16_bytes),
+                        "dense_bytes": int(dense16),
+                        "bytes_ratio": float(ratio16),
+                        "vs_fp32_artifact": float(art16_bytes / art_bytes),
+                        "value_dtype": "float16",
                         "density": density}})
     return rows
 

@@ -1,0 +1,143 @@
+"""PagedKV serving benchmarks (DESIGN.md §5) — BENCH_paged_decode.json.
+
+A mixed-prompt-length request stream (the workload paging exists for:
+short and long prompts sharing one batch) served three ways — the
+dense-cache engine, the paged engine with monolithic prefill, and the
+paged engine with chunked prefill interleaving — with:
+
+  * a MEASURED token-identity bit per paged run (`matches_dense`): the
+    paged engine must reproduce the dense engine's token streams exactly
+    (greedy) — the CI-gated invariant;
+  * decode throughput (tokens/s) for each engine (interpret-mode wall
+    time: regression tracking only, never gated) and the paged/dense
+    speedup at the measured concurrency;
+  * the KV-memory story (`kvbytes/` rows, CI-gated): peak resident paged
+    KV bytes vs the dense engine's slots x max_len allocation
+    (`kv_bytes_ratio` < 1) and vs the live-token bound
+    (`within_live_bound` — pool bytes track live tokens plus page
+    rounding, never the worst case).
+
+Machine-readable output: `python -m benchmarks.paged_decode --json
+BENCH_paged_decode.json` (schema: benchmarks/bench_schema.py).
+"""
+import argparse
+import time
+
+import numpy as np
+
+import jax
+
+from benchmarks.common import SMALL, csv_rows, write_bench_json
+from repro.models import build_model
+from repro.serving.engine import Engine, EngineConfig, Request
+from repro.serving.kvpool import PagedEngine, PagedEngineConfig
+
+SLOTS = 8
+REQUESTS = 12
+MAX_LEN = 128
+MAX_NEW = 16
+PAGE_SIZE = 16
+NUM_PAGES = 48
+
+
+def _prompts(n, seed=7, lo=4, hi=60):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(3, 90, size=int(s)).astype(np.int32)
+            for s in rng.integers(lo, hi, size=n)]
+
+
+def _serve(eng, prompts):
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=p, max_new_tokens=MAX_NEW))
+    t0 = time.perf_counter()
+    done = eng.run()
+    dt = time.perf_counter() - t0
+    toks = {r.uid: tuple(r.out_tokens) for r in done}
+    return toks, sum(len(t) for t in toks.values()), dt
+
+
+def run():
+    model = build_model(SMALL)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = _prompts(REQUESTS)
+
+    def dense():
+        return Engine(model, params, EngineConfig(
+            batch_slots=SLOTS, max_len=MAX_LEN, eos_id=2))
+
+    def paged(chunked):
+        return PagedEngine(model, params, PagedEngineConfig(
+            batch_slots=SLOTS, max_len=MAX_LEN, eos_id=2,
+            page_size=PAGE_SIZE, num_pages=NUM_PAGES,
+            chunked_prefill=chunked))
+
+    # serve each engine twice: the first pass takes the compiles (jit
+    # caches live per engine instance), the second is the measured wall
+    eng_d = dense()
+    _serve(eng_d, prompts)
+    want, n_dense, dt_dense = _serve(eng_d, prompts)
+    eng_p = paged(False)
+    _serve(eng_p, prompts)
+    got_p, n_paged, dt_paged = _serve(eng_p, prompts)
+    eng_c = paged(True)
+    _serve(eng_c, prompts)
+    eng_c.prefill_chunks = 0            # count the measured pass only
+    got_c, n_chunk, dt_chunk = _serve(eng_c, prompts)
+
+    name = f"mixed-{SLOTS}req"
+    tok_s_dense = n_dense / max(dt_dense, 1e-9)
+    tok_s_paged = n_paged / max(dt_paged, 1e-9)
+    tok_s_chunk = n_chunk / max(dt_chunk, 1e-9)
+    st = eng_p.kv_stats()
+    rows = [
+        {"name": f"decode/{name}-paged",
+         "us_per_call": dt_paged * 1e6,
+         "derived": f"matches_dense={want == got_p};"
+                    f"tok_s={tok_s_paged:.1f};"
+                    f"tok_s_dense={tok_s_dense:.1f}",
+         "metrics": {"matches_dense": bool(want == got_p),
+                     "tok_s": tok_s_paged, "tok_s_dense": tok_s_dense,
+                     "speedup_vs_dense": tok_s_paged / tok_s_dense,
+                     "concurrency": SLOTS, "requests": REQUESTS}},
+        {"name": f"decode/{name}-chunked",
+         "us_per_call": dt_chunk * 1e6,
+         "derived": f"matches_dense={want == got_c};"
+                    f"tok_s={tok_s_chunk:.1f};"
+                    f"chunks={eng_c.prefill_chunks}",
+         "metrics": {"matches_dense": bool(want == got_c),
+                     "tok_s": tok_s_chunk,
+                     "speedup_vs_dense": tok_s_chunk / tok_s_dense,
+                     "prefill_chunks": eng_c.prefill_chunks,
+                     "prefill_compilations": eng_c.prefill_compilations,
+                     "concurrency": SLOTS, "requests": REQUESTS}},
+        {"name": f"kvbytes/{name}",
+         "us_per_call": 0.0,
+         "derived": f"kv_bytes_ratio={st['kv_bytes_ratio']:.4f};"
+                    f"peak_pages={st['peak_pages_in_use']};"
+                    f"within_live_bound={st['within_live_bound']}",
+         "metrics": {"kv_bytes_ratio": float(st["kv_bytes_ratio"]),
+                     "peak_kv_bytes": int(st["peak_kv_bytes"]),
+                     "dense_kv_bytes": int(st["dense_kv_bytes"]),
+                     "peak_live_tokens": int(st["peak_live_tokens"]),
+                     "within_live_bound": bool(st["within_live_bound"]),
+                     "page_size": PAGE_SIZE, "num_pages": NUM_PAGES,
+                     "preemptions": int(st["preemptions"])}},
+    ]
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="",
+                    help="write the machine-readable artifact here "
+                         "(BENCH_paged_decode.json; docs/CI.md)")
+    args = ap.parse_args()
+    rows = run()
+    csv_rows(rows)
+    if args.json:
+        write_bench_json(args.json, rows, suite="paged_decode")
+        print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,4 +1,4 @@
-"""Benchmark harness — one module per paper table/figure (DESIGN.md §9).
+"""Benchmark harness — one module per paper table/figure (DESIGN.md §10).
 Prints ``name,us_per_call,derived`` CSV.  ``--only <prefix>`` filters;
 ``--json-dir DIR`` additionally writes one machine-readable
 ``BENCH_<module>.json`` per module (schema: benchmarks/bench_schema.py,
@@ -27,6 +27,7 @@ MODULES = [
     "benchmarks.fig17_selection_overlap", # Figure 17 / App G.9
     "benchmarks.kernels_micro",           # kernel hot-spots
     "benchmarks.delta_merge",             # DeltaHub scatter-merge + bytes
+    "benchmarks.paged_decode",            # PagedKV serving identity + bytes
 ]
 
 

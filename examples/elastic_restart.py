@@ -1,7 +1,7 @@
 """Elastic restart demo: train on a 4-device (2x2) mesh, checkpoint, crash,
 then resume on an 8-device (4x2) mesh — the checkpoint stores logical
 arrays, so the restore re-shards onto whatever topology the restarted job
-has (DESIGN.md §5).  Runs each phase in a subprocess with a different
+has (DESIGN.md §6).  Runs each phase in a subprocess with a different
 --xla_force_host_platform_device_count.
 
     PYTHONPATH=src python examples/elastic_restart.py

@@ -1,5 +1,6 @@
-"""Continuous-batching serving demo: submit a stream of reasoning prompts,
-watch slot admission / eviction, report tokens/s.
+"""Continuous-batching serving demo, dense cache vs PagedKV pool: submit
+a stream of reasoning prompts, watch slot admission / chunked prefill /
+page accounting, report tokens/s and KV residency.
 
     PYTHONPATH=src python examples/serve_continuous_batching.py
 """
@@ -12,6 +13,7 @@ from repro.data.synthetic import (BOS, EOS, SEP, VOCAB_SIZE, decode, encode,
                                   make_arith_example)
 from repro.models import ModelConfig, build_model
 from repro.serving.engine import Engine, EngineConfig, Request
+from repro.serving.kvpool import PagedEngine, PagedEngineConfig
 
 cfg = ModelConfig(family="dense", num_layers=2, d_model=96, num_heads=4,
                   num_kv_heads=2, head_dim=24, d_ff=192,
@@ -19,21 +21,51 @@ cfg = ModelConfig(family="dense", num_layers=2, d_model=96, num_heads=4,
 model = build_model(cfg)
 params = model.init(jax.random.PRNGKey(0))
 
-engine = Engine(model, params,
-                EngineConfig(batch_slots=4, max_len=96, eos_id=EOS))
-rng = np.random.default_rng(0)
-for i in range(10):
-    q, _ = make_arith_example(rng)
-    engine.submit(Request(uid=i,
-                          prompt=np.asarray([BOS] + encode(q) + [SEP]),
-                          max_new_tokens=12,
-                          temperature=0.0 if i % 2 == 0 else 0.8))
 
-t0 = time.time()
-done = engine.run()
-dt = time.time() - t0
-tokens = sum(len(r.out_tokens) for r in done)
-for r in sorted(done, key=lambda r: r.uid)[:5]:
-    print(f"req {r.uid}: {decode(r.out_tokens)!r}")
-print(f"\n{len(done)} requests / {tokens} tokens in {dt:.2f}s "
-      f"({tokens / dt:.1f} tok/s with 4-slot continuous batching)")
+def requests():
+    rng = np.random.default_rng(0)
+    out = []
+    for i in range(10):
+        q, _ = make_arith_example(rng)
+        out.append(Request(uid=i,
+                           prompt=np.asarray([BOS] + encode(q) + [SEP]),
+                           max_new_tokens=12,
+                           temperature=0.0 if i % 2 == 0 else 0.8))
+    return out
+
+
+def drive(engine, label):
+    for r in requests():
+        engine.submit(r)
+    t0 = time.time()
+    done = engine.run()
+    dt = time.time() - t0
+    tokens = sum(len(r.out_tokens) for r in done)
+    print(f"[{label}] {len(done)} requests / {tokens} tokens in {dt:.2f}s "
+          f"({tokens / dt:.1f} tok/s)")
+    return {r.uid: tuple(r.out_tokens) for r in done}
+
+
+dense = drive(Engine(model, params,
+                     EngineConfig(batch_slots=4, max_len=96, eos_id=EOS)),
+              "dense cache, 4 slots")
+
+paged_eng = PagedEngine(model, params, PagedEngineConfig(
+    batch_slots=4, max_len=96, eos_id=EOS, page_size=16, num_pages=32,
+    chunked_prefill=True, prefill_chunk=16))
+paged = drive(paged_eng, "paged pool, chunked prefill")
+
+st = paged_eng.kv_stats()
+# greedy streams are guaranteed identical under chunked prefill; the
+# sampled (temperature 0.8) requests additionally match whenever the
+# chunked logits agree to sampling precision, as they do here
+greedy_same = all(dense[r.uid] == paged[r.uid]
+                  for r in requests() if r.temperature == 0.0)
+print(f"\ngreedy token streams identical: {greedy_same} (guaranteed); "
+      f"all streams identical: {dense == paged}")
+print(f"peak KV residency: {st['peak_pages_in_use']}/{st['num_pages']} "
+      f"pages = {st['peak_kv_bytes'] / 1e3:.0f} kB, "
+      f"{st['kv_bytes_ratio']:.2f}x the dense slots x max_len cache "
+      f"({st['peak_live_tokens']} live tokens at peak)")
+for r_uid in range(3):
+    print(f"req {r_uid}: {decode(list(paged[r_uid]))!r}")

@@ -20,4 +20,4 @@ BUNDLE = ArchBundle(
     skips={}, rules={},
     notes="attention-free: O(1) decode state -> long_500k runs; LIFT "
           "applies to all time/channel-mix projections (decay-LoRA "
-          "vectors excluded, DESIGN.md §7)")
+          "vectors excluded, DESIGN.md §8)")

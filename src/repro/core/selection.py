@@ -142,10 +142,22 @@ class SelectionEngine:
         # parity tests and plan_meta introspect this
         self.group_exec = {
             (g.rows, g.cols, g.k): self._exec_mode(g) for g in self.groups}
-        # jitted lazily at first call so tests can patch the score path
-        # before tracing; one program per entry point.
-        self._select_jit = jax.jit(self._select_impl)
-        self._refresh_jit = jax.jit(self._refresh_impl)
+        # adapted per-tensor compaction factors (ROADMAP follow-up):
+        # `retry_overflow` records every factor it had to raise here, and
+        # all later fused programs start at the adapted capacity instead
+        # of re-overflowing — the fused select/refresh programs are
+        # cached per adapted-factor fingerprint and re-traced only when
+        # a retry raises a factor.
+        self.adapted_factors: dict[str, int] = {}
+        # the adapted-factor fingerprint rides along as a STATIC jit arg:
+        # a raised factor changes the fingerprint and forces a re-trace
+        # (the factors themselves are read from self.adapted_factors at
+        # trace time).  Two jax.jit wrappers over the same bound method
+        # share jax's trace cache — a static arg is the reliable key.
+        self._select_jit = jax.jit(self._select_impl,
+                                   static_argnames=("factors_fp",))
+        self._refresh_jit = jax.jit(self._refresh_impl,
+                                    static_argnames=("factors_fp",))
         # per-(geometry, compact_factor) retry programs (overflow recovery)
         self._retry_cache: dict = {}
 
@@ -179,14 +191,29 @@ class SelectionEngine:
         dropped by compaction-capacity overflow (always 0 on the dense
         backend).  A nonzero count means a degraded mask for that tensor —
         `retry_overflow` recovers it host-side with a doubled
-        `compact_factor`."""
-        return self._select_jit(params, key, grads)
+        `compact_factor` AND persists the raised factor, so later calls
+        select at the adapted capacity up front."""
+        return self._select_jit(params, key, grads,
+                                factors_fp=self._factor_fingerprint())
 
     def refresh_opt(self, params, opt_state, key):
         """Fused mask refresh: select new indices AND migrate the sparse
         optimizer state (Algorithm 1 lines 5-12) in one jitted program.
         `params` may be the planned subtree or the full tree."""
-        return self._refresh_jit(params, opt_state, key)
+        return self._refresh_jit(params, opt_state, key,
+                                 factors_fp=self._factor_fingerprint())
+
+    def _factor_fingerprint(self) -> tuple:
+        """Hashable snapshot of the adapted per-tensor factors — the key
+        the fused-program caches re-trace on."""
+        return tuple(sorted(self.adapted_factors.items()))
+
+    def _group_factor(self, g: GroupSpec) -> int:
+        """A group's compaction factor: the config default raised to the
+        largest adapted factor of any tensor in the group (the group is
+        selected as one stacked batch, so its capacity is shared)."""
+        return max([self.cfg.compact_factor]
+                   + [self.adapted_factors.get(p, 0) for p in g.paths])
 
     # -------------------------------------------- overflow-adaptive retry
     def retry_overflow(self, params, key, indices, stats, *,
@@ -199,6 +226,11 @@ class SelectionEngine:
         ran with — per-path PRNG keys are re-derived identically, so a
         clean retry returns exactly the indices the fused program would
         have returned with enough capacity.
+
+        Every factor this retry raises is PERSISTED in
+        `self.adapted_factors`, so subsequent fused selections/refreshes
+        start at the adapted capacity instead of re-overflowing (the
+        fused programs re-trace once per adaptation).
 
         Returns (new_indices, retried, unresolved): `indices` with the
         affected paths replaced, the retried path names (log these), and
@@ -222,12 +254,14 @@ class SelectionEngine:
             p = self.plan[path]
             w = _leaf_matrices(get_by_path(params, path), p)
             kk = jax.random.split(keys[path], _num_stack(p))
-            factor = self.cfg.compact_factor
+            factor = max(self.cfg.compact_factor,
+                         self.adapted_factors.get(path, 0))
             while True:                  # always at least one doubling
                 factor *= 2
                 idx, ovf = self._retry_one(w, kk, p, factor)
                 if int(jax.device_get(ovf)) == 0 or factor >= max_factor:
                     break
+            self.adapted_factors[path] = factor
             sel = idx.astype(jnp.int32)
             if self.mesh is not None:
                 sel = shd.shard_logical_if_divisible(
@@ -260,7 +294,8 @@ class SelectionEngine:
         return fn(w, kk)
 
     # ------------------------------------------------------ jitted bodies
-    def _select_impl(self, params, key, grads):
+    def _select_impl(self, params, key, grads, factors_fp=()):
+        del factors_fp          # static trace-cache key only (see __init__)
         keys = dict(zip(self.paths, jax.random.split(key, len(self.paths))))
         out: dict[str, jax.Array] = {}
         overflow = jnp.zeros((), jnp.int32)
@@ -364,7 +399,7 @@ class SelectionEngine:
         if mode in ("sharded", "sharded-local"):
             return self._stream_group_sharded(a, b, g, mode)
         return self._stream_select(a, b, g.rows, g.cols, g.k,
-                                   self.cfg.compact_factor)
+                                   self._group_factor(g))
 
     def _stream_group_sharded(self, a, b, g: GroupSpec, mode: str):
         """Collective selection for one stacked factor batch: B slabs stay
@@ -376,16 +411,17 @@ class SelectionEngine:
         from jax.sharding import PartitionSpec as P
         from repro.kernels import ops as kops
         quota = "local" if mode == "sharded-local" else "global"
-        capacity = (self._local_capacity(g.rows, g.cols, g.k)
+        factor = self._group_factor(g)
+        capacity = (self._local_capacity(g.rows, g.cols, g.k, factor)
                     if quota == "local" else 0)
-        axis, n_shards, cfg = self.shard_axis, self.mesh_shards, self.cfg
+        axis, n_shards = self.shard_axis, self.mesh_shards
 
         def body(a3, b3):
             def one(ab):
                 idx, _tau, ovf = kops.lift_indices_sharded(
                     ab[0], ab[1], g.k, axis_name=axis, n_shards=n_shards,
                     cols_global=g.cols, quota=quota, capacity=capacity,
-                    compact_factor=cfg.compact_factor)
+                    compact_factor=factor)
                 return idx, ovf
 
             return jax.lax.map(one, (a3, b3))
@@ -407,9 +443,9 @@ class SelectionEngine:
             return jax.vmap(lambda a, b: one(a, b))(w, kk)
         return jax.vmap(lambda a, b, c: one(a, b, c))(w, kk, gg)
 
-    def _refresh_impl(self, params, opt_state, key):
+    def _refresh_impl(self, params, opt_state, key, factors_fp=()):
         from repro.core import sparse_adam as sa
-        idx, stats = self._select_impl(params, key, None)
+        idx, stats = self._select_impl(params, key, None, factors_fp)
         return sa.migrate(params, opt_state, idx, self.plan), stats
 
     # ------------------------------------------------- checkpoint metadata

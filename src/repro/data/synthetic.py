@@ -147,7 +147,7 @@ def eval_accuracy(model, params, task: str, n: int = 64, seq_len: int = 48,
 
     (Reduced-scale models never reach exact-match accuracy in a few hundred
     steps; token-level accuracy preserves the method ORDERING the paper's
-    tables measure, which is the reproduction target — DESIGN.md §8.)"""
+    tables measure, which is the reproduction target — DESIGN.md §9.)"""
     import jax
     import jax.numpy as jnp
     data = generate(task, n, seq_len, seed=seed)

@@ -36,13 +36,20 @@ IDX_LEAF = "state/opt/tensors/{path}/idx"
 
 
 def extract(ckpt, step: int, base_params, *, mode: str = "replace",
-            base_hash: Optional[str] = None) -> DeltaArtifact:
+            base_hash: Optional[str] = None,
+            value_dtype: Optional[str] = None) -> DeltaArtifact:
     """Build a sparse delta from checkpoint `step` against `base_params`.
 
     `ckpt` is a `CheckpointManager` whose step was written by
     `launch/train.py` ({"params", "state"} tree with the engine's
     `plan_meta` under meta["selection"]).  `base_hash` short-circuits
-    re-hashing when the caller already fingerprinted the base."""
+    re-hashing when the caller already fingerprinted the base.
+
+    `value_dtype` (e.g. "float16") stores the shipped VALUES narrower
+    than the tensor dtype — half the value bytes for fp32 tensors;
+    merging upcasts (format v2).  Quantization breaks the bitwise
+    mode="replace" contract (merged = fp32(fp16(w))); leave None when
+    bitwise identity to the fine-tuned checkpoint matters."""
     selection = ckpt.restore_selection(step)
     if selection is None:
         raise DeltaMismatchError(
@@ -67,8 +74,12 @@ def extract(ckpt, step: int, base_params, *, mode: str = "replace",
             base_flat = np.asarray(get_by_path(base_params, path)).reshape(
                 ns, meta["rows"] * meta["cols"])
             val = val - np.take_along_axis(base_flat, idx2, axis=-1)
+        meta_out = dict(meta, dtype=str(tuned.dtype))
+        if value_dtype is not None and value_dtype != str(tuned.dtype):
+            val = val.astype(np.dtype(value_dtype))
+            meta_out["value_dtype"] = value_dtype
         tensors[path] = {"idx": idx2, "val": val}
-        tensors_meta[path] = dict(meta, dtype=str(tuned.dtype))
+        tensors_meta[path] = meta_out
 
     manifest = make_manifest(
         mode=mode,

@@ -20,13 +20,22 @@ Manifest fields:
     fingerprint verbatim (geometry, backend, quota policy), so a delta
     refuses a consumer whose plan geometry or quota policy disagrees;
   * tensors — {path: {shape, stack, rows, cols, k, dtype}} for the
-    shipped pairs;
+    shipped pairs; format v2 adds an optional per-tensor `value_dtype`
+    (e.g. "float16") when the shipped values are stored narrower than
+    the tensor dtype — consumers upcast on merge;
   * step — the source checkpoint step.
 
 The artifact is O(k) per tensor — ~2x density of the dense bytes at equal
 dtype (int32 index + value per entry), i.e. ≤ 12 % of the dense
 checkpoint at the paper's 5 % density (benchmarks/delta_merge.py tracks
-this ratio in CI).
+this ratio in CI).  fp16 values (`extract(..., value_dtype="float16")`)
+shrink the value half of the payload 2x for fp32 tensors at the cost of
+the bitwise mode="replace" contract: a quantized delta merges to
+fp32(fp16(w)), not w — ship full-precision values when bitwise identity
+to the fine-tuned checkpoint matters.  Refusal semantics are unchanged:
+a v1 reader refuses v2 artifacts by format_version exactly as before,
+and this reader accepts every version in SUPPORTED_FORMAT_VERSIONS
+(v1 artifacts simply have no `value_dtype` fields).
 """
 from __future__ import annotations
 
@@ -40,7 +49,8 @@ import numpy as np
 
 from repro.checkpoint.manager import _flatten
 
-DELTA_FORMAT_VERSION = 1
+DELTA_FORMAT_VERSION = 2
+SUPPORTED_FORMAT_VERSIONS = (1, 2)
 MANIFEST_NAME = "delta.json"
 ARRAYS_NAME = "arrays.npz"
 MODES = ("replace", "add")
@@ -53,6 +63,13 @@ class DeltaMismatchError(ValueError):
 def num_stack(meta: dict) -> int:
     """Matrices per tensor (prod of the manifest entry's stack dims)."""
     return int(np.prod(meta["stack"])) if meta["stack"] else 1
+
+
+def value_dtype(meta: dict) -> str:
+    """Storage dtype of a tensor's shipped values: the v2 optional
+    `value_dtype` field, defaulting to the tensor dtype (always the case
+    for v1 artifacts)."""
+    return meta.get("value_dtype", meta["dtype"])
 
 
 def tree_hash(tree) -> str:
@@ -107,11 +124,11 @@ class DeltaArtifact:
     def load(cls, directory: str) -> "DeltaArtifact":
         with open(os.path.join(directory, MANIFEST_NAME)) as f:
             manifest = json.load(f)
-        if manifest.get("format_version") != DELTA_FORMAT_VERSION:
+        if manifest.get("format_version") not in SUPPORTED_FORMAT_VERSIONS:
             raise DeltaMismatchError(
                 f"delta artifact {directory!r} has format_version "
                 f"{manifest.get('format_version')!r}; this build reads "
-                f"version {DELTA_FORMAT_VERSION}")
+                f"versions {SUPPORTED_FORMAT_VERSIONS}")
         tensors: dict = {}
         with np.load(os.path.join(directory, ARRAYS_NAME)) as z:
             for key in z.files:

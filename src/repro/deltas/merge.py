@@ -88,9 +88,21 @@ class DeltaMerger:
 
     # ------------------------------------------------------------- merge
     def merge(self, base_params, delta: DeltaArtifact):
-        """base tree + artifact -> merged tree (one jitted program)."""
+        """base tree + artifact -> merged tree (one jitted program).
+
+        Quantized artifacts (format v2 `value_dtype`, e.g. fp16 values)
+        UPCAST here: fp16 -> fp32 is exact, so the merged entry is
+        fp32(fp16(w)) — the only lossy step was extraction-time rounding,
+        never the merge itself."""
+        from repro.deltas.format import value_dtype
         idx = {p: jnp.asarray(delta.tensors[p]["idx"]) for p in self.paths}
-        val = {p: jnp.asarray(delta.tensors[p]["val"]) for p in self.paths}
+        val = {}
+        for p in self.paths:
+            v = jnp.asarray(delta.tensors[p]["val"])
+            meta = self.meta[p]
+            if value_dtype(meta) != meta["dtype"]:
+                v = v.astype(jnp.dtype(meta["dtype"]))
+            val[p] = v
         return self._merge_jit(base_params, idx, val,
                                mode=delta.manifest["mode"])
 

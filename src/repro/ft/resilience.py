@@ -1,6 +1,6 @@
 """Fault tolerance at 1000-node scale, exercised on one host.
 
-Three mechanisms (DESIGN.md §5):
+Three mechanisms (DESIGN.md §6):
 
 * PreemptionSimulator — stands in for the TPU preemption signal
   (SIGTERM / maintenance event).  Tests and examples inject "crash at

@@ -402,6 +402,60 @@ def lift_indices_sharded(a, b_local, k: int, *, axis_name: str,
     return idx.astype(jnp.int32), tau, overflow
 
 
+# -------------------------------------------------------- paged attention
+@functools.partial(jax.jit, static_argnames=("backend", "interpret"))
+def paged_attention_decode(q, k_pages, v_pages, block_tables, positions, *,
+                           backend: str = "auto",
+                           interpret: Optional[bool] = None):
+    """One-token decode attention over a block-paged KV pool.
+
+    q: (B, H_kv, g, D) grouped queries (GQA groups folded, the cache is
+    read at its native kv-head width); k_pages / v_pages: (P, ps, H_kv, D)
+    shared page pool; block_tables: (B, nmax) int32 physical page of each
+    logical page; positions: (B,) int32 — keys at logical token index
+    <= positions[b] are attended, everything else masked.
+
+    backend:
+      * "kernel" — the Pallas kernel (`paged_attention.paged_decode_fwd`):
+        streams one physical page at a time, never materializes the
+        gathered (B, nmax*ps) K/V;
+      * "lax"    — pure-XLA fallback for non-Pallas backends: gathers the
+        pages and runs EXACTLY the grouped-einsum read the dense engine's
+        `attention_decode` uses (same equations, same shapes when
+        nmax*ps == the dense cache length), so paged decode is
+        bitwise-comparable to dense-cache decode;
+      * "auto"   — kernel on TPU, lax elsewhere.
+
+    Returns o: (B, H_kv, g, D).
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    if backend == "auto":
+        backend = "kernel" if jax.default_backend() == "tpu" else "lax"
+    if backend == "kernel":
+        from repro.kernels import paged_attention as pak
+        return pak.paged_decode_fwd(q, k_pages, v_pages, block_tables,
+                                    positions, interpret=interpret)
+    if backend != "lax":
+        raise ValueError(f"unknown paged-attention backend {backend!r}")
+    B, hkv, g, D = q.shape
+    P, ps, _, _ = k_pages.shape
+    nmax = block_tables.shape[1]
+    kc = k_pages[block_tables].reshape(B, nmax * ps, hkv, D).astype(q.dtype)
+    vc = v_pages[block_tables].reshape(B, nmax * ps, hkv, D).astype(q.dtype)
+    t = jnp.arange(nmax * ps)
+    ok = t[None, :] <= positions[:, None]
+    bias = jnp.where(ok, 0.0, -1e30)[:, None, None, None, :]  # (B,1,1,1,T)
+    qg = q.reshape(B, 1, hkv, g, D)
+    scale = D ** -0.5
+    s = jnp.einsum("bqhgd,bthd->bhgqt", qg, kc,
+                   preferred_element_type=jnp.float32) * scale
+    s = s + bias
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqt,bthd->bqhgd", p.astype(vc.dtype), vc,
+                   preferred_element_type=jnp.float32).astype(q.dtype)
+    return o[:, 0]                                  # (B, hkv, g, D)
+
+
 # ---------------------------------------------------------- scatter merge
 def _sorted_windows(idx, vals: tuple, nb: int, bn: int, capacity: int):
     """Per-(stack, block) dense windows of sorted (ns, k) index sets.

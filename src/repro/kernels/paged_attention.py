@@ -1,0 +1,98 @@
+"""Pallas paged-attention decode kernel (DESIGN.md §5).
+
+Decode attention over a block-paged KV pool: K/V live in fixed-size
+pages shared by every sequence, and a per-sequence *block table* maps
+logical page j to a physical page.  The kernel never materializes the
+gathered (B, T) key/value tensors that the jax.lax fallback builds —
+each program instance walks its sequence's block table and streams one
+physical page at a time through the online-softmax recurrence, so HBM
+traffic is exactly the live pages of that sequence (plus the one query
+token), not nmax * page_size slots.
+
+Grid: (B, H_kv).  Each instance handles one (sequence, kv-head) pair and
+the `g = H_q / H_kv` query heads of its GQA group at once — decode is
+memory-bound, so the cache is read once at its native kv-head width and
+the whole (g, page_size) score tile stays in registers/VMEM.
+
+Only the pages holding tokens <= positions[b] are visited (the loop
+upper bound is `pos // ps + 1`); the final page applies the per-token
+`kpos <= pos` mask.  Physical page ids are read from the block-table
+block and indexed with `pl.dslice` dynamic starts, the same dynamic-load
+idiom the flash kernel uses (integer entries in a pl.load index tuple
+break on some jax releases).
+
+Validated against `ref.paged_attention` and the lax fallback in
+tests/test_paged_kv.py (interpret mode off-TPU); dtypes bf16/f32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _paged_decode_kernel(q_ref, k_ref, v_ref, bt_ref, pos_ref, o_ref, *,
+                         page_size: int, scale: float):
+    q = q_ref[0, 0].astype(jnp.float32) * scale        # (g, d)
+    g, d = q.shape
+    pos = pos_ref[0, 0]                                # scalar int32
+    n_live = pos // page_size + 1                      # pages with tokens
+
+    m0 = jnp.full((g,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((g,), jnp.float32)
+    a0 = jnp.zeros((g, d), jnp.float32)
+
+    def body(j, carry):
+        m, l, acc = carry
+        page = bt_ref[0, j]
+        k = pl.load(k_ref, (pl.dslice(page, 1), slice(None),
+                            pl.dslice(0, 1), slice(None)))[0, :, 0, :]
+        v = pl.load(v_ref, (pl.dslice(page, 1), slice(None),
+                            pl.dslice(0, 1), slice(None)))[0, :, 0, :]
+        s = q @ k.astype(jnp.float32).T                # (g, ps)
+        kpos = j * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (g, page_size), 1)
+        s = jnp.where(kpos <= pos, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[:, None] + p @ v.astype(jnp.float32)
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, n_live, body, (m0, l0, a0))
+    l = jnp.maximum(l, 1e-37)
+    o_ref[0, 0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_decode_fwd(q, k_pages, v_pages, block_tables, positions, *,
+                     scale: float | None = None, interpret: bool = True):
+    """q: (B, H_kv, g, D) grouped queries for ONE decode token;
+    k_pages / v_pages: (P, ps, H_kv, D); block_tables: (B, nmax) int32;
+    positions: (B,) int32.  Returns o: (B, H_kv, g, D)."""
+    B, hkv, g, D = q.shape
+    P, ps, hkv2, D2 = k_pages.shape
+    assert (hkv, D) == (hkv2, D2), (q.shape, k_pages.shape)
+    nmax = block_tables.shape[1]
+    scale = D ** -0.5 if scale is None else scale
+
+    kern = functools.partial(_paged_decode_kernel, page_size=ps, scale=scale)
+    return pl.pallas_call(
+        kern,
+        grid=(B, hkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, D), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((P, ps, 1, D), lambda b, h: (0, 0, h, 0)),
+            pl.BlockSpec((P, ps, 1, D), lambda b, h: (0, 0, h, 0)),
+            pl.BlockSpec((1, nmax), lambda b, h: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b, h: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, D), lambda b, h: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, hkv, g, D), q.dtype),
+        interpret=interpret,
+    )(q, k_pages, v_pages, block_tables.astype(jnp.int32),
+      positions.astype(jnp.int32).reshape(B, 1))

@@ -81,6 +81,39 @@ def sparse_adam(p, g, idx, m, v, *, lr, b1, b2, eps, wd, step):
     return p_new.astype(p.dtype), m2, v2
 
 
+# -------------------------------------------------------- paged attention
+def paged_attention(q, k_pages, v_pages, block_tables, positions,
+                    scale=None):
+    """Dense oracle for `ops.paged_attention_decode` (one decode token).
+
+    q: (B, H, D) — this step's query per sequence;
+    k_pages / v_pages: (P, ps, H_kv, D) — the shared page pool;
+    block_tables: (B, nmax) int32 — logical page j of sequence b lives in
+    physical page block_tables[b, j];
+    positions: (B,) int32 — the query's position; keys at logical token
+    index <= positions[b] are attended, everything else (unwritten slots,
+    stale pages, other sequences' trash) is masked.
+
+    fp32 softmax over the fully gathered logical token stream.
+    """
+    B, H, D = q.shape
+    P, ps, hkv, _ = k_pages.shape
+    nmax = block_tables.shape[1]
+    scale = D ** -0.5 if scale is None else scale
+    k = k_pages[block_tables].reshape(B, nmax * ps, hkv, D)
+    v = v_pages[block_tables].reshape(B, nmax * ps, hkv, D)
+    reps = H // hkv
+    kf = jnp.repeat(k.astype(jnp.float32), reps, axis=2)
+    vf = jnp.repeat(v.astype(jnp.float32), reps, axis=2)
+    s = jnp.einsum("bhd,bthd->bht", q.astype(jnp.float32), kf) * scale
+    t = jnp.arange(nmax * ps)
+    ok = t[None, :] <= positions[:, None]
+    s = jnp.where(ok[:, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bht,bthd->bhd", p, vf)
+    return o.astype(q.dtype)
+
+
 # -------------------------------------------------------- flash attention
 def naive_attention(q, k, v, causal=True, scale=None):
     """q,k,v: (B, S, H, D) -> o (B, S, H, D), fp32 softmax."""

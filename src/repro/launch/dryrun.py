@@ -11,7 +11,7 @@ Per cell this runner produces:
   * full-depth compile  -> proof of shardability + memory_analysis()
   * depth-P and depth-2P UNROLLED compiles (single-pod only) -> exact HLO
     flops / bytes / collective-bytes per layer by linear extrapolation
-    (scan bodies are counted once by cost_analysis; DESIGN.md §6)
+    (scan bodies are counted once by cost_analysis; DESIGN.md §7)
 
 Usage:
   python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k [--multi-pod]

@@ -12,7 +12,7 @@ and charge each collective with ring-algorithm link bytes:
 
 Cost lowerings are UNROLLED (no while loops), so text counts are exact; the
 parser still tracks computations and flags collectives living inside a
-`while` body (sanity check for the methodology, DESIGN.md §6).
+`while` body (sanity check for the methodology, DESIGN.md §7).
 """
 from __future__ import annotations
 

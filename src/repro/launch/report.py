@@ -30,7 +30,7 @@ def dryrun_markdown() -> str:
                 f"| {ce.get('coll_link_bytes', float('nan')):.3e} "
                 f"| {mix_s} |")
     out.append("")
-    out.append("Skipped cells (documented in DESIGN.md §7):")
+    out.append("Skipped cells (documented in DESIGN.md §8):")
     out.append("")
     for arch, shape, reason in skips:
         out.append(f"* `{arch} x {shape}` — {reason}")

@@ -9,6 +9,13 @@ into the engine's AdapterStore (refusing a wrong base hash) and serves
 every request through the merged adapter — token-identical to serving the
 dense fine-tuned checkpoint, at O(k) artifact bytes.  `--merge-mode`
 picks the scatter-merge backend (Pallas kernel vs dense reference).
+
+PagedKV (DESIGN.md §5): `--kv-pages N` switches to the block-paged
+engine — KV lives in N shared pages of `--kv-page-size` tokens with
+page-aware continuous batching (admission waits or preempts instead of
+OOMing), and `--chunked-prefill` interleaves fixed-size prompt chunks
+with decode steps.  Token-identical to the dense-cache engine; attention
+families only (rwkv6 keeps the dense engine).
 """
 from __future__ import annotations
 
@@ -42,6 +49,24 @@ def main():
     ap.add_argument("--no-buckets", action="store_true",
                     help="disable power-of-two prefill length buckets "
                          "(compile per exact prompt length)")
+    ap.add_argument("--kv-pages", type=int, default=0,
+                    help="serve through the block-paged KV pool with this "
+                         "many shared pages (0 = dense per-slot cache)")
+    ap.add_argument("--kv-page-size", type=int, default=16,
+                    help="tokens per KV page (paged engine)")
+    ap.add_argument("--chunked-prefill", action="store_true",
+                    help="prefill long prompts in fixed-size chunks that "
+                         "interleave with decode steps (paged engine, "
+                         "dense family)")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="tokens per prefill chunk (--chunked-prefill)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share reference-counted prompt-prefix pages "
+                         "across requests (paged engine, dense family)")
+    ap.add_argument("--kv-policy", default="preempt",
+                    choices=["preempt", "stall"],
+                    help="page-exhaustion policy: preempt the youngest "
+                         "sequence or stall the growing one")
     args = ap.parse_args()
 
     from repro.configs import get_arch
@@ -82,10 +107,22 @@ def main():
               f"of dense, mode={delta.manifest['mode']}, "
               f"backend={args.merge_mode})")
 
-    eng = Engine(model, params, EngineConfig(
-        batch_slots=args.slots, max_len=args.max_len, eos_id=EOS,
-        seed=args.seed, prefill_buckets=not args.no_buckets),
-        adapters=adapters)
+    if args.kv_pages > 0:
+        from repro.serving.kvpool import PagedEngine, PagedEngineConfig
+        eng = PagedEngine(model, params, PagedEngineConfig(
+            batch_slots=args.slots, max_len=args.max_len, eos_id=EOS,
+            seed=args.seed, page_size=args.kv_page_size,
+            num_pages=args.kv_pages,
+            chunked_prefill=args.chunked_prefill,
+            prefill_chunk=args.prefill_chunk,
+            prefill_buckets=not args.no_buckets,
+            prefix_cache=args.prefix_cache,
+            exhaustion=args.kv_policy), adapters=adapters)
+    else:
+        eng = Engine(model, params, EngineConfig(
+            batch_slots=args.slots, max_len=args.max_len, eos_id=EOS,
+            seed=args.seed, prefill_buckets=not args.no_buckets),
+            adapters=adapters)
     rng = np.random.default_rng(args.seed)
     t0 = time.time()
     for i in range(args.requests):
@@ -104,6 +141,14 @@ def main():
           f"({total_new / max(dt, 1e-9):.1f} tok/s, "
           f"{args.slots} slots continuous batching, "
           f"{eng.prefill_compilations} prefill bucket(s))")
+    if args.kv_pages > 0:
+        st = eng.kv_stats()
+        print(f"[kvpool] peak {st['peak_pages_in_use']}/{args.kv_pages} "
+              f"pages ({st['peak_kv_bytes'] / 1e6:.2f} MB, "
+              f"{st['kv_bytes_ratio']:.2f}x the dense cache), "
+              f"{eng.prefill_chunks} prefill chunk(s), "
+              f"{st['preemptions']} preemption(s), "
+              f"{st['prefix_hits']} prefix hit(s)")
 
 
 if __name__ == "__main__":

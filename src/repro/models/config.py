@@ -64,7 +64,7 @@ class ModelConfig:
     compute_dtype: str = "float32"
     remat: bool = False
     scan_layers: bool = True
-    unroll_layers: bool = False        # cost-accounting mode (see DESIGN.md §6)
+    unroll_layers: bool = False        # cost-accounting mode (see DESIGN.md §7)
     attn_chunk: int = 0                # 0 -> naive attention; else online-softmax
     loss_chunk: int = 0                # 0 -> full logits; else chunked CE
     seq_shard_activations: bool = False

@@ -24,8 +24,10 @@ from repro.nn import layers as L
 from repro.nn import mlp as mlpmod
 from repro.nn import moe as moemod
 from repro.nn import rwkv6 as rwkvmod
-from repro.nn.attention import (KVCache, attention, attention_decode,
-                                attention_prefill, attention_spec)
+from repro.nn.attention import (KVCache, PagedKVCache, attention,
+                                attention_decode, attention_decode_paged,
+                                attention_prefill, attention_prefill_paged,
+                                attention_spec)
 from repro.parallel.sharding import shard_logical
 
 
@@ -188,6 +190,96 @@ class LM:
         return jax.tree.map(
             lambda a: jnp.broadcast_to(a[None], (cfg.num_layers,) + a.shape)
             .copy(), one)
+
+    def init_paged_cache(self, num_pages: int, page_size: int):
+        """Per-layer-stacked page pool for the PagedKV serving engine
+        (DESIGN.md §5): (L, P, page_size, H_kv, D) zeros, shared by every
+        batch slot.  Only attention families page their cache; recurrent
+        state (rwkv6) has no KV to page, and a rolling sliding-window
+        cache is already bounded — both keep the dense engine."""
+        cfg = self.cfg
+        if cfg.family == "rwkv6":
+            raise ValueError("rwkv6 keeps fixed recurrent state — no KV "
+                             "cache to page; serve it with the dense "
+                             "engine")
+        if cfg.sliding_window is not None:
+            raise ValueError("sliding-window caches are rolling buffers "
+                             "already bounded by the window; paging is "
+                             "for full-attention caches")
+        dt = _dtype(cfg.compute_dtype)
+        one = PagedKVCache.init(num_pages, page_size, cfg.num_kv_heads,
+                                cfg.head_dim, dt)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.num_layers,) + a.shape)
+            .copy(), one)
+
+    def prefill_paged(self, params, batch, pages, block_table, *,
+                      start_pos, write_upto, last_pos,
+                      whole_prompt: bool = True):
+        """Prefill one chunk of ONE sequence through the paged pool.
+
+        batch: tokens (1, C) at absolute positions
+        [start_pos, start_pos + C); block_table: (1, nmax) the sequence's
+        block table; `write_upto` caps K/V writes (right-padding beyond
+        the real prompt goes to the trash page); `last_pos` gathers the
+        logits at that CHUNK-LOCAL position.  `whole_prompt` (static)
+        keeps the bitwise-identical-to-dense intra-chunk attention read
+        when the chunk covers the entire prompt (see
+        `attention_prefill_paged`).  Returns (logits (1, 1, V), pages)."""
+        cfg = self.cfg
+        x = self._embed_in(params, batch)
+
+        def body(x, lyr_and_pages):
+            lyr, pg = lyr_and_pages
+            xn = L.rmsnorm(lyr["ln1"], x, cfg.norm_eps)
+            h, new_pg = attention_prefill_paged(
+                lyr["attn"], xn, cfg, pg, block_table,
+                start_pos=start_pos, write_upto=write_upto,
+                whole_prompt=whole_prompt)
+            x = x + h
+            xn2 = L.rmsnorm(lyr["ln2"], x, cfg.norm_eps)
+            if cfg.family == "moe":
+                h, _ = moemod.moe(lyr["moe"], xn2, cfg)
+            else:
+                h = mlpmod.mlp(lyr["mlp"], xn2, cfg)
+            return x + h, new_pg
+
+        x, pages = self._scan_serve(params, x, pages, body)
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        x = jax.lax.dynamic_slice_in_dim(
+            x, jnp.asarray(last_pos, jnp.int32), 1, axis=1)
+        logits = x @ self._head_w(params).astype(x.dtype)
+        return logits, pages
+
+    def decode_paged(self, params, tokens, pages, block_tables, positions,
+                     backend: str = "auto"):
+        """One-token decode through the paged pool.  tokens: (B, 1);
+        block_tables: (B, nmax); positions: (B,).  Inactive slots carry
+        an all-zero block table and position 0 — their writes land in the
+        trash page.  -> (logits, pages)."""
+        cfg = self.cfg
+        if cfg.is_encoder:
+            raise ValueError("encoder-only models have no decode step")
+        x = self._embed_in(params, {"tokens": tokens})
+
+        def body(x, lyr_and_pages):
+            lyr, pg = lyr_and_pages
+            xn = L.rmsnorm(lyr["ln1"], x, cfg.norm_eps)
+            h, new_pg = attention_decode_paged(
+                lyr["attn"], xn, cfg, pg, block_tables, positions,
+                backend=backend)
+            x = x + h
+            xn2 = L.rmsnorm(lyr["ln2"], x, cfg.norm_eps)
+            if cfg.family == "moe":
+                h, _ = moemod.moe(lyr["moe"], xn2, cfg)
+            else:
+                h = mlpmod.mlp(lyr["mlp"], xn2, cfg)
+            return x + h, new_pg
+
+        x, pages = self._scan_serve(params, x, pages, body)
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = x @ self._head_w(params).astype(x.dtype)
+        return logits, pages
 
     def prefill(self, params, batch, cache, last_pos=None):
         """batch: tokens/embeds (B, S).  Returns (last-token logits, cache).

@@ -7,7 +7,7 @@ through a per-invocation linear.  The backbone layers are Mamba-2 blocks.
 
 The stack is non-uniform, so layers are a python loop (38 mamba bodies + ~6
 shared invocations still compile quickly); dry-run cost extrapolation uses
-depth P and 2P with P = shared_attn_period (DESIGN.md §6).
+depth P and 2P with P = shared_attn_period (DESIGN.md §7).
 """
 from __future__ import annotations
 
@@ -21,8 +21,10 @@ from repro.models.lm import LM, _dtype
 from repro.nn import core as nncore
 from repro.nn import layers as L
 from repro.nn import mlp as mlpmod
-from repro.nn.attention import (KVCache, attention, attention_decode,
-                                attention_prefill, attention_spec)
+from repro.nn.attention import (KVCache, PagedKVCache, attention,
+                                attention_decode, attention_decode_paged,
+                                attention_prefill, attention_prefill_paged,
+                                attention_spec)
 from repro.nn.core import Spec
 from repro.nn.mamba2 import MambaState, mamba2, mamba2_spec
 
@@ -73,8 +75,11 @@ class ZambaLM(LM):
 
     # ------------------------------------------------------------ forward
     def _shared_apply(self, params, x, e0, inv_idx, mode="train",
-                      cache=None, positions=None):
-        """x: (B, S, d) hidden; e0: (B, S, d) original embeddings."""
+                      cache=None, positions=None, paged=None):
+        """x: (B, S, d) hidden; e0: (B, S, d) original embeddings.
+        `paged` carries the PagedKV context (block tables, chunk offsets,
+        read backend) when mode is *_paged — the shared-block KV then
+        lives in the page pool instead of a dense per-slot cache."""
         cfg = self.cfg
         scfg = self.shared_cfg()
         u = jnp.concatenate([x, e0], axis=-1)
@@ -85,6 +90,16 @@ class ZambaLM(LM):
         elif mode == "prefill":
             a, new_kv = attention_prefill(params["shared"]["attn"], un, scfg,
                                           cache)
+        elif mode == "prefill_paged":
+            a, new_kv = attention_prefill_paged(
+                params["shared"]["attn"], un, scfg, cache,
+                paged["block_tables"], start_pos=paged["start_pos"],
+                write_upto=paged["write_upto"], whole_prompt=True)
+        elif mode == "decode_paged":
+            a, new_kv = attention_decode_paged(
+                params["shared"]["attn"], un, scfg, cache,
+                paged["block_tables"], positions,
+                backend=paged["backend"])
         else:
             a, new_kv = attention_decode(params["shared"]["attn"], un, scfg,
                                          cache, positions)
@@ -94,7 +109,8 @@ class ZambaLM(LM):
         dp = params["down_proj"][inv_idx].astype(x.dtype)
         return x + u @ dp, new_kv
 
-    def _iter_layers(self, params, x, e0, mode, cache=None, positions=None):
+    def _iter_layers(self, params, x, e0, mode, cache=None, positions=None,
+                     paged=None):
         cfg = self.cfg
         new_mamba, new_kv = [], []
         inv = 0
@@ -112,7 +128,7 @@ class ZambaLM(LM):
                 kv = None if cache is None else \
                     jax.tree.map(lambda a: a[inv], cache.kv)
                 x, nkv = self._shared_apply(params, x, e0, inv, mode, kv,
-                                            positions)
+                                            positions, paged)
                 if nkv is not None:
                     new_kv.append(nkv)
                 inv += 1
@@ -143,13 +159,20 @@ class ZambaLM(LM):
                 v=("layers", "batch", "cache_seq", None, "head_dim"),
                 key_pos=("layers", "batch", "cache_seq")))
 
+    def init_mamba_state(self, batch: int):
+        """(L, batch, ...) stacked fresh recurrent state — the fixed-size
+        half of the hybrid cache (paged serving splices this per slot
+        while the attention KV lives in the shared page pool)."""
+        cfg = self.cfg
+        m = MambaState.init(batch, cfg, _dtype(cfg.compute_dtype))
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None],
+                                       (cfg.num_layers,) + a.shape).copy(), m)
+
     def init_cache(self, batch: int, max_len: int):
         cfg = self.cfg
         dt = _dtype(cfg.compute_dtype)
-        m = MambaState.init(batch, cfg, dt)
-        mamba = jax.tree.map(
-            lambda a: jnp.broadcast_to(a[None],
-                                       (cfg.num_layers,) + a.shape).copy(), m)
+        mamba = self.init_mamba_state(batch)
         scfg = self.shared_cfg()
         kv1 = KVCache.init(batch, max_len, scfg.num_kv_heads, scfg.head_dim,
                            dt)
@@ -157,6 +180,53 @@ class ZambaLM(LM):
             lambda a: jnp.broadcast_to(a[None],
                                        (self.n_shared,) + a.shape).copy(), kv1)
         return ZambaCache(mamba, kv)
+
+    def init_paged_cache(self, batch: int, num_pages: int, page_size: int):
+        """Hybrid paged cache (DESIGN.md §5): the mamba backbone keeps its
+        FIXED per-slot recurrent state ((L, B, ...) — nothing to page),
+        while the shared attention blocks' KV routes through a page pool
+        stacked over the n_shared invocations."""
+        cfg = self.cfg
+        dt = _dtype(cfg.compute_dtype)
+        mamba = self.init_mamba_state(batch)
+        scfg = self.shared_cfg()
+        kv1 = PagedKVCache.init(num_pages, page_size, scfg.num_kv_heads,
+                                scfg.head_dim, dt)
+        kv = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None],
+                                       (self.n_shared,) + a.shape).copy(), kv1)
+        return ZambaCache(mamba, kv)
+
+    def prefill_paged(self, params, batch, cache, block_table, *,
+                      start_pos, write_upto, last_pos,
+                      whole_prompt: bool = True):
+        """Whole-prompt prefill of ONE sequence through the paged pool:
+        cache.mamba is the (L, 1, ...) recurrent state of this slot,
+        cache.kv the SHARED page pool.  The engine never pads or chunks
+        hybrid prompts (the mamba state is position-dependent), so the
+        chunk is the exact prompt and `whole_prompt` stays True."""
+        cfg = self.cfg
+        x = self._embed_in(params, batch)
+        paged = {"block_tables": block_table, "start_pos": start_pos,
+                 "write_upto": write_upto, "backend": "auto"}
+        x, cache = self._iter_layers(params, x, x, "prefill_paged", cache,
+                                     paged=paged)
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        x = jax.lax.dynamic_slice_in_dim(
+            x, jnp.asarray(last_pos, jnp.int32), 1, axis=1)
+        logits = x @ self._head_w(params).astype(x.dtype)
+        return logits, cache
+
+    def decode_paged(self, params, tokens, cache, block_tables, positions,
+                     backend: str = "auto"):
+        cfg = self.cfg
+        x = self._embed_in(params, {"tokens": tokens})
+        paged = {"block_tables": block_tables, "backend": backend}
+        x, cache = self._iter_layers(params, x, x, "decode_paged", cache,
+                                     positions, paged=paged)
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = x @ self._head_w(params).astype(x.dtype)
+        return logits, cache
 
     def prefill(self, params, batch, cache, last_pos=None):
         cfg = self.cfg

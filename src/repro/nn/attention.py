@@ -67,6 +67,58 @@ class KVCache(NamedTuple):
         )
 
 
+class PagedKVCache(NamedTuple):
+    """Block-paged KV pool (DESIGN.md §5): k/v split into fixed-size
+    pages shared by EVERY sequence; a per-request block table maps
+    logical page j of the sequence to a physical page.
+
+    k/v: (P, page_size, H_kv, D).  Logical token t of a sequence lives in
+    slot t % page_size of physical page block_table[t // page_size]; the
+    attention mask is purely positional (kpos <= query position), so no
+    per-slot key_pos bookkeeping is needed — unwritten or stale slots are
+    never inside the mask.
+
+    Physical page 0 is reserved as the TRASH page: writes from inactive
+    batch slots and masked-off padding land there and nothing ever reads
+    it back (the allocator never hands page 0 to a request).
+    """
+    k: jax.Array
+    v: jax.Array
+
+    @staticmethod
+    def init(num_pages: int, page_size: int, n_kv: int, head_dim: int,
+             dtype):
+        return PagedKVCache(
+            k=jnp.zeros((num_pages, page_size, n_kv, head_dim), dtype),
+            v=jnp.zeros((num_pages, page_size, n_kv, head_dim), dtype),
+        )
+
+
+def paged_write(pages: PagedKVCache, k, v, block_tables, positions,
+                write_mask=None) -> PagedKVCache:
+    """Scatter one K/V vector per row into the page pool.
+
+    k/v: (R, H_kv, D) — R rows, each a (token, sequence) pair;
+    block_tables: (R, nmax) int32; positions: (R,) int32 the token's
+    logical position; write_mask: (R,) bool or None — masked-off rows
+    (padding, positions past the cache capacity) are redirected to slot 0
+    of the trash page instead of corrupting a live page."""
+    ps = pages.k.shape[1]
+    nmax = block_tables.shape[1]
+    lp = jnp.clip(positions // ps, 0, nmax - 1)
+    phys = jnp.take_along_axis(block_tables, lp[:, None], axis=1)[:, 0]
+    slot = positions % ps
+    ok = positions < nmax * ps
+    if write_mask is not None:
+        ok = ok & write_mask
+    phys = jnp.where(ok, phys, 0)
+    slot = jnp.where(ok, slot, 0)
+    return PagedKVCache(
+        k=pages.k.at[phys, slot].set(k.astype(pages.k.dtype)),
+        v=pages.v.at[phys, slot].set(v.astype(pages.v.dtype)),
+    )
+
+
 def _qkv(params, x, cfg: ModelConfig):
     B, S, _ = x.shape
     dt = x.dtype
@@ -201,6 +253,117 @@ def attention_prefill(params, x, cfg: ModelConfig, cache: KVCache):
     o = o.reshape(B, S, cfg.num_heads * cfg.head_dim)
     out = o @ params["wo"].astype(x.dtype)
     return shard_logical(out, ("batch", "seq", "embed")), new_cache
+
+
+def attention_prefill_paged(params, x, cfg: ModelConfig,
+                            pages: PagedKVCache, block_table, *,
+                            start_pos, write_upto, whole_prompt: bool):
+    """Prefill one CHUNK of one sequence through the paged KV pool.
+
+    x: (1, C, d) — chunk tokens at absolute positions
+    [start_pos, start_pos + C); block_table: (1, nmax) int32 the
+    sequence's block table; `write_upto` (traced int32) caps K/V writes —
+    padding rows at positions >= write_upto go to the trash page, so a
+    right-padded final chunk never corrupts slots that later decode
+    tokens will own.
+
+    `whole_prompt` (STATIC) selects the attention read:
+      * True  — the chunk IS the whole prompt ([0, C) covers every real
+        token): queries attend only within the chunk, with literally the
+        same einsum/flash code as `attention_prefill` — the paged
+        monolithic prefill is bitwise-identical to the dense-cache one.
+      * False — mid-stream chunk: queries attend the full logical token
+        stream gathered from the pages (prefix written by earlier chunks
+        or shared prefix pages + this chunk), masked causally on absolute
+        positions.
+    """
+    B, C, _ = x.shape
+    assert B == 1, "chunked prefill runs one sequence at a time"
+    positions = jnp.asarray(start_pos, jnp.int32) + jnp.arange(C)
+    q, k, v = _qkv(params, x, cfg)
+    cos, sin = L.rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+    q = L.apply_rope(q, cos, sin)
+    k = L.apply_rope(k, cos, sin)
+
+    bt = jnp.broadcast_to(block_table.reshape(1, -1), (C,
+                                                       block_table.size))
+    new_pages = paged_write(pages, k[0], v[0], bt, positions,
+                            write_mask=positions < write_upto)
+
+    scale = cfg.head_dim ** -0.5
+    if whole_prompt:
+        # same read as attention_prefill: intra-chunk causal attention
+        ke = _expand_kv(k, cfg.num_heads)
+        ve = _expand_kv(v, cfg.num_heads)
+        bias_fn = causal_bias()
+        if cfg.attn_chunk and C > cfg.attn_chunk:
+            qc = min(cfg.attn_chunk, C)
+            o = flash_attention(q, ke, ve, bias_fn, scale, qc, qc,
+                                cfg.unroll_layers)
+        else:
+            o = _naive_attention(q, ke, ve,
+                                 bias_fn(jnp.arange(C), jnp.arange(C)),
+                                 scale)
+    else:
+        # mid-stream chunk: grouped read over the gathered logical stream
+        hkv = cfg.num_kv_heads
+        g = cfg.num_heads // hkv
+        nmax = block_table.size
+        ps = new_pages.k.shape[1]
+        T = nmax * ps
+        kc = new_pages.k[block_table.reshape(-1)].reshape(1, T, hkv,
+                                                          cfg.head_dim)
+        vc = new_pages.v[block_table.reshape(-1)].reshape(1, T, hkv,
+                                                          cfg.head_dim)
+        kc = kc.astype(x.dtype)
+        vc = vc.astype(x.dtype)
+        kp = jnp.arange(T)
+        ok = kp[None, :] <= positions[:, None]              # (C, T)
+        bias = jnp.where(ok, 0.0, NEG_INF)[None, None, None, :, :]
+        qg = q.reshape(1, C, hkv, g, cfg.head_dim)
+        s = jnp.einsum("bqhgd,bthd->bhgqt", qg, kc,
+                       preferred_element_type=jnp.float32) * scale
+        s = s + bias
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgqt,bthd->bqhgd", p.astype(vc.dtype), vc,
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+        o = o.reshape(1, C, cfg.num_heads, cfg.head_dim)
+    o = o.reshape(1, C, cfg.num_heads * cfg.head_dim)
+    out = o @ params["wo"].astype(x.dtype)
+    return shard_logical(out, ("batch", "seq", "embed")), new_pages
+
+
+def attention_decode_paged(params, x, cfg: ModelConfig,
+                           pages: PagedKVCache, block_tables, positions,
+                           backend: str = "auto"):
+    """One-token decode through the paged KV pool.
+
+    x: (B, 1, d); block_tables: (B, nmax) int32; positions: (B,) int32.
+    Writes this token's K/V into page block_tables[b, pos // ps] slot
+    pos % ps (inactive slots carry an all-zero block table and position 0,
+    so their writes land in the trash page), then reads with the paged
+    kernel or its lax fallback (`ops.paged_attention_decode` — the lax
+    read is the grouped einsum `attention_decode` uses, bitwise-comparable
+    to the dense cache)."""
+    from repro.kernels import ops as kops
+    B = x.shape[0]
+    q, k, v = _qkv(params, x, cfg)          # (B, 1, h, d)
+    cos, sin = L.rope_angles(positions[:, None], cfg.head_dim,
+                             cfg.rope_theta)
+    q = L.apply_rope(q, cos, sin)
+    k = L.apply_rope(k, cos, sin)
+
+    new_pages = paged_write(pages, k[:, 0], v[:, 0], block_tables,
+                            positions)
+    hkv = cfg.num_kv_heads
+    g = cfg.num_heads // hkv
+    qg = q.reshape(B, hkv, g, cfg.head_dim)
+    o = kops.paged_attention_decode(qg, new_pages.k, new_pages.v,
+                                    block_tables, positions,
+                                    backend=backend)
+    o = o.reshape(B, 1, cfg.num_heads * cfg.head_dim)
+    out = o @ params["wo"].astype(x.dtype)
+    return shard_logical(out, ("batch", "seq", "embed")), new_pages
 
 
 def attention_decode(params, x, cfg: ModelConfig, cache: KVCache,

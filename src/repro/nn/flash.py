@@ -8,7 +8,7 @@ set in VMEM-sized tiles.
 
 `unroll=True` replaces the scans with python loops: used by the dry-run cost
 lowering so `cost_analysis()` sees every block (scan bodies are counted once
-regardless of trip count — DESIGN.md §6).
+regardless of trip count — DESIGN.md §7).
 
 Inputs are already GQA-expanded: q (B, S, H, D), k/v (B, T, H, D).
 `bias_fn(qpos, kpos)` returns an additive mask block for the given position

@@ -89,7 +89,7 @@ def _chunked_ssd(x, B_, C_, la, dt, S0, chunk: int, unroll: bool = False):
     tiny HLO), and the inter-chunk state recurrence
         S_k = a_k * S_{k-1} + b_k
     is an affine associative scan (log-depth, no while loop — which also
-    makes `cost_analysis()` exact without unrolling; DESIGN.md §6).
+    makes `cost_analysis()` exact without unrolling; DESIGN.md §7).
 
     x: (B,T,H,P); B_/C_: (B,T,N); la/dt: (B,T,H); S0: (B,H,N,P).
     """

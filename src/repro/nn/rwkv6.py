@@ -101,7 +101,7 @@ def _chunked_wkv(r, k, v, lw, u, S0, chunk: int, unroll: bool = False):
     evaluated for ALL chunks at once (chunk index = batch dim) and the
     inter-chunk state recurrence S_k = diag(a_k) S_{k-1} + b_k is an affine
     associative scan — no while loops, exact `cost_analysis()` accounting
-    (DESIGN.md §6).
+    (DESIGN.md §7).
 
     r,k,v,lw: (B, T, H, K) fp32 (lw = log-decay < 0); u: (H, K).
     S0: (B, H, K, V) initial state.  Returns (o (B,T,H,K) fp32, S_final)."""

@@ -26,7 +26,12 @@ same-adapter requests into the decode slots and switches the active
 parameter tree only when the batch drains — one set of weights per
 decode dispatch, no per-slot gather.
 
-Greedy or temperature sampling; deterministic under a seed.
+Greedy or temperature sampling; deterministic under a seed.  Sampling is
+PER-REQUEST (`request_rng(seed, uid)`): a request's token stream depends
+only on its own prompt, adapter and uid — never on scheduling order — so
+the dense and PagedKV engines produce identical streams for the same
+request set at any temperature, and a preempted-and-restarted request
+regenerates exactly the tokens it would have produced uninterrupted.
 """
 from __future__ import annotations
 
@@ -49,6 +54,25 @@ class Request:
     out_tokens: Optional[list] = None
     error: Optional[str] = None   # set if the request failed (e.g. its
                                   # adapter was evicted before scheduling)
+    rng: Optional[object] = None  # per-request sampler, (re)seeded at
+                                  # admission — see request_rng
+
+
+def request_rng(seed: int, uid: int) -> np.random.Generator:
+    """The per-request sampling stream.  Seeded by (engine seed, uid) so
+    token streams are scheduling-independent and preemption-safe."""
+    return np.random.default_rng((seed, uid))
+
+
+def sample_token(logits: np.ndarray, temperature: float,
+                 rng: Optional[np.random.Generator]) -> int:
+    """Greedy (temperature <= 0) or temperature sampling from a (V,)
+    logits row — the one sampler both serving engines share."""
+    if temperature <= 0.0:
+        return int(np.argmax(logits))
+    p = np.exp((logits - logits.max()) / temperature)
+    p = p / p.sum()
+    return int(rng.choice(len(p), p=p))
 
 
 @dataclasses.dataclass
@@ -148,9 +172,17 @@ class Engine:
         self.active: list[Optional[Request]] = [None] * cfg.batch_slots
         self.tokens = np.zeros((cfg.batch_slots, 1), np.int32)
         self.budget = np.zeros((cfg.batch_slots,), np.int32)
-        self.rng = np.random.default_rng(cfg.seed)
         self.queue: list[Request] = []
         self.done: list[Request] = []
+
+        # full (non-rolling) KV caches hold exactly max_len positions:
+        # prompts beyond that fail fast at submit and decode budgets are
+        # clamped so writes never wrap (recurrent state and SWA rolling
+        # buffers have no such limit)
+        mcfg_ = model.cfg
+        self._len_limited = (getattr(mcfg_, "family", "") != "rwkv6"
+                             and getattr(mcfg_, "sliding_window", None)
+                             is None)
 
         # bucketing is only mask-safe for the dense KV family: recurrent
         # state (rwkv6 / zamba mamba blocks) integrates pad tokens, a
@@ -178,6 +210,15 @@ class Engine:
                     f"but the engine has no AdapterStore")
             self.adapters.params_for(req.adapter_id)  # fail fast if absent
         req.out_tokens = []
+        if self._len_limited and len(req.prompt) + 1 > self.cfg.max_len:
+            # fail fast: a clamped prefill + wrapping decode writes would
+            # silently corrupt the cache (the pre-fix behavior)
+            req.error = (f"prompt length {len(req.prompt)} exceeds "
+                         f"max_len={self.cfg.max_len} - 1 — the cache "
+                         f"must hold the prompt plus at least one "
+                         f"generated token")
+            self.done.append(req)
+            return
         self.queue.append(req)
 
     def run(self, max_steps: int = 10_000) -> list[Request]:
@@ -260,12 +301,19 @@ class Engine:
                 self.params, {"tokens": jnp.asarray(prompt)}, one_cache,
                 jnp.int32(s - 1))
             self.cache = _splice(self.cache, one_cache, slot)
-            nxt = self._sample(np.asarray(logits[0, -1]), req.temperature)
+            req.rng = request_rng(self.cfg.seed, req.uid)
+            nxt = sample_token(np.asarray(logits[0, -1]), req.temperature,
+                               req.rng)
             req.out_tokens.append(int(nxt))
             self.active[slot] = req
             self.tokens[slot, 0] = nxt
             self.positions[slot] = s
-            self.budget[slot] = req.max_new_tokens - 1
+            # clamp so decode writes never wrap past the cache: at most
+            # max_len - s tokens can be generated for a full cache
+            budget = req.max_new_tokens
+            if self._len_limited:
+                budget = min(budget, self.cfg.max_len - s)
+            self.budget[slot] = budget - 1
 
     def _decode_step(self):
         logits, self.cache = self._decode(
@@ -282,7 +330,7 @@ class Engine:
             if self.budget[slot] <= 0:
                 self._finish(slot)
                 continue
-            nxt = self._sample(logits[slot], req.temperature)
+            nxt = sample_token(logits[slot], req.temperature, req.rng)
             req.out_tokens.append(int(nxt))
             self.tokens[slot, 0] = nxt
             self.budget[slot] -= 1
@@ -293,13 +341,6 @@ class Engine:
             req.out_tokens = req.out_tokens[:-1]
         self.done.append(req)
         self.active[slot] = None
-
-    def _sample(self, logits: np.ndarray, temperature: float) -> int:
-        if temperature <= 0.0:
-            return int(np.argmax(logits))
-        p = np.exp((logits - logits.max()) / temperature)
-        p = p / p.sum()
-        return int(self.rng.choice(len(p), p=p))
 
 
 def _splice(cache_batched, cache_one, slot: int):

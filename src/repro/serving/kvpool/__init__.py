@@ -1,0 +1,5 @@
+"""PagedKV subsystem (DESIGN.md §5): block-paged KV pool, page-aware
+continuous-batching scheduler, and the paged serving engine."""
+from repro.serving.kvpool.engine import PagedEngine, PagedEngineConfig  # noqa: F401
+from repro.serving.kvpool.pool import KVPool, TRASH_PAGE  # noqa: F401
+from repro.serving.kvpool.scheduler import PagedScheduler, SeqState  # noqa: F401

@@ -1,0 +1,436 @@
+"""PagedKV serving engine: continuous batching over a block-paged KV
+pool with chunked prefill (DESIGN.md §5).
+
+What changes vs the dense-cache `serving.engine.Engine`:
+
+  * KV memory is a POOL of fixed-size pages shared by every batch slot
+    (`nn.attention.PagedKVCache` + `kvpool.pool.KVPool`), not a dense
+    (slots, max_len) cache: resident KV bytes track the LIVE tokens, not
+    slots x worst-case prompt, and admission is page-aware — a request
+    that cannot get pages waits or preempts by policy instead of OOMing;
+  * prefill writes straight into the shared pages through the request's
+    block table — no batch=1 cache materialization and no tree-wide
+    splice into the batched cache;
+  * long prompts can prefill in fixed-size chunks that INTERLEAVE with
+    decode steps (`chunked_prefill`): one chunk of one prefilling
+    sequence advances per engine step while the decoding slots keep
+    producing tokens, and every chunk runs through ONE compiled program
+    (fixed chunk shape) instead of one program per length bucket;
+  * decode attention reads the pool through per-slot block tables — the
+    Pallas paged-attention kernel on TPU, a gather + the dense engine's
+    exact grouped-einsum read elsewhere (`ops.paged_attention_decode`),
+    which keeps paged decode bitwise-comparable to the dense cache.
+
+Family policy (ISSUE/DESIGN §5): attention families (dense, moe, and the
+zamba hybrid's shared attention blocks) route cache init/read/write
+through the pool; stateful families keep their fixed recurrent state —
+the zamba mamba backbone stays a per-slot spliced state beside its paged
+attention KV, and rwkv6 (no KV at all) is refused here and served by the
+dense engine.  Chunked prefill and prefix caching are mask-safety-gated
+exactly like the dense engine's length buckets: only the dense family
+(no MoE capacity dispatch, no recurrent state) uses them.
+
+Token streams are identical to the dense engine per request (bitwise
+logits on the monolithic-prefill path, greedy-identical under chunking)
+— proven by tests/test_paged_kv.py and benchmarks/paged_decode.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.engine import (AdapterStore, Request, _splice,
+                                  request_rng, sample_token)
+from repro.serving.kvpool.pool import KVPool
+from repro.serving.kvpool.scheduler import PagedScheduler, SeqState
+
+
+@dataclasses.dataclass
+class PagedEngineConfig:
+    batch_slots: int = 4
+    max_len: int = 256            # per-sequence logical capacity
+    eos_id: int = 2
+    seed: int = 0
+    page_size: int = 16           # tokens per KV page
+    num_pages: int = 64           # pool size incl. the trash page
+    chunked_prefill: bool = False
+    prefill_chunk: int = 32       # tokens per prefill chunk
+    prefill_buckets: bool = True  # pad monolithic prefill to power-of-two
+    min_bucket: int = 16
+    prefix_cache: bool = False    # refcounted prompt-prefix page sharing
+    exhaustion: str = "preempt"   # page exhaustion: "preempt" | "stall"
+    backend: str = "auto"         # paged-attention read: auto|kernel|lax
+
+
+class PagedEngine:
+    def __init__(self, model, params, cfg: PagedEngineConfig,
+                 adapters: Optional[AdapterStore] = None):
+        mcfg = model.cfg
+        family = getattr(mcfg, "family", "")
+        if family == "rwkv6":
+            raise ValueError(
+                "rwkv6 keeps fixed recurrent state and has no KV cache to "
+                "page — serve it with the dense serving.engine.Engine")
+        if getattr(mcfg, "sliding_window", None) is not None:
+            raise ValueError(
+                "sliding-window caches are rolling buffers already bounded "
+                "by the window — serve them with the dense engine")
+        if getattr(mcfg, "is_encoder", False):
+            raise ValueError("encoder-only models have no decode serving")
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.adapters = adapters
+        self.active_adapter: Optional[str] = None
+        self._hybrid = family == "hybrid"
+
+        if self._hybrid and cfg.exhaustion == "stall":
+            raise ValueError(
+                "exhaustion='stall' is unsupported for the hybrid family: "
+                "a stalled slot's mamba recurrent state would keep "
+                "advancing on the dummy dispatch inputs (attention writes "
+                "go to the trash page, recurrent state has no such "
+                "redirect) — use exhaustion='preempt', which restarts the "
+                "sequence from scratch instead of resuming corrupted state")
+        B, ps = cfg.batch_slots, cfg.page_size
+        self.nmax = -(-cfg.max_len // ps)       # block-table width
+        if cfg.num_pages < self.nmax + 1:
+            raise ValueError(
+                f"num_pages={cfg.num_pages} cannot hold even one full "
+                f"sequence: need >= {self.nmax + 1} "
+                f"(ceil(max_len/page_size) + the trash page)")
+        pool = KVPool(cfg.num_pages, ps)
+        # chunked prefill / prefix sharing are mask-safety-gated like the
+        # dense engine's buckets: recurrent state (zamba mamba) and MoE
+        # capacity dispatch are chunk/pad-sensitive
+        self._chunked = cfg.chunked_prefill and family == "dense"
+        self._bucketing = cfg.prefill_buckets and family == "dense"
+        self.sched = PagedScheduler(
+            pool, B, exhaustion=cfg.exhaustion,
+            prefix_cache=cfg.prefix_cache and family == "dense")
+
+        if self._hybrid:
+            self.kv = model.init_paged_cache(B, cfg.num_pages, ps)
+        else:
+            self.kv = model.init_paged_cache(cfg.num_pages, ps)
+        self.bt = np.zeros((B, self.nmax), np.int32)
+        self.positions = np.zeros((B,), np.int32)
+        self.tokens = np.zeros((B, 1), np.int32)
+        self.budget = np.zeros((B,), np.int32)
+        self.done: list[Request] = []
+        self._pf_rr = 0                          # prefill round-robin
+        self.prefill_compilations = 0
+        self._seen_prefill: set = set()
+        self.decode_steps = 0
+        self.prefill_chunks = 0
+        self.peak_live_tokens = 0
+
+        backend = cfg.backend
+        self._decode_fn = jax.jit(
+            lambda p, t, kv, bt, pos: model.decode_paged(
+                p, t, kv, bt, pos, backend=backend))
+        self._prefill_whole = jax.jit(
+            lambda p, b, kv, bt, sp, wu, lp: model.prefill_paged(
+                p, b, kv, bt, start_pos=sp, write_upto=wu, last_pos=lp,
+                whole_prompt=True))
+        self._prefill_chunk_fn = jax.jit(
+            lambda p, b, kv, bt, sp, wu, lp: model.prefill_paged(
+                p, b, kv, bt, start_pos=sp, write_upto=wu, last_pos=lp,
+                whole_prompt=False))
+
+    # ----------------------------------------------------------- client
+    def submit(self, req: Request):
+        if req.adapter_id is not None:
+            if self.adapters is None:
+                raise ValueError(
+                    f"request {req.uid} names adapter {req.adapter_id!r} "
+                    f"but the engine has no AdapterStore")
+            self.adapters.params_for(req.adapter_id)  # fail fast if absent
+        req.out_tokens = []
+        if len(req.prompt) + 1 > self.cfg.max_len:
+            req.error = (f"prompt length {len(req.prompt)} exceeds "
+                         f"max_len={self.cfg.max_len} - 1 — the sequence "
+                         f"must hold the prompt plus at least one "
+                         f"generated token")
+            self.done.append(req)
+            return
+        self.sched.submit(req)
+
+    def run(self, max_steps: int = 100_000) -> list[Request]:
+        steps = 0
+        while self.sched.has_work() and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.done
+
+    # --------------------------------------------------------- scheduler
+    def step(self):
+        self._admit()
+        self._prefill_step()
+        self._unstall()
+        if any(s is not None and s.phase == "decode"
+               for s in self.sched.seqs):
+            self._decode_step()
+        elif all(s is None or s.phase == "stalled"
+                 for s in self.sched.seqs):
+            freed = self.sched.break_deadlock()
+            if freed is not None:
+                self._clear_slot(freed)
+
+    def _activate(self, adapter_id: Optional[str]):
+        if adapter_id == self.active_adapter:
+            return
+        self.params = (self.adapters.params_for(adapter_id)
+                       if self.adapters is not None else self.params)
+        self.active_adapter = adapter_id
+
+    def _admit(self):
+        # freed pages must reach STALLED sequences before new admissions:
+        # admitting while anything is stalled re-steals the pages a
+        # forced preemption just freed and livelocks the pool
+        if any(s is not None and s.phase == "stalled"
+               for s in self.sched.seqs):
+            return
+        while True:
+            free = [i for i, s in enumerate(self.sched.seqs) if s is None]
+            if not free:
+                return
+            req = self.sched.pop_next(self.active_adapter)
+            if req is None:
+                return
+            try:
+                self._activate(req.adapter_id)
+            except KeyError as e:       # LRU-evicted between submit/admit
+                req.error = str(e)
+                req.out_tokens = req.out_tokens or []
+                self.done.append(req)
+                continue
+            seq = self.sched.place(req, free[0])
+            if seq is None:             # page-aware admission: wait
+                self.sched.requeue_front(req)
+                return
+            self._start_prefill(seq)
+
+    # ----------------------------------------------------------- prefill
+    def _bucket_len(self, s: int) -> int:
+        if not self._bucketing:
+            return s
+        b = self.cfg.min_bucket
+        while b < s:
+            b *= 2
+        return max(s, min(b, self.cfg.max_len))
+
+    def _start_prefill(self, seq: SeqState):
+        slot = seq.slot
+        self.bt[slot] = 0
+        for j, p in enumerate(seq.pages):
+            self.bt[slot, j] = p
+        seq.req.rng = request_rng(self.cfg.seed, seq.req.uid)
+        if not self._chunked:
+            # monolithic: one prefill dispatch for the (un-reused part of
+            # the) prompt, then straight into the decode phase
+            start = seq.prefill_pos
+            rem = seq.n_ctx - start
+            C = self._bucket_len(rem)
+            whole = start == 0
+            logits = self._run_prefill(seq, start, C, whole=whole)
+            self._finish_prefill(seq, logits)
+
+    def _prefill_step(self):
+        """Chunked prefill: advance ONE chunk of one prefilling sequence
+        per engine step (round-robin), interleaving with decode."""
+        if not self._chunked:
+            return
+        slots = [s.slot for s in self.sched.seqs
+                 if s is not None and s.phase == "prefill"]
+        if not slots:
+            return
+        slot = slots[self._pf_rr % len(slots)]
+        self._pf_rr += 1
+        seq = self.sched.seqs[slot]
+        start = seq.prefill_pos
+        C = self.cfg.prefill_chunk
+        end = min(start + C, seq.n_ctx)
+        logits = self._run_prefill(seq, start, C, whole=False)
+        seq.prefill_pos = end
+        if end == seq.n_ctx:
+            self._finish_prefill(seq, logits)
+
+    def _run_prefill(self, seq: SeqState, start: int, C: int, *,
+                     whole: bool):
+        """One prefill dispatch of C tokens at positions
+        [start, start + C) for `seq` (right-padded past the prompt; pad
+        writes go to the trash page, pad logits are never read)."""
+        slot, S = seq.slot, seq.n_ctx
+        chunk = np.zeros((1, C), np.int32)
+        real = min(S, start + C) - start
+        chunk[0, :real] = seq.req.prompt[start:start + real]
+        if (C, whole) not in self._seen_prefill:
+            self._seen_prefill.add((C, whole))
+            self.prefill_compilations += 1
+        last = max(0, min(S - 1 - start, C - 1))
+        fn = self._prefill_whole if whole else self._prefill_chunk_fn
+        bt_row = jnp.asarray(self.bt[slot:slot + 1])
+        batch = {"tokens": jnp.asarray(chunk)}
+        if self._hybrid:
+            from repro.models.zamba import ZambaCache
+            if start == 0:
+                mamba1 = self.model.init_mamba_state(1)
+            else:                        # pragma: no cover - hybrid never
+                raise AssertionError("hybrid prefill is monolithic")
+            logits, c1 = fn(self.params, batch,
+                            ZambaCache(mamba1, self.kv.kv), bt_row,
+                            jnp.int32(start), jnp.int32(S),
+                            jnp.int32(last))
+            self.kv = ZambaCache(_splice(self.kv.mamba, c1.mamba, slot),
+                                 c1.kv)
+        else:
+            logits, self.kv = fn(self.params, batch, self.kv, bt_row,
+                                 jnp.int32(start), jnp.int32(S),
+                                 jnp.int32(last))
+        self.prefill_chunks += 1
+        self._note_live()
+        return logits
+
+    def _finish_prefill(self, seq: SeqState, logits):
+        slot, req, S = seq.slot, seq.req, seq.n_ctx
+        nxt = sample_token(np.asarray(logits[0, -1]), req.temperature,
+                           req.rng)
+        req.out_tokens.append(int(nxt))
+        seq.phase = "decode"
+        seq.prefill_pos = S
+        self.tokens[slot, 0] = nxt
+        self.positions[slot] = S
+        # clamp like the dense engine: decode writes must stay in
+        # [0, max_len) — at most max_len - S tokens can be generated
+        self.budget[slot] = min(req.max_new_tokens,
+                                self.cfg.max_len - S) - 1
+
+    # ------------------------------------------------------------ decode
+    def _unstall(self):
+        for seq in list(self.sched.seqs):
+            if seq is None or seq.phase != "stalled":
+                continue
+            # growth for an earlier sequence may have preempted this one
+            # mid-loop: growing a dead snapshot would leak its page and
+            # re-pollute the cleared block-table row
+            if self.sched.seqs[seq.slot] is not seq:
+                continue
+            seq.phase = "decode"        # retry growth below
+            ok, preempted = self.sched.grow(seq, int(self.positions[seq.slot]))
+            for s in preempted:
+                self._clear_slot(s)
+            if ok:
+                lp = int(self.positions[seq.slot]) // self.cfg.page_size
+                self.bt[seq.slot, lp] = seq.pages[lp]
+
+    def _decode_step(self):
+        # page growth for every decoding sequence BEFORE the dispatch —
+        # a sequence that cannot get its write page stalls or preempts
+        for seq in list(self.sched.seqs):
+            if seq is None or seq.phase != "decode":
+                continue
+            if self.sched.seqs[seq.slot] is not seq:
+                continue            # preempted by an earlier grow this loop
+            ok, preempted = self.sched.grow(seq, int(self.positions[seq.slot]))
+            for s in preempted:
+                self._clear_slot(s)
+            if ok:
+                lp = int(self.positions[seq.slot]) // self.cfg.page_size
+                self.bt[seq.slot, lp] = seq.pages[lp]
+            elif self._hybrid:
+                # recurrent state cannot survive a stall (it would keep
+                # advancing on dummy dispatch inputs) — restart instead
+                self.sched.preempt(seq.slot)
+                self._clear_slot(seq.slot)
+        live = [s.slot for s in self.sched.seqs
+                if s is not None and s.phase == "decode"]
+        if not live:
+            return
+        # inactive / prefilling / stalled slots dispatch with an all-zero
+        # block table and position 0: their writes land in the trash page
+        bt_d = np.zeros_like(self.bt)
+        pos_d = np.zeros_like(self.positions)
+        tok_d = np.zeros_like(self.tokens)
+        for slot in live:
+            bt_d[slot] = self.bt[slot]
+            pos_d[slot] = self.positions[slot]
+            tok_d[slot] = self.tokens[slot]
+        logits, self.kv = self._decode_fn(
+            self.params, jnp.asarray(tok_d), self.kv, jnp.asarray(bt_d),
+            jnp.asarray(pos_d))
+        logits = np.asarray(logits[:, 0])
+        self.decode_steps += 1
+        for slot in live:
+            seq = self.sched.seqs[slot]
+            req = seq.req
+            self.positions[slot] += 1
+            if req.out_tokens and req.out_tokens[-1] == self.cfg.eos_id:
+                self._finish(slot)
+                continue
+            if self.budget[slot] <= 0:
+                self._finish(slot)
+                continue
+            nxt = sample_token(logits[slot], req.temperature, req.rng)
+            req.out_tokens.append(int(nxt))
+            self.tokens[slot, 0] = nxt
+            self.budget[slot] -= 1
+        self._note_live()
+
+    def _finish(self, slot: int):
+        seq = self.sched.finish(slot)
+        req = seq.req
+        if req.out_tokens and req.out_tokens[-1] == self.cfg.eos_id:
+            req.out_tokens = req.out_tokens[:-1]
+        self.done.append(req)
+        self._clear_slot(slot)
+
+    def _clear_slot(self, slot: int):
+        self.bt[slot] = 0
+        self.positions[slot] = 0
+        self.tokens[slot, 0] = 0
+        self.budget[slot] = 0
+
+    # ------------------------------------------------------------- stats
+    def _note_live(self):
+        live = sum((int(self.positions[s.slot]) if s.phase == "decode"
+                    else s.prefill_pos)
+                   for s in self.sched.seqs if s is not None)
+        self.peak_live_tokens = max(self.peak_live_tokens, live)
+
+    def kv_stats(self) -> dict:
+        """KV-memory accounting for benchmarks/paged_decode.py: resident
+        paged bytes at the peak vs the dense engine's slots x max_len
+        allocation, plus the live-token bound the pool must respect."""
+        pages_tree = self.kv.kv if self._hybrid else self.kv
+        total = sum(leaf.nbytes for leaf in jax.tree.leaves(pages_tree))
+        page_bytes = total / self.cfg.num_pages
+        per_token = page_bytes / self.cfg.page_size
+        pool = self.sched.pool
+        peak_kv = pool.peak_pages_in_use * page_bytes
+        dense_kv = per_token * self.cfg.batch_slots * self.cfg.max_len
+        # page-granularity slack: every live sequence may round up to one
+        # partial page, plus whatever the prefix cache pins
+        bound = (self.peak_live_tokens
+                 + (self.cfg.batch_slots + pool.cached_pages())
+                 * self.cfg.page_size) * per_token
+        return {
+            "page_size": self.cfg.page_size,
+            "num_pages": self.cfg.num_pages,
+            "page_bytes": page_bytes,
+            "peak_pages_in_use": pool.peak_pages_in_use,
+            "peak_kv_bytes": peak_kv,
+            "dense_kv_bytes": dense_kv,
+            "kv_bytes_ratio": peak_kv / dense_kv,
+            "peak_live_tokens": self.peak_live_tokens,
+            "live_bound_bytes": bound,
+            "within_live_bound": bool(peak_kv <= bound),
+            "preemptions": self.sched.preemptions,
+            "prefix_hits": self.sched.prefix_hits,
+            "stalls": self.sched.stalls,
+            "evictions": pool.evictions,
+        }

@@ -1,0 +1,123 @@
+"""Host-side page allocator for the block-paged KV pool (DESIGN.md §5).
+
+The device half of the pool is `nn.attention.PagedKVCache` (the
+(P, page_size, H_kv, D) page arrays the models read and write through
+block tables); this module is the HOST half: a free-list allocator with
+reference counts and an LRU of reusable prefix pages.
+
+Invariants:
+  * physical page 0 is the TRASH page — never allocated, never cached;
+    inactive batch slots and masked-off padding write there and nothing
+    reads it back;
+  * a page is on the free list iff its refcount is 0;
+  * prefix-cached pages carry the cache's own reference, so a cached
+    page that no live request uses has refcount exactly 1 and is the
+    only kind of page eviction may reclaim — pages referenced by live
+    requests are never handed out twice.
+
+All bookkeeping is O(1) per page operation; the allocator never touches
+device memory (the engine owns the arrays; physical page ids are just
+indices into them).
+"""
+from __future__ import annotations
+
+import collections
+from typing import Optional
+
+TRASH_PAGE = 0
+
+
+class KVPool:
+    """Free-list page allocator with refcounts and an LRU prefix cache."""
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages < 2:
+            raise ValueError(f"the pool needs at least 2 pages (trash + 1 "
+                             f"allocatable), got {num_pages}")
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.free: collections.deque = collections.deque(
+            range(1, num_pages))
+        self.refs = [0] * num_pages
+        # chain key (bytes fingerprint of the page's token prefix) ->
+        # physical page; insertion order == LRU order
+        self._cached: collections.OrderedDict = collections.OrderedDict()
+        self._chain_of: dict = {}       # page -> chain key
+        self.evictions = 0
+        self.peak_pages_in_use = 0
+
+    # ------------------------------------------------------------- sizes
+    def pages_in_use(self) -> int:
+        """Allocated pages (live requests + prefix cache), excluding the
+        trash page."""
+        return self.num_pages - 1 - len(self.free)
+
+    def _note_usage(self):
+        self.peak_pages_in_use = max(self.peak_pages_in_use,
+                                     self.pages_in_use())
+
+    # -------------------------------------------------------- alloc/free
+    def alloc(self, n: int) -> Optional[list]:
+        """n fresh pages with refcount 1, or None if even evicting every
+        unreferenced cached page cannot satisfy the request (the caller
+        waits or preempts — the pool never over-commits)."""
+        while len(self.free) < n and self._evict_one():
+            pass
+        if len(self.free) < n:
+            return None
+        out = [self.free.popleft() for _ in range(n)]
+        for p in out:
+            self.refs[p] = 1
+        self._note_usage()
+        return out
+
+    def retain(self, page: int) -> None:
+        assert page != TRASH_PAGE and self.refs[page] > 0, page
+        self.refs[page] += 1
+
+    def release(self, page: int) -> None:
+        assert page != TRASH_PAGE and self.refs[page] > 0, page
+        self.refs[page] -= 1
+        if self.refs[page] == 0:
+            # cached pages always hold the cache's reference, so hitting
+            # zero means the page is fully unreferenced
+            self.free.append(page)
+
+    def _evict_one(self) -> bool:
+        for chain, page in self._cached.items():   # oldest first
+            if self.refs[page] == 1:               # cache is the only ref
+                del self._cached[chain]
+                del self._chain_of[page]
+                self.refs[page] = 0
+                self.free.append(page)
+                self.evictions += 1
+                return True
+        return False
+
+    # ------------------------------------------------------ prefix cache
+    def cache_get(self, chain) -> Optional[int]:
+        """Look up a prefix page by its chain key; retains it for the
+        caller and marks it most-recently-used."""
+        page = self._cached.get(chain)
+        if page is None:
+            return None
+        self._cached.move_to_end(chain)
+        self.refs[page] += 1
+        return page
+
+    def cache_put(self, chain, page: int) -> bool:
+        """Publish `page` under `chain` (cache takes its own reference).
+        No-op when the chain is already cached (first writer wins)."""
+        if chain in self._cached or page in self._chain_of:
+            return False
+        assert page != TRASH_PAGE and self.refs[page] > 0, page
+        self._cached[chain] = page
+        self._chain_of[page] = chain
+        self.refs[page] += 1
+        self._note_usage()
+        return True
+
+    def cached_pages(self) -> int:
+        return len(self._cached)

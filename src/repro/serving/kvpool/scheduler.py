@@ -1,0 +1,212 @@
+"""Continuous-batching scheduler over the paged KV pool (DESIGN.md §5).
+
+Request lifecycle:
+
+    QUEUED --admit--> PREFILL --final chunk--> DECODE --eos/budget--> DONE
+       ^                 |                        |
+       +----------- preempt (pages freed, restart from scratch) ------+
+
+  * admission is PAGE-AWARE: a request is placed the moment a batch slot
+    AND enough pages for its prompt exist — mid-flight, no batch drain;
+    when pages are short the request WAITS at the queue head (admission
+    never preempts running work for new work);
+  * decode growth (a sequence crossing a page boundary) must make
+    progress: on exhaustion the policy either preempts the youngest
+    other sequence ("preempt") or stalls the growing sequence until
+    pages free up ("stall"; if every live sequence stalls, the youngest
+    is force-preempted to break the deadlock);
+  * preemption releases the sequence's pages and requeues the request at
+    the queue FRONT with its tokens cleared — per-request sampling
+    (`serving.engine.request_rng`) regenerates exactly the same stream
+    on re-admission, so preemption is invisible in the output;
+  * prefix pages are reference-counted: with `prefix_cache` enabled,
+    finished requests publish their full prompt pages keyed by the
+    (adapter, token-prefix) chain, and admission reuses matching pages
+    instead of recomputing their KV (the page is retained per consumer
+    and reclaimed by LRU eviction only when no live request holds it).
+
+Same-adapter batching follows the dense engine: one parameter tree per
+decode dispatch, so while any slot is busy only requests matching the
+batch's active adapter admit; an idle batch switches to the queue head.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.serving.engine import Request
+from repro.serving.kvpool.pool import KVPool
+
+
+@dataclasses.dataclass
+class SeqState:
+    """One admitted request's paged-serving state."""
+    req: Request
+    slot: int
+    pages: list                  # physical pages, logical order
+    n_ctx: int                   # prompt length S
+    prefill_pos: int             # next position to prefill (page-aligned
+                                 # when a shared prefix was reused)
+    phase: str                   # "prefill" | "decode" | "stalled"
+    admit_order: int
+
+
+class PagedScheduler:
+    """Queue + slot + page bookkeeping; the engine owns the dispatches."""
+
+    def __init__(self, pool: KVPool, batch_slots: int, *,
+                 exhaustion: str = "preempt", prefix_cache: bool = False):
+        if exhaustion not in ("preempt", "stall"):
+            raise ValueError(f"unknown exhaustion policy {exhaustion!r} "
+                             f"(expected 'preempt' or 'stall')")
+        self.pool = pool
+        self.batch_slots = batch_slots
+        self.exhaustion = exhaustion
+        self.prefix_cache = prefix_cache
+        self.queue: list[Request] = []
+        self.seqs: list[Optional[SeqState]] = [None] * batch_slots
+        self._order = 0
+        self.preemptions = 0
+        self.forced_preemptions = 0
+        self.prefix_hits = 0
+        self.stalls = 0
+
+    # ------------------------------------------------------------- queue
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(s is not None for s in self.seqs)
+
+    def busy(self) -> bool:
+        return any(s is not None for s in self.seqs)
+
+    def pop_next(self, active_adapter) -> Optional[Request]:
+        """FIFO within the batch's active adapter; an idle batch may
+        switch adapters (the engine activates on placement)."""
+        if not self.queue:
+            return None
+        if not self.busy():
+            return self.queue.pop(0)
+        for i, r in enumerate(self.queue):
+            if r.adapter_id == active_adapter:
+                return self.queue.pop(i)
+        return None
+
+    def requeue_front(self, req: Request) -> None:
+        self.queue.insert(0, req)
+
+    # --------------------------------------------------------- placement
+    def _chain(self, req: Request, j: int):
+        """Prefix-page chain key: page j is reusable iff the (adapter,
+        first (j+1)*page_size prompt tokens) match exactly."""
+        ps = self.pool.page_size
+        return (req.adapter_id, bytes(req.prompt[:(j + 1) * ps].tobytes()))
+
+    def _reuse_cap(self, n_ctx: int) -> int:
+        """Full prompt pages eligible for sharing.  Capped below the last
+        prompt token so at least one token is always prefilled — the
+        engine needs the last real token's logits."""
+        return (n_ctx - 1) // self.pool.page_size
+
+    def place(self, req: Request, slot: int) -> Optional[SeqState]:
+        """Allocate prompt pages (reusing cached prefix pages) and bind
+        `req` to `slot`.  Returns None when pages are short — the caller
+        requeues the request at the front and stops admitting (admission
+        waits; it never preempts running sequences)."""
+        ps = self.pool.page_size
+        S = len(req.prompt)
+        n_pages = -(-S // ps)
+        reused: list = []
+        if self.prefix_cache:
+            for j in range(self._reuse_cap(S)):
+                page = self.pool.cache_get(self._chain(req, j))
+                if page is None:
+                    break
+                reused.append(page)
+        got = self.pool.alloc(n_pages - len(reused))
+        if got is None:
+            for p in reused:
+                self.pool.release(p)
+            return None
+        self.prefix_hits += len(reused)
+        seq = SeqState(req=req, slot=slot, pages=reused + got, n_ctx=S,
+                       prefill_pos=len(reused) * ps, phase="prefill",
+                       admit_order=self._order)
+        self._order += 1
+        self.seqs[slot] = seq
+        return seq
+
+    # ------------------------------------------------------ decode growth
+    def grow(self, seq: SeqState, position: int):
+        """Ensure the page holding `position` exists before the decode
+        write.  Returns (ok, preempted_slots): on exhaustion, policy
+        "preempt" frees the youngest OTHER sequence's pages and retries;
+        "stall" parks this sequence until pages free up."""
+        ps = self.pool.page_size
+        lp = position // ps
+        preempted: list[int] = []
+        if lp < len(seq.pages):
+            return True, preempted
+        assert lp == len(seq.pages), (lp, len(seq.pages))
+        while True:
+            got = self.pool.alloc(1)
+            if got is not None:
+                seq.pages.append(got[0])
+                return True, preempted
+            if self.exhaustion != "preempt":
+                break
+            victim = self._youngest(exclude=seq.slot)
+            if victim is None:
+                break
+            self.preempt(victim.slot)
+            preempted.append(victim.slot)
+        seq.phase = "stalled"
+        self.stalls += 1
+        return False, preempted
+
+    def _youngest(self, exclude: int) -> Optional[SeqState]:
+        live = [s for s in self.seqs
+                if s is not None and s.slot != exclude]
+        return max(live, key=lambda s: s.admit_order, default=None)
+
+    def break_deadlock(self) -> Optional[int]:
+        """Every live sequence is stalled and nothing can free a page:
+        force-preempt the youngest so the rest make progress.  Returns
+        the freed slot (the engine clears its host state)."""
+        stalled = [s for s in self.seqs
+                   if s is not None and s.phase == "stalled"]
+        if not stalled or any(s is not None and s.phase != "stalled"
+                              for s in self.seqs):
+            return None
+        victim = max(stalled, key=lambda s: s.admit_order)
+        self.preempt(victim.slot)
+        self.forced_preemptions += 1
+        return victim.slot
+
+    # --------------------------------------------------------- retirement
+    def preempt(self, slot: int) -> None:
+        """Release the sequence's pages and restart it from the queue
+        front (tokens cleared; per-request rng makes the regenerated
+        stream identical)."""
+        seq = self.seqs[slot]
+        assert seq is not None, slot
+        for p in seq.pages:
+            self.pool.release(p)
+        seq.req.out_tokens = []
+        self.requeue_front(seq.req)
+        self.seqs[slot] = None
+        self.preemptions += 1
+
+    def finish(self, slot: int, publish_prefix: bool = True) -> SeqState:
+        """Retire a completed sequence: publish its full prompt pages to
+        the prefix cache (when enabled), then drop its references."""
+        seq = self.seqs[slot]
+        assert seq is not None, slot
+        if self.prefix_cache and publish_prefix:
+            for j in range(self._reuse_cap(seq.n_ctx)):
+                self.pool.cache_put(self._chain(seq.req, j), seq.pages[j])
+        for p in seq.pages:
+            self.pool.release(p)
+        self.seqs[slot] = None
+        return seq

@@ -92,6 +92,40 @@ def test_delta_merge_invariants(mutate, expect):
     assert errs and any(expect in e for e in errs), (expect, errs)
 
 
+def _paged_rows():
+    return [
+        {"name": "decode/mixed-8req-paged", "us_per_call": 1.0,
+         "derived": "matches_dense=True",
+         "metrics": {"matches_dense": True, "tok_s": 50.0,
+                     "concurrency": 8}},
+        {"name": "kvbytes/mixed-8req", "us_per_call": 0.0,
+         "derived": "kv_bytes_ratio=0.4",
+         "metrics": {"kv_bytes_ratio": 0.4, "within_live_bound": True,
+                     "peak_kv_bytes": 1000, "peak_live_tokens": 100}},
+    ]
+
+
+@pytest.mark.parametrize("mutate, expect", [
+    (lambda d: d["rows"][0]["metrics"].update(matches_dense=False),
+     "matches_dense"),
+    (lambda d: d["rows"][1]["metrics"].update(kv_bytes_ratio=1.2),
+     "live working set"),
+    (lambda d: d["rows"][1]["metrics"].pop("kv_bytes_ratio"),
+     "kv_bytes_ratio"),
+    (lambda d: d["rows"][1]["metrics"].update(within_live_bound=False),
+     "within_live_bound"),
+])
+def test_paged_decode_invariants(mutate, expect):
+    """PagedKV gates (DESIGN.md §5): token identity to the dense engine
+    and KV memory bounded by the live working set fail CI; throughput
+    never does."""
+    doc = bench_doc(_paged_rows(), suite="paged_decode")
+    assert validate(doc) == []
+    mutate(doc)
+    errs = validate(doc)
+    assert errs and any(expect in e for e in errs), (expect, errs)
+
+
 def test_writer_refuses_invalid_rows(tmp_path):
     bad = [{"name": "shardsel/overflowing", "us_per_call": 0.0,
             "derived": "", "metrics": {"within_bound": False}}]

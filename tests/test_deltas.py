@@ -144,6 +144,51 @@ def test_format_version_gate(tmp_path):
     assert "format_version" in str(ei.value)
 
 
+def test_format_v1_artifacts_still_load(tmp_path):
+    """The v2 bump (optional fp16 values) must not orphan v1 artifacts:
+    a manifest without value_dtype fields loads and merges unchanged."""
+    model, base, tuned, state, engine = _train_lift(steps=1)
+    ck = _save_ckpt(tmp_path, 1, tuned, state, engine)
+    delta = extract(ck, 1, base)
+    delta.manifest["format_version"] = 1          # as a v1 writer made it
+    delta.save(str(tmp_path / "delta"))
+    loaded = DeltaArtifact.load(str(tmp_path / "delta"))
+    assert _trees_equal(merge_delta(base, loaded, backend="kernel"),
+                        tuned)
+
+
+# ------------------------------------------------------------ fp16 values
+def test_fp16_values_roundtrip_and_upcast_on_merge(tmp_path):
+    """format v2 satellite: extract(..., value_dtype="float16") halves
+    the value payload; merging upcasts so merged == fp32(fp16(tuned)) at
+    the shipped indices — quantized exactly once, at extraction."""
+    model, base, tuned, state, engine = _train_lift(steps=3)
+    ck = _save_ckpt(tmp_path, 3, tuned, state, engine)
+    full = extract(ck, 3, base)
+    half = extract(ck, 3, base, value_dtype="float16")
+    for path, t in half.tensors.items():
+        assert t["val"].dtype == np.float16
+        assert half.manifest["tensors"][path]["value_dtype"] == "float16"
+    assert half.nbytes() < full.nbytes()
+    half.save(str(tmp_path / "delta16"))
+    loaded = DeltaArtifact.load(str(tmp_path / "delta16"))
+    assert loaded.manifest["format_version"] == 2
+    from repro.core.lift import get_by_path
+    for backend in ("kernel", "ref"):
+        merged = merge_delta(base, loaded, backend=backend)
+        for path, t in loaded.tensors.items():
+            ns = t["idx"].shape[0]
+            got = np.asarray(get_by_path(merged, path)).reshape(ns, -1)
+            np.testing.assert_array_equal(
+                np.take_along_axis(got, t["idx"], axis=-1),
+                t["val"].astype(np.float32),
+                err_msg=f"{backend}:{path}")
+    # refusal semantics unchanged: wrong base still refuses
+    other = jax.tree.map(lambda x: x + 1e-3, base)
+    with pytest.raises(DeltaMismatchError):
+        merge_delta(other, loaded, backend="kernel")
+
+
 # ------------------------------------------------------------------ diff
 def test_diff_roundtrip(tmp_path):
     model, base, tuned, state, engine = _train_lift(steps=3)

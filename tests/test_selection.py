@@ -297,6 +297,10 @@ def test_overflow_retry_recovers_clean_selection():
     method = T.MethodConfig(kind="lift", lift=cfg)
     state = {"step": jnp.zeros((), jnp.int32),
              "opt": sa.init_state(params, want, plan)}
+    # drop the factor the retry above persisted so the refresh exercises
+    # the overflow->retry wiring from a cold engine (the persistence
+    # itself is covered by test_overflow_retry_persists_adapted_factor)
+    eng.adapted_factors.clear()
     refresh = T.make_refresh_step(_NoSpec(), method, engine=eng)
     new_state = refresh(params, state, key)
     assert refresh.retried_history and \
@@ -304,6 +308,37 @@ def test_overflow_retry_recovers_clean_selection():
     assert np.array_equal(
         np.asarray(new_state["opt"]["tensors"]["t"]["idx"]),
         np.asarray(want["t"]))
+
+
+def test_overflow_retry_persists_adapted_factor():
+    """Satellite (ROADMAP follow-up): the compact_factor a retry had to
+    raise is PERSISTED per tensor in engine state — the next fused
+    selection starts at the adapted capacity, reports zero overflow, and
+    returns the recovered indices without another host-side retry."""
+    rows = cols = 512
+    k = 1024
+    plan = _plan_1tensor((), rows, cols, k)
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(rows, cols)).astype(np.float32) * 1e-4
+    w[:256, :256] += rng.normal(size=(256, 256)).astype(np.float32) * 10.0
+    params = {"t": jnp.asarray(w)}
+    cfg = LiftConfig(rank=32, method="exact", use_kernel=True,
+                     compact_factor=1, min_dim=16)
+    eng = SelectionEngine(plan, cfg)
+    key = jax.random.PRNGKey(0)
+    idx, stats = eng.select_with_stats(params, key)
+    assert int(stats["overflow"]) > 0
+    fixed, retried, unresolved = eng.retry_overflow(params, key, idx, stats)
+    assert retried == ["t"] and not unresolved
+    assert eng.adapted_factors["t"] > cfg.compact_factor
+
+    # the NEXT fused selection runs at the adapted capacity: clean, and
+    # bitwise equal to the retry's recovered indices
+    idx2, stats2 = eng.select_with_stats(params, key)
+    assert int(stats2["overflow"]) == 0
+    assert np.array_equal(np.asarray(idx2["t"]), np.asarray(fixed["t"]))
+    out, retried2, _ = eng.retry_overflow(params, key, idx2, stats2)
+    assert retried2 == []         # nothing left to recover
 
 
 def test_overflow_retry_noop_when_clean():
