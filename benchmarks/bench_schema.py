@@ -23,6 +23,10 @@ Semantic invariants for suite "kernels_micro":
   * every `sel/*-streaming` row reports `agree` in [0, 1] and
     agree >= 0.99 (streaming selection may differ from dense top-k only
     in final-histogram-bin ties);
+  * every `selstruct/*-streaming` row (structured LIFT, block_size > 1)
+    additionally reports `matches_dense` == true — on the benchmark's
+    fixed-seed cases the streaming block-sum pipeline must be
+    bitwise-identical to the dense block top-k (DESIGN.md §3);
   * every `shardsel/*` row reports `within_bound` == true — the modeled
     per-device candidate buffer of sharded streaming selection must stay
     within its O(compact_factor * k / n_shards) bound.
@@ -100,7 +104,8 @@ def validate(doc) -> list:
 
 def _kernels_micro_row(name: str, metrics: dict) -> list:
     errs = []
-    if name.startswith("sel/") and name.endswith("-streaming"):
+    if name.startswith(("sel/", "selstruct/")) and \
+            name.endswith("-streaming"):
         agree = metrics.get("agree")
         if not isinstance(agree, (int, float)) or not 0.0 <= agree <= 1.0:
             errs.append(f"{name}: streaming row needs metric agree in "
@@ -108,6 +113,12 @@ def _kernels_micro_row(name: str, metrics: dict) -> list:
         elif agree < 0.99:
             errs.append(f"{name}: streaming/dense index agreement {agree} "
                         f"< 0.99 — beyond final-bin ties, selection broke")
+    if name.startswith("selstruct/") and name.endswith("-streaming"):
+        if metrics.get("matches_dense") is not True:
+            errs.append(
+                f"{name}: matches_dense must be true — structured "
+                f"streaming selection diverged from the dense block-sum "
+                f"top-k on a fixed-seed case")
     if name.startswith("shardsel/"):
         if metrics.get("within_bound") is not True:
             errs.append(

@@ -1,0 +1,178 @@
+"""Bench-baseline regression gate (docs/CI.md).
+
+Compares freshly produced `BENCH_<suite>.json` artifacts against the
+committed baselines in `benchmarks/baselines/` and fails on regression.
+Only SEMANTIC metrics and relative ratios are compared — never absolute
+wall time: `us_per_call` and every timing-derived metric (`*_us`,
+`tok_s`, `speedup_*`) are noise on shared CI runners, so they are
+tracked through the uploaded artifacts but never gated here
+(`bench_schema.py` owns the per-row invariants; this gate owns the
+trajectory vs the last accepted baseline).
+
+A run FAILS when, for any row present in the baseline:
+
+  * the row disappeared from the current artifact (coverage regression —
+    a benchmark silently stopped measuring something);
+  * a guarded boolean metric that was true in the baseline is no longer
+    true (e.g. `matches_dense`, `within_bound`);
+  * a guarded numeric metric moved beyond its tolerance in the guarded
+    direction (e.g. modeled streaming HBM bytes grew > 10 %, dense/
+    streaming index agreement dropped by > 0.002, the delta-artifact
+    bytes ratio grew > 5 %).
+
+New rows in the current artifact are fine (they join the baseline at the
+next re-baseline); unguarded metrics are ignored.
+
+Re-baselining — when a change INTENTIONALLY moves a guarded metric
+(bigger modeled buffer for a new feature, new row set), regenerate the
+baseline artifact in place and commit it with the PR:
+
+    PYTHONPATH=src:. python -m benchmarks.kernels_micro \
+        --json benchmarks/baselines/BENCH_kernels_micro.json
+    PYTHONPATH=src:. python -m benchmarks.delta_merge \
+        --json benchmarks/baselines/BENCH_delta_merge.json
+    PYTHONPATH=src:. python -m benchmarks.paged_decode \
+        --json benchmarks/baselines/BENCH_paged_decode.json
+
+The baseline diff then documents the accepted trajectory change in
+review, which is the point of committing baselines at all.
+
+Usage: python -m benchmarks.compare [--baseline-dir benchmarks/baselines]
+           BENCH_kernels_micro.json [BENCH_*.json ...]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+# guarded booleans: once true in the baseline, must stay true
+BOOL_GUARDS = ("matches_dense", "matches_ref", "within_bound",
+               "within_live_bound")
+
+# guarded numerics: {metric: (direction, rel_tol, abs_tol)} — "max" means
+# the current value must not EXCEED baseline * (1 + rel_tol) + abs_tol,
+# "min" means it must not FALL BELOW baseline * (1 - rel_tol) - abs_tol.
+# Everything here is deterministic arithmetic or a measured agreement
+# ratio — never wall time.
+NUM_GUARDS = {
+    "agree":                    ("min", 0.0, 0.002),
+    "hbm_bytes_modeled":        ("max", 0.10, 0.0),
+    "dense_bytes_modeled":      ("max", 0.0, 0.0),
+    "hbm_saved_bytes":          ("min", 0.10, 0.0),
+    "state_saved_bytes":        ("min", 0.10, 0.0),
+    "buffer_slots_per_device":  ("max", 0.10, 0.0),
+    "bound_slots_per_device":   ("max", 0.10, 0.0),
+    "bytes_ratio":              ("max", 0.05, 0.0),
+    "kv_bytes_ratio":           ("max", 0.10, 0.0),
+    # measured by XLA, stable under pinned jaxlib but version-sensitive:
+    # generous headroom so only order-of-magnitude regressions (a score
+    # matrix sneaking back into temps) trip the gate
+    "temp_bytes_measured":      ("max", 0.50, 0.0),
+}
+
+
+def _is_number(v) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def compare_docs(current: dict, baseline: dict, where: str = "") -> list:
+    """Regression errors of `current` vs `baseline` (empty = no
+    regression).  Rows pair by exact name; baseline rows missing from
+    current are coverage regressions."""
+    errs = []
+    if current.get("suite") != baseline.get("suite"):
+        errs.append(f"{where}: suite changed: baseline "
+                    f"{baseline.get('suite')!r} vs current "
+                    f"{current.get('suite')!r}")
+    cur_rows = {r.get("name"): r.get("metrics") or {}
+                for r in current.get("rows", [])}
+    for row in baseline.get("rows", []):
+        name = row.get("name")
+        base_m = row.get("metrics") or {}
+        if name not in cur_rows:
+            errs.append(f"{where}: baseline row {name!r} missing from the "
+                        f"current artifact — a benchmark stopped "
+                        f"measuring it (coverage regression); re-baseline "
+                        f"if intentional")
+            continue
+        cur_m = cur_rows[name]
+        for key, want in base_m.items():
+            if key in BOOL_GUARDS and want is True:
+                if cur_m.get(key) is not True:
+                    errs.append(f"{where}: {name}: {key} regressed from "
+                                f"true to {cur_m.get(key)!r}")
+                continue
+            guard = NUM_GUARDS.get(key)
+            if guard is None or not _is_number(want):
+                continue
+            got = cur_m.get(key)
+            if not _is_number(got):
+                errs.append(f"{where}: {name}: guarded metric {key!r} "
+                            f"disappeared (baseline {want!r}, current "
+                            f"{got!r})")
+                continue
+            direction, rel, abs_ = guard
+            if direction == "max":
+                limit = want * (1 + rel) + abs_
+                if got > limit:
+                    errs.append(
+                        f"{where}: {name}: {key} regressed: {got} > "
+                        f"baseline {want} (+{rel:.0%}/{abs_} tolerance)")
+            else:
+                limit = want * (1 - rel) - abs_
+                if got < limit:
+                    errs.append(
+                        f"{where}: {name}: {key} regressed: {got} < "
+                        f"baseline {want} (-{rel:.0%}/{abs_} tolerance)")
+    return errs
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="compare BENCH_*.json artifacts against committed "
+                    "baselines (relative/semantic metrics only, never "
+                    "wall time)")
+    ap.add_argument("current", nargs="+",
+                    help="freshly produced BENCH_<suite>.json files")
+    ap.add_argument("--baseline-dir", default="benchmarks/baselines",
+                    help="directory holding the committed baseline "
+                         "artifacts (matched by file name)")
+    args = ap.parse_args(argv)
+
+    bad = 0
+    for path in args.current:
+        base_path = os.path.join(args.baseline_dir, os.path.basename(path))
+        try:
+            current = _load(path)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"{path}: unreadable: {e}", file=sys.stderr)
+            bad += 1
+            continue
+        try:
+            baseline = _load(base_path)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"{path}: no usable baseline at {base_path} ({e}) — "
+                  f"generate and commit one (see module docstring)",
+                  file=sys.stderr)
+            bad += 1
+            continue
+        errs = compare_docs(current, baseline, where=os.path.basename(path))
+        if errs:
+            bad += 1
+            for e in errs:
+                print(e, file=sys.stderr)
+        else:
+            n = len(baseline.get("rows", []))
+            print(f"{path}: OK vs {base_path} ({n} baseline rows held)")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -22,6 +22,13 @@ O(compact_factor * k / n_shards) bound it must respect — the schema
 validator fails CI if the bound is ever exceeded (`within_bound`), and
 the uploaded `BENCH_kernels_micro.json` artifact is the perf trajectory.
 
+The `selstruct/` rows compare STRUCTURED selection (paper App. G.7,
+block_size in {1, 4, 8}) end-to-end: dense block-sum + top-k vs the
+streaming block-summing kernel pipeline, with a MEASURED `matches_dense`
+bit per block size — the schema validator fails CI if streaming
+structured selection ever diverges from the dense block path on these
+fixed-seed cases.
+
 Machine-readable output: `python -m benchmarks.kernels_micro --json
 BENCH_kernels_micro.json` (schema: benchmarks/bench_schema.py).
 """
@@ -83,6 +90,59 @@ def _selection_rows():
                         "agree": float(agree), "k": k,
                         "density": density}})
     return rows
+
+
+def _structured_rows():
+    """Structured (block_size > 1) streaming vs dense block-sum top-k.
+
+    One dense + one streaming row per block size; the streaming row
+    carries the MEASURED `matches_dense` bit (bitwise index equality on
+    this fixed-seed case) and `agree` — both CI-gated by bench_schema.
+    The modeled streaming HBM bytes shrink with bs^2: the candidate
+    buffer, histograms and counts all live in block-score space."""
+    from repro.core.lift import topk_indices
+    rows_out = []
+    m, n, r, density = 256, 512, 16, 0.05
+    a = jax.random.normal(jax.random.PRNGKey(0), (m, r))
+    b = jax.random.normal(jax.random.PRNGKey(1), (n, r))
+    for bs in (1, 4, 8):
+        k = max(bs * bs, int(density * m * n) // (bs * bs) * (bs * bs))
+
+        dense_fn = jax.jit(lambda a, b, bs=bs, k=k: topk_indices(
+            jnp.abs(a @ b.T), k, bs))
+        stream_fn = jax.jit(lambda a, b, bs=bs, k=k: ops.lift_indices(
+            a, b, k, block_size=bs)[0])
+
+        us_dense, idx_dense = timer(
+            lambda: jax.block_until_ready(dense_fn(a, b)), reps=3)
+        us_stream, idx_stream = timer(
+            lambda: jax.block_until_ready(stream_fn(a, b)), reps=1)
+        agree = len(np.intersect1d(np.asarray(idx_dense),
+                                   np.asarray(idx_stream))) / k
+        matches = bool(np.array_equal(np.asarray(idx_dense),
+                                      np.asarray(idx_stream)))
+
+        dense_temp = dense_fn.lower(a, b).compile() \
+                             .memory_analysis().temp_size_in_bytes
+        bm, bn, cap = ops.select_tiling(m, n, k, bs)
+        tiles = (m // min(bm, m)) * (n // min(bn, n))
+        stream_bytes = tiles * cap * 4 + tiles * 4 \
+            + 3 * tiles * 512 * 4 + tiles * 4
+        name = f"selstruct/{m}x{n}-d{density}-bs{bs}"
+        rows_out.append({
+            "name": name + "-dense_topk", "us_per_call": us_dense,
+            "derived": f"temp_bytes_measured={dense_temp};k={k}",
+            "metrics": {"temp_bytes_measured": int(dense_temp), "k": k,
+                        "block_size": bs, "density": density}})
+        rows_out.append({
+            "name": name + "-streaming", "us_per_call": us_stream,
+            "derived": f"hbm_bytes_modeled={stream_bytes};"
+                       f"matches_dense={matches};agree={agree:.5f}",
+            "metrics": {"hbm_bytes_modeled": int(stream_bytes),
+                        "dense_bytes_modeled": int(m * n * 4 * 2),
+                        "agree": float(agree), "matches_dense": matches,
+                        "k": k, "block_size": bs, "density": density}})
+    return rows_out
 
 
 def _sharded_rows():
@@ -155,6 +215,7 @@ def run():
                  "metrics": {"state_saved_bytes": int(saved),
                              "ref_us": float(us_r)}})
     rows.extend(_selection_rows())
+    rows.extend(_structured_rows())
     rows.extend(_sharded_rows())
     return rows
 

@@ -205,11 +205,10 @@ def topk_indices(scores2d: jax.Array, k: int, block_size: int = 1) -> jax.Array:
         blocks = scores2d.reshape(nb_r, bs, nb_c, bs).sum(axis=(1, 3))
         kb = k // (bs * bs)
         _, bidx = jax.lax.top_k(blocks.reshape(-1), kb)
-        br, bc = bidx // nb_c, bidx % nb_c
-        rr = (br[:, None, None] * bs + jnp.arange(bs)[None, :, None])
-        cc = (bc[:, None, None] * bs + jnp.arange(bs)[None, None, :])
-        flat = (rr * cols + cc).reshape(-1)
-        return jnp.sort(flat)
+        # the ONE block->element expansion, shared with the streaming
+        # paths — bitwise-identical orderings by construction
+        from repro.kernels.ops import expand_block_indices
+        return expand_block_indices(bidx, nb_c, cols, bs)
     _, idx = jax.lax.top_k(scores2d.reshape(-1), k)
     return jnp.sort(idx)
 

@@ -32,13 +32,31 @@ from repro.core.lift import LiftConfig, TensorPlan
 
 
 def local_topk_indices(scores2d: jax.Array, k: int, n_shards: int,
-                       axis: int = 1) -> jax.Array:
+                       axis: int = 1, block_size: int = 1) -> jax.Array:
     """Per-shard-quota top-k.  scores2d: (rows, cols); the sharded dim is
     `axis` (1 = column slabs, the framework's TP layout).  Returns (k,)
     GLOBAL flat indices, sorted ascending.  Raises ValueError when the
     sharded dim or k does not divide by n_shards (a ragged quota would
-    silently select the wrong count per slab)."""
+    silently select the wrong count per slab).
+
+    `block_size` > 1 is structured LIFT (App. G.7) under a local quota:
+    scores are summed over (bs x bs) blocks, each slab selects its exact
+    k/(bs^2 * n_shards) block quota, and the selected blocks expand to
+    their member elements — slabs must align to block boundaries."""
     rows, cols = scores2d.shape
+    bs = block_size
+    if bs > 1:
+        if rows % bs or cols % bs or k % (bs * bs):
+            raise ValueError(
+                f"structured local-quota selection needs rows and cols "
+                f"divisible by block_size and k by block_size^2: "
+                f"rows={rows}, cols={cols}, k={k}, block_size={bs}")
+        blocks = scores2d.reshape(rows // bs, bs,
+                                  cols // bs, bs).sum(axis=(1, 3))
+        bidx = local_topk_indices(blocks, k // (bs * bs), n_shards,
+                                  axis=axis)
+        from repro.kernels.ops import expand_block_indices
+        return expand_block_indices(bidx, cols // bs, cols, bs)
     if axis == 0:
         idx_t = local_topk_indices(scores2d.T, k, n_shards, axis=1)
         r, c = idx_t // rows, idx_t % rows

@@ -21,8 +21,20 @@ with two interchangeable backends for the score->indices step:
                   HBM, every intermediate is O(k) or O(tiles).
 
 Backend choice is `LiftConfig.use_kernel` — streaming requires the "lift"
-selection rule and unstructured masks (block_size == 1); anything else
-falls back to dense inside the same engine program.
+selection rule; anything else falls back to dense inside the same engine
+program.  Structured LIFT (`block_size` > 1, paper App. G.7) runs the
+SAME streaming pipeline at block granularity: the kernels block-sum each
+tile's scores in VMEM, threshold search + compaction select k/bs^2
+blocks, and the block indices expand to elements on the O(k) output —
+in every engine mode (fused single-device, shard_map collective, and
+quota="local").
+
+Dense non-"lift" backends (magnitude / random / gradient / movement) no
+longer gather full tensors under a mesh either: geometry groups whose
+cols divide the shard axis run as a "dense-sharded" shard_map collective
+(per-shard `lax.top_k` of local slab scores, one O(k) all-gather, exact
+(value desc, index asc) merge — bitwise-identical to the single-device
+dense selection).
 
 Batching: tensors are grouped by (rows, cols, k) geometry; each group is
 stacked into one (ns_total, rows, cols) batch so the factorization vmaps
@@ -96,8 +108,7 @@ class SelectionEngine:
         self.plan = dict(plan)
         self.paths = sorted(plan)
         self.backend = ("streaming"
-                        if (cfg.use_kernel and cfg.selection == "lift"
-                            and cfg.block_size == 1)
+                        if (cfg.use_kernel and cfg.selection == "lift")
                         else "dense")
         # mesh snapshot: the engine's jitted programs bake the sharding
         # decision at construction (set the ctx BEFORE building the engine)
@@ -117,10 +128,7 @@ class SelectionEngine:
                 raise ValueError(
                     f"quota='local' needs quota_shards >= 1 "
                     f"(got {cfg.quota_shards})")
-            if cfg.block_size != 1 and self.quota_shards > 1:
-                raise ValueError(
-                    "quota='local' is unstructured-only (block_size == 1); "
-                    "structured LIFT has no per-slab quota path yet")
+            bs = cfg.block_size
             for path in self.paths:
                 p = self.plan[path]
                 if p.cols % self.quota_shards or p.k % self.quota_shards:
@@ -129,6 +137,17 @@ class SelectionEngine:
                         f"does not tile tensor {path!r}: cols={p.cols}, "
                         f"k={p.k} must both be divisible by n_shards — "
                         f"adjust quota_shards / k_multiple or exclude the "
+                        f"tensor via min_dim/scope")
+                if bs > 1 and self.quota_shards > 1 and (
+                        (p.cols // self.quota_shards) % bs
+                        or (p.k // self.quota_shards) % (bs * bs)):
+                    raise ValueError(
+                        f"quota='local' with n_shards={self.quota_shards} "
+                        f"does not tile structured tensor {path!r}: slab "
+                        f"cols={p.cols // self.quota_shards} must divide "
+                        f"by block_size={bs} and the per-slab quota "
+                        f"k={p.k // self.quota_shards} by block_size^2 — "
+                        f"adjust quota_shards/block_size or exclude the "
                         f"tensor via min_dim/scope")
         groups: dict[tuple, list] = {}
         for path in self.paths:
@@ -161,14 +180,34 @@ class SelectionEngine:
         # per-(geometry, compact_factor) retry programs (overflow recovery)
         self._retry_cache: dict = {}
 
+    def _mesh_divides(self, g: GroupSpec) -> bool:
+        """Can this group's columns slab over the mesh's shard axis?
+        Structured groups additionally need block-aligned slabs, so a
+        (bs x bs) block never straddles two devices."""
+        return (self.mesh is not None and self.shard_axis is not None
+                and self.mesh_shards > 1
+                and g.cols % self.mesh_shards == 0
+                and (g.cols // self.mesh_shards) % self.cfg.block_size == 0)
+
+    _DENSE_SHARDABLE = ("magnitude", "random", "gradient", "movement")
+
     def _exec_mode(self, g: GroupSpec) -> str:
-        """dense | streaming | streaming-local | sharded | sharded-local."""
+        """dense | dense-sharded | streaming | streaming-local | sharded |
+        sharded-local."""
         if self.backend == "dense":
+            # non-"lift" score rules compute per-slab scores straight from
+            # the shard's local slab (or position-stable PRNG draws), so
+            # they select collectively via per-shard top_k + O(k) merge;
+            # dense "lift" needs the full W for factorization and stays
+            # unsharded, as does the dense local-quota path (already
+            # slab-exact by construction)
+            if (self.cfg.selection in self._DENSE_SHARDABLE
+                    and self.cfg.quota == "global"
+                    and self._mesh_divides(g)):
+                return "dense-sharded"
             return "dense"
         local = self.cfg.quota == "local" and self.quota_shards > 1
-        sharded = (self.mesh is not None and self.shard_axis is not None
-                   and self.mesh_shards > 1
-                   and g.cols % self.mesh_shards == 0
+        sharded = (self._mesh_divides(g)
                    # a local quota only stays collective-free if the slab
                    # count IS the mesh's shard count
                    and (not local or self.quota_shards == self.mesh_shards))
@@ -317,6 +356,8 @@ class SelectionEngine:
             if self.backend == "streaming":
                 idx, ovf = self._stream_group(w, kk, g)
                 overflow = overflow + jnp.sum(ovf)
+            elif self.group_exec[(g.rows, g.cols, g.k)] == "dense-sharded":
+                idx = self._dense_group_sharded(w, kk, gg, g)
             else:
                 idx = self._dense_group(w, kk, gg, g)
             off = 0
@@ -350,39 +391,44 @@ class SelectionEngine:
         """Per-slab compaction budget for quota='local' — computed once
         here so the single-device (`lift_indices_local`) and collective
         (`lift_indices_sharded`) paths use the identical value and stay
-        bitwise-comparable."""
+        bitwise-comparable.  In score units: elements, or blocks for
+        structured LIFT (`select_tiling` owns the arithmetic)."""
         from repro.kernels import ops as kops
         factor = self.cfg.compact_factor if factor is None else factor
         w = cols // self.quota_shards
-        bm, bn = kops.pick_block(rows), kops.pick_block(w)
-        return kops.compact_capacity(rows, w, k // self.quota_shards,
-                                     bm, bn, factor)
+        _bm, _bn, cap = kops.select_tiling(rows, w, k // self.quota_shards,
+                                           self.cfg.block_size,
+                                           factor=factor)
+        return cap
 
     def _stream_select(self, a, b, rows: int, cols: int, k: int,
                        factor: int):
         """Unsharded streaming selection over a stacked factor batch at
         the given compaction factor: threshold + compaction kernels per
-        matrix under one lax.map, honoring the quota mode.  The SINGLE
-        body behind both the fused group program (factor =
-        cfg.compact_factor) and `retry_overflow`'s doubled factors — a
-        clean retry is bitwise-identical to a clean fused run because
-        they are literally this code."""
+        matrix under one lax.map, honoring the quota mode and the
+        structured block size.  The SINGLE body behind both the fused
+        group program (factor = cfg.compact_factor) and
+        `retry_overflow`'s doubled factors — a clean retry is
+        bitwise-identical to a clean fused run because they are literally
+        this code."""
         from repro.kernels import ops as kops
+        bs = self.cfg.block_size
         if self.cfg.quota == "local" and self.quota_shards > 1:
             capacity = self._local_capacity(rows, cols, k, factor)
 
             def one(ab):
                 idx, _taus, ovf = kops.lift_indices_local(
                     ab[0], ab[1], k, n_shards=self.quota_shards,
-                    capacity=capacity)
+                    capacity=capacity, block_size=bs)
                 return idx, ovf
         else:
-            bm, bn = kops.pick_block(rows), kops.pick_block(cols)
-            capacity = kops.compact_capacity(rows, cols, k, bm, bn, factor)
+            bm, bn, capacity = kops.select_tiling(rows, cols, k, bs,
+                                                  factor=factor)
 
             def one(ab):
                 idx, _tau, ovf = kops.lift_indices(
-                    ab[0], ab[1], k, capacity=capacity, bm=bm, bn=bn)
+                    ab[0], ab[1], k, capacity=capacity, bm=bm, bn=bn,
+                    block_size=bs)
                 return idx, ovf
 
         return jax.lax.map(one, (a, b))
@@ -421,7 +467,8 @@ class SelectionEngine:
                 idx, _tau, ovf = kops.lift_indices_sharded(
                     ab[0], ab[1], g.k, axis_name=axis, n_shards=n_shards,
                     cols_global=g.cols, quota=quota, capacity=capacity,
-                    compact_factor=factor)
+                    compact_factor=factor,
+                    block_size=self.cfg.block_size)
                 return idx, ovf
 
             return jax.lax.map(one, (a3, b3))
@@ -436,12 +483,91 @@ class SelectionEngine:
         def one(w2d, key1, g2d=None):
             s = liftmod.scores_for(w2d, cfg, cfg.selection, key1, g2d)
             if self.quota_shards > 1:
-                return local_topk_indices(s, g.k, self.quota_shards)
+                return local_topk_indices(s, g.k, self.quota_shards,
+                                          block_size=cfg.block_size)
             return liftmod.topk_indices(s, g.k, cfg.block_size)
 
         if gg is None:
             return jax.vmap(lambda a, b: one(a, b))(w, kk)
         return jax.vmap(lambda a, b, c: one(a, b, c))(w, kk, gg)
+
+    def _dense_group_sharded(self, w, kk, gg, g: GroupSpec):
+        """Dense-fallback selection as a shard_map collective (ROADMAP
+        PR 2 follow-up): each shard scores ONLY its column slab
+        (magnitude/gradient/movement read the local weights; random draws
+        position-stable PRNG bits), takes its local top-k, and the merge
+        is one O(k) all-gather + exact (value desc, index asc) prefix —
+        no full (rows, cols) tensor is ever gathered across the mesh.
+
+        Bitwise-identical to the single-device dense path: per-shard
+        `lax.top_k` keeps each shard's best candidates under the same
+        total order the global top_k uses (its value-then-lowest-index
+        tie-break restricted to a column slab agrees with the global
+        flat-index order), so the merged k-prefix is the same set."""
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.kernels import ops as kops
+        cfg = self.cfg
+        bs = cfg.block_size
+        axis, n_shards = self.shard_axis, self.mesh_shards
+        rows, cols = g.rows, g.cols
+        nl = cols // n_shards
+        kb = g.k // (bs * bs)               # selection units (blocks)
+        nbc = cols // bs                    # global unit columns
+        nlb = nl // bs                      # this shard's unit columns
+        kloc = min(kb, (rows // bs) * nlb)  # per-shard candidate count
+
+        def local_scores(w2d, key1, g2d):
+            if cfg.selection == "magnitude":
+                return jnp.abs(w2d.astype(jnp.float32))
+            if cfg.selection in ("gradient", "movement"):
+                assert g2d is not None, \
+                    f"{cfg.selection} selection needs a gradient sample"
+            if cfg.selection == "gradient":
+                return jnp.abs(g2d.astype(jnp.float32))
+            if cfg.selection == "movement":
+                return (-w2d.astype(jnp.float32)
+                        * g2d.astype(jnp.float32))
+            # "random": scores are position-stable PRNG draws, identical
+            # on every shard — draw the full matrix locally and slice the
+            # slab (transient VMEM/registers, but ZERO cross-shard
+            # traffic and bitwise parity with the single-device draw)
+            s = jax.random.uniform(key1, (rows, cols), jnp.float32)
+            col0 = jax.lax.axis_index(axis) * nl
+            return jax.lax.dynamic_slice(s, (0, col0), (rows, nl))
+
+        def one(w2d, key1, g2d):
+            s = local_scores(w2d, key1, g2d)
+            if bs > 1:
+                s = s.reshape(rows // bs, bs, nlb, bs).sum(axis=(1, 3))
+            v, loc = jax.lax.top_k(s.reshape(-1), kloc)
+            shard0 = jax.lax.axis_index(axis) * nlb
+            gidx = loc // nlb * nbc + shard0 + loc % nlb
+            vall = jax.lax.all_gather(v, axis).reshape(-1)
+            gall = jax.lax.all_gather(gidx, axis).reshape(-1)
+            # exact top-kb under the single-device total order:
+            # value descending, global flat index ascending on ties
+            order = jnp.lexsort((gall, -vall))
+            sel = jnp.sort(gall[order[:kb]]).astype(jnp.int32)
+            if bs > 1:
+                sel = kops.expand_block_indices(sel, nbc, cols, bs)
+            return sel
+
+        wspec = shd.logical_to_spec((None, None, "shards"), self.mesh)
+        if gg is None:
+            def body(w3, kk2):
+                return jax.vmap(lambda a, b: one(a, b, None))(w3, kk2)
+
+            return shard_map(body, mesh=self.mesh,
+                             in_specs=(wspec, P()), out_specs=P(),
+                             check_rep=False)(w, kk)
+
+        def body(w3, kk2, gg3):
+            return jax.vmap(one)(w3, kk2, gg3)
+
+        return shard_map(body, mesh=self.mesh,
+                         in_specs=(wspec, P(), wspec), out_specs=P(),
+                         check_rep=False)(w, kk, gg)
 
     def _refresh_impl(self, params, opt_state, key, factors_fp=()):
         from repro.core import sparse_adam as sa
@@ -478,6 +604,15 @@ class SelectionEngine:
         runs)."""
         if not meta:
             return
+        if "block_size" in meta \
+                and meta["block_size"] != self.cfg.block_size:
+            raise ValueError(
+                f"checkpoint selection block_size mismatch: saved "
+                f"block_size {meta['block_size']} vs current "
+                f"{self.cfg.block_size} — the (ns, k) optimizer state on "
+                f"disk was selected at a different structure granularity; "
+                f"restart with the original --block-size or discard the "
+                f"checkpoint")
         if "quota" in meta:  # pre-quota checkpoints pass through
             saved_q = (meta["quota"], meta.get("quota_shards", 1))
             got_q = (self.cfg.quota, self.quota_shards)

@@ -167,6 +167,15 @@ class DeltaArtifact:
             raise DeltaMismatchError(
                 f"delta quota policy mismatch: artifact was selected "
                 f"under quota/shards {saved_q}, consumer runs {got_q}")
+        # structured LIFT stores element indices like every other delta,
+        # but a block-structure mismatch means the index sets were chosen
+        # by a different rule — refuse loudly rather than merge a mask
+        # the consumer's engine could never have produced
+        if mine.get("block_size", 1) != plan_meta.get("block_size", 1):
+            raise DeltaMismatchError(
+                f"delta block-structure mismatch: artifact was selected "
+                f"with block_size {mine.get('block_size', 1)}, consumer "
+                f"runs block_size {plan_meta.get('block_size', 1)}")
         saved = mine.get("tensors", {})
         theirs = plan_meta.get("tensors", {})
         missing = sorted(set(saved) ^ set(theirs))

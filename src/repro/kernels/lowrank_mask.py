@@ -14,6 +14,16 @@ immediately reduces it to the requested statistic — W' never leaves VMEM:
   * mode "compact" -> per-tile compacted flat indices of |W'| > tau
                       (streaming index extraction; see below)
 
+Structured LIFT (paper App. G.7): the reducing modes (count / hist /
+absmax / compact) accept `bs > 1` and operate on BLOCK scores — each
+(bm, bn) tile of |W'| is summed over its (bs x bs) sub-blocks in VMEM
+right after the MXU matmul, so the statistic (and the compacted indices)
+live in the (m/bs, n/bs) block-score space.  Tiles must align to block
+boundaries (bm % bs == 0, bn % bs == 0); "compact" then emits global
+flat BLOCK indices (row-major into the (m/bs, n/bs) block matrix) and
+`capacity` counts block slots.  The block-score matrix, like W', never
+leaves VMEM.
+
 "compact" is the selection-engine fast path: each tile emits the GLOBAL
 flat indices (row-major into the full (m, n) matrix) of its above-threshold
 entries, ascending, left-packed into a fixed `capacity`-slot buffer and
@@ -39,34 +49,40 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _tile_kernel_abs(a_ref, b_ref, out_ref):
-    w = jnp.dot(a_ref[...], b_ref[...].T,
-                preferred_element_type=jnp.float32)
-    out_ref[...] = jnp.abs(w)
-
-
-def _tile_kernel_mask(tau_ref, a_ref, b_ref, out_ref):
-    w = jnp.dot(a_ref[...], b_ref[...].T,
-                preferred_element_type=jnp.float32)
-    out_ref[...] = (jnp.abs(w) > tau_ref[0, 0])
-
-
-def _tile_kernel_count(tau_ref, a_ref, b_ref, out_ref):
-    w = jnp.dot(a_ref[...], b_ref[...].T,
-                preferred_element_type=jnp.float32)
-    out_ref[0, 0] = jnp.sum(jnp.abs(w) > tau_ref[0, 0]).astype(jnp.int32)
-
-
-def _tile_kernel_absmax(a_ref, b_ref, out_ref):
-    w = jnp.dot(a_ref[...], b_ref[...].T,
-                preferred_element_type=jnp.float32)
-    out_ref[0, 0] = jnp.max(jnp.abs(w))
-
-
-def _tile_kernel_hist(lohi_ref, a_ref, b_ref, out_ref, *, nbins: int):
+def _tile_scores(a_ref, b_ref, bs: int = 1):
+    """|A_tile B_tile^T| at score-unit granularity: elements for bs == 1,
+    (bs x bs) block sums for structured LIFT — the one place the
+    block-summed score definition is spelled out (VPU reshape+reduce on
+    the fp32 MXU tile, no extra VMEM traffic)."""
     w = jnp.dot(a_ref[...], b_ref[...].T,
                 preferred_element_type=jnp.float32)
     s = jnp.abs(w)
+    if bs > 1:
+        bm, bn = s.shape
+        s = s.reshape(bm // bs, bs, bn // bs, bs).sum(axis=(1, 3))
+    return s
+
+
+def _tile_kernel_abs(a_ref, b_ref, out_ref):
+    out_ref[...] = _tile_scores(a_ref, b_ref)
+
+
+def _tile_kernel_mask(tau_ref, a_ref, b_ref, out_ref):
+    out_ref[...] = (_tile_scores(a_ref, b_ref) > tau_ref[0, 0])
+
+
+def _tile_kernel_count(tau_ref, a_ref, b_ref, out_ref, *, bs: int):
+    s = _tile_scores(a_ref, b_ref, bs)
+    out_ref[0, 0] = jnp.sum(s > tau_ref[0, 0]).astype(jnp.int32)
+
+
+def _tile_kernel_absmax(a_ref, b_ref, out_ref, *, bs: int):
+    out_ref[0, 0] = jnp.max(_tile_scores(a_ref, b_ref, bs))
+
+
+def _tile_kernel_hist(lohi_ref, a_ref, b_ref, out_ref, *, nbins: int,
+                      bs: int):
+    s = _tile_scores(a_ref, b_ref, bs)
     lo, hi = lohi_ref[0, 0], lohi_ref[0, 1]
     width = (hi - lo) / nbins
     ids = jnp.clip(jnp.floor((s - lo) / width), 0, nbins - 1)
@@ -81,11 +97,13 @@ INT32_SENTINEL = 2 ** 31 - 1
 
 
 def _tile_kernel_compact(tau_ref, a_ref, b_ref, idx_ref, cnt_ref, *,
-                         capacity: int, n_cols: int, bm: int, bn: int):
+                         capacity: int, n_cols: int, bm: int, bn: int,
+                         bs: int):
+    """`n_cols`, `bm`, `bn` and the emitted indices are in score UNITS:
+    elements for bs == 1, (bs x bs) blocks for structured LIFT (the caller
+    passes n/bs and bm/bs-sized unit tiles)."""
     i, j = pl.program_id(0), pl.program_id(1)
-    w = jnp.dot(a_ref[...], b_ref[...].T,
-                preferred_element_type=jnp.float32)
-    hit = jnp.abs(w) > tau_ref[0, 0]                       # (bm, bn)
+    hit = _tile_scores(a_ref, b_ref, bs) > tau_ref[0, 0]   # (bm, bn) units
     row0 = i * bm
     col_ids = j * bn + jax.lax.broadcasted_iota(jnp.int32, (1, bn), 1)
     slots = jax.lax.broadcasted_iota(jnp.int32, (1, capacity), 1)
@@ -115,9 +133,14 @@ def _grid(m, n, bm, bn):
 def lowrank_stat(a: jax.Array, b: jax.Array, mode: str, *,
                  tau=None, lo=None, hi=None, nbins: int = 256,
                  capacity: int = 1024,
-                 bm: int = 256, bn: int = 256,
+                 bm: int = 256, bn: int = 256, bs: int = 1,
                  interpret: bool = True):
     """Dispatch one fused pass over the implicit W' = A B^T.
+
+    `bs > 1` switches the reducing modes (count / absmax / hist / compact)
+    to (bs x bs) block-summed scores — stats and compacted indices live in
+    the (m/bs, n/bs) block space; tiles must align (bm % bs == bn % bs
+    == 0).  "abs"/"mask" are element-only (dense fallbacks materialize).
 
     Returns: abs -> (m, n) f32;  mask -> (m, n) bool;
              count -> (gm, gn) i32;  absmax -> (gm, gn) f32;
@@ -128,6 +151,13 @@ def lowrank_stat(a: jax.Array, b: jax.Array, mode: str, *,
     n, _ = b.shape
     bm, bn = min(bm, m), min(bn, n)
     gm, gn = _grid(m, n, bm, bn)
+    if bs > 1:
+        if mode in ("abs", "mask"):
+            raise ValueError(f"mode {mode!r} has no block-summed variant")
+        if bm % bs or bn % bs:
+            raise ValueError(
+                f"block-summed stats need tiles aligned to block_size: "
+                f"bm={bm}, bn={bn}, bs={bs}")
     a_spec = pl.BlockSpec((bm, r), lambda i, j: (i, 0))
     b_spec = pl.BlockSpec((bn, r), lambda i, j: (j, 0))
     common = dict(grid=(gm, gn), interpret=interpret)
@@ -151,7 +181,7 @@ def lowrank_stat(a: jax.Array, b: jax.Array, mode: str, *,
     if mode == "count":
         tau_arr = jnp.asarray(tau, jnp.float32).reshape(1, 1)
         return pl.pallas_call(
-            _tile_kernel_count,
+            functools.partial(_tile_kernel_count, bs=bs),
             in_specs=[pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
                       a_spec, b_spec],
             out_specs=pl.BlockSpec((1, 1), lambda i, j: (i, j)),
@@ -159,17 +189,18 @@ def lowrank_stat(a: jax.Array, b: jax.Array, mode: str, *,
             **common)(tau_arr, a, b)
     if mode == "absmax":
         return pl.pallas_call(
-            _tile_kernel_absmax,
+            functools.partial(_tile_kernel_absmax, bs=bs),
             in_specs=[a_spec, b_spec],
             out_specs=pl.BlockSpec((1, 1), lambda i, j: (i, j)),
             out_shape=jax.ShapeDtypeStruct((gm, gn), jnp.float32),
             **common)(a, b)
     if mode == "compact":
         tau_arr = jnp.asarray(tau, jnp.float32).reshape(1, 1)
-        capacity = int(min(capacity, bm * bn))
+        capacity = int(min(capacity, (bm // bs) * (bn // bs)))
         return pl.pallas_call(
             functools.partial(_tile_kernel_compact, capacity=capacity,
-                              n_cols=n, bm=bm, bn=bn),
+                              n_cols=n // bs, bm=bm // bs, bn=bn // bs,
+                              bs=bs),
             in_specs=[pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
                       a_spec, b_spec],
             out_specs=(pl.BlockSpec((1, capacity),
@@ -181,7 +212,7 @@ def lowrank_stat(a: jax.Array, b: jax.Array, mode: str, *,
     if mode == "hist":
         lohi = jnp.asarray([lo, hi], jnp.float32).reshape(1, 2)
         return pl.pallas_call(
-            functools.partial(_tile_kernel_hist, nbins=nbins),
+            functools.partial(_tile_kernel_hist, nbins=nbins, bs=bs),
             in_specs=[pl.BlockSpec((1, 2), lambda i, j: (0, 0)),
                       a_spec, b_spec],
             out_specs=pl.BlockSpec((1, nbins),

@@ -28,44 +28,48 @@ def lowrank_abs(a, b, bm: int = 256, bn: int = 256,
     return lrm.lowrank_stat(a, b, "abs", bm=bm, bn=bn, interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
-def lowrank_count(a, b, tau, bm: int = 256, bn: int = 256,
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bs", "interpret"))
+def lowrank_count(a, b, tau, bm: int = 256, bn: int = 256, bs: int = 1,
                   interpret: Optional[bool] = None):
     interpret = _default_interpret() if interpret is None else interpret
-    parts = lrm.lowrank_stat(a, b, "count", tau=tau, bm=bm, bn=bn,
+    parts = lrm.lowrank_stat(a, b, "count", tau=tau, bm=bm, bn=bn, bs=bs,
                              interpret=interpret)
     return jnp.sum(parts)
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
-def lowrank_absmax(a, b, bm: int = 256, bn: int = 256,
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bs", "interpret"))
+def lowrank_absmax(a, b, bm: int = 256, bn: int = 256, bs: int = 1,
                    interpret: Optional[bool] = None):
     interpret = _default_interpret() if interpret is None else interpret
-    parts = lrm.lowrank_stat(a, b, "absmax", bm=bm, bn=bn,
+    parts = lrm.lowrank_stat(a, b, "absmax", bm=bm, bn=bn, bs=bs,
                              interpret=interpret)
     return jnp.max(parts)
 
 
-@functools.partial(jax.jit, static_argnames=("nbins", "bm", "bn", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("nbins", "bm", "bn", "bs", "interpret"))
 def lowrank_hist(a, b, lo, hi, nbins: int = 512, bm: int = 256, bn: int = 256,
-                 interpret: Optional[bool] = None):
+                 bs: int = 1, interpret: Optional[bool] = None):
     interpret = _default_interpret() if interpret is None else interpret
     parts = lrm.lowrank_stat(a, b, "hist", lo=lo, hi=hi, nbins=nbins,
-                             bm=bm, bn=bn, interpret=interpret)
+                             bm=bm, bn=bn, bs=bs, interpret=interpret)
     return jnp.sum(parts, axis=0)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("k", "passes", "nbins", "bm", "bn",
-                                    "interpret"))
+                                    "block_size", "interpret"))
 def lift_threshold(a, b, k: int, passes: int = 2, nbins: int = 512,
-                   bm: int = 256, bn: int = 256,
+                   bm: int = 256, bn: int = 256, block_size: int = 1,
                    interpret: Optional[bool] = None):
-    """Threshold tau s.t. count(|A B^T| > tau) ~= k (within the final bin).
+    """Threshold tau s.t. count(score > tau) ~= k (within the final bin),
+    where score is |A B^T| for block_size == 1 and the (bs x bs)
+    block-summed |A B^T| for structured LIFT — `k` then counts BLOCKS.
 
     Multi-pass histogram refinement: W' never materializes in HBM.
     """
-    return _lift_threshold_lohi(a, b, k, passes, nbins, bm, bn, interpret)[0]
+    return _lift_threshold_lohi(a, b, k, passes, nbins, bm, bn, interpret,
+                                block_size)[0]
 
 
 def hist_refine(hist, k: int, lo, hi, nbins: int):
@@ -100,14 +104,18 @@ def tau_from_lohi(lo, hi):
 
 def _lift_threshold_lohi(a, b, k: int, passes: int = 2, nbins: int = 512,
                          bm: int = 256, bn: int = 256,
-                         interpret: Optional[bool] = None):
+                         interpret: Optional[bool] = None,
+                         block_size: int = 1):
     """(lo, hi) of the final histogram bin: count(>= lo) >= k > count(>= hi)
-    up to histogram-binning float rounding (one bin width)."""
+    up to histogram-binning float rounding (one bin width).  With
+    `block_size` > 1 the counted population is block-summed scores and
+    `k` counts blocks."""
     interpret = _default_interpret() if interpret is None else interpret
     lo = jnp.float32(0.0)
-    hi = lowrank_absmax(a, b, bm, bn, interpret) * (1 + 1e-6)
+    hi = lowrank_absmax(a, b, bm, bn, block_size, interpret) * (1 + 1e-6)
     for _ in range(passes):
-        hist = lowrank_hist(a, b, lo, hi, nbins, bm, bn, interpret)
+        hist = lowrank_hist(a, b, lo, hi, nbins, bm, bn, block_size,
+                            interpret)
         lo, hi = hist_refine(hist, k, lo, hi, nbins)
     return lo, hi
 
@@ -120,24 +128,53 @@ def lift_mask(a, b, k: int, passes: int = 2, nbins: int = 512,
               interpret: Optional[bool] = None):
     """(mask (m, n) bool, tau) with count(mask) in [k, k + final-bin-ties)."""
     interpret = _default_interpret() if interpret is None else interpret
-    tau = lift_threshold(a, b, k, passes, nbins, bm, bn, interpret)
+    tau = lift_threshold(a, b, k, passes, nbins, bm, bn,
+                         interpret=interpret)
     mask = lrm.lowrank_stat(a, b, "mask", tau=tau, bm=bm, bn=bn,
                             interpret=interpret)
     return mask, tau
 
 
-def pick_block(dim: int, target: int = 256) -> int:
+def pick_block(dim: int, target: int = 256, multiple: int = 1) -> int:
     """Largest divisor of `dim` in [16, target] (the Pallas grid needs
     exact tiling).  Model matrix dims are overwhelmingly
     power-of-two-ish, so this lands on `target` or close; a dim with no
     usable divisor (prime / awkward odd) gets one full-dim tile rather
-    than a degenerate per-element grid."""
+    than a degenerate per-element grid.  `multiple` additionally
+    constrains the tile to a multiple of the structured block size, so
+    block-summed tiles never straddle a (bs x bs) block boundary (the
+    caller guarantees dim % multiple == 0)."""
     if dim <= target:
         return dim
-    for c in range(target, 15, -1):
-        if dim % c == 0:
+    lo = max(16, multiple)
+    for c in range(target, lo - 1, -1):
+        if dim % c == 0 and c % multiple == 0:
             return c
     return dim
+
+
+def select_tiling(m: int, n: int, k: int, block_size: int = 1,
+                  bm: int = 256, bn: int = 256,
+                  factor: int = 8) -> tuple:
+    """(bm, bn, capacity) the streaming selection pipeline will use for a
+    (m, n) matrix selecting k entries: element-space tiles aligned to
+    `block_size`, compaction capacity in score-unit slots (elements for
+    block_size == 1, blocks otherwise).  The ONE place this arithmetic
+    lives — `_lift_indices_body` defaults and the SelectionEngine's
+    explicit capacities both call it, so single-device, per-slab local
+    and collective paths stay bitwise-comparable."""
+    bs = block_size
+    bm0, bn0 = min(bm, m), min(bn, n)
+    if m % bm0 or n % bn0 or bm0 % bs or bn0 % bs:
+        bm, bn = pick_block(m, bm, bs), pick_block(n, bn, bs)
+        bm0, bn0 = min(bm, m), min(bn, n)
+    cap = compact_capacity(m // bs, n // bs, k // (bs * bs),
+                           bm0 // bs, bn0 // bs, factor)
+    if bs > 1:
+        # the kernel clamps its buffer to the unit tile size; mirror it so
+        # the caller's stored/overflow arithmetic sees the same slot count
+        cap = min(cap, (bm0 // bs) * (bn0 // bs))
+    return bm, bn, cap
 
 
 def compact_capacity(m: int, n: int, k: int, bm: int, bn: int,
@@ -155,21 +192,41 @@ def compact_capacity(m: int, n: int, k: int, bm: int, bn: int,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("capacity", "bm", "bn", "interpret"))
+                   static_argnames=("capacity", "bm", "bn", "bs",
+                                    "interpret"))
 def lowrank_compact(a, b, tau, capacity: int = 1024,
-                    bm: int = 256, bn: int = 256,
+                    bm: int = 256, bn: int = 256, bs: int = 1,
                     interpret: Optional[bool] = None):
-    """Per-tile compacted flat indices of |A B^T| > tau (+ per-tile counts)."""
+    """Per-tile compacted flat indices of |A B^T| > tau (+ per-tile
+    counts).  `bs` > 1 compacts flat BLOCK indices of the block-summed
+    scores instead (row-major into the (m/bs, n/bs) block matrix,
+    `capacity` in block slots) — the one compaction dispatch every
+    streaming path goes through."""
     interpret = _default_interpret() if interpret is None else interpret
     return lrm.lowrank_stat(a, b, "compact", tau=tau, capacity=capacity,
-                            bm=bm, bn=bn, interpret=interpret)
+                            bm=bm, bn=bn, bs=bs, interpret=interpret)
+
+
+def expand_block_indices(bidx, n_block_cols: int, n_cols: int, bs: int):
+    """Sorted flat ELEMENT indices of the (bs x bs) blocks named by the
+    flat block indices `bidx` (..., kb) — the one expansion both the
+    streaming paths and the dense `lift.topk_indices` block path share,
+    so their output ordering is identical.  O(kb * bs^2), never O(m*n).
+    Pad/duplicate block entries (degraded masks) expand like real ones —
+    still in-range."""
+    br, bc = bidx // n_block_cols, bidx % n_block_cols
+    rr = br[..., None, None] * bs + jnp.arange(bs)[None, :, None]
+    cc = bc[..., None, None] * bs + jnp.arange(bs)[None, None, :]
+    flat = (rr * n_cols + cc).reshape(bidx.shape[:-1] + (-1,))
+    return jnp.sort(flat, axis=-1).astype(jnp.int32)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("k", "passes", "nbins", "capacity",
-                                    "bm", "bn", "interpret"))
+                                    "bm", "bn", "block_size", "interpret"))
 def lift_indices(a, b, k: int, passes: int = 3, nbins: int = 512,
                  capacity: int = 0, bm: int = 256, bn: int = 256,
+                 block_size: int = 1,
                  interpret: Optional[bool] = None):
     """Streaming Principal-Weight selection: exactly-k sorted flat indices
     of the top-|A B^T| entries, without ever materializing the (m, n)
@@ -179,9 +236,17 @@ def lift_indices(a, b, k: int, passes: int = 3, nbins: int = 512,
       1. `lift_threshold` — multi-pass histogram search for tau with
          count(|W'| > tau) in [k, k + final-bin ties);
       2. "compact" kernel — per-tile above-tau indices, left-packed into
-         `capacity` slots (0 -> heuristic via `compact_capacity`);
+         `capacity` slots (0 -> heuristic via `select_tiling`);
       3. one sort over the tiles*capacity candidate buffer; sentinel
          padding sinks to the end, truncate to k.
+
+    `block_size` > 1 runs structured LIFT (paper App. G.7) through the
+    SAME three stages at block granularity: the kernels block-sum each
+    tile's scores in VMEM, the threshold search and compaction operate on
+    the (m/bs, n/bs) block-score space for k/bs^2 blocks, and the
+    selected block indices expand to their bs^2 member elements at the
+    end (`expand_block_indices`) — neither W', the score matrix, nor the
+    block-score matrix ever reaches HBM, exactly as for block_size == 1.
 
     Ties inside the final histogram bin are broken by LOWEST flat index
     (dense `top_k` breaks by highest score then lowest index), so parity
@@ -199,39 +264,63 @@ def lift_indices(a, b, k: int, passes: int = 3, nbins: int = 512,
     """
     interpret = _default_interpret() if interpret is None else interpret
     return _lift_indices_body(a, b, k, passes, nbins, capacity, bm, bn,
-                              interpret)
+                              interpret, block_size)
+
+
+def _check_block_geometry(m: int, n: int, k: int, bs: int, what: str):
+    if m % bs or n % bs:
+        raise ValueError(
+            f"structured {what} block_size={bs} does not tile the "
+            f"(rows={m}, cols={n}) matrix — both dims must divide")
+    if k % (bs * bs):
+        raise ValueError(
+            f"structured {what} needs k divisible by block_size^2: "
+            f"k={k}, block_size={bs}")
 
 
 def _lift_indices_body(a, b, k: int, passes: int, nbins: int, capacity: int,
-                       bm: int, bn: int, interpret: bool):
+                       bm: int, bn: int, interpret: bool,
+                       block_size: int = 1):
     """Un-jitted `lift_indices` body, shared verbatim by the single-device,
     per-slab local-quota and shard_map'd collective entry points so their
-    per-slab arithmetic is bit-identical."""
+    per-slab arithmetic is bit-identical.  All selection arithmetic runs
+    in score UNITS (elements, or blocks for structured LIFT); only the
+    final expansion returns to element space."""
+    bs = block_size
     m, n = a.shape[0], b.shape[0]
-    if m % min(bm, m) or n % min(bn, n):
-        bm, bn = pick_block(m, bm), pick_block(n, bn)
+    if bs > 1:
+        _check_block_geometry(m, n, k, bs, "selection")
+    ku = k // (bs * bs)                    # selection units (blocks)
+    bm, bn, cap_default = select_tiling(m, n, k, bs, bm, bn)
     if capacity <= 0:
-        capacity = compact_capacity(m, n, k, bm, bn)
+        capacity = cap_default
+    elif bs > 1:
+        capacity = min(capacity, (min(bm, m) // bs) * (min(bn, n) // bs))
     tiles_total = (m // min(bm, m)) * (n // min(bn, n))
-    if tiles_total * capacity < k:
+    if tiles_total * capacity < ku:
         raise ValueError(
-            f"compaction candidate buffer {tiles_total}x{capacity} < k={k}")
-    lo, hi = _lift_threshold_lohi(a, b, k, passes, nbins, bm, bn, interpret)
+            f"compaction candidate buffer {tiles_total}x{capacity} < "
+            f"k={ku} selection units")
+    lo, hi = _lift_threshold_lohi(a, b, ku, passes, nbins, bm, bn,
+                                  interpret, bs)
     tau = tau_from_lohi(lo, hi)
-    tiles, counts = lowrank_compact(a, b, tau, capacity, bm, bn, interpret)
+    tiles, counts = lowrank_compact(a, b, tau, capacity, bm, bn, bs,
+                                    interpret)
     cand = jnp.sort(tiles.reshape(-1))
     # `stored`, not sum(counts): a tile whose above-tau population exceeds
     # capacity DROPS the excess, so the sorted buffer holds only
     # min(count, capacity) real entries per tile — guarding with the raw
     # total would hand sentinel padding out as selected indices.
     stored = jnp.sum(jnp.minimum(counts, capacity))
-    slot = jnp.arange(k, dtype=jnp.int32)
-    idx = jnp.where(slot < stored, cand[:k], slot)
+    slot = jnp.arange(ku, dtype=jnp.int32)
+    idx = jnp.where(slot < stored, cand[:ku], slot)
     # re-sort: pad slots sort below real candidates, and downstream
     # consumers (moment remap, near-sequential scatter) require ascending
     # order; duplicates remain possible in the degraded case only.
     idx = jnp.sort(idx)
     overflow = jnp.sum(jnp.maximum(counts - capacity, 0))
+    if bs > 1:
+        idx = expand_block_indices(idx, n // bs, n, bs)
     return idx.astype(jnp.int32), tau, overflow
 
 
@@ -278,21 +367,25 @@ def shard_buffer_model(m: int, n: int, k: int, n_shards: int,
 
 @functools.partial(jax.jit,
                    static_argnames=("k", "n_shards", "passes", "nbins",
-                                    "capacity", "bm", "bn", "interpret"))
+                                    "capacity", "bm", "bn", "block_size",
+                                    "interpret"))
 def lift_indices_local(a, b, k: int, n_shards: int, passes: int = 3,
                        nbins: int = 512, capacity: int = 0,
-                       bm: int = 256, bn: int = 256,
+                       bm: int = 256, bn: int = 256, block_size: int = 1,
                        interpret: Optional[bool] = None):
     """Local-quota streaming selection on a single device (DESIGN.md §3
     "local" mode): the columns are split into `n_shards` slabs and each
     slab runs the full threshold+compaction pipeline for its exact
     k/n_shards quota — the streaming analogue of
     `core.local_quota.local_topk_indices`, and the single-device reference
-    the shard_map'd collective path must match bitwise.
+    the shard_map'd collective path must match bitwise.  `block_size` > 1
+    runs each slab's pipeline at block granularity (slab width and the
+    per-slab quota must tile into bs / bs^2).
 
     Returns (idx (k,) int32 sorted ascending GLOBAL flat indices,
     tau (n_shards,) per-slab thresholds, overflow i32 total)."""
     interpret = _default_interpret() if interpret is None else interpret
+    bs = block_size
     m, n = a.shape[0], b.shape[0]
     if n % n_shards or k % n_shards:
         raise ValueError(
@@ -300,13 +393,16 @@ def lift_indices_local(a, b, k: int, n_shards: int, passes: int = 3,
             f"cols={n}, k={k}, n_shards={n_shards}")
     w = n // n_shards
     kq = k // n_shards
+    if bs > 1:
+        _check_block_geometry(m, w, kq, bs, "local-quota slab")
     slabs = b.reshape(n_shards, w, b.shape[1])
     col0 = jnp.arange(n_shards, dtype=jnp.int32) * w
 
     def one(args):
         b_slab, c0 = args
         idx_l, tau, ovf = _lift_indices_body(a, b_slab, kq, passes, nbins,
-                                             capacity, bm, bn, interpret)
+                                             capacity, bm, bn, interpret,
+                                             bs)
         return _slab_to_global(idx_l, w, n, c0), tau, ovf
 
     g, taus, ovfs = jax.lax.map(one, (slabs, col0))
@@ -318,7 +414,7 @@ def lift_indices_sharded(a, b_local, k: int, *, axis_name: str,
                          quota: str = "global", passes: int = 3,
                          nbins: int = 512, capacity: int = 0,
                          compact_factor: int = 8,
-                         bm: int = 256, bn: int = 256,
+                         bm: int = 256, bn: int = 256, block_size: int = 1,
                          interpret: Optional[bool] = None):
     """Collective streaming selection over column-slab-sharded factors.
 
@@ -341,10 +437,19 @@ def lift_indices_sharded(a, b_local, k: int, *, axis_name: str,
     `lift_indices_local`); the single all-gather only assembles the (k,)
     output vector.
 
+    `block_size` > 1 runs the whole collective at block granularity: the
+    psum'd histograms count block-summed scores, each shard compacts its
+    above-tau BLOCK indices (O(compact_factor * k / (bs^2 * n_shards))
+    per-device buffer), the all-gather merges O(k/bs^2) block candidates,
+    and the k-element expansion happens once on the replicated output.
+    The shard's column slab must tile into blocks (cols/n_shards % bs
+    == 0) — the engine falls back to the unsharded program otherwise.
+
     Returns (idx (k,) int32 sorted ascending GLOBAL flat indices,
     replicated; tau f32 — this shard's threshold under "local", the global
     threshold under "global"; overflow i32 summed over shards)."""
     interpret = _default_interpret() if interpret is None else interpret
+    bs = block_size
     m, nl = a.shape[0], b_local.shape[0]
     shard = jax.lax.axis_index(axis_name)
     col0 = (shard * nl).astype(jnp.int32)
@@ -355,50 +460,63 @@ def lift_indices_sharded(a, b_local, k: int, *, axis_name: str,
                 f"local-quota selection needs k divisible by n_shards: "
                 f"k={k}, n_shards={n_shards}")
         kq = k // n_shards
+        if bs > 1:
+            _check_block_geometry(m, nl, kq, bs, "local-quota slab")
         idx_l, tau, ovf = _lift_indices_body(a, b_local, kq, passes, nbins,
-                                             capacity, bm, bn, interpret)
+                                             capacity, bm, bn, interpret,
+                                             bs)
         g = _slab_to_global(idx_l, nl, cols_global, col0)
         gall = jax.lax.all_gather(g, axis_name).reshape(-1)
         return (jnp.sort(gall), tau, jax.lax.psum(ovf, axis_name))
     if quota != "global":
         raise ValueError(f"unknown quota mode {quota!r}")
 
-    if m % min(bm, m) or nl % min(bn, nl):
-        bm, bn = pick_block(m, bm), pick_block(nl, bn)
+    if bs > 1:
+        _check_block_geometry(m, nl, k, bs, "sharded-selection slab")
+    ku = k // (bs * bs)                      # selection units (blocks)
+    bm, bn, cap_default = select_tiling(m, nl, -(-ku // n_shards) * bs * bs,
+                                        bs, bm, bn, compact_factor)
     if capacity <= 0:
         # per-shard slot budget sized by this shard's uniform share of k:
         # the whole candidate buffer stays O(compact_factor * k / n_shards)
-        # per device (shard_buffer_model documents the exact bound)
-        capacity = compact_capacity(m, nl, -(-k // n_shards), bm, bn,
-                                    compact_factor)
+        # units per device (shard_buffer_model documents the exact bound)
+        capacity = cap_default
+    elif bs > 1:
+        capacity = min(capacity, (min(bm, m) // bs) * (min(bn, nl) // bs))
     tiles_local = (m // min(bm, m)) * (nl // min(bn, nl))
-    if tiles_local * n_shards * capacity < k:
+    if tiles_local * n_shards * capacity < ku:
         raise ValueError(
             f"sharded compaction candidate buffer "
-            f"{n_shards}x{tiles_local}x{capacity} < k={k}")
+            f"{n_shards}x{tiles_local}x{capacity} < k={ku} selection units")
 
     # global threshold search over psum'd per-shard histograms: the bin
     # counts (integers) are exact under any reduction order, so lo/hi/tau
     # match the single-device search bit for bit
-    hi = jax.lax.pmax(lowrank_absmax(a, b_local, bm, bn, interpret),
+    hi = jax.lax.pmax(lowrank_absmax(a, b_local, bm, bn, bs, interpret),
                       axis_name) * (1 + 1e-6)
     lo = jnp.float32(0.0)
     for _ in range(passes):
-        hist = lowrank_hist(a, b_local, lo, hi, nbins, bm, bn, interpret)
+        hist = lowrank_hist(a, b_local, lo, hi, nbins, bm, bn, bs,
+                            interpret)
         hist = jax.lax.psum(hist, axis_name)
-        lo, hi = hist_refine(hist, k, lo, hi, nbins)
+        lo, hi = hist_refine(hist, ku, lo, hi, nbins)
     tau = tau_from_lohi(lo, hi)
 
-    # shard-local compaction -> O(k) all-gather merge (never the scores)
-    tiles, counts = lowrank_compact(a, b_local, tau, capacity, bm, bn,
+    # shard-local compaction -> O(k) all-gather merge (never the scores);
+    # for bs > 1 everything below runs in BLOCK index space until the
+    # final expansion
+    tiles, counts = lowrank_compact(a, b_local, tau, capacity, bm, bn, bs,
                                     interpret)
-    g = _slab_to_global(tiles.reshape(-1), nl, cols_global, col0)
+    g = _slab_to_global(tiles.reshape(-1), nl // bs, cols_global // bs,
+                        (shard * (nl // bs)).astype(jnp.int32))
     cand = jnp.sort(jax.lax.all_gather(g, axis_name).reshape(-1))
     stored = jax.lax.psum(jnp.sum(jnp.minimum(counts, capacity)), axis_name)
-    slot = jnp.arange(k, dtype=jnp.int32)
-    idx = jnp.sort(jnp.where(slot < stored, cand[:k], slot))
+    slot = jnp.arange(ku, dtype=jnp.int32)
+    idx = jnp.sort(jnp.where(slot < stored, cand[:ku], slot))
     overflow = jax.lax.psum(jnp.sum(jnp.maximum(counts - capacity, 0)),
                             axis_name)
+    if bs > 1:
+        idx = expand_block_indices(idx, cols_global // bs, cols_global, bs)
     return idx.astype(jnp.int32), tau, overflow
 
 

@@ -32,6 +32,27 @@ def lowrank_absmax(a, b) -> jax.Array:
     return jnp.max(lowrank_abs(a, b))
 
 
+def lowrank_block_scores(a, b, bs: int) -> jax.Array:
+    """(m/bs, n/bs) block-summed |A B^T| — the structured-LIFT score
+    matrix (paper App. G.7, Table 17): each entry sums a (bs x bs) tile
+    of element scores.  The dense oracle every block-summed kernel stat
+    (count / absmax / hist / compact) is checked against."""
+    s = lowrank_abs(a, b)
+    m, n = s.shape
+    return s.reshape(m // bs, bs, n // bs, bs).sum(axis=(1, 3))
+
+
+def block_threshold_indices(a, b, tau, kb: int, bs: int) -> jax.Array:
+    """Flat BLOCK indices of the kb smallest-index blocks with block score
+    > tau, sorted ascending, slot-padded — the oracle for the structured
+    compact path (`ops.lift_indices(block_size=bs)` before expansion)."""
+    s = lowrank_block_scores(a, b, bs).reshape(-1)
+    cand = jnp.sort(jnp.where(s > tau, jnp.arange(s.size, dtype=jnp.int32),
+                              jnp.int32(2 ** 31 - 1)))
+    slot = jnp.arange(kb, dtype=jnp.int32)
+    return jnp.where(slot < jnp.sum(s > tau), cand[:kb], slot)
+
+
 def threshold_indices(a, b, tau, k: int) -> jax.Array:
     """Flat indices of the k smallest-index entries with |A B^T| > tau,
     sorted ascending, padded with slot positions when fewer than k exist —

@@ -38,6 +38,12 @@ def main():
                     help="streaming Pallas selection (threshold + "
                          "compaction kernels; no (rows, cols) score "
                          "matrix is ever materialized)")
+    ap.add_argument("--block-size", type=int, default=1,
+                    help="structured LIFT (App. G.7): select whole "
+                         "block_size x block_size tiles; with "
+                         "--use-kernel the streaming pipeline block-sums "
+                         "scores on the fly (no dense score matrix in "
+                         "any engine mode)")
     ap.add_argument("--mesh", default="",
                     help="DATAxMODEL device mesh (e.g. 1x8): shards params "
                          "by logical axes and runs mask selection/refresh "
@@ -96,7 +102,7 @@ def main():
         lift=LiftConfig(rank=args.lift_rank, density=args.lift_density,
                         method="exact", update_interval=args.update_interval,
                         min_dim=16, use_kernel=args.use_kernel,
-                        quota=args.quota,
+                        quota=args.quota, block_size=args.block_size,
                         overflow_retry=not args.no_overflow_retry),
         peft=PeftConfig(rank=args.lift_rank))
     adam = sa.AdamConfig(lr=args.lr, grad_clip=1.0)

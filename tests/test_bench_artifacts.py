@@ -13,6 +13,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 from benchmarks.bench_schema import SCHEMA_VERSION, validate  # noqa: E402
 from benchmarks.common import (_parse_derived, bench_doc,  # noqa: E402
                                write_bench_json)
+from benchmarks.compare import compare_docs  # noqa: E402
 
 
 def _rows():
@@ -21,6 +22,10 @@ def _rows():
          "metrics": {"a": 1, "b": 2.5, "c": "z"}},
         {"name": "sel/64x64-d0.05-streaming", "us_per_call": 2.0,
          "derived": "agree=1.00000", "metrics": {"agree": 1.0}},
+        {"name": "selstruct/64x64-d0.05-bs4-streaming", "us_per_call": 2.0,
+         "derived": "matches_dense=True;agree=1.00000",
+         "metrics": {"agree": 1.0, "matches_dense": True,
+                     "block_size": 4, "hbm_bytes_modeled": 4096}},
         {"name": "shardsel/64x64-d0.05-s4", "us_per_call": 0.0,
          "derived": "within_bound=True",
          "metrics": {"within_bound": True, "buffer_slots_per_device": 10,
@@ -51,7 +56,12 @@ def test_parse_derived_fallback_for_legacy_rows():
     (lambda d: d.update(schema_version=99), "schema_version"),
     (lambda d: d["rows"][0].update(us_per_call=-1), "us_per_call"),
     (lambda d: d["rows"][1]["metrics"].update(agree=0.5), "agreement"),
-    (lambda d: d["rows"][2]["metrics"].update(within_bound=False),
+    (lambda d: d["rows"][2]["metrics"].update(matches_dense=False),
+     "matches_dense"),
+    (lambda d: d["rows"][2]["metrics"].update(agree=0.9), "agreement"),
+    (lambda d: d["rows"][2]["metrics"].pop("matches_dense"),
+     "matches_dense"),
+    (lambda d: d["rows"][3]["metrics"].update(within_bound=False),
      "within_bound"),
 ])
 def test_validator_catches_violations(mutate, expect):
@@ -124,6 +134,83 @@ def test_paged_decode_invariants(mutate, expect):
     mutate(doc)
     errs = validate(doc)
     assert errs and any(expect in e for e in errs), (expect, errs)
+
+
+# ----------------------------------------------- baseline regression gate
+def _baseline_doc():
+    return bench_doc(_rows(), suite="kernels_micro")
+
+
+def test_compare_passes_on_identical_docs():
+    base = _baseline_doc()
+    assert compare_docs(json.loads(json.dumps(base)), base) == []
+
+
+def test_compare_ignores_wall_time_and_unguarded_metrics():
+    """Absolute timings and unguarded metrics NEVER gate: a 100x slower
+    run with identical semantics passes."""
+    base = _baseline_doc()
+    cur = json.loads(json.dumps(base))
+    for r in cur["rows"]:
+        r["us_per_call"] = r["us_per_call"] * 100 + 1e6
+    cur["rows"][0]["metrics"]["a"] = 999     # unguarded metric
+    assert compare_docs(cur, base) == []
+
+
+@pytest.mark.parametrize("mutate, expect", [
+    # coverage regression: a baseline row vanished
+    (lambda d: d["rows"].pop(2), "missing from the current artifact"),
+    # guarded bool flipped
+    (lambda d: d["rows"][2]["metrics"].update(matches_dense=False),
+     "matches_dense regressed"),
+    # guarded ratio grew beyond tolerance
+    (lambda d: d["rows"][2]["metrics"].update(hbm_bytes_modeled=999999),
+     "hbm_bytes_modeled regressed"),
+    # guarded agreement dropped beyond tolerance
+    (lambda d: d["rows"][1]["metrics"].update(agree=0.99),
+     "agree regressed"),
+    # guarded metric disappeared
+    (lambda d: d["rows"][1]["metrics"].pop("agree"), "disappeared"),
+])
+def test_compare_catches_regressions(mutate, expect):
+    base = _baseline_doc()
+    cur = json.loads(json.dumps(base))
+    mutate(cur)
+    errs = compare_docs(cur, base)
+    assert errs and any(expect in e for e in errs), (expect, errs)
+
+
+def test_compare_tolerates_small_drift_and_new_rows():
+    base = _baseline_doc()
+    cur = json.loads(json.dumps(base))
+    cur["rows"][1]["metrics"]["agree"] = 0.999      # within abs_tol 0.002
+    cur["rows"][2]["metrics"]["hbm_bytes_modeled"] = 4300  # within +10%
+    cur["rows"].append({"name": "sel/new-row-streaming",
+                       "us_per_call": 1.0, "derived": "",
+                        "metrics": {"agree": 1.0}})
+    assert compare_docs(cur, base) == []
+
+
+def test_committed_baselines_are_valid_and_self_consistent():
+    """The baselines the CI gate runs against must themselves pass the
+    schema AND compare clean against themselves (guards a malformed
+    re-baseline commit)."""
+    bdir = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "baselines")
+    names = sorted(os.listdir(bdir))
+    assert "BENCH_kernels_micro.json" in names
+    for name in names:
+        with open(os.path.join(bdir, name)) as f:
+            doc = json.load(f)
+        assert validate(doc) == [], name
+        assert compare_docs(json.loads(json.dumps(doc)), doc) == [], name
+    # the kernels_micro baseline must cover the structured rows the
+    # acceptance criteria gate on
+    with open(os.path.join(bdir, "BENCH_kernels_micro.json")) as f:
+        km = json.load(f)
+    names = [r["name"] for r in km["rows"]]
+    for bs in (1, 4, 8):
+        assert any(f"-bs{bs}-streaming" in n for n in names), (bs, names)
 
 
 def test_writer_refuses_invalid_rows(tmp_path):

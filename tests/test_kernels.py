@@ -55,6 +55,54 @@ def test_lowrank_hist_sweep(nbins):
     assert int(got.sum()) == 256 * 384
 
 
+@pytest.mark.parametrize("bs", [2, 4, 8])
+def test_block_summed_stats_match_oracle(bs):
+    """count/absmax/hist at block granularity == the same stats computed
+    on the dense block-score oracle (structured LIFT, App. G.7)."""
+    a, b = _factors(128, 192, 12, jnp.float32, seed=5)
+    sb = np.asarray(ref.lowrank_block_scores(a, b, bs))
+    got_max = float(ops.lowrank_absmax(a, b, 64, 64, bs))
+    np.testing.assert_allclose(got_max, float(sb.max()), rtol=1e-6)
+    for q in (0.5, 0.95):
+        tau = float(np.quantile(sb, q))
+        got = int(ops.lowrank_count(a, b, tau, 64, 64, bs))
+        assert got == int((sb > tau).sum()), (q, got)
+    hi = float(sb.max()) * 1.000001
+    nbins = 64
+    got_h = np.asarray(ops.lowrank_hist(a, b, 0.0, hi, nbins, 64, 64, bs))
+    ids = np.clip(np.floor(sb / (hi / nbins)), 0, nbins - 1).astype(int)
+    assert np.array_equal(got_h, np.bincount(ids.ravel(), minlength=nbins))
+    assert int(got_h.sum()) == sb.size
+
+
+@pytest.mark.parametrize("bs", [2, 4])
+def test_block_compact_matches_block_threshold_oracle(bs):
+    """The block-compaction kernel emits exactly the above-tau BLOCK
+    indices (ascending, slot-padded) the dense oracle predicts."""
+    a, b = _factors(128, 192, 12, jnp.float32, seed=9)
+    sb = np.asarray(ref.lowrank_block_scores(a, b, bs))
+    tau = float(np.quantile(sb, 0.9))
+    kb = int((sb > tau).sum())
+    tiles, counts = ops.lowrank_compact(a, b, tau, capacity=1024,
+                                        bm=64, bn=64, bs=bs)
+    assert int(counts.sum()) == kb
+    got = np.sort(np.asarray(tiles).reshape(-1))[:kb]
+    want = np.asarray(ref.block_threshold_indices(a, b, tau, kb, bs))
+    assert np.array_equal(got, np.sort(want))
+
+
+def test_expand_block_indices_matches_dense_expansion():
+    from repro.core.lift import topk_indices
+    bs, rows, cols = 4, 32, 48
+    s = jnp.abs(jax.random.normal(jax.random.PRNGKey(3), (rows, cols)))
+    blocks = s.reshape(rows // bs, bs, cols // bs, bs).sum(axis=(1, 3))
+    kb = 6
+    _, bidx = jax.lax.top_k(blocks.reshape(-1), kb)
+    got = ops.expand_block_indices(jnp.sort(bidx), cols // bs, cols, bs)
+    want = topk_indices(s, kb * bs * bs, bs)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
 @pytest.mark.parametrize("density", [0.01, 0.05, 0.2])
 def test_lift_mask_threshold_accuracy(density):
     a, b = _factors(384, 512, 24, jnp.float32, seed=11)

@@ -101,6 +101,51 @@ def test_overlap_with_global_rejects_ragged():
         overlap_with_global(s, 63, 4)     # k 63 % 4 != 0
 
 
+def test_local_topk_structured_quota_and_blocks():
+    """block_size > 1 under a local quota: per-slab budgets hold exactly
+    AND every selected element belongs to a fully-selected block."""
+    rows, cols, k, n, bs = 64, 96, 384, 4, 4
+    s = jnp.abs(jax.random.normal(jax.random.PRNGKey(7), (rows, cols)))
+    idx = np.asarray(local_topk_indices(s, k, n, block_size=bs))
+    assert idx.shape == (k,)
+    assert len(np.unique(idx)) == k
+    shard = (idx % cols) // (cols // n)
+    assert (np.bincount(shard, minlength=n) == k // n).all()
+    r, c = idx // cols, idx % cols
+    blocks = set(zip((r // bs).tolist(), (c // bs).tolist()))
+    assert len(blocks) * bs * bs == k
+    # per-slab block budget: each slab's blocks are its own top blocks
+    blk = np.asarray(s).reshape(rows // bs, bs, cols // bs, bs).sum((1, 3))
+    wb = (cols // bs) // n
+    for j in range(n):
+        slab_blocks = [(br, bc) for (br, bc) in blocks
+                       if j * wb <= bc < (j + 1) * wb]
+        assert len(slab_blocks) == k // (bs * bs * n)
+        thresh = np.sort(blk[:, j * wb:(j + 1) * wb].ravel()
+                         )[-len(slab_blocks)]
+        assert all(blk[br, bc] >= thresh - 1e-6 for br, bc in slab_blocks)
+
+
+def test_local_topk_structured_equals_global_when_one_shard():
+    from repro.core.lift import topk_indices
+    s = jnp.abs(jax.random.normal(jax.random.PRNGKey(9), (48, 64)))
+    a = np.asarray(local_topk_indices(s, 128, 1, block_size=4))
+    b = np.asarray(topk_indices(s, 128, block_size=4))
+    assert np.array_equal(a, b)
+
+
+def test_local_topk_structured_rejects_ragged():
+    s = jnp.abs(jax.random.normal(jax.random.PRNGKey(8), (32, 60)))
+    with pytest.raises(ValueError, match="block_size"):
+        local_topk_indices(s, 64, 2, block_size=8)    # 60 % 8 != 0
+    s2 = jnp.abs(jax.random.normal(jax.random.PRNGKey(8), (32, 64)))
+    with pytest.raises(ValueError, match="block_size"):
+        local_topk_indices(s2, 72, 2, block_size=4)   # k % 16 != 0
+    with pytest.raises(ValueError, match="divisible"):
+        # slab (64/4=16 block cols over 32 shards) is ragged in blocks
+        local_topk_indices(s2, 64, 32, block_size=4)
+
+
 def test_overlap_high_on_lowrank_spectra():
     """On low-rank-structured scores (LIFT's actual regime) the quota
     deviation is small."""

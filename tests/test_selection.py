@@ -123,13 +123,175 @@ def test_streaming_path_is_exercised(monkeypatch):
         assert idx[path].shape[-1] == p.k
 
 
-def test_structured_or_nonlift_falls_back_to_dense():
+def test_structured_is_streaming_nonlift_falls_back_to_dense():
+    """block_size > 1 now runs the streaming kernel path (the tentpole of
+    the structured-selection PR); only non-"lift" score rules still fall
+    back to dense."""
     assert SelectionEngine(
         _plan_1tensor((), 64, 64, 64),
-        LiftConfig(use_kernel=True, block_size=4)).backend == "dense"
+        LiftConfig(use_kernel=True, block_size=4)).backend == "streaming"
     assert SelectionEngine(
         _plan_1tensor((), 64, 64, 64),
         LiftConfig(use_kernel=True, selection="magnitude")).backend == "dense"
+
+
+# --------------------------------------------------- structured streaming
+@pytest.mark.parametrize("bs", [2, 4, 8])
+def test_structured_streaming_matches_dense_block_topk(bs):
+    """Streaming block-sum selection must agree with the dense block path
+    (`topk_indices(block_size=bs)`) — bitwise on these cases (ties inside
+    the final histogram bin are the only permitted divergence, and block
+    sums of continuous scores don't tie)."""
+    rows, cols = 128, 192
+    k = (int(0.05 * rows * cols) // (bs * bs)) * (bs * bs)
+    plan = _plan_1tensor((), rows, cols, k)
+    params = _rand_params((), rows, cols, jnp.float32, seed=11, rank=12)
+    base = LiftConfig(rank=8, method="exact", min_dim=16, block_size=bs)
+    dense = SelectionEngine(plan, base).select(params, jax.random.PRNGKey(0))
+    eng = SelectionEngine(plan, base.replace(use_kernel=True))
+    assert eng.backend == "streaming"
+    stream, stats = eng.select_with_stats(params, jax.random.PRNGKey(0))
+    assert int(stats["overflow"]) == 0
+    si = np.asarray(stream["t"])
+    assert si.shape == (1, k)
+    assert np.all(np.diff(si, axis=-1) > 0)       # sorted unique
+    assert np.array_equal(si, np.asarray(dense["t"]))
+    # whole (bs x bs) blocks: every selected element's block is full
+    r, c = si[0] // cols, si[0] % cols
+    blocks = set(zip((r // bs).tolist(), (c // bs).tolist()))
+    assert len(blocks) * bs * bs == k
+
+
+def test_structured_streaming_stacked_and_bf16():
+    stack, rows, cols, bs = (2, 2), 96, 64, 4
+    k = (int(0.1 * rows * cols) // (bs * bs)) * (bs * bs)
+    plan = _plan_1tensor(stack, rows, cols, k)
+    params = _rand_params(stack, rows, cols, jnp.bfloat16, seed=6, rank=10)
+    base = LiftConfig(rank=8, method="exact", min_dim=16, block_size=bs)
+    dense = SelectionEngine(plan, base).select(params, jax.random.PRNGKey(2))
+    stream = SelectionEngine(plan, base.replace(use_kernel=True)).select(
+        params, jax.random.PRNGKey(2))
+    assert dense["t"].shape == stream["t"].shape == (4, k)
+    assert _agreement(dense["t"], stream["t"]) >= 1 - 1e-3
+
+
+def test_structured_streaming_never_touches_dense_scores(monkeypatch):
+    """The no-score-matrix guarantee extends to structured LIFT: with
+    use_kernel=True and block_size > 1 neither the dense scoring path nor
+    the materializing |A B^T| kernel may run."""
+    import repro.core.lift as liftmod
+    import repro.kernels.ops as kops
+
+    def boom(*a, **kw):
+        raise AssertionError("dense score path reached under structured "
+                             "streaming selection")
+
+    monkeypatch.setattr(liftmod, "scores_for", boom)
+    monkeypatch.setattr(kops, "lowrank_abs", boom)
+
+    m = build_model(CFG)
+    lcfg = LiftConfig(rank=8, match_rank=2, method="exact", min_dim=16,
+                      use_kernel=True, block_size=4)
+    eng = SelectionEngine.from_spec(m.spec(), lcfg)
+    assert eng.backend == "streaming"
+    params = m.init(jax.random.PRNGKey(0))
+    idx = eng.select(params, jax.random.PRNGKey(1))
+    for path, p in eng.plan.items():
+        assert idx[path].shape[-1] == p.k
+        assert p.k % 16 == 0                      # bs^2-aligned plan
+
+
+def test_structured_local_quota_streaming():
+    """quota='local' + block_size > 1 (the restriction this PR lifts):
+    per-slab quotas hold exactly, whole blocks are selected, and the
+    streaming path agrees with the dense structured local path."""
+    rows, cols, bs, n = 128, 192, 4, 4
+    k = 1216
+    plan = _plan_1tensor((), rows, cols, k)
+    params = _rand_params((), rows, cols, jnp.float32, seed=8, rank=12)
+    cfg = LiftConfig(rank=8, method="exact", min_dim=16, block_size=bs,
+                     quota="local", quota_shards=n)
+    dense = SelectionEngine(plan, cfg).select(params, jax.random.PRNGKey(3))
+    eng = SelectionEngine(plan, cfg.replace(use_kernel=True))
+    assert eng.group_exec == {(rows, cols, k): "streaming-local"}
+    stream = eng.select(params, jax.random.PRNGKey(3))
+    assert _agreement(dense["t"], stream["t"]) >= 1 - 1e-3
+    for out in (dense, stream):
+        sel = np.asarray(out["t"]).reshape(-1)
+        shard = (sel % cols) // (cols // n)
+        assert (np.bincount(shard, minlength=n) == k // n).all()
+        r, c = sel // cols, sel % cols
+        blocks = set(zip((r // bs).tolist(), (c // bs).tolist()))
+        assert len(blocks) * bs * bs == k
+
+
+def test_structured_fused_refresh_migrates_moments():
+    """refresh_opt at block_size > 1: surviving indices keep their
+    moments, fresh ones restart at zero — the (ns, k) element-index
+    contract is unchanged by block encoding, so `remap_moments` needs no
+    structured special case."""
+    rows, cols, bs = 96, 128, 4
+    k = (int(0.05 * rows * cols) // (bs * bs)) * (bs * bs)
+    plan = _plan_1tensor((1,), rows, cols, k)
+    params = _rand_params((1,), rows, cols, jnp.float32, seed=3, rank=10)
+    lcfg = LiftConfig(rank=8, method="exact", min_dim=16, use_kernel=True,
+                      block_size=bs)
+    eng = SelectionEngine(plan, lcfg)
+    idx0 = eng.select(params, jax.random.PRNGKey(0))
+    state = sa.init_state(params, idx0, plan)
+    t = state["tensors"]["t"]
+    t["m"] = jnp.arange(t["m"].size, dtype=jnp.float32
+                        ).reshape(t["m"].shape) + 1.0
+    t["v"] = t["m"] * 10.0
+    params = {"t": params["t"] + 0.5 * jax.random.normal(
+        jax.random.PRNGKey(9), params["t"].shape)}
+    new_opt, stats = eng.refresh_opt(params, state, jax.random.PRNGKey(5))
+    assert int(stats["overflow"]) == 0
+    old_i = np.asarray(idx0["t"])[0]
+    new_i = np.asarray(new_opt["tensors"]["t"]["idx"])[0]
+    old_m = np.asarray(t["m"])[0]
+    new_m = np.asarray(new_opt["tensors"]["t"]["m"])[0]
+    lut = dict(zip(old_i.tolist(), old_m.tolist()))
+    for j, mm in zip(new_i, new_m):
+        assert mm == pytest.approx(lut.get(int(j), 0.0)), int(j)
+    assert set(new_i.tolist()) != set(old_i.tolist())
+    # the refreshed mask is still whole blocks
+    r, c = new_i // cols, new_i % cols
+    blocks = set(zip((r // bs).tolist(), (c // bs).tolist()))
+    assert len(blocks) * bs * bs == k
+
+
+def test_structured_kernel_rejects_nondivisible_shapes():
+    """The kernel entry points refuse non-tiling structured geometry
+    loudly instead of mis-selecting."""
+    from repro.kernels import ops
+    a = jnp.ones((96, 4))
+    b = jnp.ones((100, 4))                        # 100 % 8 != 0
+    with pytest.raises(ValueError, match="does not tile"):
+        ops.lift_indices(a, b, 64, block_size=8)
+    b2 = jnp.ones((128, 4))
+    with pytest.raises(ValueError, match="block_size"):
+        ops.lift_indices(a, b2, 100, block_size=4)   # k % 16 != 0
+    with pytest.raises(ValueError, match="local-quota slab"):
+        # per-slab quota 72 is not a multiple of block_size^2 = 64
+        ops.lift_indices_local(a, b2, 144, n_shards=2, block_size=8)
+
+
+def test_validate_meta_rejects_block_size_change():
+    """A checkpoint selected at one structure granularity must not
+    restore under another (same k, different index rule)."""
+    rows, cols, k = 64, 64, 64
+    plan = _plan_1tensor((), rows, cols, k)
+    unstructured = SelectionEngine(plan, LiftConfig(min_dim=16))
+    structured = SelectionEngine(plan, LiftConfig(min_dim=16, block_size=4))
+    with pytest.raises(ValueError, match="block_size mismatch"):
+        unstructured.validate_meta(structured.plan_meta())
+    with pytest.raises(ValueError, match="block_size mismatch"):
+        structured.validate_meta(unstructured.plan_meta())
+    structured.validate_meta(structured.plan_meta())   # self-consistent
+    old = json.loads(json.dumps(unstructured.plan_meta()))
+    del old["block_size"]                    # pre-structured checkpoints
+    unstructured.validate_meta(old)
 
 
 # ------------------------------------------------------ fused migration

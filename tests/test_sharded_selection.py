@@ -143,6 +143,87 @@ assert d_idx.shape == (k,)
 assert d_idx.min() >= 0 and d_idx.max() < m * n   # sentinels never leak
 print("OVERFLOW-OK")
 
+# ---- STRUCTURED (block_size > 1): sharded == single-device, bitwise,
+# for both quotas — the block-summing collective path (per-shard block
+# histograms psum'd into the threshold search, block-aligned shard-local
+# compaction, O(k/bs^2) block all-gather + replicated expansion)
+BS = 4
+rows_s, cols_s, k_s = 128, 192, 1216
+plan, params, _ = make_case((2,), rows_s, cols_s, 0.05, seed=51)
+plan = {"t": TensorPlan("t", (2, rows_s, cols_s), (2,), rows_s, cols_s, k_s)}
+cfgs = CFG.replace(block_size=BS)
+ref_eng = SelectionEngine(plan, cfgs)
+assert ref_eng.backend == "streaming"
+assert ref_eng.group_exec == {(rows_s, cols_s, k_s): "streaming"}
+ref_idx, ref_stats = ref_eng.select_with_stats(params, jax.random.PRNGKey(3))
+assert int(ref_stats["overflow"]) == 0
+# dense structured reference: bitwise on this case (block sums don't tie)
+dense_idx = SelectionEngine(plan, cfgs.replace(use_kernel=False)).select(
+    params, jax.random.PRNGKey(3))
+assert np.array_equal(np.asarray(dense_idx["t"]), np.asarray(ref_idx["t"]))
+for n_model in (2, 4, 8):
+    mesh = make_host_mesh(8 // n_model, n_model)
+    with sharding_ctx(mesh):
+        eng = SelectionEngine(plan, cfgs)
+    assert eng.group_exec == {(rows_s, cols_s, k_s): "sharded"}, \
+        eng.group_exec
+    idx, stats = eng.select_with_stats(params, jax.random.PRNGKey(3))
+    assert np.array_equal(np.asarray(idx["t"]), np.asarray(ref_idx["t"])), \
+        n_model
+    assert int(stats["overflow"]) == 0
+cfgl = cfgs.replace(quota="local", quota_shards=4)
+ref_local = SelectionEngine(plan, cfgl).select(params, jax.random.PRNGKey(5))
+mesh = make_host_mesh(2, 4)
+with sharding_ctx(mesh):
+    eng = SelectionEngine(plan, cfgl)
+assert eng.group_exec == {(rows_s, cols_s, k_s): "sharded-local"}
+idx = eng.select(params, jax.random.PRNGKey(5))
+assert np.array_equal(np.asarray(idx["t"]), np.asarray(ref_local["t"]))
+# a slab that does not tile into blocks falls back (192/8=24 ok, use 8
+# shards with bs=16: 192/8=24 % 16 != 0)
+with sharding_ctx(make_host_mesh(1, 8)):
+    eng16 = SelectionEngine(plan16 := {"t": TensorPlan(
+        "t", (rows_s, cols_s), (), rows_s, cols_s, 768)},
+        CFG.replace(block_size=16))
+assert eng16.group_exec == {(rows_s, cols_s, 768): "streaming"}, \
+    eng16.group_exec
+print("PARITY-STRUCTURED-OK")
+
+# ---- dense fallback backends under the mesh: per-shard top_k + O(k)
+# merge, bitwise vs single device (no full-tensor gather, ROADMAP PR 2
+# follow-up)
+plan, params, k = make_case((2,), 128, 192, 0.05, seed=61)
+grads = {"t": jax.random.normal(jax.random.PRNGKey(62), params["t"].shape)}
+for sel in ("magnitude", "random", "gradient", "movement"):
+    need_g = sel in ("gradient", "movement")
+    cfgd = LiftConfig(selection=sel, min_dim=16)
+    ref_idx = SelectionEngine(plan, cfgd).select(
+        params, jax.random.PRNGKey(7), grads if need_g else None)
+    for n_model in (2, 4, 8):
+        mesh = make_host_mesh(8 // n_model, n_model)
+        with sharding_ctx(mesh):
+            eng = SelectionEngine(plan, cfgd)
+        assert eng.group_exec == {(128, 192, k): "dense-sharded"}, \
+            (sel, eng.group_exec)
+        idx = eng.select(params, jax.random.PRNGKey(7),
+                         grads if need_g else None)
+        assert np.array_equal(np.asarray(idx["t"]),
+                              np.asarray(ref_idx["t"])), (sel, n_model)
+# structured magnitude: block-summed local scores, still bitwise
+cfgm = LiftConfig(selection="magnitude", min_dim=16, block_size=4)
+plan_b = {"t": TensorPlan("t", (2, 128, 192), (2,), 128, 192, 1216)}
+ref_idx = SelectionEngine(plan_b, cfgm).select(params, jax.random.PRNGKey(8))
+with sharding_ctx(make_host_mesh(1, 8)):
+    eng = SelectionEngine(plan_b, cfgm)
+assert eng.group_exec == {(128, 192, 1216): "dense-sharded"}
+idx = eng.select(params, jax.random.PRNGKey(8))
+assert np.array_equal(np.asarray(idx["t"]), np.asarray(ref_idx["t"]))
+# dense "lift" (needs the full W for factorization) stays unsharded
+with sharding_ctx(make_host_mesh(1, 8)):
+    engl = SelectionEngine(plan, CFG.replace(use_kernel=False))
+assert engl.group_exec == {(128, 192, k): "dense"}, engl.group_exec
+print("DENSE-SHARDED-OK")
+
 # ---- fused refresh (select + migrate) under the mesh matches unsharded
 from repro.core import sparse_adam as sa
 plan, params, k = make_case((2,), 128, 192, 0.05, seed=41)
@@ -172,8 +253,9 @@ def test_sharded_selection_parity_matrix():
     r = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
                        capture_output=True, text=True, timeout=900)
     assert r.returncode == 0, r.stderr[-3000:]
-    for marker in ("PARITY-GLOBAL-OK", "PARITY-LOCAL-OK", "FALLBACK-OK",
-                   "OVERFLOW-OK", "REFRESH-OK"):
+    for marker in ("PARITY-GLOBAL-OK", "PARITY-LOCAL-OK",
+                   "PARITY-STRUCTURED-OK", "DENSE-SHARDED-OK",
+                   "FALLBACK-OK", "OVERFLOW-OK", "REFRESH-OK"):
         assert marker in r.stdout, (marker, r.stdout)
 
 
@@ -183,18 +265,23 @@ def _plan(stack, rows, cols, k):
     return {"t": TensorPlan("t", shape, tuple(stack), rows, cols, k)}
 
 
-def test_lift_indices_local_matches_per_slab_reference():
+@pytest.mark.parametrize("block_size", [1, 4])
+def test_lift_indices_local_matches_per_slab_reference(block_size):
     """The fused local-quota kernel path == running `lift_indices` slab by
-    slab with offset columns (the definition of a per-shard quota)."""
+    slab with offset columns (the definition of a per-shard quota) — at
+    both structure granularities."""
     rows, cols, k, n_shards = 96, 128, 256, 4
     a = jax.random.normal(jax.random.PRNGKey(0), (rows, 8))
     b = jax.random.normal(jax.random.PRNGKey(1), (cols, 8))
-    idx, taus, ovf = kops.lift_indices_local(a, b, k, n_shards)
+    idx, taus, ovf = kops.lift_indices_local(a, b, k, n_shards,
+                                             block_size=block_size)
     assert int(ovf) == 0
     w = cols // n_shards
     parts = []
     for j in range(n_shards):
-        ij, _t, _o = kops.lift_indices(a, b[j * w:(j + 1) * w], k // n_shards)
+        ij, _t, _o = kops.lift_indices(a, b[j * w:(j + 1) * w],
+                                       k // n_shards,
+                                       block_size=block_size)
         parts.append(np.asarray(ij) // w * cols + j * w + np.asarray(ij) % w)
     ref = np.sort(np.concatenate(parts))
     assert np.array_equal(np.asarray(idx), ref)
