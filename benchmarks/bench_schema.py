@@ -45,7 +45,20 @@ Semantic invariants for suite "paged_decode" (DESIGN.md §5):
   * every `kvbytes/*` row reports numeric `kv_bytes_ratio` < 1 (resident
     paged KV at its peak stays below the dense slots x max_len cache on
     mixed lengths) and `within_live_bound` == true (pool bytes track the
-    LIVE tokens plus page-rounding slack, never the worst case).
+    LIVE tokens plus page-rounding slack, never the worst case);
+  * every `speculative/*` row reports `matches_dense` == true (drafting
+    and multi-token verification must not move a single token at any
+    temperature), `accept_rate` in [0, 1],
+    `effective_tokens_per_step` > 1 (speculation pays for itself in
+    tokens advanced per sequence-dispatch — one-token decode is exactly
+    1.0), and `decode_compilations` == 1 (the speculative path compiles
+    exactly ONE decode program; every dispatch reuses it).
+    `tok_s_ratio` must be present (baseline-tracked) but is NOT gated —
+    interpret-mode wall time is noise;
+  * every `roofline/*` row reports numeric `attainable_tok_s` > 0 and
+    `measured_tok_s` >= 0 (the memory-bound attainable bound next to
+    the measured throughput; never gated against each other — the bound
+    models TPU HBM, the measurement is interpret-mode CPU).
 
 Usage: python -m benchmarks.bench_schema BENCH_kernels_micro.json [...]
 """
@@ -174,6 +187,46 @@ def _paged_decode_row(name: str, metrics: dict) -> list:
                 f"exceeded live tokens + page-rounding slack "
                 f"({metrics.get('peak_kv_bytes')} bytes at "
                 f"{metrics.get('peak_live_tokens')} live tokens)")
+    if name.startswith("speculative/"):
+        if metrics.get("matches_dense") is not True:
+            errs.append(f"{name}: matches_dense must be true — "
+                        f"speculative decode moved a token vs the dense "
+                        f"engine's streams (DESIGN.md §5)")
+        ar = metrics.get("accept_rate")
+        if not isinstance(ar, (int, float)) or isinstance(ar, bool) \
+                or not 0.0 <= ar <= 1.0:
+            errs.append(f"{name}: speculative row needs accept_rate in "
+                        f"[0, 1], got {ar!r}")
+        eff = metrics.get("effective_tokens_per_step")
+        if not isinstance(eff, (int, float)) or isinstance(eff, bool):
+            errs.append(f"{name}: speculative row needs numeric "
+                        f"effective_tokens_per_step, got {eff!r}")
+        elif eff <= 1.0:
+            errs.append(
+                f"{name}: effective_tokens_per_step {eff:.3f} <= 1 — "
+                f"accept_rate x draft_len is not paying for the wider "
+                f"verify dispatch (one-token decode is exactly 1.0)")
+        if metrics.get("decode_compilations") != 1:
+            errs.append(
+                f"{name}: decode_compilations must be 1 — the "
+                f"speculative path compiles exactly one decode program, "
+                f"got {metrics.get('decode_compilations')!r}")
+        if not isinstance(metrics.get("tok_s_ratio"), (int, float)) \
+                or isinstance(metrics.get("tok_s_ratio"), bool):
+            errs.append(f"{name}: speculative row needs numeric "
+                        f"tok_s_ratio (vs the one-token paged engine), "
+                        f"got {metrics.get('tok_s_ratio')!r}")
+    if name.startswith("roofline/"):
+        att = metrics.get("attainable_tok_s")
+        if not isinstance(att, (int, float)) or isinstance(att, bool) \
+                or att <= 0:
+            errs.append(f"{name}: roofline row needs numeric "
+                        f"attainable_tok_s > 0, got {att!r}")
+        meas = metrics.get("measured_tok_s")
+        if not isinstance(meas, (int, float)) or isinstance(meas, bool) \
+                or meas < 0:
+            errs.append(f"{name}: roofline row needs numeric "
+                        f"measured_tok_s >= 0, got {meas!r}")
     return errs
 
 

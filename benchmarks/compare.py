@@ -66,6 +66,12 @@ NUM_GUARDS = {
     "bound_slots_per_device":   ("max", 0.10, 0.0),
     "bytes_ratio":              ("max", 0.05, 0.0),
     "kv_bytes_ratio":           ("max", 0.10, 0.0),
+    # speculative decode (fixed-seed greedy: drafting and acceptance are
+    # deterministic, but generous headroom absorbs jax-version stream
+    # shifts; tok_s_ratio is wall time and stays unguarded)
+    "accept_rate":              ("min", 0.25, 0.0),
+    "effective_tokens_per_step": ("min", 0.10, 0.0),
+    "decode_compilations":      ("max", 0.0, 0.0),
     # measured by XLA, stable under pinned jaxlib but version-sensitive:
     # generous headroom so only order-of-magnitude regressions (a score
     # matrix sneaking back into temps) trip the gate

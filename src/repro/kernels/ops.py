@@ -574,6 +574,60 @@ def paged_attention_decode(q, k_pages, v_pages, block_tables, positions, *,
     return o[:, 0]                                  # (B, hkv, g, D)
 
 
+@functools.partial(jax.jit, static_argnames=("backend", "interpret"))
+def paged_attention_verify(q, k_pages, v_pages, block_tables, positions, *,
+                           backend: str = "auto",
+                           interpret: Optional[bool] = None):
+    """Multi-token (speculative verify) decode attention over the pool.
+
+    q: (B, n_q, H_kv, g, D) grouped queries for n_q CONSECUTIVE decode
+    positions per sequence — the current token plus the drafted tokens,
+    query i at logical position positions[b] + i attending keys at
+    kpos <= positions[b] + i (each draft is blind to the drafts after
+    it).  k_pages / v_pages / block_tables / positions are exactly
+    `paged_attention_decode`'s.
+
+    Both backends compute each query row with the SAME per-row equations
+    as the one-token read — the lax path is the identical grouped einsum
+    with the query axis widened from 1 to n_q, the kernel path the same
+    online-softmax page walk with a per-row mask — so row i of a verify
+    dispatch is bitwise-equal to the one-token dispatch that would run
+    at position positions[b] + i over the same pages (the speculative
+    engine's stream-identity guarantee rests on this; proven in
+    tests/test_paged_kv.py).
+
+    Returns o: (B, n_q, H_kv, g, D).
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    if backend == "auto":
+        backend = "kernel" if jax.default_backend() == "tpu" else "lax"
+    if backend == "kernel":
+        from repro.kernels import paged_attention as pak
+        o = pak.paged_verify_fwd(
+            jnp.moveaxis(q, 1, 2), k_pages, v_pages, block_tables,
+            positions, interpret=interpret)
+        return jnp.moveaxis(o, 2, 1)
+    if backend != "lax":
+        raise ValueError(f"unknown paged-attention backend {backend!r}")
+    B, nq, hkv, g, D = q.shape
+    P, ps, _, _ = k_pages.shape
+    nmax = block_tables.shape[1]
+    kc = k_pages[block_tables].reshape(B, nmax * ps, hkv, D).astype(q.dtype)
+    vc = v_pages[block_tables].reshape(B, nmax * ps, hkv, D).astype(q.dtype)
+    t = jnp.arange(nmax * ps)
+    qpos = positions[:, None] + jnp.arange(nq)[None, :]       # (B, nq)
+    ok = t[None, None, :] <= qpos[:, :, None]                 # (B, nq, T)
+    bias = jnp.where(ok, 0.0, -1e30)[:, None, None, :, :]     # (B,1,1,q,T)
+    scale = D ** -0.5
+    s = jnp.einsum("bqhgd,bthd->bhgqt", q, kc,
+                   preferred_element_type=jnp.float32) * scale
+    s = s + bias
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqt,bthd->bqhgd", p.astype(vc.dtype), vc,
+                   preferred_element_type=jnp.float32).astype(q.dtype)
+    return o                                        # (B, nq, hkv, g, D)
+
+
 # ---------------------------------------------------------- scatter merge
 def _sorted_windows(idx, vals: tuple, nb: int, bn: int, capacity: int):
     """Per-(stack, block) dense windows of sorted (ns, k) index sets.

@@ -6,23 +6,41 @@ logical page j to a physical page.  The kernel never materializes the
 gathered (B, T) key/value tensors that the jax.lax fallback builds —
 each program instance walks its sequence's block table and streams one
 physical page at a time through the online-softmax recurrence, so HBM
-traffic is exactly the live pages of that sequence (plus the one query
-token), not nmax * page_size slots.
+traffic is exactly the live pages of that sequence (plus the query
+block), not nmax * page_size slots.
 
 Grid: (B, H_kv).  Each instance handles one (sequence, kv-head) pair and
-the `g = H_q / H_kv` query heads of its GQA group at once — decode is
-memory-bound, so the cache is read once at its native kv-head width and
-the whole (g, page_size) score tile stays in registers/VMEM.
+an (n_q, g, d) query block — n_q decode positions (1 for plain decode,
+1 + draft_len for speculative verify) times the `g = H_q / H_kv` query
+heads of its GQA group — at once: decode is memory-bound, so the cache
+is read once at its native kv-head width and the whole (n_q * g,
+page_size) score tile stays in registers/VMEM.
 
-Only the pages holding tokens <= positions[b] are visited (the loop
-upper bound is `pos // ps + 1`); the final page applies the per-token
-`kpos <= pos` mask.  Physical page ids are read from the block-table
-block and indexed with `pl.dslice` dynamic starts, the same dynamic-load
-idiom the flash kernel uses (integer entries in a pl.load index tuple
-break on some jax releases).
+Only the pages holding tokens <= positions[b] + n_q - 1 are visited (the
+loop upper bound is `(pos + n_q - 1) // ps + 1`, clamped to the table
+width); each query row i applies its own per-token `kpos <= pos + i`
+mask, which keeps draft token i blind to drafts i+1.. — exactly the
+causal order one-token decode would produce.  Physical page ids are read
+from the block-table block and indexed with `pl.dslice` dynamic starts,
+the same dynamic-load idiom the flash kernel uses (integer entries in a
+pl.load index tuple break on some jax releases).
 
-Validated against `ref.paged_attention` and the lax fallback in
-tests/test_paged_kv.py (interpret mode off-TPU); dtypes bf16/f32.
+Two page-streaming schedules share the softmax math:
+
+  * interpret / fallback (`_paged_attn_kernel`): plain `pl.load` per
+    page — the schedule interpret mode (and the unit tests, which run
+    off-TPU) can execute;
+  * real TPU (`_paged_attn_kernel_dma`): K/V pages stay in HBM
+    (`memory_space=ANY`) and the kernel double-buffers the page stream
+    through two VMEM scratch slots with `pltpu.make_async_copy` — page
+    j+1's copy is started before page j's compute waits, in the
+    emit_pipeline style (pallas guide "Patterns: Double Buffering"), so
+    the page DMA overlaps the (n_q*g, ps) score tile's compute instead
+    of blocking on every block-table entry.
+
+Validated against `ref.paged_attention` / `ref.paged_attention_multi`
+and the lax fallback in tests/test_paged_kv.py (interpret mode off-TPU);
+dtypes bf16/f32.
 """
 from __future__ import annotations
 
@@ -31,68 +49,180 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
 
 
-def _paged_decode_kernel(q_ref, k_ref, v_ref, bt_ref, pos_ref, o_ref, *,
-                         page_size: int, scale: float):
-    q = q_ref[0, 0].astype(jnp.float32) * scale        # (g, d)
-    g, d = q.shape
-    pos = pos_ref[0, 0]                                # scalar int32
-    n_live = pos // page_size + 1                      # pages with tokens
+def _attend_page(q, k, v, j, pos, carry, *, page_size: int, g: int):
+    """One page's online-softmax update.  q: (n_q*g, d) pre-scaled fp32;
+    k/v: (ps, d); query row r belongs to decode position pos + r // g."""
+    m, l, acc = carry
+    rows = q.shape[0]
+    s = q @ k.astype(jnp.float32).T                     # (n_q*g, ps)
+    kpos = j * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (rows, page_size), 1)
+    qpos = pos + jax.lax.broadcasted_iota(
+        jnp.int32, (rows, page_size), 0) // g
+    s = jnp.where(kpos <= qpos, s, NEG_INF)
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m - m_new)
+    l_new = l * corr + jnp.sum(p, axis=-1)
+    acc_new = acc * corr[:, None] + p @ v.astype(jnp.float32)
+    return m_new, l_new, acc_new
 
-    m0 = jnp.full((g,), NEG_INF, jnp.float32)
-    l0 = jnp.zeros((g,), jnp.float32)
-    a0 = jnp.zeros((g, d), jnp.float32)
+
+def _paged_attn_kernel(q_ref, k_ref, v_ref, bt_ref, pos_ref, o_ref, *,
+                       page_size: int, scale: float):
+    """Direct-load schedule: one blocking page load per block-table
+    entry.  Runs under interpret mode and is the non-TPU reference."""
+    nq, g, d = q_ref.shape[2:]
+    q = q_ref[0, 0].astype(jnp.float32).reshape(nq * g, d) * scale
+    pos = pos_ref[0, 0]                                 # scalar int32
+    nmax = bt_ref.shape[1]
+    n_live = jnp.minimum((pos + nq - 1) // page_size + 1, nmax)
+
+    m0 = jnp.full((nq * g,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((nq * g,), jnp.float32)
+    a0 = jnp.zeros((nq * g, d), jnp.float32)
 
     def body(j, carry):
-        m, l, acc = carry
         page = bt_ref[0, j]
         k = pl.load(k_ref, (pl.dslice(page, 1), slice(None),
                             pl.dslice(0, 1), slice(None)))[0, :, 0, :]
         v = pl.load(v_ref, (pl.dslice(page, 1), slice(None),
                             pl.dslice(0, 1), slice(None)))[0, :, 0, :]
-        s = q @ k.astype(jnp.float32).T                # (g, ps)
-        kpos = j * page_size + jax.lax.broadcasted_iota(
-            jnp.int32, (g, page_size), 1)
-        s = jnp.where(kpos <= pos, s, NEG_INF)
-        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
-        p = jnp.exp(s - m_new[:, None])
-        corr = jnp.exp(m - m_new)
-        l_new = l * corr + jnp.sum(p, axis=-1)
-        acc_new = acc * corr[:, None] + p @ v.astype(jnp.float32)
-        return m_new, l_new, acc_new
+        return _attend_page(q, k, v, j, pos, carry,
+                            page_size=page_size, g=g)
 
     m, l, acc = jax.lax.fori_loop(0, n_live, body, (m0, l0, a0))
     l = jnp.maximum(l, 1e-37)
-    o_ref[0, 0] = (acc / l[:, None]).astype(o_ref.dtype)
+    o_ref[0, 0] = (acc / l[:, None]).astype(o_ref.dtype).reshape(nq, g, d)
 
 
-def paged_decode_fwd(q, k_pages, v_pages, block_tables, positions, *,
-                     scale: float | None = None, interpret: bool = True):
-    """q: (B, H_kv, g, D) grouped queries for ONE decode token;
-    k_pages / v_pages: (P, ps, H_kv, D); block_tables: (B, nmax) int32;
-    positions: (B,) int32.  Returns o: (B, H_kv, g, D)."""
-    B, hkv, g, D = q.shape
+def _paged_attn_kernel_dma(q_ref, k_hbm, v_hbm, bt_ref, pos_ref, o_ref, *,
+                           page_size: int, scale: float):
+    """Double-buffered schedule: K/V pages live in HBM and stream
+    through two VMEM scratch slots — page j+1's async copy is in flight
+    while page j is attended."""
+    h = pl.program_id(1)
+    nq, g, d = q_ref.shape[2:]
+    q = q_ref[0, 0].astype(jnp.float32).reshape(nq * g, d) * scale
+    pos = pos_ref[0, 0]
+    nmax = bt_ref.shape[1]
+    n_live = jnp.minimum((pos + nq - 1) // page_size + 1, nmax)
+
+    def body(k_buf, v_buf, sem):
+        def page_dma(slot, j):
+            page = bt_ref[0, j]
+            return (
+                pltpu.make_async_copy(
+                    k_hbm.at[pl.dslice(page, 1), :, pl.dslice(h, 1), :],
+                    k_buf.at[slot], sem.at[slot, 0]),
+                pltpu.make_async_copy(
+                    v_hbm.at[pl.dslice(page, 1), :, pl.dslice(h, 1), :],
+                    v_buf.at[slot], sem.at[slot, 1]),
+            )
+
+        for c in page_dma(0, 0):
+            c.start()
+
+        m0 = jnp.full((nq * g,), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((nq * g,), jnp.float32)
+        a0 = jnp.zeros((nq * g, d), jnp.float32)
+
+        def loop(j, carry):
+            slot = jax.lax.rem(j, 2)
+
+            @pl.when(j + 1 < n_live)
+            def _():                     # prefetch page j+1 before waiting
+                for c in page_dma(jax.lax.rem(j + 1, 2), j + 1):
+                    c.start()
+
+            for c in page_dma(slot, j):
+                c.wait()
+            k = k_buf[slot, 0, :, 0, :]
+            v = v_buf[slot, 0, :, 0, :]
+            return _attend_page(q, k, v, j, pos, carry,
+                                page_size=page_size, g=g)
+
+        m, l, acc = jax.lax.fori_loop(0, n_live, loop, (m0, l0, a0))
+        l = jnp.maximum(l, 1e-37)
+        o_ref[0, 0] = (acc / l[:, None]).astype(o_ref.dtype) \
+            .reshape(nq, g, d)
+
+    pl.run_scoped(
+        body,
+        k_buf=pltpu.VMEM((2, 1, page_size, 1, d), k_hbm.dtype),
+        v_buf=pltpu.VMEM((2, 1, page_size, 1, d), v_hbm.dtype),
+        sem=pltpu.SemaphoreType.DMA((2, 2)),
+    )
+
+
+def _paged_attn_call(q, k_pages, v_pages, block_tables, positions, *,
+                     scale: float, interpret: bool, pipeline: bool):
+    """Shared pallas_call plumbing.  q: (B, H_kv, n_q, g, D)."""
+    B, hkv, nq, g, D = q.shape
     P, ps, hkv2, D2 = k_pages.shape
     assert (hkv, D) == (hkv2, D2), (q.shape, k_pages.shape)
     nmax = block_tables.shape[1]
-    scale = D ** -0.5 if scale is None else scale
 
-    kern = functools.partial(_paged_decode_kernel, page_size=ps, scale=scale)
+    if pipeline:
+        kern = functools.partial(_paged_attn_kernel_dma, page_size=ps,
+                                 scale=scale)
+        kv_spec = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)
+    else:
+        kern = functools.partial(_paged_attn_kernel, page_size=ps,
+                                 scale=scale)
+        kv_spec = pl.BlockSpec((P, ps, 1, D), lambda b, h: (0, 0, h, 0))
     return pl.pallas_call(
         kern,
         grid=(B, hkv),
         in_specs=[
-            pl.BlockSpec((1, 1, g, D), lambda b, h: (b, h, 0, 0)),
-            pl.BlockSpec((P, ps, 1, D), lambda b, h: (0, 0, h, 0)),
-            pl.BlockSpec((P, ps, 1, D), lambda b, h: (0, 0, h, 0)),
+            pl.BlockSpec((1, 1, nq, g, D), lambda b, h: (b, h, 0, 0, 0)),
+            kv_spec,
+            kv_spec,
             pl.BlockSpec((1, nmax), lambda b, h: (b, 0)),
             pl.BlockSpec((1, 1), lambda b, h: (b, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, g, D), lambda b, h: (b, h, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, hkv, g, D), q.dtype),
+        out_specs=pl.BlockSpec((1, 1, nq, g, D),
+                               lambda b, h: (b, h, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, hkv, nq, g, D), q.dtype),
         interpret=interpret,
     )(q, k_pages, v_pages, block_tables.astype(jnp.int32),
       positions.astype(jnp.int32).reshape(B, 1))
+
+
+def paged_decode_fwd(q, k_pages, v_pages, block_tables, positions, *,
+                     scale: float | None = None, interpret: bool = True,
+                     pipeline: bool | None = None):
+    """q: (B, H_kv, g, D) grouped queries for ONE decode token;
+    k_pages / v_pages: (P, ps, H_kv, D); block_tables: (B, nmax) int32;
+    positions: (B,) int32.  Returns o: (B, H_kv, g, D).
+
+    `pipeline` selects the double-buffered HBM page stream; it defaults
+    to on for compiled TPU runs and off under interpret mode (the DMA
+    primitives need real TPU semaphores)."""
+    B, hkv, g, D = q.shape
+    scale = D ** -0.5 if scale is None else scale
+    pipeline = (not interpret) if pipeline is None else pipeline
+    o = _paged_attn_call(q[:, :, None], k_pages, v_pages, block_tables,
+                         positions, scale=scale, interpret=interpret,
+                         pipeline=pipeline)
+    return o[:, :, 0]
+
+
+def paged_verify_fwd(q, k_pages, v_pages, block_tables, positions, *,
+                     scale: float | None = None, interpret: bool = True,
+                     pipeline: bool | None = None):
+    """Speculative verify: q: (B, H_kv, n_q, g, D) grouped queries for
+    n_q consecutive decode positions starting at positions[b] (the
+    current token plus the drafted tokens); query i attends
+    kpos <= positions[b] + i.  Returns o: (B, H_kv, n_q, g, D)."""
+    B, hkv, nq, g, D = q.shape
+    scale = D ** -0.5 if scale is None else scale
+    pipeline = (not interpret) if pipeline is None else pipeline
+    return _paged_attn_call(q, k_pages, v_pages, block_tables, positions,
+                            scale=scale, interpret=interpret,
+                            pipeline=pipeline)

@@ -135,6 +135,37 @@ def paged_attention(q, k_pages, v_pages, block_tables, positions,
     return o.astype(q.dtype)
 
 
+def paged_attention_multi(q, k_pages, v_pages, block_tables, positions,
+                          scale=None):
+    """Dense oracle for `ops.paged_attention_verify` (n_q consecutive
+    decode tokens per sequence — speculative verify).
+
+    q: (B, n_q, H, D) — queries at logical positions positions[b] + i;
+    query i attends keys at token index <= positions[b] + i, so each
+    draft position sees the drafts before it and nothing after.  The
+    rest of the contract matches `paged_attention`.
+
+    fp32 softmax over the fully gathered logical token stream.
+    """
+    B, nq, H, D = q.shape
+    P, ps, hkv, _ = k_pages.shape
+    nmax = block_tables.shape[1]
+    scale = D ** -0.5 if scale is None else scale
+    k = k_pages[block_tables].reshape(B, nmax * ps, hkv, D)
+    v = v_pages[block_tables].reshape(B, nmax * ps, hkv, D)
+    reps = H // hkv
+    kf = jnp.repeat(k.astype(jnp.float32), reps, axis=2)
+    vf = jnp.repeat(v.astype(jnp.float32), reps, axis=2)
+    s = jnp.einsum("bqhd,bthd->bqht", q.astype(jnp.float32), kf) * scale
+    t = jnp.arange(nmax * ps)
+    qpos = positions[:, None] + jnp.arange(nq)[None, :]   # (B, nq)
+    ok = t[None, None, :] <= qpos[:, :, None]             # (B, nq, T)
+    s = jnp.where(ok[:, :, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqht,bthd->bqhd", p, vf)
+    return o.astype(q.dtype)
+
+
 # -------------------------------------------------------- flash attention
 def naive_attention(q, k, v, causal=True, scale=None):
     """q,k,v: (B, S, H, D) -> o (B, S, H, D), fp32 softmax."""

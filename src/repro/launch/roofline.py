@@ -86,6 +86,62 @@ def model_flops(cfg, shape) -> float:
     return (2.0 * n_lin + per_tok_attn) * B
 
 
+# -------------------------------------------------- paged-decode roofline
+def expected_tokens_per_step(accept_rate: float, draft_len: int) -> float:
+    """Tokens a sequence advances per speculative verify dispatch when
+    each draft is accepted i.i.d. with probability `accept_rate`: the
+    accepted prefix K has P(K=k) = a^k (1-a) below draft_len, and the
+    dispatch emits K+1 tokens (the correction, or the bonus token after
+    a full accept) — E = (1 - a^(N+1)) / (1 - a), i.e. 1 at a=0 and
+    N+1 at a=1."""
+    a = min(max(float(accept_rate), 0.0), 1.0)
+    n = max(int(draft_len), 0)
+    if a >= 1.0:
+        return float(n + 1)
+    return (1.0 - a ** (n + 1)) / (1.0 - a)
+
+
+def paged_decode_roofline(cfg, *, batch: int, live_tokens_per_seq: float,
+                          page_size: int, draft_len: int = 0,
+                          accept_rate: float = 0.0,
+                          dtype_bytes: int = 2,
+                          hbm_bw: float = HBM_BW) -> dict:
+    """Memory-bound attainable tok/s for (speculative) paged decode.
+
+    Decode is HBM-bound: every dispatch streams the weights once plus
+    each sequence's LIVE KV pages — read at page granularity, so the
+    traffic term is ceil(live / page_size) * page_size tokens of KV per
+    sequence (the page-size parameterization: big pages waste bandwidth
+    on the partial last page, tiny pages waste it on scattered reads
+    the model below doesn't charge for).  Speculation amortizes that
+    stream over `expected_tokens_per_step(accept_rate, draft_len)`
+    tokens instead of one — same bytes, more tokens — which is the
+    entire speculative speedup in the memory-bound regime; the bench
+    reports measured tok/s next to this attainable bound.
+    """
+    n_lin = _linear_params(cfg)
+    param_bytes = n_lin * dtype_bytes
+    kv_per_token = (2 * cfg.num_layers * cfg.num_kv_heads * cfg.head_dim
+                    * dtype_bytes)
+    pages = -(-max(live_tokens_per_seq, 1.0) // page_size)
+    kv_read = batch * pages * page_size * kv_per_token
+    kv_write = batch * (1 + draft_len) * kv_per_token
+    step_bytes = param_bytes + kv_read + kv_write
+    t_step = step_bytes / hbm_bw
+    eff = expected_tokens_per_step(accept_rate, draft_len)
+    return {
+        "batch": batch,
+        "page_size": page_size,
+        "live_tokens_per_seq": live_tokens_per_seq,
+        "draft_len": draft_len,
+        "accept_rate": accept_rate,
+        "effective_tokens_per_step": eff,
+        "step_bytes": step_bytes,
+        "t_step_s": t_step,
+        "attainable_tok_s": batch * eff / t_step,
+    }
+
+
 # ------------------------------------------------------------- terms table
 def load_results(mesh_tag: str = "single", method: str = "lift"):
     rows = {}

@@ -16,6 +16,15 @@ page-aware continuous batching (admission waits or preempts instead of
 OOMing), and `--chunked-prefill` interleaves fixed-size prompt chunks
 with decode steps.  Token-identical to the dense-cache engine; attention
 families only (rwkv6 keeps the dense engine).
+
+Speculative decode (DESIGN.md §5): `--speculate` verifies `--draft-len`
+drafted tokens per decode dispatch on the paged engine (dense family).
+`--draft-source ngram` drafts by prompt lookup (no extra model);
+`--draft-source base` drafts with the unmerged base weights (the
+LIFT-native drafter under `--delta`); `--draft-arch` drafts with a
+smaller arch's smoke config.  Token streams stay bitwise-identical to
+one-token decode at any temperature for any drafter — acceptance only
+moves throughput — and the verify path compiles exactly one program.
 """
 from __future__ import annotations
 
@@ -67,6 +76,25 @@ def main():
                     choices=["preempt", "stall"],
                     help="page-exhaustion policy: preempt the youngest "
                          "sequence or stall the growing one")
+    ap.add_argument("--speculate", action="store_true",
+                    help="speculative multi-token decode: verify "
+                         "--draft-len drafted tokens per decode dispatch "
+                         "(paged engine, dense family; token streams stay "
+                         "bitwise-identical to one-token decode)")
+    ap.add_argument("--draft-len", type=int, default=4,
+                    help="drafted tokens per decode dispatch "
+                         "(--speculate)")
+    ap.add_argument("--draft-source", default="ngram",
+                    choices=["ngram", "base"],
+                    help="draft proposals: 'ngram' prompt-lookup (no "
+                         "extra model) or 'base' greedy decode with the "
+                         "unmerged base weights (the LIFT drafter under "
+                         "--delta; self-drafting without it)")
+    ap.add_argument("--draft-arch", default="",
+                    help="draft with this (smaller) arch's smoke config "
+                         "instead of the serving model — fresh-init, so "
+                         "acceptance is a smoke signal only; vocab sizes "
+                         "must match (--speculate)")
     args = ap.parse_args()
 
     from repro.configs import get_arch
@@ -107,6 +135,20 @@ def main():
               f"of dense, mode={delta.manifest['mode']}, "
               f"backend={args.merge_mode})")
 
+    if args.speculate and args.kv_pages <= 0:
+        raise SystemExit("--speculate needs the paged engine: pass "
+                         "--kv-pages N")
+    draft_model = draft_params = None
+    if args.speculate and args.draft_arch:
+        dcfg = get_arch(args.draft_arch).smoke
+        if dcfg.vocab_size != cfg.vocab_size:
+            raise SystemExit(
+                f"--draft-arch {args.draft_arch}: drafter vocab "
+                f"{dcfg.vocab_size} != target vocab {cfg.vocab_size} — "
+                f"drafted token ids must share the target's vocabulary")
+        draft_model = build_model(dcfg)
+        draft_params = draft_model.init(jax.random.PRNGKey(args.seed + 1))
+
     if args.kv_pages > 0:
         from repro.serving.kvpool import PagedEngine, PagedEngineConfig
         eng = PagedEngine(model, params, PagedEngineConfig(
@@ -117,7 +159,12 @@ def main():
             prefill_chunk=args.prefill_chunk,
             prefill_buckets=not args.no_buckets,
             prefix_cache=args.prefix_cache,
-            exhaustion=args.kv_policy), adapters=adapters)
+            exhaustion=args.kv_policy,
+            speculate=args.draft_len if args.speculate else 0,
+            draft_source=("model" if (args.draft_source == "base"
+                                      or args.draft_arch) else "ngram")),
+            adapters=adapters, draft_model=draft_model,
+            draft_params=draft_params)
     else:
         eng = Engine(model, params, EngineConfig(
             batch_slots=args.slots, max_len=args.max_len, eos_id=EOS,
@@ -149,6 +196,14 @@ def main():
               f"{eng.prefill_chunks} prefill chunk(s), "
               f"{st['preemptions']} preemption(s), "
               f"{st['prefix_hits']} prefix hit(s)")
+        if args.speculate:
+            sp = eng.spec_stats()
+            print(f"[speculate] draft={sp['draft_source']} "
+                  f"N={sp['speculate']}: accept {sp['accepted']}/"
+                  f"{sp['drafted']} ({100 * sp['accept_rate']:.0f}%), "
+                  f"{sp['effective_tokens_per_step']:.2f} effective "
+                  f"tok/step, {sp['decode_steps']} verify dispatch(es), "
+                  f"{sp['decode_compilations']} decode compilation(s)")
 
 
 if __name__ == "__main__":

@@ -27,7 +27,7 @@ from repro.nn import rwkv6 as rwkvmod
 from repro.nn.attention import (KVCache, PagedKVCache, attention,
                                 attention_decode, attention_decode_paged,
                                 attention_prefill, attention_prefill_paged,
-                                attention_spec)
+                                attention_spec, attention_verify_paged)
 from repro.parallel.sharding import shard_logical
 
 
@@ -275,6 +275,43 @@ class LM:
             else:
                 h = mlpmod.mlp(lyr["mlp"], xn2, cfg)
             return x + h, new_pg
+
+        x, pages = self._scan_serve(params, x, pages, body)
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = x @ self._head_w(params).astype(x.dtype)
+        return logits, pages
+
+    def decode_paged_multi(self, params, tokens, pages, block_tables,
+                           positions, backend: str = "auto"):
+        """Speculative verify: n_q consecutive decode tokens per
+        sequence in one dispatch.  tokens: (B, n_q) — token i of row b
+        sits at position positions[b] + i; block_tables: (B, nmax);
+        positions: (B,).  Returns (logits (B, n_q, V), pages): logits
+        row i is the model's next-token distribution after token i,
+        bitwise-equal to what `decode_paged` would produce one token at
+        a time (every sub-op is row-wise — the verify attention read
+        applies a per-row causal mask and everything else never mixes
+        positions), which is the speculative engine's acceptance rule.
+
+        Only the dense family takes this path: MoE capacity dispatch
+        routes by the dispatch's token count, so an n_q-token verify
+        would change real tokens' expert routing vs one-token decode —
+        the engine refuses speculation for moe/hybrid models."""
+        cfg = self.cfg
+        if cfg.is_encoder:
+            raise ValueError("encoder-only models have no decode step")
+        x = self._embed_in(params, {"tokens": tokens})
+
+        def body(x, lyr_and_pages):
+            lyr, pg = lyr_and_pages
+            xn = L.rmsnorm(lyr["ln1"], x, cfg.norm_eps)
+            h, new_pg = attention_verify_paged(
+                lyr["attn"], xn, cfg, pg, block_tables, positions,
+                backend=backend)
+            x = x + h
+            xn2 = L.rmsnorm(lyr["ln2"], x, cfg.norm_eps)
+            x = x + mlpmod.mlp(lyr["mlp"], xn2, cfg)
+            return x, new_pg
 
         x, pages = self._scan_serve(params, x, pages, body)
         x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)

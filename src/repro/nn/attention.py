@@ -366,6 +366,47 @@ def attention_decode_paged(params, x, cfg: ModelConfig,
     return shard_logical(out, ("batch", "seq", "embed")), new_pages
 
 
+def attention_verify_paged(params, x, cfg: ModelConfig,
+                           pages: PagedKVCache, block_tables, positions,
+                           backend: str = "auto"):
+    """Speculative verify through the paged KV pool: n_q consecutive
+    decode tokens per sequence in ONE dispatch.
+
+    x: (B, n_q, d) — token i of row b sits at logical position
+    positions[b] + i (the current token plus the drafted tokens);
+    block_tables: (B, nmax) int32; positions: (B,) int32.
+
+    Every token's K/V is written first (same trash-page redirect as the
+    one-token write — inactive slots carry an all-zero table, rows past
+    the table capacity are masked), then all n_q queries read through
+    `ops.paged_attention_verify` with the per-row `kpos <= pos + i`
+    mask.  Writes precede reads inside the dispatch, so rejected-draft
+    K/V left in the pages by an earlier verify step is always
+    overwritten before any query's mask can reach it — the stale-KV
+    invariant DESIGN.md §5 documents."""
+    from repro.kernels import ops as kops
+    B, nq, _ = x.shape
+    q, k, v = _qkv(params, x, cfg)          # (B, nq, h, d)
+    posm = positions[:, None] + jnp.arange(nq, dtype=jnp.int32)[None, :]
+    cos, sin = L.rope_angles(posm, cfg.head_dim, cfg.rope_theta)
+    q = L.apply_rope(q, cos, sin)
+    k = L.apply_rope(k, cos, sin)
+
+    hkv, hd = cfg.num_kv_heads, cfg.head_dim
+    btr = jnp.repeat(block_tables, nq, axis=0)            # (B*nq, nmax)
+    new_pages = paged_write(pages, k.reshape(B * nq, hkv, hd),
+                            v.reshape(B * nq, hkv, hd), btr,
+                            posm.reshape(B * nq))
+    g = cfg.num_heads // hkv
+    qg = q.reshape(B, nq, hkv, g, hd)
+    o = kops.paged_attention_verify(qg, new_pages.k, new_pages.v,
+                                    block_tables, positions,
+                                    backend=backend)
+    o = o.reshape(B, nq, cfg.num_heads * hd)
+    out = o @ params["wo"].astype(x.dtype)
+    return shard_logical(out, ("batch", "seq", "embed")), new_pages
+
+
 def attention_decode(params, x, cfg: ModelConfig, cache: KVCache,
                      positions: jax.Array):
     """One-token decode step.  x: (B, 1, d); positions: (B,) int32.

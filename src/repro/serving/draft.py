@@ -1,0 +1,204 @@
+"""Draft sources for speculative multi-token paged decode (DESIGN.md §5).
+
+The PagedEngine's speculative decode step is draft -> verify -> accept:
+a DraftSource PROPOSES up to N next tokens per decoding sequence, the
+target model scores the current token plus all N drafts in one
+`decode_paged_multi` dispatch, and the engine accepts the longest prefix
+whose drafts match what its own sampler (`serving.engine.sample_token`
+on the per-request `request_rng` stream) would have emitted.  Drafts
+therefore only ever change HOW MANY tokens a dispatch advances — never
+which tokens come out: a wrong draft costs speculation throughput, not
+correctness, so draft sources are free to be arbitrarily sloppy.
+
+Two sources, one interface (`propose(items, n) -> {slot: [tokens]}`):
+
+  * `NgramDraft` — prompt-lookup / n-gram drafting, no extra model: the
+    longest suffix of the generated-so-far stream that reappears earlier
+    in (prompt + output) predicts the tokens that followed it.  Free,
+    and strong exactly when generation is repetitive (code, structured
+    answers, the synthetic arithmetic serve traffic).
+  * `ModelDraft` — a cheap model drafts by greedy decode with its OWN
+    paged KV cache (one max_len-sized page per slot + the trash page, so
+    inactive rows reuse the pool's trash-page redirect instead of a
+    splice).  The LIFT-native drafter: the paper's claim is that ~5% of
+    principal weights carry the fine-tune, so the UNMERGED BASE under a
+    DeltaHub adapter is a nearly-free draft model whose disagreements
+    with the merged target concentrate where the fine-tune matters; a
+    smaller `src/repro/configs/` arch works the same way.
+
+A draft model's cache needs no rollback bookkeeping: every propose
+round writes positions [p, p + n] before any query reads them, so
+rejected-draft K/V left behind by the previous round is overwritten
+before it can be attended — the same stale-KV-overwrite invariant the
+target's verify dispatch relies on (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class DraftSource:
+    """Interface: the engine calls `begin` when a sequence enters its
+    decode phase and `propose` once per speculative decode step."""
+
+    def begin(self, slot: int, req) -> None:
+        """A sequence finished prefill into `slot` (also called after a
+        preemption re-admits it)."""
+
+    def propose(self, items: list, n: int) -> dict:
+        """items: [(slot, req, position, token)] — `token` is the
+        engine's next dispatch input (the last emitted token), sitting
+        at logical `position`.  Returns {slot: [<= n proposed tokens]};
+        missing slots / short lists degrade that slot toward one-token
+        decode."""
+        raise NotImplementedError
+
+
+class NgramDraft(DraftSource):
+    """Prompt-lookup drafting: match the longest (<= max_ngram) suffix
+    of the stream earlier in prompt + output and propose the tokens that
+    followed the most recent match."""
+
+    def __init__(self, max_ngram: int = 3):
+        self.max_ngram = max(1, int(max_ngram))
+
+    def propose(self, items: list, n: int) -> dict:
+        out = {}
+        for slot, req, _pos, _tok in items:
+            ctx = np.concatenate(
+                [np.asarray(req.prompt, np.int64),
+                 np.asarray(req.out_tokens or [], np.int64)])
+            d = self._lookup(ctx, n)
+            if d:
+                out[slot] = d
+        return out
+
+    def _lookup(self, ctx: np.ndarray, n: int) -> list:
+        L = len(ctx)
+        for m in range(min(self.max_ngram, L - 1), 0, -1):
+            pat = ctx[L - m:]
+            # every length-m window with a start before the suffix (the
+            # original per-start scan, vectorized — the drafter runs on
+            # the engine's hot path, once per decoding sequence per
+            # dispatch); the most recent occurrence wins — local
+            # repetition is the strongest predictor of what follows
+            wins = np.lib.stride_tricks.sliding_window_view(
+                ctx[:L - 1], m)
+            hits = np.nonzero((wins == pat).all(axis=1))[0]
+            if len(hits):
+                start = int(hits[-1])
+                return [int(t) for t in ctx[start + m:start + m + n]]
+        return []
+
+
+class ModelDraft(DraftSource):
+    """Greedy draft decode with a separate (usually cheaper) model.
+
+    The drafter serves the same slots as the target through its own
+    paged cache sized one page of max_len tokens per slot: slot s owns
+    physical page s + 1, page 0 is the trash page, and rows that are not
+    drafting this round dispatch with a zero block table — their writes
+    vanish into the trash exactly like the target engine's inactive
+    slots.  `propose` runs n + 1 batched decode steps (feeding the
+    engine's token, then each draft) so the drafter's cache ends the
+    round written through position p + n with no holes even when every
+    draft is accepted and the target moves on to a bonus token.
+    """
+
+    def __init__(self, model, params, batch_slots: int, max_len: int, *,
+                 backend: str = "auto", prefill_buckets: bool = True,
+                 min_bucket: int = 16):
+        family = getattr(model.cfg, "family", "")
+        if not hasattr(model, "init_paged_cache") or family == "hybrid":
+            raise ValueError(
+                f"family {family!r} cannot draft: the drafter needs a "
+                f"paged KV cache (recurrent state has no trash-page "
+                f"redirect for inactive rows)")
+        self.model = model
+        self.params = params
+        self.batch_slots = batch_slots
+        self.max_len = max_len
+        self.kv = model.init_paged_cache(batch_slots + 1, max_len)
+        # static table: one max_len page per slot, never reallocated
+        self.bt = (np.arange(batch_slots, dtype=np.int32) + 1)[:, None]
+        self._bucketing = prefill_buckets and family == "dense"
+        self.min_bucket = min_bucket
+        self._decode = jax.jit(
+            lambda p, t, kv, bt, pos: model.decode_paged(
+                p, t, kv, bt, pos, backend=backend))
+        self._prefill = jax.jit(
+            lambda p, b, kv, bt, wu, lp: model.prefill_paged(
+                p, b, kv, bt, start_pos=jnp.int32(0), write_upto=wu,
+                last_pos=lp, whole_prompt=True))
+
+    def _bucket_len(self, s: int) -> int:
+        if not self._bucketing:
+            return s
+        b = self.min_bucket
+        while b < s:
+            b *= 2
+        return max(s, min(b, self.max_len))
+
+    def begin(self, slot: int, req) -> None:
+        """Prefill the prompt into the slot's page (the previous
+        occupant's K/V is fully overwritten before any read — prefill
+        writes every prompt position ahead of its reads)."""
+        S = len(req.prompt)
+        C = self._bucket_len(S)
+        chunk = np.zeros((1, C), np.int32)
+        chunk[0, :S] = req.prompt
+        _, self.kv = self._prefill(
+            self.params, {"tokens": jnp.asarray(chunk)}, self.kv,
+            jnp.asarray(self.bt[slot:slot + 1]), jnp.int32(S),
+            jnp.int32(S - 1))
+
+    def propose(self, items: list, n: int) -> dict:
+        if not items or n <= 0:
+            return {}
+        B = self.batch_slots
+        tok = np.zeros((B, 1), np.int32)
+        pos = np.zeros((B,), np.int32)
+        bt = np.zeros((B, 1), np.int32)
+        slots = []
+        for slot, _req, p, t in items:
+            slots.append(slot)
+            tok[slot, 0] = t
+            pos[slot] = p
+            bt[slot] = self.bt[slot]
+        drafts: dict = {s: [] for s in slots}
+        for step in range(n + 1):
+            logits, self.kv = self._decode(
+                self.params, jnp.asarray(tok), self.kv, jnp.asarray(bt),
+                jnp.asarray(pos))
+            nxt = np.argmax(np.asarray(logits[:, 0]), axis=-1)
+            if step < n:
+                for s in slots:
+                    drafts[s].append(int(nxt[s]))
+            tok = nxt.astype(np.int32)[:, None]
+            pos = pos + 1
+        return drafts
+
+
+def make_draft_source(name: str, *, model=None, params=None,
+                      batch_slots: int = 0, max_len: int = 0,
+                      backend: str = "auto", max_ngram: int = 3,
+                      prefill_buckets: bool = True,
+                      min_bucket: int = 16) -> DraftSource:
+    """Engine-facing factory.  "ngram" needs no model; "model" drafts
+    with (model, params) — the unmerged base under adapters, or a
+    smaller arch."""
+    if name == "ngram":
+        return NgramDraft(max_ngram)
+    if name == "model":
+        if model is None or params is None:
+            raise ValueError(
+                "draft_source='model' needs a draft model and params "
+                "(pass draft_model/draft_params to PagedEngine, or use "
+                "draft_source='ngram')")
+        return ModelDraft(model, params, batch_slots, max_len,
+                          backend=backend, prefill_buckets=prefill_buckets,
+                          min_bucket=min_bucket)
+    raise ValueError(f"unknown draft source {name!r} "
+                     f"(expected 'ngram' or 'model')")

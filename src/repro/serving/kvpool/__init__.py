@@ -1,5 +1,8 @@
 """PagedKV subsystem (DESIGN.md §5): block-paged KV pool, page-aware
-continuous-batching scheduler, and the paged serving engine."""
+continuous-batching scheduler, the paged serving engine, and the draft
+sources its speculative multi-token decode verifies against."""
+from repro.serving.draft import (DraftSource, ModelDraft,  # noqa: F401
+                                 NgramDraft, make_draft_source)
 from repro.serving.kvpool.engine import PagedEngine, PagedEngineConfig  # noqa: F401
 from repro.serving.kvpool.pool import KVPool, TRASH_PAGE  # noqa: F401
 from repro.serving.kvpool.scheduler import PagedScheduler, SeqState  # noqa: F401

@@ -64,11 +64,15 @@ class PagedEngineConfig:
     prefix_cache: bool = False    # refcounted prompt-prefix page sharing
     exhaustion: str = "preempt"   # page exhaustion: "preempt" | "stall"
     backend: str = "auto"         # paged-attention read: auto|kernel|lax
+    speculate: int = 0            # drafted tokens verified per decode
+                                  # dispatch (0 = one-token decode)
+    draft_source: str = "ngram"   # "ngram" | "model" (see serving.draft)
 
 
 class PagedEngine:
     def __init__(self, model, params, cfg: PagedEngineConfig,
-                 adapters: Optional[AdapterStore] = None):
+                 adapters: Optional[AdapterStore] = None,
+                 draft_model=None, draft_params=None):
         mcfg = model.cfg
         family = getattr(mcfg, "family", "")
         if family == "rwkv6":
@@ -96,6 +100,20 @@ class PagedEngine:
                 "go to the trash page, recurrent state has no such "
                 "redirect) — use exhaustion='preempt', which restarts the "
                 "sequence from scratch instead of resuming corrupted state")
+        self._spec_n = int(cfg.speculate)
+        if self._spec_n < 0:
+            raise ValueError(f"speculate must be >= 0, got {cfg.speculate}")
+        if self._spec_n and family != "dense":
+            # hybrid: the mamba recurrent state advances per input token
+            # and cannot rewind a rejected draft; moe: capacity dispatch
+            # routes by the dispatch's token count, so an N-token verify
+            # would change real tokens' expert routing vs one-token
+            # decode and break stream identity
+            raise ValueError(
+                f"speculative decode is dense-family only (family="
+                f"{family!r}): rejected drafts need position-addressed "
+                f"state that can be overwritten (paged KV), and routing "
+                f"must not depend on the dispatch's token count")
         B, ps = cfg.batch_slots, cfg.page_size
         self.nmax = -(-cfg.max_len // ps)       # block-table width
         if cfg.num_pages < self.nmax + 1:
@@ -111,7 +129,27 @@ class PagedEngine:
         self._bucketing = cfg.prefill_buckets and family == "dense"
         self.sched = PagedScheduler(
             pool, B, exhaustion=cfg.exhaustion,
-            prefix_cache=cfg.prefix_cache and family == "dense")
+            prefix_cache=cfg.prefix_cache and family == "dense",
+            max_step_tokens=1 + self._spec_n)
+
+        self.draft = None
+        if self._spec_n:
+            from repro.serving.draft import make_draft_source
+            if cfg.draft_source == "model" and draft_model is None:
+                # default model drafter: the engine's own arch on the
+                # UNMERGED base weights — under DeltaHub adapters the
+                # LIFT drafter (the fine-tune lives in ~5% principal
+                # weights, so base/merged disagreements concentrate
+                # exactly where the adapter matters); without adapters
+                # it degenerates to self-drafting
+                draft_model = model
+                draft_params = (adapters.base if adapters is not None
+                                else params)
+            self.draft = make_draft_source(
+                cfg.draft_source, model=draft_model,
+                params=draft_params, batch_slots=B, max_len=cfg.max_len,
+                backend=cfg.backend, prefill_buckets=cfg.prefill_buckets,
+                min_bucket=cfg.min_bucket)
 
         if self._hybrid:
             self.kv = model.init_paged_cache(B, cfg.num_pages, ps)
@@ -125,14 +163,24 @@ class PagedEngine:
         self._pf_rr = 0                          # prefill round-robin
         self.prefill_compilations = 0
         self._seen_prefill: set = set()
+        self.decode_compilations = 0
+        self._seen_decode: set = set()
         self.decode_steps = 0
         self.prefill_chunks = 0
         self.peak_live_tokens = 0
+        self.spec_drafted = 0                    # drafts sent to verify
+        self.spec_accepted = 0                   # drafts that matched
+        self.spec_emitted = 0                    # tokens out of verify
+        self.spec_slot_steps = 0                 # (sequence, dispatch) pairs
 
         backend = cfg.backend
         self._decode_fn = jax.jit(
             lambda p, t, kv, bt, pos: model.decode_paged(
                 p, t, kv, bt, pos, backend=backend))
+        if self._spec_n:
+            self._verify_fn = jax.jit(
+                lambda p, t, kv, bt, pos: model.decode_paged_multi(
+                    p, t, kv, bt, pos, backend=backend))
         self._prefill_whole = jax.jit(
             lambda p, b, kv, bt, sp, wu, lp: model.prefill_paged(
                 p, b, kv, bt, start_pos=sp, write_upto=wu, last_pos=lp,
@@ -309,8 +357,17 @@ class PagedEngine:
         # [0, max_len) — at most max_len - S tokens can be generated
         self.budget[slot] = min(req.max_new_tokens,
                                 self.cfg.max_len - S) - 1
+        if self.draft is not None:
+            self.draft.begin(slot, req)
 
     # ------------------------------------------------------------ decode
+    def _sync_bt(self, seq: SeqState):
+        """Mirror the sequence's full page list into its block-table
+        row (multi-token growth can append several pages per step)."""
+        self.bt[seq.slot] = 0
+        for j, p in enumerate(seq.pages):
+            self.bt[seq.slot, j] = p
+
     def _unstall(self):
         for seq in list(self.sched.seqs):
             if seq is None or seq.phase != "stalled":
@@ -325,12 +382,13 @@ class PagedEngine:
             for s in preempted:
                 self._clear_slot(s)
             if ok:
-                lp = int(self.positions[seq.slot]) // self.cfg.page_size
-                self.bt[seq.slot, lp] = seq.pages[lp]
+                self._sync_bt(seq)
 
-    def _decode_step(self):
-        # page growth for every decoding sequence BEFORE the dispatch —
-        # a sequence that cannot get its write page stalls or preempts
+    def _grow_all(self):
+        """Mandatory page growth for every decoding sequence BEFORE the
+        dispatch — a sequence that cannot get its write page stalls or
+        preempts by policy (identical for one-token and speculative
+        steps: speculation only adds BEST-EFFORT growth on top)."""
         for seq in list(self.sched.seqs):
             if seq is None or seq.phase != "decode":
                 continue
@@ -340,13 +398,17 @@ class PagedEngine:
             for s in preempted:
                 self._clear_slot(s)
             if ok:
-                lp = int(self.positions[seq.slot]) // self.cfg.page_size
-                self.bt[seq.slot, lp] = seq.pages[lp]
+                self._sync_bt(seq)
             elif self._hybrid:
                 # recurrent state cannot survive a stall (it would keep
                 # advancing on dummy dispatch inputs) — restart instead
                 self.sched.preempt(seq.slot)
                 self._clear_slot(seq.slot)
+
+    def _decode_step(self):
+        if self._spec_n:
+            return self._decode_step_spec()
+        self._grow_all()
         live = [s.slot for s in self.sched.seqs
                 if s is not None and s.phase == "decode"]
         if not live:
@@ -360,6 +422,9 @@ class PagedEngine:
             bt_d[slot] = self.bt[slot]
             pos_d[slot] = self.positions[slot]
             tok_d[slot] = self.tokens[slot]
+        if 1 not in self._seen_decode:
+            self._seen_decode.add(1)
+            self.decode_compilations += 1
         logits, self.kv = self._decode_fn(
             self.params, jnp.asarray(tok_d), self.kv, jnp.asarray(bt_d),
             jnp.asarray(pos_d))
@@ -379,6 +444,103 @@ class PagedEngine:
             req.out_tokens.append(int(nxt))
             self.tokens[slot, 0] = nxt
             self.budget[slot] -= 1
+        self._note_live()
+
+    def _decode_step_spec(self):
+        """Draft -> verify -> accept-prefix (DESIGN.md §5).
+
+        One fixed-shape (B, 1 + N) verify dispatch scores the current
+        token plus up to N drafted tokens per decoding sequence; the
+        accept loop then REPLAYS the one-token decode bookkeeping
+        sub-step by sub-step — advance position, check eos/budget,
+        sample from this position's verify logits on the per-request rng
+        — and stops consuming logits at the first sampled token that
+        disagrees with its draft (later verify rows were conditioned on
+        the rejected draft and are discarded; the sampled token itself
+        is exactly what one-token decode would have emitted, so the
+        stream is bitwise-identical for ANY draft quality, temperature
+        and scheduling).  Rejected drafts leave stale K/V in the pages;
+        it sits beyond the accepted position and is overwritten by the
+        next dispatch's writes before any query mask can reach it."""
+        N = self._spec_n
+        self._grow_all()
+        cands = [s for s in self.sched.seqs
+                 if s is not None and s.phase == "decode"]
+        if not cands:
+            return
+        # draft proposals (host-side / drafter-model; sloppy drafts only
+        # cost speculation throughput, never correctness)
+        proposals = self.draft.propose(
+            [(s.slot, s.req, int(self.positions[s.slot]),
+              int(self.tokens[s.slot, 0])) for s in cands], N)
+        dmap: dict = {}
+        for seq in cands:
+            if self.sched.seqs[seq.slot] is not seq:
+                continue                 # preempted after drafting
+            slot = seq.slot
+            p = int(self.positions[slot])
+            # hard caps first: never draft past the sequence capacity or
+            # the request budget (those tokens could not be emitted)
+            cap = min(N, self.cfg.max_len - 1 - p,
+                      max(0, int(self.budget[slot])))
+            d = list(proposals.get(slot, []))[:max(0, cap)]
+            if d:
+                # best-effort page growth for the drafts — never
+                # preempts or stalls; unfunded drafts are dropped
+                fit = self.sched.try_extend(seq, p, 1 + len(d)) - 1
+                d = d[:max(0, fit)]
+                self._sync_bt(seq)
+            dmap[slot] = d
+        live = [slot for slot, _ in dmap.items()
+                if self.sched.seqs[slot] is not None
+                and self.sched.seqs[slot].phase == "decode"]
+        if not live:
+            return
+        M = 1 + N
+        bt_d = np.zeros_like(self.bt)
+        pos_d = np.zeros_like(self.positions)
+        tok_d = np.zeros((self.cfg.batch_slots, M), np.int32)
+        for slot in live:
+            bt_d[slot] = self.bt[slot]
+            pos_d[slot] = self.positions[slot]
+            tok_d[slot, 0] = self.tokens[slot, 0]
+            d = dmap[slot]
+            if d:
+                tok_d[slot, 1:1 + len(d)] = d
+        if M not in self._seen_decode:
+            self._seen_decode.add(M)
+            self.decode_compilations += 1
+        logits, self.kv = self._verify_fn(
+            self.params, jnp.asarray(tok_d), self.kv, jnp.asarray(bt_d),
+            jnp.asarray(pos_d))
+        logits = np.asarray(logits)              # (B, M, V)
+        self.decode_steps += 1
+        self.spec_slot_steps += len(live)
+        for slot in live:
+            seq = self.sched.seqs[slot]
+            req = seq.req
+            d = dmap[slot]
+            self.spec_drafted += len(d)
+            for i in range(len(d) + 1):
+                # sub-step i == the one-token decode step at base+i
+                self.positions[slot] += 1
+                if req.out_tokens and \
+                        req.out_tokens[-1] == self.cfg.eos_id:
+                    self._finish(slot)
+                    break
+                if self.budget[slot] <= 0:
+                    self._finish(slot)
+                    break
+                nxt = sample_token(logits[slot, i], req.temperature,
+                                   req.rng)
+                req.out_tokens.append(int(nxt))
+                self.tokens[slot, 0] = nxt
+                self.budget[slot] -= 1
+                self.spec_emitted += 1
+                if i < len(d):
+                    if int(nxt) != int(d[i]):
+                        break            # rejection: rows > i discarded
+                    self.spec_accepted += 1
         self._note_live()
 
     def _finish(self, slot: int):
@@ -433,4 +595,23 @@ class PagedEngine:
             "prefix_hits": self.sched.prefix_hits,
             "stalls": self.sched.stalls,
             "evictions": pool.evictions,
+        }
+
+    def spec_stats(self) -> dict:
+        """Speculative-decode accounting for the bench rows: acceptance
+        and the effective tokens a sequence advances per verify dispatch
+        it takes part in (> 1 is the whole point — each dispatch costs
+        ~one decode pass per sequence; one-token decode is exactly 1)."""
+        return {
+            "speculate": self._spec_n,
+            "draft_source": self.cfg.draft_source if self._spec_n else "",
+            "drafted": self.spec_drafted,
+            "accepted": self.spec_accepted,
+            "accept_rate": (self.spec_accepted / self.spec_drafted
+                            if self.spec_drafted else 0.0),
+            "emitted": self.spec_emitted,
+            "effective_tokens_per_step":
+                self.spec_emitted / max(1, self.spec_slot_steps),
+            "decode_steps": self.decode_steps,
+            "decode_compilations": self.decode_compilations,
         }

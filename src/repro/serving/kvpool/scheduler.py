@@ -55,14 +55,23 @@ class PagedScheduler:
     """Queue + slot + page bookkeeping; the engine owns the dispatches."""
 
     def __init__(self, pool: KVPool, batch_slots: int, *,
-                 exhaustion: str = "preempt", prefix_cache: bool = False):
+                 exhaustion: str = "preempt", prefix_cache: bool = False,
+                 max_step_tokens: int = 1):
         if exhaustion not in ("preempt", "stall"):
             raise ValueError(f"unknown exhaustion policy {exhaustion!r} "
                              f"(expected 'preempt' or 'stall')")
+        if max_step_tokens < 1:
+            raise ValueError(f"max_step_tokens must be >= 1, got "
+                             f"{max_step_tokens}")
         self.pool = pool
         self.batch_slots = batch_slots
         self.exhaustion = exhaustion
         self.prefix_cache = prefix_cache
+        # decode growth accounting: a sequence may advance up to this
+        # many tokens per engine step (1 + draft_len under speculation);
+        # grow() refuses a larger request instead of silently
+        # under-allocating
+        self.max_step_tokens = max_step_tokens
         self.queue: list[Request] = []
         self.seqs: list[Optional[SeqState]] = [None] * batch_slots
         self._order = 0
@@ -138,32 +147,61 @@ class PagedScheduler:
         return seq
 
     # ------------------------------------------------------ decode growth
-    def grow(self, seq: SeqState, position: int):
-        """Ensure the page holding `position` exists before the decode
-        write.  Returns (ok, preempted_slots): on exhaustion, policy
-        "preempt" frees the youngest OTHER sequence's pages and retries;
-        "stall" parks this sequence until pages free up."""
+    def grow(self, seq: SeqState, position: int, n_tokens: int = 1):
+        """Ensure the pages holding [position, position + n_tokens)
+        exist before the decode writes.  Returns (ok, preempted_slots):
+        on exhaustion, policy "preempt" frees the youngest OTHER
+        sequence's pages and retries; "stall" parks this sequence until
+        pages free up (partial progress is kept — already-appended pages
+        stay with the sequence, so a retry resumes where the allocation
+        stopped).
+
+        n_tokens > 1 is the speculative engine's MANDATORY growth (the
+        current token plus drafts it has committed to verifying); it is
+        bounded by `max_step_tokens` so page accounting can never be
+        outrun by a growth storm the pool wasn't sized for.  Exhaustion
+        policy is identical at every n_tokens — preempt-youngest /
+        stall / forced-preempt deadlock break are unchanged."""
+        if n_tokens > self.max_step_tokens:
+            raise ValueError(
+                f"grow({n_tokens} tokens) exceeds max_step_tokens="
+                f"{self.max_step_tokens} — the engine must construct the "
+                f"scheduler with max_step_tokens >= 1 + draft_len")
         ps = self.pool.page_size
-        lp = position // ps
+        last_lp = (position + n_tokens - 1) // ps
         preempted: list[int] = []
-        if lp < len(seq.pages):
-            return True, preempted
-        assert lp == len(seq.pages), (lp, len(seq.pages))
-        while True:
+        while len(seq.pages) <= last_lp:
             got = self.pool.alloc(1)
             if got is not None:
                 seq.pages.append(got[0])
-                return True, preempted
-            if self.exhaustion != "preempt":
+                continue
+            if self.exhaustion == "preempt":
+                victim = self._youngest(exclude=seq.slot)
+                if victim is not None:
+                    self.preempt(victim.slot)
+                    preempted.append(victim.slot)
+                    continue
+            seq.phase = "stalled"
+            self.stalls += 1
+            return False, preempted
+        return True, preempted
+
+    def try_extend(self, seq: SeqState, position: int,
+                   n_tokens: int) -> int:
+        """Best-effort growth for OPTIONAL tokens (speculative drafts):
+        allocate pages toward covering [position, position + n_tokens)
+        WITHOUT preempting or stalling — speculation must never evict
+        someone else's real work for tokens that may be rejected.
+        Returns how many of the n_tokens the sequence's pages now cover;
+        the engine clamps its draft list to that."""
+        ps = self.pool.page_size
+        last_lp = (position + n_tokens - 1) // ps
+        while len(seq.pages) <= last_lp:
+            got = self.pool.alloc(1)
+            if got is None:
                 break
-            victim = self._youngest(exclude=seq.slot)
-            if victim is None:
-                break
-            self.preempt(victim.slot)
-            preempted.append(victim.slot)
-        seq.phase = "stalled"
-        self.stalls += 1
-        return False, preempted
+            seq.pages.append(got[0])
+        return max(0, min(n_tokens, len(seq.pages) * ps - position))
 
     def _youngest(self, exclude: int) -> Optional[SeqState]:
         live = [s for s in self.seqs

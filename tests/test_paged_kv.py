@@ -3,7 +3,15 @@ paged-attention kernel vs its dense reference, and the acceptance proof —
 the continuous-batching paged engine is token-identical to the dense-cache
 engine on mixed-length (and mixed-adapter, mixed-temperature) request
 streams, under monolithic and chunked prefill, through page exhaustion
-(preemption / stalling) and prefix-page sharing."""
+(preemption / stalling) and prefix-page sharing.
+
+Speculative multi-token decode rides the same acceptance proof: for
+every draft source (n-gram prompt-lookup, model self/garbage drafting),
+any acceptance rate, and any temperature, the verified streams must stay
+BITWISE identical to one-token decode — plus the multi-query verify
+kernel vs its oracle, per-row bitwise equality against one-token decode,
+the scheduler's N-token growth accounting, and the single-compiled-
+program invariant."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -13,7 +21,7 @@ from repro.kernels import ops, ref
 from repro.models import ModelConfig, build_model
 from repro.serving.engine import Engine, EngineConfig, Request
 from repro.serving.kvpool import (KVPool, PagedEngine, PagedEngineConfig,
-                                  TRASH_PAGE)
+                                  PagedScheduler, TRASH_PAGE)
 
 CFG = ModelConfig(family="dense", num_layers=2, d_model=64, num_heads=4,
                   num_kv_heads=2, head_dim=16, d_ff=128, vocab_size=97)
@@ -47,10 +55,12 @@ def _serve_dense(model, params, prompts, *, temps=None, max_new=8,
 
 def _serve_paged(model, params, prompts, *, temps=None, max_new=8,
                  slots=3, max_len=64, page_size=8, num_pages=40,
-                 adapters=None, adapter_ids=None, **kw):
+                 adapters=None, adapter_ids=None, draft_model=None,
+                 draft_params=None, **kw):
     eng = PagedEngine(model, params, PagedEngineConfig(
         batch_slots=slots, max_len=max_len, eos_id=2, page_size=page_size,
-        num_pages=num_pages, **kw), adapters=adapters)
+        num_pages=num_pages, **kw), adapters=adapters,
+        draft_model=draft_model, draft_params=draft_params)
     for i, p in enumerate(prompts):
         eng.submit(Request(uid=i, prompt=p, max_new_tokens=max_new,
                            temperature=temps[i] if temps else 0.0,
@@ -332,3 +342,226 @@ def test_decode_budget_clamped_to_cache_capacity(model_params):
                  _serve_paged(model, params, [prompt], slots=1,
                               max_new=32, num_pages=20)[0]):
         assert len(toks[0]) <= 64 - len(prompt)
+
+
+# ------------------------------------------------- multi-query verify
+def test_paged_verify_kernel_matches_ref():
+    """The (N, g, d) verify read vs the dense multi-query oracle, both
+    kernel (interpret) and lax backends."""
+    rng = np.random.default_rng(2)
+    B, nq, hkv, g, D, P, ps, nmax = 3, 4, 2, 2, 16, 9, 4, 6
+    q = jnp.asarray(rng.normal(size=(B, nq, hkv, g, D)).astype(np.float32))
+    kp = jnp.asarray(rng.normal(size=(P, ps, hkv, D)).astype(np.float32))
+    vp = jnp.asarray(rng.normal(size=(P, ps, hkv, D)).astype(np.float32))
+    bt = jnp.asarray(rng.integers(1, P, size=(B, nmax)).astype(np.int32))
+    pos = jnp.asarray(np.array([0, 7, 19], np.int32))
+    want = ref.paged_attention_multi(
+        q.reshape(B, nq, hkv * g, D), kp, vp, bt, pos)
+    for backend in ("kernel", "lax"):
+        got = ops.paged_attention_verify(q, kp, vp, bt, pos,
+                                         backend=backend, interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(got).reshape(B, nq, hkv * g, D), np.asarray(want),
+            rtol=2e-5, atol=2e-6, err_msg=backend)
+
+
+def test_paged_verify_kernel_bf16():
+    rng = np.random.default_rng(4)
+    B, nq, hkv, g, D, P, ps, nmax = 2, 3, 2, 4, 32, 7, 8, 4
+    q = jnp.asarray(rng.normal(size=(B, nq, hkv, g, D))) \
+        .astype(jnp.bfloat16)
+    kp = jnp.asarray(rng.normal(size=(P, ps, hkv, D))).astype(jnp.bfloat16)
+    vp = jnp.asarray(rng.normal(size=(P, ps, hkv, D))).astype(jnp.bfloat16)
+    bt = jnp.asarray(rng.integers(1, P, size=(B, nmax)).astype(np.int32))
+    pos = jnp.asarray(np.array([5, 26], np.int32))
+    want = ref.paged_attention_multi(
+        q.astype(jnp.float32).reshape(B, nq, hkv * g, D),
+        kp.astype(jnp.float32), vp.astype(jnp.float32), bt, pos)
+    got = ops.paged_attention_verify(q, kp, vp, bt, pos, backend="kernel",
+                                     interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(got.astype(jnp.float32).reshape(B, nq, hkv * g, D)),
+        np.asarray(want), rtol=3e-2, atol=3e-2)
+
+
+def test_verify_rows_bitwise_equal_one_token_decode():
+    """THE speculative-correctness keystone: verify row i must be
+    BITWISE equal to the one-token decode read at position + i (same
+    pages, same block tables) — acceptance then trivially reproduces
+    one-token streams at any temperature, because the sampler consumes
+    identical logits either way."""
+    rng = np.random.default_rng(6)
+    B, nq, hkv, g, D, P, ps, nmax = 3, 4, 2, 2, 16, 11, 4, 6
+    q = jnp.asarray(rng.normal(size=(B, nq, hkv, g, D)).astype(np.float32))
+    kp = jnp.asarray(rng.normal(size=(P, ps, hkv, D)).astype(np.float32))
+    vp = jnp.asarray(rng.normal(size=(P, ps, hkv, D)).astype(np.float32))
+    bt = jnp.asarray(rng.integers(1, P, size=(B, nmax)).astype(np.int32))
+    pos = jnp.asarray(np.array([2, 9, 17], np.int32))
+    ver = np.asarray(ops.paged_attention_verify(q, kp, vp, bt, pos,
+                                                backend="lax"))
+    for i in range(nq):
+        one = np.asarray(ops.paged_attention_decode(
+            q[:, i], kp, vp, bt, pos + i, backend="lax"))
+        assert (ver[:, i] == one).all(), f"row {i} differs from decode"
+
+
+# --------------------------------------------------- speculative decode
+def test_ngram_draft_most_recent_match():
+    from repro.serving.kvpool import NgramDraft
+    req = Request(uid=0,
+                  prompt=np.asarray([5, 6, 7, 8, 5, 6, 9], np.int32),
+                  max_new_tokens=4)
+    req.out_tokens = [5, 6]
+    # suffix [5, 6] occurs at 0 (-> 7 8) and 4 (-> 9 5 6): the most
+    # recent match wins, and the continuation crosses into the output
+    out = NgramDraft(max_ngram=3).propose([(0, req, 9, 6)], 3)
+    assert out == {0: [9, 5, 6]}
+    fresh = Request(uid=1, prompt=np.asarray([1, 2, 3], np.int32),
+                    max_new_tokens=4)
+    assert NgramDraft().propose([(1, fresh, 3, 3)], 3) == {}
+
+
+def test_speculative_stream_identity_all_sources(model_params):
+    """The tentpole acceptance test: speculative decode with EVERY draft
+    source is bitwise-identical to one-token decode (and the dense
+    engine) on mixed temperatures — acceptance only moves throughput —
+    and the verify path compiles exactly ONE decode program."""
+    model, params = model_params
+    prompts = _prompts(6, seed=13)
+    temps = [0.0, 0.9, 0.0, 1.3, 0.6, 0.0]
+    want = _serve_dense(model, params, prompts, temps=temps, max_new=10)
+    plain, ep = _serve_paged(model, params, prompts, temps=temps,
+                             max_new=10)
+    assert plain == want
+    assert ep.decode_compilations == 1
+    for source in ("ngram", "model"):
+        got, eng = _serve_paged(model, params, prompts, temps=temps,
+                                max_new=10, speculate=3,
+                                draft_source=source)
+        assert got == want, source
+        assert eng.decode_compilations == 1, source
+        assert eng.spec_drafted > 0, source
+        sp = eng.spec_stats()
+        assert 0.0 <= sp["accept_rate"] <= 1.0
+        assert sp["effective_tokens_per_step"] >= 1.0, source
+
+
+def test_speculative_acceptance_extremes(model_params):
+    """Acceptance ~1 (greedy self-draft: the drafter IS the target) and
+    acceptance ~0 (a garbage drafter: same arch, different init) both
+    preserve the streams — acceptance is pure throughput."""
+    model, params = model_params
+    prompts = _prompts(5, seed=17)
+    want = _serve_dense(model, params, prompts, max_new=10)
+    hi, eng_hi = _serve_paged(model, params, prompts, max_new=10,
+                              speculate=3, draft_source="model")
+    assert hi == want
+    assert eng_hi.spec_stats()["accept_rate"] > 0.9
+    assert eng_hi.spec_stats()["effective_tokens_per_step"] > 1.5
+    garbage = model.init(jax.random.PRNGKey(99))
+    lo, eng_lo = _serve_paged(model, params, prompts, max_new=10,
+                              speculate=3, draft_source="model",
+                              draft_model=model, draft_params=garbage)
+    assert lo == want
+    assert eng_lo.spec_stats()["accept_rate"] < \
+        eng_hi.spec_stats()["accept_rate"]
+
+
+def test_speculative_mixed_adapters_token_identical(model_params,
+                                                    tmp_path):
+    """Speculation composes with DeltaHub mixed-adapter batching: the
+    base-model drafter proposes, each request's merged adapter verifies,
+    streams match the dense engine serving the same adapters."""
+    from test_serving_delta import _tiny_delta
+    from repro.serving.engine import AdapterStore
+    model, base = model_params
+    d1, _ = _tiny_delta(model, base, 11, tmp_path, "a")
+    d2, _ = _tiny_delta(model, base, 22, tmp_path, "b")
+
+    def store():
+        s = AdapterStore(base, backend="kernel")
+        s.load("a", d1)
+        s.load("b", d2)
+        return s
+
+    prompts = _prompts(6, seed=5)
+    ids = ["a", "b", None, "a", "b", None]
+    want = _serve_dense(model, base, prompts, adapters=store(),
+                        adapter_ids=ids)
+    for source in ("ngram", "model"):
+        got, eng = _serve_paged(model, base, prompts, adapters=store(),
+                                adapter_ids=ids, speculate=3,
+                                draft_source=source)
+        assert got == want, source
+        assert eng.decode_compilations == 1
+
+
+def test_speculative_refuses_non_dense_families():
+    """MoE routes experts by the dispatch's token count (an N-token
+    verify would re-route real tokens vs one-token decode); the zamba
+    hybrid's mamba state cannot rewind rejected drafts — both refused
+    up front."""
+    moe = ModelConfig(family="moe", num_layers=2, d_model=64, num_heads=4,
+                      num_kv_heads=2, head_dim=16, d_ff=128, vocab_size=97,
+                      num_experts=4, num_experts_per_tok=2)
+    model = build_model(moe)
+    with pytest.raises(ValueError, match="dense-family only"):
+        PagedEngine(model, model.init(jax.random.PRNGKey(0)),
+                    PagedEngineConfig(speculate=2))
+    zam = ModelConfig(family="hybrid", num_layers=4, d_model=64,
+                      num_heads=4, num_kv_heads=2, head_dim=32, d_ff=128,
+                      vocab_size=97, shared_attn_period=2)
+    model = build_model(zam)
+    with pytest.raises(ValueError, match="dense-family only"):
+        PagedEngine(model, model.init(jax.random.PRNGKey(0)),
+                    PagedEngineConfig(speculate=2))
+
+
+# --------------------------------------- scheduler multi-token growth
+def test_scheduler_multi_token_growth_accounting():
+    """grow() covers [position, position + n) across page boundaries,
+    refuses n above the declared per-step maximum, and try_extend()
+    never preempts or stalls for optional (draft) tokens."""
+    pool = KVPool(num_pages=6, page_size=4)
+    sched = PagedScheduler(pool, 2, max_step_tokens=3)
+    seq = sched.place(Request(uid=0, prompt=np.arange(3, 7, dtype=np.int32),
+                              max_new_tokens=16), 0)
+    assert seq is not None and len(seq.pages) == 1
+    with pytest.raises(ValueError, match="max_step_tokens"):
+        sched.grow(seq, 4, 4)
+    ok, preempted = sched.grow(seq, 4, 3)        # covers [4, 7) -> page 2
+    assert ok and not preempted and len(seq.pages) == 2
+    other = sched.place(Request(uid=1,
+                                prompt=np.arange(3, 15, dtype=np.int32),
+                                max_new_tokens=4), 1)
+    assert other is not None and len(other.pages) == 3   # pool now full
+    # best-effort draft growth: no free page -> clamps to the allocated
+    # coverage (position 7 is page 1's last slot: exactly 1 token fits)
+    assert sched.try_extend(seq, 7, 3) == 1
+    assert sched.preemptions == 0 and sched.stalls == 0
+    assert len(seq.pages) == 2                   # nothing stolen
+    # MANDATORY growth at the same spot preempts by policy instead
+    ok, preempted = sched.grow(seq, 7, 2)
+    assert ok and preempted == [1]
+    assert sched.preemptions == 1
+
+    with pytest.raises(ValueError, match="max_step_tokens"):
+        PagedScheduler(pool, 1, max_step_tokens=0)
+
+
+def test_speculative_growth_storm_deadlock_break(model_params):
+    """Regression: N tokens/step growth under the stall policy on a pool
+    sized near one sequence must still break the all-stalled deadlock by
+    forced preemption (not livelock), and the streams must survive the
+    restarts untouched."""
+    model, params = model_params
+    prompts = _prompts(5, seed=23, lo=10, hi=14)
+    want = _serve_dense(model, params, prompts, max_new=12, max_len=32)
+    got, eng = _serve_paged(model, params, prompts, max_new=12,
+                            max_len=32, page_size=4, num_pages=9,
+                            exhaustion="stall", speculate=3,
+                            draft_source="ngram")
+    assert got == want
+    assert eng.sched.stalls > 0
+    assert eng.sched.forced_preemptions > 0
+    assert eng.decode_compilations == 1
