@@ -36,7 +36,15 @@ Semantic invariants for suite "delta_merge" (DESIGN.md §4):
     scatter-merge must stay bitwise-identical to the dense reference;
   * every `ratio/*` row reports `bytes_ratio`, and rows at the paper's
     operating density (metric density <= 0.05) must keep the on-disk
-    delta artifact within 12 % of the dense checkpoint bytes.
+    delta artifact within 12 % of the dense checkpoint bytes;
+  * every `pool/resident*` row (merge-free adapter-pool serving,
+    DESIGN.md §5) reports `resident_adapters` >= 32 held concurrently
+    AND `adapter_bytes_ratio` <= 0.05 — one pool-resident adapter costs
+    at most 5 % of the dense merged copy an AdapterStore entry holds;
+  * every `pool/identity*` row reports `matches_ref` == true (a decode
+    batch mixing adapters per slot through the pool is token-identical
+    to merge-on-load AdapterStore serving) and `adapters_mixed` >= 2
+    (the batch actually mixed >= 2 adapters in one decode step).
 
 Semantic invariants for suite "paged_decode" (DESIGN.md §5):
   * every `decode/*` row reports `matches_dense` == true — the paged
@@ -161,6 +169,38 @@ def _delta_merge_row(name: str, metrics: dict) -> list:
                     f"{name}: delta artifact is {ratio:.3f}x the dense "
                     f"checkpoint at density {density} — exceeds the 12% "
                     f"O(k)-artifact bound (DESIGN.md §4)")
+    if name.startswith("pool/resident"):
+        res = metrics.get("resident_adapters")
+        if not isinstance(res, int) or isinstance(res, bool):
+            errs.append(f"{name}: residency row needs integer metric "
+                        f"resident_adapters, got {res!r}")
+        elif res < 32:
+            errs.append(
+                f"{name}: only {res} adapters concurrently device-"
+                f"resident — the merge-free pool must hold >= 32 "
+                f"(DESIGN.md §5)")
+        abr = metrics.get("adapter_bytes_ratio")
+        if not isinstance(abr, (int, float)) or isinstance(abr, bool):
+            errs.append(f"{name}: residency row needs numeric metric "
+                        f"adapter_bytes_ratio, got {abr!r}")
+        elif abr > 0.05:
+            errs.append(
+                f"{name}: one pool-resident adapter costs {abr:.3f}x a "
+                f"dense merged copy — exceeds the 5% merge-free "
+                f"residency bound (DESIGN.md §5)")
+    if name.startswith("pool/identity"):
+        if metrics.get("matches_ref") is not True:
+            errs.append(
+                f"{name}: matches_ref must be true — adapter-pool "
+                f"serving diverged from merge-on-load AdapterStore "
+                f"token streams (DESIGN.md §5)")
+        mixed = metrics.get("adapters_mixed")
+        if not isinstance(mixed, int) or isinstance(mixed, bool) \
+                or mixed < 2:
+            errs.append(
+                f"{name}: adapters_mixed must be an integer >= 2 — the "
+                f"identity run must actually mix adapters in one decode "
+                f"batch, got {mixed!r}")
     return errs
 
 

@@ -66,6 +66,11 @@ NUM_GUARDS = {
     "bound_slots_per_device":   ("max", 0.10, 0.0),
     "bytes_ratio":              ("max", 0.05, 0.0),
     "kv_bytes_ratio":           ("max", 0.10, 0.0),
+    # merge-free adapter-pool serving (deterministic layout arithmetic /
+    # counted residency — never wall time)
+    "adapter_bytes_ratio":      ("max", 0.05, 0.0),
+    "resident_adapters":        ("min", 0.0, 0.0),
+    "adapters_mixed":           ("min", 0.0, 0.0),
     # speculative decode (fixed-seed greedy: drafting and acceptance are
     # deterministic, but generous headroom absorbs jax-version stream
     # shifts; tok_s_ratio is wall time and stays unguarded)

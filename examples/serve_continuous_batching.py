@@ -1,6 +1,14 @@
-"""Continuous-batching serving demo, dense cache vs PagedKV pool: submit
-a stream of reasoning prompts, watch slot admission / chunked prefill /
-page accounting, report tokens/s and KV residency.
+"""Continuous-batching serving demo in two acts (docs/SERVING.md).
+
+Act 1 — dense cache vs PagedKV pool: a stream of reasoning prompts
+through both engines, watching slot admission / chunked prefill / page
+accounting (DESIGN.md §5).
+
+Act 2 — merge-free multi-adapter serving: two LIFT-style sparse deltas
+served from a paged adapter pool, MIXED per slot in one decode batch,
+vs the merge-on-load AdapterStore reference (`--adapter-pool` vs plain
+`--delta` in `launch/serve.py`) — token streams must match bitwise at
+every temperature.
 
     PYTHONPATH=src python examples/serve_continuous_batching.py
 """
@@ -12,8 +20,9 @@ import numpy as np
 from repro.data.synthetic import (BOS, EOS, SEP, VOCAB_SIZE, decode, encode,
                                   make_arith_example)
 from repro.models import ModelConfig, build_model
-from repro.serving.engine import Engine, EngineConfig, Request
-from repro.serving.kvpool import PagedEngine, PagedEngineConfig
+from repro.serving.engine import (AdapterStore, Engine, EngineConfig,
+                                  Request)
+from repro.serving.kvpool import AdapterPool, PagedEngine, PagedEngineConfig
 
 cfg = ModelConfig(family="dense", num_layers=2, d_model=96, num_heads=4,
                   num_kv_heads=2, head_dim=24, d_ff=192,
@@ -22,7 +31,7 @@ model = build_model(cfg)
 params = model.init(jax.random.PRNGKey(0))
 
 
-def requests():
+def requests(adapter_ids=(None,)):
     rng = np.random.default_rng(0)
     out = []
     for i in range(10):
@@ -30,22 +39,39 @@ def requests():
         out.append(Request(uid=i,
                            prompt=np.asarray([BOS] + encode(q) + [SEP]),
                            max_new_tokens=12,
-                           temperature=0.0 if i % 2 == 0 else 0.8))
+                           # mixed temperatures on purpose: identity
+                           # claims hold for sampled requests too
+                           temperature=0.0 if i % 2 == 0 else 0.8,
+                           adapter_id=adapter_ids[i % len(adapter_ids)]))
     return out
 
 
-def drive(engine, label):
-    for r in requests():
+def drive(engine, label, adapter_ids=(None,)):
+    """Run the stream; on paged engines also track the PEAK number of
+    distinct adapters decoding in one batch step."""
+    for r in requests(adapter_ids):
         engine.submit(r)
+    mixed = 0
     t0 = time.time()
-    done = engine.run()
+    if hasattr(engine, "sched"):
+        while engine.sched.has_work():
+            engine.step()
+            live = {s.req.adapter_id for s in engine.sched.seqs
+                    if s is not None and s.phase == "decode"
+                    and s.req.adapter_id is not None}
+            mixed = max(mixed, len(live))
+        done = engine.done
+    else:
+        done = engine.run()
     dt = time.time() - t0
     tokens = sum(len(r.out_tokens) for r in done)
+    note = f", peak {mixed} adapters in one batch" if mixed else ""
     print(f"[{label}] {len(done)} requests / {tokens} tokens in {dt:.2f}s "
-          f"({tokens / dt:.1f} tok/s)")
+          f"({tokens / dt:.1f} tok/s{note})")
     return {r.uid: tuple(r.out_tokens) for r in done}
 
 
+# ------------------------------------------- act 1: dense vs paged KV
 dense = drive(Engine(model, params,
                      EngineConfig(batch_slots=4, max_len=96, eos_id=EOS)),
               "dense cache, 4 slots")
@@ -69,3 +95,80 @@ print(f"peak KV residency: {st['peak_pages_in_use']}/{st['num_pages']} "
       f"({st['peak_live_tokens']} live tokens at peak)")
 for r_uid in range(3):
     print(f"req {r_uid}: {decode(list(paged[r_uid]))!r}")
+
+
+# ------------------- act 2: merge-free adapter mixing in ONE batch
+# Two synthetic LIFT fine-tunes: mode="replace" artifacts perturbing the
+# base at 5%-density principal-weight positions (the geometry of a real
+# `deltas.extract`, without the training run — docs/SERVING.md walks
+# the real train -> extract -> ship -> serve workflow).
+from repro.core.lift import LiftConfig, get_by_path, make_plan
+from repro.deltas import DeltaArtifact, tree_hash
+from repro.deltas.format import make_manifest, num_stack
+
+plan = make_plan(model.spec(), LiftConfig(density=0.05, min_dim=16))
+meta = {p: {"shape": list(t.shape), "stack": list(t.stack), "rows": t.rows,
+            "cols": t.cols, "k": t.k, "dtype": "float32"}
+        for p, t in sorted(plan.items())}
+base_hash = tree_hash(params)
+
+
+def synthetic_adapter(seed):
+    rng = np.random.default_rng(seed)
+    tensors = {}
+    for path, m in meta.items():
+        ns, k, size = num_stack(m), m["k"], m["rows"] * m["cols"]
+        idx = np.stack([np.sort(rng.choice(size, k, replace=False))
+                        for _ in range(ns)]).astype(np.int32)
+        base = np.asarray(get_by_path(params, path),
+                          np.float32).reshape(ns, size)
+        val = (np.take_along_axis(base, idx, 1)
+               + rng.normal(scale=0.05, size=(ns, k))).astype(np.float32)
+        tensors[path] = {"idx": idx, "val": val}
+    return DeltaArtifact(
+        manifest=make_manifest(mode="replace", base_hash=base_hash,
+                               selection=None, tensors_meta=meta, step=0),
+        tensors=tensors)
+
+
+arts = {"alice": synthetic_adapter(1), "bob": synthetic_adapter(2)}
+pcfg = dict(batch_slots=4, max_len=96, eos_id=EOS, page_size=16,
+            num_pages=32)
+
+# reference path: merge-on-load — each adapter costs a full merged copy
+# of the weights, and slots batch per adapter (tree swaps between)
+store = AdapterStore(params)
+for aid, art in arts.items():
+    store.load(aid, art)
+ref_eng = PagedEngine(model, params, PagedEngineConfig(**pcfg),
+                      adapters=store)
+
+# merge-free path: ONE base weight set + a paged (idx, val) pool; each
+# slot's delta composes into the forward matmuls, so one decode batch
+# serves alice, bob and the bare base simultaneously.  Size the pool
+# for the working set (1 trash page + pages_per_adapter per resident
+# adapter — the launcher prints pages/adapter at registration); an
+# undersized pool stays CORRECT but thrashes uploads/evictions as
+# slots take turns instead of mixing
+apool = AdapterPool(params, num_pages=40, entries_per_page=512)
+for aid, art in arts.items():
+    apool.register(aid, art)
+pool_eng = PagedEngine(model, params, PagedEngineConfig(**pcfg),
+                       adapter_pool=apool)
+
+mix = ("alice", "bob", None)   # None = the unadapted base model
+print(f"\n--- merge-free adapter pool: serving {list(arts)} + base, "
+      f"mixed per slot ---")
+want = drive(ref_eng, "merge-on-load AdapterStore (reference)", mix)
+got = drive(pool_eng, "merge-free adapter pool", mix)
+
+ps = pool_eng.pool_stats()
+print(f"\npool streams bitwise-identical to merge-on-load "
+      f"(all temperatures): {got == want}")
+print(f"adapter pool: {ps['resident_adapters']} adapters resident in "
+      f"{ps['pages_per_adapter']} page(s) each, "
+      f"{100 * ps['adapter_bytes_ratio']:.1f}% of one dense merged copy "
+      f"per adapter ({ps['uploads']} uploads, "
+      f"{ps['evictions']} evictions)")
+for uid, aid in zip(range(3), mix):
+    print(f"req {uid} [{aid or 'base'}]: {decode(list(got[uid]))!r}")

@@ -3,9 +3,10 @@ from repro.deltas.extract import apply_diff, diff, extract
 from repro.deltas.format import (DELTA_FORMAT_VERSION, DeltaArtifact,
                                  DeltaMismatchError, tree_hash)
 from repro.deltas.merge import DeltaMerger, merge_delta
+from repro.deltas.pool_layout import SENTINEL_IDX, PoolLayout
 
 __all__ = [
     "DELTA_FORMAT_VERSION", "DeltaArtifact", "DeltaMismatchError",
-    "DeltaMerger", "apply_diff", "diff", "extract", "merge_delta",
-    "tree_hash",
+    "DeltaMerger", "PoolLayout", "SENTINEL_IDX", "apply_diff", "diff",
+    "extract", "merge_delta", "tree_hash",
 ]

@@ -1,0 +1,135 @@
+"""Pool-resident delta layout: artifacts -> fixed-geometry adapter pages.
+
+Merge-free serving (DESIGN.md §5) keeps ONE base weight set resident and
+composes each decode slot's sparse delta inside the matmul
+(`kernels.ops.delta_matmul`).  The deltas themselves live in a paged
+adapter pool next to the KV pages: this module turns a DeltaHub artifact
+(format v1/v2, `deltas/format.py`) into the pool's device layout —
+
+    idx pages: (n_pages, E) int32   row-major flat replace indices
+    val pages: (n_pages, E) float32 RESIDENT values (see below)
+
+Every adapter under one selection plan has the SAME geometry (same
+tensors, same k per tensor), so the packing is fixed per plan: tensor
+`path` with stack ns and k entries per matrix occupies the contiguous
+stream slice [offset(path), offset(path) + ns*k), and every adapter
+spans exactly `pages_per_adapter` pages.  The tail and every unused slot
+pad with SENTINEL_IDX (>= rows*cols for any tensor), which the delta
+matmul drops — the all-sentinel trash page is how base-only slots ride
+the same dispatch.
+
+Resident values are the MERGED entries, not the shipped ones: "replace"
+artifacts ship them directly (fp16 v2 values upcast exactly), "add"
+artifacts gather base[idx] and add in fp32 — elementwise IEEE adds, the
+same arithmetic `DeltaMerger` performs — so composing a resident entry
+into the base reproduces merge-on-load serving bit for bit.  The pool
+never stores a dense merged copy: an adapter costs
+8 bytes x k_total + page-rounding slack, ~2x density of the dense bytes
+(0.02x at 1 % density, vs 1.0x per AdapterStore entry).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.lift import get_by_path
+from repro.deltas.format import (DeltaArtifact, DeltaMismatchError,
+                                 num_stack, value_dtype)
+
+# >= rows*cols for any supported tensor (asserted), dropped by the
+# "drop"-mode scatter and keyed outside every kernel window
+SENTINEL_IDX = np.int32(2 ** 30)
+
+
+class PoolLayout:
+    """Fixed packing of one selection plan's delta entries into pages.
+
+    Built from a delta manifest's `tensors` metadata (the same dict
+    `DeltaMerger` consumes); every artifact admitted to the pool must
+    carry identical geometry — `pack` refuses anything else, mirroring
+    the plan-fingerprint refusal of merge-on-load serving.
+    """
+
+    def __init__(self, tensors_meta: dict, *, entries_per_page: int = 2048):
+        if entries_per_page < 1:
+            raise ValueError(f"entries_per_page must be >= 1, got "
+                             f"{entries_per_page}")
+        self.meta = {p: dict(m) for p, m in sorted(tensors_meta.items())}
+        self.paths = tuple(self.meta)
+        if not self.paths:
+            raise ValueError("pool layout needs at least one planned tensor")
+        self.entries_per_page = int(entries_per_page)
+        self.offsets: dict = {}
+        off = 0
+        for p in self.paths:
+            m = self.meta[p]
+            if m["rows"] * m["cols"] >= int(SENTINEL_IDX):
+                raise ValueError(
+                    f"tensor {p!r} has {m['rows']}x{m['cols']} entries — "
+                    f"beyond the pool's sentinel index space")
+            self.offsets[p] = off
+            off += num_stack(m) * m["k"]
+        self.total_entries = off
+        self.pages_per_adapter = -(-off // self.entries_per_page)
+
+    # ------------------------------------------------------------- sizes
+    def adapter_nbytes(self) -> int:
+        """Device bytes one resident adapter costs (idx + val pages,
+        including page-rounding slack)."""
+        per_entry = np.dtype(np.int32).itemsize + np.dtype(np.float32).itemsize
+        return self.pages_per_adapter * self.entries_per_page * per_entry
+
+    def dense_nbytes(self) -> int:
+        """Bytes of one dense merged copy of the planned tensors — what
+        an AdapterStore entry holds resident per adapter."""
+        total = 0
+        for m in self.meta.values():
+            total += int(np.prod(m["shape"])) * np.dtype(m["dtype"]).itemsize
+        return total
+
+    def slices(self):
+        """{path: (offset, ns, k)} into the flat per-adapter stream."""
+        return {p: (self.offsets[p], num_stack(self.meta[p]),
+                    self.meta[p]["k"]) for p in self.paths}
+
+    # ------------------------------------------------------------ packing
+    def pack(self, base_params, delta: DeltaArtifact):
+        """Artifact -> (idx (n_pages, E) int32, val (n_pages, E) f32).
+
+        Host-side (numpy): the caller DMAs the pages into the device
+        pool at admission.  Refuses geometry drift; assumes the caller
+        already ran `validate_base` (the pool does, once per adapter).
+        """
+        from repro.deltas.merge import geometry_key
+        if (geometry_key(delta.manifest["tensors"], "pool")
+                != geometry_key(self.meta, "pool")):
+            raise DeltaMismatchError(
+                "delta artifact geometry does not match the adapter "
+                "pool's layout — one pool serves one selection plan")
+        mode = delta.manifest["mode"]
+        n = self.pages_per_adapter * self.entries_per_page
+        idx_stream = np.full((n,), SENTINEL_IDX, np.int32)
+        val_stream = np.zeros((n,), np.float32)
+        for p in self.paths:
+            m = self.meta[p]
+            ns, k = num_stack(m), m["k"]
+            idx = np.asarray(delta.tensors[p]["idx"],
+                             np.int32).reshape(ns, k)
+            val = np.asarray(delta.tensors[p]["val"])
+            if value_dtype(m) != m["dtype"]:
+                val = val.astype(np.dtype(m["dtype"]))  # exact upcast (v2)
+            val = val.astype(np.float32).reshape(ns, k)
+            size = m["rows"] * m["cols"]
+            valid = idx < size
+            if mode == "add":
+                base = np.asarray(get_by_path(base_params, p))
+                base = base.reshape(ns, size).astype(np.float32)
+                gathered = np.take_along_axis(
+                    base, np.where(valid, idx, 0), axis=1)
+                val = np.where(valid, gathered + val, 0.0).astype(np.float32)
+            idx = np.where(valid, idx, SENTINEL_IDX).astype(np.int32)
+            off = self.offsets[p]
+            idx_stream[off:off + ns * k] = idx.reshape(-1)
+            val_stream[off:off + ns * k] = val.reshape(-1)
+        e = self.entries_per_page
+        return (idx_stream.reshape(self.pages_per_adapter, e),
+                val_stream.reshape(self.pages_per_adapter, e))

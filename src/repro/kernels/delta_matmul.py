@@ -1,0 +1,103 @@
+"""Fused per-slot delta matmul kernel (Pallas TPU).
+
+Merge-free multi-tenant serving's hot spot (DESIGN.md §5): compute
+
+    y[b] = x[b] @ (W overlaid with slot b's sparse replace-delta)
+
+without ever materializing a merged weight copy per adapter.  One base W
+stays resident; each slot of a decode batch carries its own (idx, val)
+delta gathered from the paged adapter pool, so a single dispatch serves a
+batch that mixes adapters per slot.
+
+The kernel tiles W column-blocks of BN and relies on the same structural
+property as `scatter_merge.py`: entries sorted in COLUMN-MAJOR order
+(key = col * rows + row) land in col-block j as one contiguous window of
+the entry stream, which the wrapper (`ops.delta_matmul`) pads to a fixed
+capacity K.  Per (slot, col-block) grid cell the scatter is a two-sided
+one-hot deposit against iota (VPU work, no dynamic addressing):
+
+    row_oh[e, r] = (row[e] == r) & valid[e]          # (K, d)
+    col_oh[e, c] = (col[e] - j*BN == c) & valid[e]   # (K, BN)
+    dep  = (row_oh * val).T @ col_oh                 # (d, BN) deposited
+    hit  = row_oh.T @ col_oh > 0                     # unique entries: 0/1
+    W_b  = where(hit, dep, W_blk)                    # replace, bitwise
+    y    = x[b] @ W_b                                # the engine's dot
+
+The deposit dots run at HIGHEST precision (the TPU default would truncate
+delta-value mantissas to bf16 and break the bitwise-replace contract);
+the final x @ W_b dot runs at DEFAULT precision — exactly the precision
+of the dense engine's `x @ w`, which is what makes pool-mode decode rows
+bitwise-equal to merge-on-load serving.
+
+Unlike scatter-merge there is no cheap exact post-fix for a window that
+overflows (a missed entry perturbs a whole output column dot), so the
+wrapper sizes K to the worst case when it cannot prove a tighter bound —
+correctness never depends on a capacity heuristic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, keyw_ref, valw_ref, w_ref, out_ref, *, rows: int, bn: int):
+    j = pl.program_id(1)
+    keyw = keyw_ref[0, 0, :]                     # (K,) col-major keys, -1 pad
+    valid = keyw >= 0
+    keyc = jnp.maximum(keyw, 0)
+    col_loc = keyc // rows - j * bn              # local col in [0, bn)
+    row = keyc % rows                            # row in [0, rows)
+    k = keyw.shape[0]
+
+    iota_r = jax.lax.broadcasted_iota(jnp.int32, (k, rows), 1)
+    iota_c = jax.lax.broadcasted_iota(jnp.int32, (k, bn), 1)
+    row_oh = ((row[:, None] == iota_r) & valid[:, None]).astype(jnp.float32)
+    col_oh = ((col_loc[:, None] == iota_c) & valid[:, None]).astype(
+        jnp.float32)
+
+    vals = valw_ref[0, 0, :].astype(jnp.float32)             # (K,)
+    contract = (((0,), (0,)), ((), ()))                      # sum over K
+    # HIGHEST precision: deposits must carry the delta values bit-exact
+    dep = jax.lax.dot_general(row_oh * vals[:, None], col_oh, contract,
+                              precision=jax.lax.Precision.HIGHEST)
+    cnt = jax.lax.dot_general(row_oh, col_oh, contract,
+                              precision=jax.lax.Precision.HIGHEST)
+    w_blk = w_ref[...].astype(jnp.float32)                   # (rows, bn)
+    merged = jnp.where(cnt > 0, dep, w_blk)
+
+    x_row = x_ref[...].astype(jnp.float32)                   # (1, rows)
+    # DEFAULT precision: the dense engine's `x @ w` dot, bit for bit
+    out_ref[...] = jax.lax.dot(x_row, merged).astype(out_ref.dtype)
+
+
+def delta_matmul_blocks(x, w, keyw, valw, *, bn: int,
+                        interpret: bool = True):
+    """x: (B, rows); w: (rows, NB*BN); keyw/valw: (B, NB, K).
+
+    keyw entries are COLUMN-MAJOR flat keys (col * rows + row) into the
+    un-padded (rows, cols) matrix, -1 = padded window slot.  Returns
+    y (B, NB*BN) in result dtype — columns beyond the real `cols` are the
+    base matmul of zero-padded weight columns and are sliced by the caller.
+    """
+    b, rows = x.shape
+    nb = keyw.shape[1]
+    k = keyw.shape[2]
+    assert w.shape == (rows, nb * bn), (w.shape, rows, nb, bn)
+    out_dtype = jnp.result_type(x.dtype, w.dtype)
+    kern = functools.partial(_kernel, rows=rows, bn=bn)
+    return pl.pallas_call(
+        kern,
+        grid=(b, nb),
+        in_specs=[
+            pl.BlockSpec((1, rows), lambda s, j: (s, 0)),      # x row
+            pl.BlockSpec((1, 1, k), lambda s, j: (s, j, 0)),   # key windows
+            pl.BlockSpec((1, 1, k), lambda s, j: (s, j, 0)),   # val windows
+            pl.BlockSpec((rows, bn), lambda s, j: (0, j)),     # w col-block
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda s, j: (s, j)),
+        out_shape=jax.ShapeDtypeStruct((b, nb * bn), out_dtype),
+        interpret=interpret,
+    )(x, keyw, valw, w)

@@ -818,3 +818,137 @@ def sparse_adam(p, g, idx, m, v, step, *, lr, b1=0.9, b2=0.999, eps=1e-8,
         v_out = jnp.where(covered, v_out, v_ref)
 
     return p_out, m_out, v_out
+
+
+# ------------------------------------- merge-free delta matmul (serving)
+def _colmajor_windows(idx, val, rows: int, cols: int, nb: int, bn: int,
+                      capacity: int):
+    """Per-(slot, col-block) dense windows of (B, k) row-major deltas.
+
+    The delta-matmul kernel tiles W by column, so entries are re-keyed
+    column-major (key = col * rows + row) and sorted per slot — the
+    entries landing in col-block j then occupy one contiguous window,
+    exactly the `_sorted_windows` trick in a transposed key space.
+    Sentinel entries (idx >= rows*cols) key to INT32_SENTINEL and fall in
+    no window.  capacity <= 0 sizes windows to the measured worst-case
+    occupancy when idx is concrete, else to k (always exact — a missed
+    matmul entry has no cheap post-fix, unlike scatter-merge).  Returns
+    (keyw (B, nb, K) int32 -1-padded, valw (B, nb, K) f32, K).
+    """
+    from repro.kernels import lowrank_mask as lrm
+    b, k = idx.shape
+    r = idx // cols
+    c = idx % cols
+    key = jnp.where(idx >= rows * cols, lrm.INT32_SENTINEL,
+                    c * rows + r).astype(jnp.int32)
+    order = jnp.argsort(key, axis=-1)
+    key_s = jnp.take_along_axis(key, order, axis=-1)
+    val_s = jnp.take_along_axis(val, order, axis=-1)
+
+    block_of = key_s // (rows * bn)                          # (B, k)
+    arangeb = jnp.arange(nb)
+    starts = jax.vmap(
+        lambda bo: jnp.searchsorted(bo, arangeb, side="left"))(block_of)
+    ends = jax.vmap(
+        lambda bo: jnp.searchsorted(bo, arangeb, side="right"))(block_of)
+    if capacity <= 0:
+        try:
+            capacity = max(1, int(jnp.max(ends - starts)))
+        except jax.errors.ConcretizationTypeError:
+            capacity = k                                     # traced: exact
+    gpos = starts[:, :, None] + jnp.arange(capacity)[None, None, :]
+    in_win = gpos < ends[:, :, None]
+    gposc = jnp.minimum(gpos, k - 1)
+
+    def take(arr):  # (B, k) gathered at (B, nb, K) positions
+        return jnp.take_along_axis(arr[:, None, :], gposc, axis=-1)
+
+    keyw = jnp.where(in_win, take(key_s), -1).astype(jnp.int32)
+    valw = jnp.where(in_win, take(val_s), 0.0).astype(jnp.float32)
+    return keyw, valw, capacity
+
+
+def delta_matmul(x, w, idx, val, *, bn: int = 256, capacity: int = 0,
+                 backend: str = "auto", interpret: Optional[bool] = None):
+    """Per-slot delta matmul: y[b] = x[b] @ merge(w, idx[b], val[b]).
+
+    x: (B, d); w: (d, f) the ONE resident base weight; idx: (B, k) int32
+    row-major flat REPLACE indices (sentinel >= d*f writes nothing — the
+    base-slot no-op); val: (B, k) replacement values.  Each decode slot
+    composes the base with its own adapter's delta inside the dot — no
+    merged weight is ever resident (DESIGN.md §5).
+
+    backend:
+      * "kernel" — the fused Pallas kernel (`delta_matmul.py`): per
+        (slot, col-block) one-hot deposit into the W tile, then the
+        engine's own `x @ w` dot at DEFAULT precision;
+      * "lax"    — exact fallback: O(k) per-slot scatter into a transient
+        W copy inside XLA, then ONE batched dot whose per-row arithmetic
+        is the dense engine's `x @ w` row (proven bitwise in tests);
+      * "auto"   — kernel on TPU, lax elsewhere.
+
+    Both backends are bitwise-matched by `ref.delta_matmul` (dense
+    merge-then-matmul per slot) — the pool-serving identity contract.
+    Returns y: (B, f).
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    if backend == "auto":
+        backend = "kernel" if jax.default_backend() == "tpu" else "lax"
+    rows, cols = w.shape
+    b = x.shape[0]
+    if backend == "lax":
+        wf = w.reshape(-1)
+        wm = jax.vmap(
+            lambda i, v: wf.at[i].set(v.astype(w.dtype), mode="drop"))(
+                idx, val).reshape(b, rows, cols)
+        return jnp.einsum("bd,bdf->bf", x, wm)
+    if backend != "kernel":
+        raise ValueError(f"unknown delta-matmul backend {backend!r}")
+    from repro.kernels import delta_matmul as dmk
+    bn = max(1, min(bn, cols))
+    nb = -(-cols // bn)
+    keyw, valw, _ = _colmajor_windows(idx, val, rows, cols, nb, bn, capacity)
+    w_pad = jnp.pad(w, ((0, 0), (0, nb * bn - cols)))
+    y = dmk.delta_matmul_blocks(x, w_pad, keyw, valw, bn=bn,
+                                interpret=interpret)
+    return y[:, :cols]
+
+
+def overlay_matmul(x, w, overlay, *, backend: str = "lax",
+                   interpret: Optional[bool] = None):
+    """The serving forward's weight matmul, with an optional slot overlay.
+
+    overlay None -> exactly `x @ w` (the engines' existing HLO, untouched
+    — non-pool serving compiles the identical program).  Otherwise
+    overlay is {"idx": (B, k) int32, "val": (B, k)} of per-slot replace
+    entries (row-major flat into w, sentinel >= w.size = no-op) gathered
+    from the paged adapter pool, and slot b's output row is computed
+    against base-composed-with-slot-b's-delta:
+
+      * x (1, T, d) or any B == 1 (prefill): one transient O(k) scatter
+        into a W copy, then the same `x @ w` dot — operand-bitwise equal
+        to merge-on-load serving;
+      * x (B, d) (decode): `delta_matmul` — the fused kernel or the
+        batched-einsum lax fallback, both row-bitwise to the dense dot.
+    """
+    if overlay is None:
+        return x @ w
+    idx, val = overlay["idx"], overlay["val"]
+    b = idx.shape[0]
+    if b == 1:
+        wm = (w.reshape(-1).at[idx[0]].set(val[0].astype(w.dtype),
+                                           mode="drop").reshape(w.shape))
+        return x @ wm
+    if x.ndim == 3 and x.shape[1] == 1:       # (B, 1, d) one-token decode
+        y = delta_matmul(x[:, 0, :], w, idx, val, backend=backend,
+                         interpret=interpret)
+        return y[:, None, :]
+    if x.ndim == 2:
+        return delta_matmul(x, w, idx, val, backend=backend,
+                            interpret=interpret)
+    # (B, T, d) multi-query per-slot composition (speculative verify)
+    wf = w.reshape(-1)
+    wm = jax.vmap(
+        lambda i, v: wf.at[i].set(v.astype(w.dtype), mode="drop"))(
+            idx, val).reshape((b,) + w.shape)
+    return jnp.einsum("btd,bdf->btf", x, wm)

@@ -83,6 +83,27 @@ def sparse_scatter_merge(base, idx, val, mode: str = "replace"):
     return jax.vmap(one)(base, idx, val)
 
 
+# -------------------------------------------------- delta matmul (serving)
+def delta_matmul(x, w, idx, val):
+    """Dense oracle for `ops.delta_matmul` (merge-free adapter serving).
+
+    x: (B, d); w: (d, f); idx: (B, k) int32 row-major flat replace
+    indices (sentinel >= d*f writes nothing); val: (B, k).  Slot b's
+    output row is the row the merge-on-load engine would compute: merge
+    the slot's delta densely, run the engine's full-batch `x @ w` dot,
+    and keep row b — the per-slot composition both backends must match
+    bitwise.
+    """
+    b = x.shape[0]
+    wf = w.reshape(-1)
+    rows = []
+    for s in range(b):
+        wm = wf.at[idx[s]].set(val[s].astype(w.dtype),
+                               mode="drop").reshape(w.shape)
+        rows.append((x @ wm)[s])
+    return jnp.stack(rows)
+
+
 # ------------------------------------------------------------- sparse_adam
 def sparse_adam(p, g, idx, m, v, *, lr, b1, b2, eps, wd, step):
     """Reference sparse AdamW on flat vectors.

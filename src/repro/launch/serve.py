@@ -17,6 +17,14 @@ OOMing), and `--chunked-prefill` interleaves fixed-size prompt chunks
 with decode steps.  Token-identical to the dense-cache engine; attention
 families only (rwkv6 keeps the dense engine).
 
+Merge-free multi-adapter serving (DESIGN.md §5): `--adapter-pool N`
+keeps ONE base weight set resident and serves every `--delta` (the flag
+repeats) as pool-resident sparse pages composed into the forward matmuls
+per batch slot — a decode batch mixes adapters freely, requests are
+assigned round-robin across the loaded deltas, and token streams are
+bitwise-identical to merge-on-load serving.  Requires the paged engine
+(`--kv-pages`); `--adapter-pool-entries` sets the page granularity.
+
 Speculative decode (DESIGN.md §5): `--speculate` verifies `--draft-len`
 drafted tokens per decode dispatch on the paged engine (dense family).
 `--draft-source ngram` drafts by prompt lookup (no extra model);
@@ -48,13 +56,30 @@ def main():
     ap.add_argument("--base", default="",
                     help="checkpoint dir to restore base weights from "
                          "(latest step); default: fresh init")
-    ap.add_argument("--delta", default="",
-                    help="sparse delta artifact dir (DeltaHub) to merge "
-                         "and serve — refuses a wrong base")
+    ap.add_argument("--delta", action="append", default=[],
+                    help="sparse delta artifact dir (DeltaHub) to serve — "
+                         "refuses a wrong base; repeat the flag to serve "
+                         "several adapters (requests are assigned "
+                         "round-robin)")
     ap.add_argument("--merge-mode", default="kernel",
                     choices=["kernel", "ref"],
                     help="delta scatter-merge backend: Pallas kernel or "
-                         "dense jnp reference")
+                         "dense jnp reference (merge-on-load path; "
+                         "ignored under --adapter-pool)")
+    ap.add_argument("--adapter-pool", type=int, default=0,
+                    help="serve --delta adapters MERGE-FREE from a paged "
+                         "adapter pool with this many pages: one base "
+                         "weight set stays resident and each slot's "
+                         "sparse delta composes into the forward matmuls "
+                         "(paged engine only, dense family; 0 = "
+                         "merge-on-load AdapterStore)")
+    ap.add_argument("--adapter-pool-entries", type=int, default=2048,
+                    help="(idx, val) entries per adapter-pool page")
+    ap.add_argument("--overlay-backend", default="lax",
+                    choices=["lax", "kernel", "auto"],
+                    help="delta-overlay matmul backend (--adapter-pool): "
+                         "exact O(k) lax scatter or the Pallas fused "
+                         "gather-epilogue kernel")
     ap.add_argument("--no-buckets", action="store_true",
                     help="disable power-of-two prefill length buckets "
                          "(compile per exact prompt length)")
@@ -122,18 +147,47 @@ def main():
         params = ckpt.restore(step, {"params": params})["params"]
         print(f"[base] restored step {step} from {args.base}")
 
+    if args.adapter_pool > 0:
+        if args.kv_pages <= 0:
+            raise SystemExit("--adapter-pool needs the paged engine: "
+                             "pass --kv-pages N")
+        if not args.delta:
+            raise SystemExit("--adapter-pool without --delta has nothing "
+                             "to pool; pass one or more --delta dirs")
+
     adapters = None
-    adapter_id = None
+    apool = None
+    adapter_ids: list = []
     if args.delta:
         from repro.deltas import DeltaArtifact
-        delta = DeltaArtifact.load(args.delta)
-        adapters = AdapterStore(params, backend=args.merge_mode)
-        adapter_id = "delta0"
-        adapters.load(adapter_id, delta)
-        print(f"[delta] merged {args.delta} ({delta.nbytes()} payload "
-              f"bytes, {100 * delta.nbytes() / delta.dense_nbytes():.1f}% "
-              f"of dense, mode={delta.manifest['mode']}, "
-              f"backend={args.merge_mode})")
+        if args.adapter_pool > 0:
+            from repro.serving.kvpool import AdapterPool
+            apool = AdapterPool(params, num_pages=args.adapter_pool,
+                                entries_per_page=args.adapter_pool_entries)
+        else:
+            adapters = AdapterStore(params, backend=args.merge_mode)
+        for i, path in enumerate(args.delta):
+            delta = DeltaArtifact.load(path)
+            aid = f"delta{i}"
+            if apool is not None:
+                apool.register(aid, delta)
+                verb = "pooled"
+            else:
+                adapters.load(aid, delta)
+                verb = "merged"
+            adapter_ids.append(aid)
+            print(f"[delta] {verb} {path} as {aid!r} ({delta.nbytes()} "
+                  f"payload bytes, "
+                  f"{100 * delta.nbytes() / delta.dense_nbytes():.1f}% "
+                  f"of dense, mode={delta.manifest['mode']})")
+        if apool is not None:
+            st = apool.stats()
+            print(f"[adapter-pool] {st['num_pages']} pages x "
+                  f"{st['entries_per_page']} entries, "
+                  f"{st['pages_per_adapter']} pages/adapter "
+                  f"({st['adapter_nbytes']} B resident/adapter, "
+                  f"{100 * st['adapter_bytes_ratio']:.1f}% of one dense "
+                  f"merged copy)")
 
     if args.speculate and args.kv_pages <= 0:
         raise SystemExit("--speculate needs the paged engine: pass "
@@ -162,9 +216,10 @@ def main():
             exhaustion=args.kv_policy,
             speculate=args.draft_len if args.speculate else 0,
             draft_source=("model" if (args.draft_source == "base"
-                                      or args.draft_arch) else "ngram")),
+                                      or args.draft_arch) else "ngram"),
+            overlay_backend=args.overlay_backend),
             adapters=adapters, draft_model=draft_model,
-            draft_params=draft_params)
+            draft_params=draft_params, adapter_pool=apool)
     else:
         eng = Engine(model, params, EngineConfig(
             batch_slots=args.slots, max_len=args.max_len, eos_id=EOS,
@@ -175,10 +230,11 @@ def main():
     for i in range(args.requests):
         q, _ = make_arith_example(rng)
         prompt = np.asarray([BOS] + encode(q) + [SEP], np.int32)
+        aid = adapter_ids[i % len(adapter_ids)] if adapter_ids else None
         eng.submit(Request(uid=i, prompt=prompt,
                            max_new_tokens=args.max_new,
                            temperature=args.temperature,
-                           adapter_id=adapter_id))
+                           adapter_id=aid))
     done = eng.run()
     dt = time.time() - t0
     total_new = sum(len(r.out_tokens) for r in done)
@@ -196,6 +252,14 @@ def main():
               f"{eng.prefill_chunks} prefill chunk(s), "
               f"{st['preemptions']} preemption(s), "
               f"{st['prefix_hits']} prefix hit(s)")
+        if apool is not None:
+            ps = eng.pool_stats()
+            print(f"[adapter-pool] {ps['resident_adapters']}/"
+                  f"{ps['registered_adapters']} adapters resident, "
+                  f"{ps['uploads']} page upload(s), "
+                  f"{ps['evictions']} eviction(s), "
+                  f"{100 * ps['adapter_bytes_ratio']:.1f}% resident "
+                  f"bytes/adapter vs one dense copy")
         if args.speculate:
             sp = eng.spec_stats()
             print(f"[speculate] draft={sp['draft_source']} "

@@ -215,7 +215,8 @@ class LM:
 
     def prefill_paged(self, params, batch, pages, block_table, *,
                       start_pos, write_upto, last_pos,
-                      whole_prompt: bool = True):
+                      whole_prompt: bool = True, overlay=None,
+                      overlay_backend: str = "lax"):
         """Prefill one chunk of ONE sequence through the paged pool.
 
         batch: tokens (1, C) at absolute positions
@@ -225,26 +226,33 @@ class LM:
         logits at that CHUNK-LOCAL position.  `whole_prompt` (static)
         keeps the bitwise-identical-to-dense intra-chunk attention read
         when the chunk covers the entire prompt (see
-        `attention_prefill_paged`).  Returns (logits (1, 1, V), pages)."""
+        `attention_prefill_paged`).  `overlay` (optional) is a per-layer
+        adapter-overlay pytree — {"attn": {...}, "mlp": {...}} with
+        (L, 1, k) idx/val leaves — composed into every planned projection
+        by `ops.overlay_matmul` (merge-free serving, DESIGN.md §5).
+        Returns (logits (1, 1, V), pages)."""
         cfg = self.cfg
         x = self._embed_in(params, batch)
 
-        def body(x, lyr_and_pages):
-            lyr, pg = lyr_and_pages
+        def body(x, lc):
+            lyr, pg = lc[0], lc[1]
+            ov = lc[2] if len(lc) > 2 else None
             xn = L.rmsnorm(lyr["ln1"], x, cfg.norm_eps)
             h, new_pg = attention_prefill_paged(
                 lyr["attn"], xn, cfg, pg, block_table,
                 start_pos=start_pos, write_upto=write_upto,
-                whole_prompt=whole_prompt)
+                whole_prompt=whole_prompt,
+                ov=ov["attn"] if ov else None, ov_backend=overlay_backend)
             x = x + h
             xn2 = L.rmsnorm(lyr["ln2"], x, cfg.norm_eps)
             if cfg.family == "moe":
                 h, _ = moemod.moe(lyr["moe"], xn2, cfg)
             else:
-                h = mlpmod.mlp(lyr["mlp"], xn2, cfg)
+                h = mlpmod.mlp(lyr["mlp"], xn2, cfg,
+                               ov["mlp"] if ov else None, overlay_backend)
             return x + h, new_pg
 
-        x, pages = self._scan_serve(params, x, pages, body)
+        x, pages = self._scan_serve(params, x, pages, body, overlay)
         x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
         x = jax.lax.dynamic_slice_in_dim(
             x, jnp.asarray(last_pos, jnp.int32), 1, axis=1)
@@ -252,37 +260,46 @@ class LM:
         return logits, pages
 
     def decode_paged(self, params, tokens, pages, block_tables, positions,
-                     backend: str = "auto"):
+                     backend: str = "auto", overlay=None,
+                     overlay_backend: str = "lax"):
         """One-token decode through the paged pool.  tokens: (B, 1);
         block_tables: (B, nmax); positions: (B,).  Inactive slots carry
         an all-zero block table and position 0 — their writes land in the
-        trash page.  -> (logits, pages)."""
+        trash page.  `overlay` (optional) is a per-layer adapter-overlay
+        pytree with (L, B, k) idx/val leaves: each batch slot's sparse
+        delta composes into the planned projections inside the matmul
+        (merge-free multi-adapter serving, DESIGN.md §5); slots serving
+        the base model carry all-sentinel indices.  -> (logits, pages)."""
         cfg = self.cfg
         if cfg.is_encoder:
             raise ValueError("encoder-only models have no decode step")
         x = self._embed_in(params, {"tokens": tokens})
 
-        def body(x, lyr_and_pages):
-            lyr, pg = lyr_and_pages
+        def body(x, lc):
+            lyr, pg = lc[0], lc[1]
+            ov = lc[2] if len(lc) > 2 else None
             xn = L.rmsnorm(lyr["ln1"], x, cfg.norm_eps)
             h, new_pg = attention_decode_paged(
                 lyr["attn"], xn, cfg, pg, block_tables, positions,
-                backend=backend)
+                backend=backend, ov=ov["attn"] if ov else None,
+                ov_backend=overlay_backend)
             x = x + h
             xn2 = L.rmsnorm(lyr["ln2"], x, cfg.norm_eps)
             if cfg.family == "moe":
                 h, _ = moemod.moe(lyr["moe"], xn2, cfg)
             else:
-                h = mlpmod.mlp(lyr["mlp"], xn2, cfg)
+                h = mlpmod.mlp(lyr["mlp"], xn2, cfg,
+                               ov["mlp"] if ov else None, overlay_backend)
             return x + h, new_pg
 
-        x, pages = self._scan_serve(params, x, pages, body)
+        x, pages = self._scan_serve(params, x, pages, body, overlay)
         x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
         logits = x @ self._head_w(params).astype(x.dtype)
         return logits, pages
 
     def decode_paged_multi(self, params, tokens, pages, block_tables,
-                           positions, backend: str = "auto"):
+                           positions, backend: str = "auto", overlay=None,
+                           overlay_backend: str = "lax"):
         """Speculative verify: n_q consecutive decode tokens per
         sequence in one dispatch.  tokens: (B, n_q) — token i of row b
         sits at position positions[b] + i; block_tables: (B, nmax);
@@ -302,18 +319,21 @@ class LM:
             raise ValueError("encoder-only models have no decode step")
         x = self._embed_in(params, {"tokens": tokens})
 
-        def body(x, lyr_and_pages):
-            lyr, pg = lyr_and_pages
+        def body(x, lc):
+            lyr, pg = lc[0], lc[1]
+            ov = lc[2] if len(lc) > 2 else None
             xn = L.rmsnorm(lyr["ln1"], x, cfg.norm_eps)
             h, new_pg = attention_verify_paged(
                 lyr["attn"], xn, cfg, pg, block_tables, positions,
-                backend=backend)
+                backend=backend, ov=ov["attn"] if ov else None,
+                ov_backend=overlay_backend)
             x = x + h
             xn2 = L.rmsnorm(lyr["ln2"], x, cfg.norm_eps)
-            x = x + mlpmod.mlp(lyr["mlp"], xn2, cfg)
+            x = x + mlpmod.mlp(lyr["mlp"], xn2, cfg,
+                               ov["mlp"] if ov else None, overlay_backend)
             return x, new_pg
 
-        x, pages = self._scan_serve(params, x, pages, body)
+        x, pages = self._scan_serve(params, x, pages, body, overlay)
         x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
         logits = x @ self._head_w(params).astype(x.dtype)
         return logits, pages
@@ -402,20 +422,25 @@ class LM:
         logits = x @ self._head_w(params).astype(x.dtype)
         return logits, cache
 
-    def _scan_serve(self, params, x, cache, body):
+    def _scan_serve(self, params, x, cache, body, overlay=None):
+        """Scan `body` over the layer stack.  `overlay` (optional) rides
+        as a third scanned operand — a per-layer pytree with leading
+        layer axis (adapter overlays for merge-free serving); when None
+        the scanned tuple is exactly the pre-overlay (blocks, cache), so
+        overlay-free callers compile the identical HLO as before."""
         cfg = self.cfg
+        xs = ((params["blocks"], cache) if overlay is None
+              else (params["blocks"], cache, overlay))
         if cfg.scan_layers and not cfg.unroll_layers:
             def scan_body(x, lc):
                 x2, new_c = body(x, lc)
                 return x2, new_c
-            x, new_cache = jax.lax.scan(scan_body, x,
-                                        (params["blocks"], cache))
+            x, new_cache = jax.lax.scan(scan_body, x, xs)
             return x, new_cache
         new_layers = []
         for i in range(cfg.num_layers):
-            lyr = jax.tree.map(lambda a: a[i], params["blocks"])
-            c = jax.tree.map(lambda a: a[i], cache)
-            x, nc = body(x, (lyr, c))
+            lc = jax.tree.map(lambda a: a[i], xs)
+            x, nc = body(x, lc)
             new_layers.append(nc)
         new_cache = jax.tree.map(lambda *a: jnp.stack(a), *new_layers)
         return x, new_cache

@@ -119,13 +119,22 @@ def paged_write(pages: PagedKVCache, k, v, block_tables, positions,
     )
 
 
-def _qkv(params, x, cfg: ModelConfig):
+def _qkv(params, x, cfg: ModelConfig, ov=None, ov_backend: str = "lax"):
+    """ov: optional per-slot adapter overlay {name: {"idx", "val"}} for
+    merge-free serving (DESIGN.md §5) — each batch slot's sparse delta is
+    composed into the projection dot by `ops.overlay_matmul`; ov None
+    compiles the identical program as before."""
+    from repro.kernels.ops import overlay_matmul
     B, S, _ = x.shape
     dt = x.dtype
     hd = cfg.head_dim
-    q = x @ params["wq"].astype(dt)
-    k = x @ params["wk"].astype(dt)
-    v = x @ params["wv"].astype(dt)
+    ov = ov or {}
+    q = overlay_matmul(x, params["wq"].astype(dt), ov.get("wq"),
+                       backend=ov_backend)
+    k = overlay_matmul(x, params["wk"].astype(dt), ov.get("wk"),
+                       backend=ov_backend)
+    v = overlay_matmul(x, params["wv"].astype(dt), ov.get("wv"),
+                       backend=ov_backend)
     if cfg.qkv_bias:
         q = q + params["bq"].astype(dt)
         k = k + params["bk"].astype(dt)
@@ -257,7 +266,8 @@ def attention_prefill(params, x, cfg: ModelConfig, cache: KVCache):
 
 def attention_prefill_paged(params, x, cfg: ModelConfig,
                             pages: PagedKVCache, block_table, *,
-                            start_pos, write_upto, whole_prompt: bool):
+                            start_pos, write_upto, whole_prompt: bool,
+                            ov=None, ov_backend: str = "lax"):
     """Prefill one CHUNK of one sequence through the paged KV pool.
 
     x: (1, C, d) — chunk tokens at absolute positions
@@ -277,10 +287,11 @@ def attention_prefill_paged(params, x, cfg: ModelConfig,
         or shared prefix pages + this chunk), masked causally on absolute
         positions.
     """
+    from repro.kernels import ops as kops
     B, C, _ = x.shape
     assert B == 1, "chunked prefill runs one sequence at a time"
     positions = jnp.asarray(start_pos, jnp.int32) + jnp.arange(C)
-    q, k, v = _qkv(params, x, cfg)
+    q, k, v = _qkv(params, x, cfg, ov, ov_backend)
     cos, sin = L.rope_angles(positions, cfg.head_dim, cfg.rope_theta)
     q = L.apply_rope(q, cos, sin)
     k = L.apply_rope(k, cos, sin)
@@ -329,13 +340,15 @@ def attention_prefill_paged(params, x, cfg: ModelConfig,
                        preferred_element_type=jnp.float32).astype(x.dtype)
         o = o.reshape(1, C, cfg.num_heads, cfg.head_dim)
     o = o.reshape(1, C, cfg.num_heads * cfg.head_dim)
-    out = o @ params["wo"].astype(x.dtype)
+    out = kops.overlay_matmul(o, params["wo"].astype(x.dtype),
+                              (ov or {}).get("wo"), backend=ov_backend)
     return shard_logical(out, ("batch", "seq", "embed")), new_pages
 
 
 def attention_decode_paged(params, x, cfg: ModelConfig,
                            pages: PagedKVCache, block_tables, positions,
-                           backend: str = "auto"):
+                           backend: str = "auto", ov=None,
+                           ov_backend: str = "lax"):
     """One-token decode through the paged KV pool.
 
     x: (B, 1, d); block_tables: (B, nmax) int32; positions: (B,) int32.
@@ -347,7 +360,7 @@ def attention_decode_paged(params, x, cfg: ModelConfig,
     to the dense cache)."""
     from repro.kernels import ops as kops
     B = x.shape[0]
-    q, k, v = _qkv(params, x, cfg)          # (B, 1, h, d)
+    q, k, v = _qkv(params, x, cfg, ov, ov_backend)   # (B, 1, h, d)
     cos, sin = L.rope_angles(positions[:, None], cfg.head_dim,
                              cfg.rope_theta)
     q = L.apply_rope(q, cos, sin)
@@ -362,13 +375,15 @@ def attention_decode_paged(params, x, cfg: ModelConfig,
                                     block_tables, positions,
                                     backend=backend)
     o = o.reshape(B, 1, cfg.num_heads * cfg.head_dim)
-    out = o @ params["wo"].astype(x.dtype)
+    out = kops.overlay_matmul(o, params["wo"].astype(x.dtype),
+                              (ov or {}).get("wo"), backend=ov_backend)
     return shard_logical(out, ("batch", "seq", "embed")), new_pages
 
 
 def attention_verify_paged(params, x, cfg: ModelConfig,
                            pages: PagedKVCache, block_tables, positions,
-                           backend: str = "auto"):
+                           backend: str = "auto", ov=None,
+                           ov_backend: str = "lax"):
     """Speculative verify through the paged KV pool: n_q consecutive
     decode tokens per sequence in ONE dispatch.
 
@@ -386,7 +401,7 @@ def attention_verify_paged(params, x, cfg: ModelConfig,
     invariant DESIGN.md §5 documents."""
     from repro.kernels import ops as kops
     B, nq, _ = x.shape
-    q, k, v = _qkv(params, x, cfg)          # (B, nq, h, d)
+    q, k, v = _qkv(params, x, cfg, ov, ov_backend)   # (B, nq, h, d)
     posm = positions[:, None] + jnp.arange(nq, dtype=jnp.int32)[None, :]
     cos, sin = L.rope_angles(posm, cfg.head_dim, cfg.rope_theta)
     q = L.apply_rope(q, cos, sin)
@@ -403,7 +418,8 @@ def attention_verify_paged(params, x, cfg: ModelConfig,
                                     block_tables, positions,
                                     backend=backend)
     o = o.reshape(B, nq, cfg.num_heads * hd)
-    out = o @ params["wo"].astype(x.dtype)
+    out = kops.overlay_matmul(o, params["wo"].astype(x.dtype),
+                              (ov or {}).get("wo"), backend=ov_backend)
     return shard_logical(out, ("batch", "seq", "embed")), new_pages
 
 

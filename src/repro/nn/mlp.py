@@ -25,16 +25,25 @@ def mlp_spec(cfg: ModelConfig, d_ff: int = 0):
     return spec
 
 
-def mlp(params, x, cfg: ModelConfig):
+def mlp(params, x, cfg: ModelConfig, ov=None, ov_backend: str = "lax"):
+    """ov: optional per-slot adapter overlay {name: {"idx", "val"}} for
+    merge-free serving (DESIGN.md §5) — `overlay_matmul` composes each
+    batch slot's sparse delta into the dot; ov None compiles the
+    identical program as before."""
+    from repro.kernels.ops import overlay_matmul
     dt = x.dtype
     act = _ACTS[cfg.mlp_act]
-    up = x @ params["up"].astype(dt)
+    ov = ov or {}
+    up = overlay_matmul(x, params["up"].astype(dt), ov.get("up"),
+                        backend=ov_backend)
     up = shard_logical(up, ("batch", "seq", "mlp"))
     if cfg.mlp_glu:
-        gate = x @ params["gate"].astype(dt)
+        gate = overlay_matmul(x, params["gate"].astype(dt), ov.get("gate"),
+                              backend=ov_backend)
         gate = shard_logical(gate, ("batch", "seq", "mlp"))
         h = act(gate) * up
     else:
         h = act(up)
-    out = h @ params["down"].astype(dt)
+    out = overlay_matmul(h, params["down"].astype(dt), ov.get("down"),
+                         backend=ov_backend)
     return shard_logical(out, ("batch", "seq", "embed"))

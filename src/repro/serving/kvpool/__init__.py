@@ -3,6 +3,7 @@ continuous-batching scheduler, the paged serving engine, and the draft
 sources its speculative multi-token decode verifies against."""
 from repro.serving.draft import (DraftSource, ModelDraft,  # noqa: F401
                                  NgramDraft, make_draft_source)
+from repro.serving.kvpool.adapter_pool import AdapterPool, pool_overlay  # noqa: F401
 from repro.serving.kvpool.engine import PagedEngine, PagedEngineConfig  # noqa: F401
 from repro.serving.kvpool.pool import KVPool, TRASH_PAGE  # noqa: F401
 from repro.serving.kvpool.scheduler import PagedScheduler, SeqState  # noqa: F401

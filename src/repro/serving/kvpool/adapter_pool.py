@@ -1,0 +1,197 @@
+"""Paged adapter pool: merge-free multi-tenant delta serving
+(DESIGN.md §5).
+
+The dense-engine `AdapterStore` keeps one MERGED copy of the base
+weights per resident adapter — fine for a handful, hopeless for "a
+million adapters".  This pool keeps ONE base weight set resident and
+stores each adapter as its packed sparse delta (`deltas.PoolLayout`:
+(idx, val) entry streams split into fixed-size pages), composed into the
+forward matmuls per batch slot by `kernels.ops.overlay_matmul` — a
+decode batch mixes adapters per slot with no weight materialization.
+
+Allocator machinery is the KV pool's own (`kvpool.pool.KVPool`):
+
+  * page 0 is the TRASH page — all-SENTINEL indices (the device arrays
+    initialize that way and eviction never rewrites them), so base-only
+    slots and inactive dispatch rows ride the same gather with a
+    delta that drops out entirely;
+  * every adapter page is published to the pool's LRU cache keyed by
+    (adapter_id, page_index): an admitted request `acquire`s its
+    adapter's pages (cache hit = no device write; miss = alloc +
+    one-page upload, i.e. prefetch-on-admission), holds one reference
+    per page while in flight, and `release`s at finish/preempt —
+    referenced pages are NEVER evicted (the KVPool invariant), while
+    idle adapters stay resident until page pressure LRU-evicts them.
+
+Registration is host-side only: `register` validates the artifact
+(base hash + selection plan, exactly like merge-on-load) and packs it
+into page images; no device memory moves until a request needs the
+adapter.  One pool serves ONE selection plan — the layout is fixed by
+the first registered artifact and later registrations must match.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.deltas.format import DeltaMismatchError, tree_hash
+from repro.deltas.pool_layout import SENTINEL_IDX, PoolLayout
+from repro.serving.kvpool.pool import KVPool
+
+
+def pool_overlay(idx_pages, val_pages, apt, slices: dict, num_layers: int):
+    """Build the per-layer overlay pytree a decode dispatch consumes.
+
+    idx_pages/val_pages: (P, E) device pool arrays; apt: (B, ppa) int32
+    per-slot adapter page table (all-zero row -> trash page -> base);
+    slices: `PoolLayout.slices()` ({path: (offset, ns, k)}, static).
+    Returns {"attn": {name: {"idx", "val"}}, "mlp": {...}} with
+    (num_layers, B, k) leaves — traceable under jit (static slicing
+    only), shape-stable across steps.
+    """
+    B = apt.shape[0]
+    fi = idx_pages[apt].reshape(B, -1)
+    fv = val_pages[apt].reshape(B, -1)
+    ov: dict = {}
+    for path, (off, ns, k) in sorted(slices.items()):
+        grp, nm = path.split("/")[-2:]
+        assert ns == num_layers, (path, ns, num_layers)
+        li = fi[:, off:off + ns * k].reshape(B, ns, k).transpose(1, 0, 2)
+        lv = fv[:, off:off + ns * k].reshape(B, ns, k).transpose(1, 0, 2)
+        ov.setdefault(grp, {})[nm] = {"idx": li, "val": lv}
+    return ov
+
+
+class AdapterPool:
+    """Refcounted, LRU-evicted pool of page-resident sparse adapters."""
+
+    def __init__(self, base_params, *, num_pages: int,
+                 entries_per_page: int = 2048, validate: bool = True,
+                 plan_meta: Optional[dict] = None):
+        if num_pages < 2:
+            raise ValueError(f"the adapter pool needs at least 2 pages "
+                             f"(trash + 1 allocatable), got {num_pages}")
+        self.base = base_params
+        self.num_pages = int(num_pages)
+        self.entries_per_page = int(entries_per_page)
+        self.validate = validate
+        self.plan_meta = plan_meta
+        self.base_hash = tree_hash(base_params) if validate else None
+        self.layout: Optional[PoolLayout] = None
+        # page_size=1: the KV pool's page_size is KV-token granularity,
+        # meaningless here — only the allocator (free list + refcounts +
+        # LRU chain cache) is reused
+        self.pool = KVPool(num_pages, 1)
+        E = self.entries_per_page
+        # all-sentinel idx everywhere: page 0 (trash) stays that way
+        # forever, every other page is fully overwritten on upload
+        self.idx_pages = jnp.full((num_pages, E), int(SENTINEL_IDX),
+                                  jnp.int32)
+        self.val_pages = jnp.zeros((num_pages, E), jnp.float32)
+        self._packed: dict = {}          # adapter_id -> (idx, val) images
+        self.uploads = 0                 # device page writes
+
+    # ------------------------------------------------------- registration
+    def register(self, adapter_id: str, delta) -> None:
+        """Validate + host-pack `delta` (a DeltaArtifact) under
+        `adapter_id`.  No device traffic; re-registering replaces."""
+        if self.validate:
+            want = delta.manifest["base_hash"]
+            if want != self.base_hash:
+                raise DeltaMismatchError(
+                    f"adapter {adapter_id!r} was extracted against base "
+                    f"{want[:12]}… but this pool serves base "
+                    f"{self.base_hash[:12]}…")
+            if self.plan_meta is not None:
+                delta.validate_plan(self.plan_meta)
+        if self.layout is None:
+            self.layout = PoolLayout(delta.manifest["tensors"],
+                                     entries_per_page=self.entries_per_page)
+            need = self.layout.pages_per_adapter + 1
+            if self.num_pages < need:
+                raise ValueError(
+                    f"num_pages={self.num_pages} cannot hold even one "
+                    f"adapter: need >= {need} (pages_per_adapter="
+                    f"{self.layout.pages_per_adapter} + the trash page)")
+        self._packed[adapter_id] = self.layout.pack(self.base, delta)
+
+    def check(self, adapter_id: str) -> None:
+        if adapter_id not in self._packed:
+            raise KeyError(f"adapter {adapter_id!r} is not registered "
+                           f"(registered: {list(self._packed)})")
+
+    def adapter_ids(self) -> list:
+        return list(self._packed)
+
+    # --------------------------------------------------- acquire / release
+    def acquire(self, adapter_id: Optional[str]) -> Optional[list]:
+        """Pin `adapter_id`'s pages for one in-flight request.
+
+        Returns the physical page list (logical order — the request's
+        adapter-page-table row), [] for the base model (adapter None),
+        or None when even LRU eviction cannot free enough pages (the
+        caller waits, exactly like KV-page admission).  Cached pages hit
+        without device traffic; missing ones are uploaded here
+        (prefetch-on-admission).  Every page gains one reference the
+        caller MUST drop with `release` — while held, the pool will
+        never evict or reuse it."""
+        if adapter_id is None:
+            return []
+        self.check(adapter_id)
+        idx_img, val_img = self._packed[adapter_id]
+        pages: list = []
+        for i in range(self.layout.pages_per_adapter):
+            chain = (adapter_id, i)
+            p = self.pool.cache_get(chain)      # +1 ref on hit
+            if p is None:
+                got = self.pool.alloc(1)        # evicts idle LRU pages
+                if got is None:
+                    for q in pages:
+                        self.pool.release(q)
+                    return None
+                p = got[0]                      # ref = 1 (ours)
+                self.idx_pages = self.idx_pages.at[p].set(idx_img[i])
+                self.val_pages = self.val_pages.at[p].set(val_img[i])
+                self.uploads += 1
+                self.pool.cache_put(chain, p)   # cache's own ref
+            pages.append(p)
+        return pages
+
+    def release(self, pages: list) -> None:
+        """Drop one in-flight reference per page.  Pages stay resident
+        under the cache's reference until LRU eviction reclaims them."""
+        for p in pages:
+            self.pool.release(p)
+
+    # -------------------------------------------------------------- stats
+    def resident_adapters(self) -> int:
+        """Adapters whose every page is currently device-resident."""
+        if self.layout is None:
+            return 0
+        counts = collections.Counter(
+            c[0] for c in self.pool.cached_chains())
+        return sum(1 for n in counts.values()
+                   if n == self.layout.pages_per_adapter)
+
+    def stats(self) -> dict:
+        lay = self.layout
+        a_bytes = lay.adapter_nbytes() if lay else 0
+        d_bytes = lay.dense_nbytes() if lay else 0
+        return {
+            "num_pages": self.num_pages,
+            "entries_per_page": self.entries_per_page,
+            "pages_per_adapter": lay.pages_per_adapter if lay else 0,
+            "registered_adapters": len(self._packed),
+            "resident_adapters": self.resident_adapters(),
+            "pages_in_use": self.pool.pages_in_use(),
+            "adapter_nbytes": a_bytes,
+            "dense_nbytes": d_bytes,
+            "adapter_bytes_ratio": (a_bytes / d_bytes) if d_bytes else 0.0,
+            "pool_device_bytes": int(self.idx_pages.nbytes
+                                     + self.val_pages.nbytes),
+            "uploads": self.uploads,
+            "evictions": self.pool.evictions,
+        }

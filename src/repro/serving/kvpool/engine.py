@@ -45,6 +45,7 @@ import numpy as np
 
 from repro.serving.engine import (AdapterStore, Request, _splice,
                                   request_rng, sample_token)
+from repro.serving.kvpool.adapter_pool import AdapterPool, pool_overlay
 from repro.serving.kvpool.pool import KVPool
 from repro.serving.kvpool.scheduler import PagedScheduler, SeqState
 
@@ -67,12 +68,15 @@ class PagedEngineConfig:
     speculate: int = 0            # drafted tokens verified per decode
                                   # dispatch (0 = one-token decode)
     draft_source: str = "ngram"   # "ngram" | "model" (see serving.draft)
+    overlay_backend: str = "lax"  # adapter-pool overlay matmul backend
+                                  # ("lax" | "kernel" | "auto")
 
 
 class PagedEngine:
     def __init__(self, model, params, cfg: PagedEngineConfig,
                  adapters: Optional[AdapterStore] = None,
-                 draft_model=None, draft_params=None):
+                 draft_model=None, draft_params=None,
+                 adapter_pool: Optional[AdapterPool] = None):
         mcfg = model.cfg
         family = getattr(mcfg, "family", "")
         if family == "rwkv6":
@@ -91,6 +95,47 @@ class PagedEngine:
         self.adapters = adapters
         self.active_adapter: Optional[str] = None
         self._hybrid = family == "hybrid"
+
+        # merge-free adapter-pool serving (DESIGN.md §5): params stay the
+        # BASE weights forever; each slot's sparse delta is composed into
+        # the forward matmuls from the pool's (idx, val) pages
+        self.apool = adapter_pool
+        if adapter_pool is not None:
+            if adapters is not None:
+                raise ValueError(
+                    "pass adapters (merge-on-load AdapterStore) OR "
+                    "adapter_pool (merge-free), not both — the store "
+                    "survives only as the reference path the pool mode "
+                    "is token-identical to")
+            if family != "dense":
+                raise ValueError(
+                    f"adapter-pool serving is dense-family only (family="
+                    f"{family!r}): the per-slot overlay is threaded "
+                    f"through the dense attention + MLP projections")
+            if adapter_pool.layout is None:
+                raise ValueError(
+                    "the adapter pool has no layout yet — register at "
+                    "least one adapter before constructing the engine "
+                    "(the layout fixes the overlay geometry the compiled "
+                    "dispatches bake in)")
+            nl = mcfg.num_layers
+            for path, (_, ns, _) in adapter_pool.layout.slices().items():
+                parts = path.split("/")
+                ok = (len(parts) == 3 and parts[0] == "blocks"
+                      and ((parts[1] == "attn" and parts[2] in
+                            ("wq", "wk", "wv", "wo"))
+                           or (parts[1] == "mlp" and parts[2] in
+                               ("up", "gate", "down")))
+                      and ns == nl)
+                if not ok:
+                    raise ValueError(
+                        f"adapter-pool serving cannot overlay planned "
+                        f"tensor {path!r} (stack {ns}, model layers "
+                        f"{nl}): only the per-layer block projections "
+                        f"blocks/attn/{{wq,wk,wv,wo}} and "
+                        f"blocks/mlp/{{up,gate,down}} are composable "
+                        f"in-matmul — extract deltas with a plan that "
+                        f"excludes embeddings/head (include_embed=False)")
 
         if self._hybrid and cfg.exhaustion == "stall":
             raise ValueError(
@@ -130,7 +175,8 @@ class PagedEngine:
         self.sched = PagedScheduler(
             pool, B, exhaustion=cfg.exhaustion,
             prefix_cache=cfg.prefix_cache and family == "dense",
-            max_step_tokens=1 + self._spec_n)
+            max_step_tokens=1 + self._spec_n,
+            mixed_adapters=adapter_pool is not None)
 
         self.draft = None
         if self._spec_n:
@@ -156,6 +202,12 @@ class PagedEngine:
         else:
             self.kv = model.init_paged_cache(cfg.num_pages, ps)
         self.bt = np.zeros((B, self.nmax), np.int32)
+        if adapter_pool is not None:
+            ppa = adapter_pool.layout.pages_per_adapter
+            # per-slot adapter page table; all-zero row -> trash page ->
+            # all-sentinel delta -> base weights
+            self.apt = np.zeros((B, ppa), np.int32)
+            self._apages: list = [[] for _ in range(B)]
         self.positions = np.zeros((B,), np.int32)
         self.tokens = np.zeros((B, 1), np.int32)
         self.budget = np.zeros((B,), np.int32)
@@ -174,30 +226,64 @@ class PagedEngine:
         self.spec_slot_steps = 0                 # (sequence, dispatch) pairs
 
         backend = cfg.backend
-        self._decode_fn = jax.jit(
-            lambda p, t, kv, bt, pos: model.decode_paged(
-                p, t, kv, bt, pos, backend=backend))
-        if self._spec_n:
-            self._verify_fn = jax.jit(
-                lambda p, t, kv, bt, pos: model.decode_paged_multi(
+        if adapter_pool is not None:
+            # overlay-threaded dispatches: the per-slot adapter overlay
+            # is gathered from the pool pages INSIDE the jitted program
+            # (static layout slices), so mixing adapters never retraces
+            slices = adapter_pool.layout.slices()
+            nl, ovb = mcfg.num_layers, cfg.overlay_backend
+            ov_of = lambda ip, vp, apt: pool_overlay(ip, vp, apt, slices,
+                                                     nl)
+            self._decode_fn = jax.jit(
+                lambda p, t, kv, bt, pos, ip, vp, apt: model.decode_paged(
+                    p, t, kv, bt, pos, backend=backend,
+                    overlay=ov_of(ip, vp, apt), overlay_backend=ovb))
+            if self._spec_n:
+                self._verify_fn = jax.jit(
+                    lambda p, t, kv, bt, pos, ip, vp, apt:
+                    model.decode_paged_multi(
+                        p, t, kv, bt, pos, backend=backend,
+                        overlay=ov_of(ip, vp, apt), overlay_backend=ovb))
+            self._prefill_whole = jax.jit(
+                lambda p, b, kv, bt, sp, wu, lp, ip, vp, apt:
+                model.prefill_paged(
+                    p, b, kv, bt, start_pos=sp, write_upto=wu,
+                    last_pos=lp, whole_prompt=True,
+                    overlay=ov_of(ip, vp, apt), overlay_backend=ovb))
+            self._prefill_chunk_fn = jax.jit(
+                lambda p, b, kv, bt, sp, wu, lp, ip, vp, apt:
+                model.prefill_paged(
+                    p, b, kv, bt, start_pos=sp, write_upto=wu,
+                    last_pos=lp, whole_prompt=False,
+                    overlay=ov_of(ip, vp, apt), overlay_backend=ovb))
+        else:
+            self._decode_fn = jax.jit(
+                lambda p, t, kv, bt, pos: model.decode_paged(
                     p, t, kv, bt, pos, backend=backend))
-        self._prefill_whole = jax.jit(
-            lambda p, b, kv, bt, sp, wu, lp: model.prefill_paged(
-                p, b, kv, bt, start_pos=sp, write_upto=wu, last_pos=lp,
-                whole_prompt=True))
-        self._prefill_chunk_fn = jax.jit(
-            lambda p, b, kv, bt, sp, wu, lp: model.prefill_paged(
-                p, b, kv, bt, start_pos=sp, write_upto=wu, last_pos=lp,
-                whole_prompt=False))
+            if self._spec_n:
+                self._verify_fn = jax.jit(
+                    lambda p, t, kv, bt, pos: model.decode_paged_multi(
+                        p, t, kv, bt, pos, backend=backend))
+            self._prefill_whole = jax.jit(
+                lambda p, b, kv, bt, sp, wu, lp: model.prefill_paged(
+                    p, b, kv, bt, start_pos=sp, write_upto=wu, last_pos=lp,
+                    whole_prompt=True))
+            self._prefill_chunk_fn = jax.jit(
+                lambda p, b, kv, bt, sp, wu, lp: model.prefill_paged(
+                    p, b, kv, bt, start_pos=sp, write_upto=wu, last_pos=lp,
+                    whole_prompt=False))
 
     # ----------------------------------------------------------- client
     def submit(self, req: Request):
         if req.adapter_id is not None:
-            if self.adapters is None:
+            if self.apool is not None:
+                self.apool.check(req.adapter_id)  # fail fast if absent
+            elif self.adapters is None:
                 raise ValueError(
                     f"request {req.uid} names adapter {req.adapter_id!r} "
-                    f"but the engine has no AdapterStore")
-            self.adapters.params_for(req.adapter_id)  # fail fast if absent
+                    f"but the engine has no AdapterStore or adapter pool")
+            else:
+                self.adapters.params_for(req.adapter_id)  # fail fast
         req.out_tokens = []
         if len(req.prompt) + 1 > self.cfg.max_len:
             req.error = (f"prompt length {len(req.prompt)} exceeds "
@@ -250,17 +336,35 @@ class PagedEngine:
             req = self.sched.pop_next(self.active_adapter)
             if req is None:
                 return
-            try:
-                self._activate(req.adapter_id)
-            except KeyError as e:       # LRU-evicted between submit/admit
-                req.error = str(e)
-                req.out_tokens = req.out_tokens or []
-                self.done.append(req)
-                continue
+            apages = []
+            if self.apool is not None:
+                # merge-free: pin the adapter's delta pages for the
+                # request's lifetime (prefetch-on-admission — cache hits
+                # cost nothing); params stay the base weights
+                apages = self.apool.acquire(req.adapter_id)
+                if apages is None:      # adapter pool exhausted: wait
+                    self.sched.requeue_front(req)
+                    return
+            else:
+                try:
+                    self._activate(req.adapter_id)
+                except KeyError as e:   # LRU-evicted between submit/admit
+                    req.error = str(e)
+                    req.out_tokens = req.out_tokens or []
+                    self.done.append(req)
+                    continue
             seq = self.sched.place(req, free[0])
             if seq is None:             # page-aware admission: wait
+                if self.apool is not None:
+                    self.apool.release(apages)
                 self.sched.requeue_front(req)
                 return
+            if self.apool is not None:
+                slot = seq.slot
+                self._apages[slot] = apages
+                self.apt[slot] = 0
+                for j, p in enumerate(apages):
+                    self.apt[slot, j] = p
             self._start_prefill(seq)
 
     # ----------------------------------------------------------- prefill
@@ -336,6 +440,12 @@ class PagedEngine:
                             jnp.int32(last))
             self.kv = ZambaCache(_splice(self.kv.mamba, c1.mamba, slot),
                                  c1.kv)
+        elif self.apool is not None:
+            logits, self.kv = fn(self.params, batch, self.kv, bt_row,
+                                 jnp.int32(start), jnp.int32(S),
+                                 jnp.int32(last), self.apool.idx_pages,
+                                 self.apool.val_pages,
+                                 jnp.asarray(self.apt[slot:slot + 1]))
         else:
             logits, self.kv = fn(self.params, batch, self.kv, bt_row,
                                  jnp.int32(start), jnp.int32(S),
@@ -425,9 +535,22 @@ class PagedEngine:
         if 1 not in self._seen_decode:
             self._seen_decode.add(1)
             self.decode_compilations += 1
-        logits, self.kv = self._decode_fn(
-            self.params, jnp.asarray(tok_d), self.kv, jnp.asarray(bt_d),
-            jnp.asarray(pos_d))
+        if self.apool is not None:
+            # inactive rows keep an all-zero adapter page table: the
+            # trash page's all-sentinel delta composes to exactly the
+            # base weights
+            apt_d = np.zeros_like(self.apt)
+            for slot in live:
+                apt_d[slot] = self.apt[slot]
+            logits, self.kv = self._decode_fn(
+                self.params, jnp.asarray(tok_d), self.kv,
+                jnp.asarray(bt_d), jnp.asarray(pos_d),
+                self.apool.idx_pages, self.apool.val_pages,
+                jnp.asarray(apt_d))
+        else:
+            logits, self.kv = self._decode_fn(
+                self.params, jnp.asarray(tok_d), self.kv,
+                jnp.asarray(bt_d), jnp.asarray(pos_d))
         logits = np.asarray(logits[:, 0])
         self.decode_steps += 1
         for slot in live:
@@ -510,9 +633,19 @@ class PagedEngine:
         if M not in self._seen_decode:
             self._seen_decode.add(M)
             self.decode_compilations += 1
-        logits, self.kv = self._verify_fn(
-            self.params, jnp.asarray(tok_d), self.kv, jnp.asarray(bt_d),
-            jnp.asarray(pos_d))
+        if self.apool is not None:
+            apt_d = np.zeros_like(self.apt)
+            for slot in live:
+                apt_d[slot] = self.apt[slot]
+            logits, self.kv = self._verify_fn(
+                self.params, jnp.asarray(tok_d), self.kv,
+                jnp.asarray(bt_d), jnp.asarray(pos_d),
+                self.apool.idx_pages, self.apool.val_pages,
+                jnp.asarray(apt_d))
+        else:
+            logits, self.kv = self._verify_fn(
+                self.params, jnp.asarray(tok_d), self.kv,
+                jnp.asarray(bt_d), jnp.asarray(pos_d))
         logits = np.asarray(logits)              # (B, M, V)
         self.decode_steps += 1
         self.spec_slot_steps += len(live)
@@ -556,6 +689,13 @@ class PagedEngine:
         self.positions[slot] = 0
         self.tokens[slot, 0] = 0
         self.budget[slot] = 0
+        if self.apool is not None:
+            # drop the in-flight references; the pages stay cached until
+            # LRU pressure evicts them (a preempted request re-acquires
+            # on re-admission — usually pure cache hits)
+            self.apool.release(self._apages[slot])
+            self._apages[slot] = []
+            self.apt[slot] = 0
 
     # ------------------------------------------------------------- stats
     def _note_live(self):
@@ -596,6 +736,12 @@ class PagedEngine:
             "stalls": self.sched.stalls,
             "evictions": pool.evictions,
         }
+
+    def pool_stats(self) -> dict:
+        """Adapter-pool accounting (merge-free serving): residency,
+        bytes per adapter vs one dense merged copy, upload/eviction
+        counts.  Empty when the engine runs merge-on-load."""
+        return self.apool.stats() if self.apool is not None else {}
 
     def spec_stats(self) -> dict:
         """Speculative-decode accounting for the bench rows: acceptance

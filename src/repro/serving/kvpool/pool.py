@@ -121,3 +121,7 @@ class KVPool:
 
     def cached_pages(self) -> int:
         return len(self._cached)
+
+    def cached_chains(self) -> list:
+        """Chain keys currently published, LRU order (oldest first)."""
+        return list(self._cached)

@@ -56,7 +56,7 @@ class PagedScheduler:
 
     def __init__(self, pool: KVPool, batch_slots: int, *,
                  exhaustion: str = "preempt", prefix_cache: bool = False,
-                 max_step_tokens: int = 1):
+                 max_step_tokens: int = 1, mixed_adapters: bool = False):
         if exhaustion not in ("preempt", "stall"):
             raise ValueError(f"unknown exhaustion policy {exhaustion!r} "
                              f"(expected 'preempt' or 'stall')")
@@ -72,6 +72,10 @@ class PagedScheduler:
         # grow() refuses a larger request instead of silently
         # under-allocating
         self.max_step_tokens = max_step_tokens
+        # merge-free adapter-pool serving composes each slot's delta in
+        # the forward pass, so a decode batch may mix adapters freely —
+        # admission is plain FIFO instead of same-adapter filtered
+        self.mixed_adapters = mixed_adapters
         self.queue: list[Request] = []
         self.seqs: list[Optional[SeqState]] = [None] * batch_slots
         self._order = 0
@@ -92,10 +96,12 @@ class PagedScheduler:
 
     def pop_next(self, active_adapter) -> Optional[Request]:
         """FIFO within the batch's active adapter; an idle batch may
-        switch adapters (the engine activates on placement)."""
+        switch adapters (the engine activates on placement).  With
+        `mixed_adapters` (adapter-pool serving) the filter drops away —
+        plain FIFO regardless of what the busy slots serve."""
         if not self.queue:
             return None
-        if not self.busy():
+        if self.mixed_adapters or not self.busy():
             return self.queue.pop(0)
         for i, r in enumerate(self.queue):
             if r.adapter_id == active_adapter:

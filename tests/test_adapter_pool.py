@@ -1,0 +1,443 @@
+"""Merge-free adapter-pool serving (DESIGN.md §5, docs/SERVING.md).
+
+The contract under test, layer by layer:
+
+  * `ops.overlay_matmul` / `ops.delta_matmul` (lax AND kernel backends)
+    compose a per-slot sparse delta into the base matmul bitwise-equal
+    to `ref.delta_matmul` (dense merge-then-matmul per slot), with
+    all-sentinel slots riding the base weights untouched;
+  * `deltas.PoolLayout.pack` stores MERGED resident values: composing a
+    packed entry into the base reproduces `DeltaMerger` bit for bit —
+    replace, add, and fp16 (format v2) artifacts alike;
+  * the `AdapterPool` never evicts a page an in-flight request holds
+    (the KVPool refs==1-only invariant), survives an admit/evict/
+    complete fuzz against a host-side model of its bookkeeping, and
+    refuses wrong-base / wrong-geometry artifacts;
+  * end to end: a PagedEngine decode batch MIXING adapters per slot
+    through the pool is token-identical to merge-on-load AdapterStore
+    serving at greedy AND sampled temperatures, with speculation on or
+    off, and under eviction churn in a pool sized for one adapter.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.lift import LiftConfig, get_by_path, make_plan
+from repro.data.synthetic import VOCAB_SIZE
+from repro.deltas import DeltaArtifact, DeltaMismatchError, PoolLayout
+from repro.deltas.format import make_manifest, num_stack, tree_hash
+from repro.deltas.merge import DeltaMerger
+from repro.deltas.pool_layout import SENTINEL_IDX
+from repro.kernels import ops, ref
+from repro.models import ModelConfig, build_model
+from repro.serving.engine import AdapterStore, Request
+from repro.serving.kvpool import (AdapterPool, PagedEngine,
+                                  PagedEngineConfig, pool_overlay)
+
+CFG = ModelConfig(family="dense", num_layers=2, d_model=64, num_heads=4,
+                  num_kv_heads=2, head_dim=16, d_ff=128,
+                  vocab_size=max(VOCAB_SIZE, 97))
+ENTRIES = 512
+
+
+def _model_params(seed=0):
+    model = build_model(CFG)
+    return model, model.init(jax.random.PRNGKey(seed))
+
+
+def _prompts(n, seed=3, lo=3, hi=33):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(3, 90, size=int(s)).astype(np.int32)
+            for s in rng.integers(lo, hi, size=n)]
+
+
+def _plan_meta(model, density=0.05):
+    plan = make_plan(model.spec(), LiftConfig(density=density, min_dim=16))
+    return {p: {"shape": list(t.shape), "stack": list(t.stack),
+                "rows": t.rows, "cols": t.cols, "k": t.k,
+                "dtype": "float32"} for p, t in sorted(plan.items())}
+
+
+def _synthetic_adapter(base_params, meta, seed, *, mode="replace",
+                       base_hash=None, value_dtype=None):
+    """A delta artifact perturbing the base at random planned indices —
+    real extract geometry without the training loop."""
+    rng = np.random.default_rng(seed)
+    meta = {p: dict(m) for p, m in meta.items()}
+    tensors = {}
+    for path, m in meta.items():
+        ns, k = num_stack(m), m["k"]
+        size = m["rows"] * m["cols"]
+        idx = np.stack([np.sort(rng.choice(size, k, replace=False))
+                        for _ in range(ns)]).astype(np.int32)
+        noise = rng.normal(scale=0.05, size=(ns, k)).astype(np.float32)
+        if mode == "replace":
+            base = np.asarray(get_by_path(base_params, path),
+                              np.float32).reshape(ns, size)
+            val = np.take_along_axis(base, idx, 1) + noise
+        else:
+            val = noise
+        if value_dtype is not None:
+            val = val.astype(np.dtype(value_dtype))
+            m["value_dtype"] = value_dtype
+        tensors[path] = {"idx": idx, "val": val.astype(val.dtype)}
+    return DeltaArtifact(
+        manifest=make_manifest(
+            mode=mode,
+            base_hash=base_hash or tree_hash(base_params),
+            selection=None, tensors_meta=meta, step=0),
+        tensors=tensors)
+
+
+# ------------------------------------------------------- op-level bitwise
+@pytest.mark.parametrize("backend", ["lax", "kernel"])
+def test_overlay_matmul_bitwise_vs_ref(backend):
+    """Both delta-matmul backends match the dense merge-then-matmul
+    oracle bitwise, and an all-sentinel slot rides the base weights."""
+    rng = np.random.default_rng(0)
+    d, f, B, k = 32, 48, 3, 24
+    x = jnp.asarray(rng.normal(size=(B, d)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(d, f)).astype(np.float32))
+    idx = np.stack([np.sort(rng.choice(d * f, k, replace=False))
+                    for _ in range(B)]).astype(np.int32)
+    idx[1] = SENTINEL_IDX                   # base-only slot
+    val = rng.normal(size=(B, k)).astype(np.float32)
+    idxj, valj = jnp.asarray(idx), jnp.asarray(val)
+
+    want = ref.delta_matmul(x, w, idxj, valj)
+    got = ops.delta_matmul(x, w, idxj, valj, backend=backend)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    ov = {"idx": idxj, "val": valj}
+    got2 = ops.overlay_matmul(x, w, ov, backend=backend)
+    np.testing.assert_array_equal(np.asarray(got2), np.asarray(want))
+    # the sentinel slot is exactly the base matmul row
+    np.testing.assert_array_equal(np.asarray(got[1]),
+                                  np.asarray(x @ w)[1])
+    # decode shape (B, 1, d) and overlay None
+    got3 = ops.overlay_matmul(x[:, None, :], w, ov, backend=backend)
+    np.testing.assert_array_equal(np.asarray(got3[:, 0]), np.asarray(want))
+    np.testing.assert_array_equal(
+        np.asarray(ops.overlay_matmul(x, w, None)), np.asarray(x @ w))
+
+
+# ------------------------------------------------ layout resident values
+@pytest.mark.parametrize("mode, value_dtype", [
+    ("replace", None), ("add", None), ("replace", "float16"),
+])
+def test_pool_layout_resident_values_match_merger(mode, value_dtype):
+    """Scattering a packed adapter's resident (idx, val) entries into
+    the base reproduces the DeltaMerger merged tree bit for bit —
+    replace ships values, add gathers base[idx] + val in fp32, fp16
+    values upcast exactly (format v2)."""
+    rng = np.random.default_rng(1)
+    meta = {
+        "a/w": {"shape": [2, 16, 24], "stack": [2], "rows": 16,
+                "cols": 24, "k": 10, "dtype": "float32"},
+        "b/w": {"shape": [32, 20], "stack": [], "rows": 32,
+                "cols": 20, "k": 7, "dtype": "float32"},
+    }
+    base = {p: rng.normal(size=m["shape"]).astype(np.float32)
+            for p, m in meta.items()}
+    art = _synthetic_adapter(base, meta, seed=2, mode=mode,
+                             value_dtype=value_dtype)
+    merged = DeltaMerger(art.manifest["tensors"],
+                         backend="ref").merge(base, art)
+
+    lay = PoolLayout(art.manifest["tensors"], entries_per_page=64)
+    idx_pages, val_pages = lay.pack(base, art)
+    flat_idx = idx_pages.reshape(-1)
+    flat_val = val_pages.reshape(-1)
+    for p, (off, ns, k) in lay.slices().items():
+        m = meta[p]
+        size = m["rows"] * m["cols"]
+        ii = jnp.asarray(flat_idx[off:off + ns * k].reshape(ns, k))
+        vv = jnp.asarray(flat_val[off:off + ns * k].reshape(ns, k))
+        b2 = jnp.asarray(base[p]).reshape(ns, size)
+        # resident values are pre-merged: composing is always "replace"
+        got = ref.sparse_scatter_merge(b2, ii, vv, mode="replace")
+        np.testing.assert_array_equal(
+            np.asarray(got).reshape(m["shape"]),
+            np.asarray(get_by_path(merged, p)), err_msg=p)
+    # tail slots beyond the last tensor pad with the sentinel
+    assert (flat_idx[lay.total_entries:] == int(SENTINEL_IDX)).all()
+
+
+def test_pool_overlay_gather_shapes():
+    """pool_overlay turns (P, E) pages + a (B, ppa) page table into the
+    (L, B, k) overlay leaves the scanned forward consumes; the all-zero
+    row gathers the trash page's sentinels."""
+    model, params = _model_params()
+    meta = _plan_meta(model)
+    apool = AdapterPool(params, num_pages=17, entries_per_page=ENTRIES)
+    apool.register("a", _synthetic_adapter(params, meta, seed=3))
+    pages = apool.acquire("a")
+    ppa = apool.layout.pages_per_adapter
+    apt = np.zeros((2, ppa), np.int32)
+    apt[0] = pages                           # slot 0: adapter, slot 1: base
+    ov = pool_overlay(apool.idx_pages, apool.val_pages,
+                      jnp.asarray(apt), apool.layout.slices(),
+                      CFG.num_layers)
+    assert set(ov) == {"attn", "mlp"}
+    assert set(ov["attn"]) == {"wq", "wk", "wv", "wo"}
+    assert set(ov["mlp"]) == {"up", "gate", "down"}
+    for grp in ov.values():
+        for nm, leaf in grp.items():
+            k = leaf["idx"].shape[-1]
+            assert leaf["idx"].shape == (CFG.num_layers, 2, k)
+            assert leaf["val"].shape == (CFG.num_layers, 2, k)
+            # base slot: every entry is the sentinel no-op
+            assert (np.asarray(leaf["idx"])[:, 1] == int(SENTINEL_IDX)).all()
+    apool.release(pages)
+
+
+# --------------------------------------------------- residency invariants
+def test_pool_never_evicts_referenced_pages():
+    """A pool at capacity must make a new adapter WAIT (acquire -> None)
+    rather than evict pages held by in-flight requests; releasing the
+    holders makes the same acquire succeed via LRU eviction."""
+    model, params = _model_params()
+    meta = _plan_meta(model)
+    # size for exactly ONE adapter
+    probe = PoolLayout(meta, entries_per_page=ENTRIES)
+    apool = AdapterPool(params, num_pages=probe.pages_per_adapter + 1,
+                        entries_per_page=ENTRIES)
+    apool.register("a", _synthetic_adapter(params, meta, seed=4))
+    apool.register("b", _synthetic_adapter(params, meta, seed=5))
+    held = apool.acquire("a")
+    assert held and len(held) == apool.layout.pages_per_adapter
+    assert apool.resident_adapters() == 1
+    assert apool.acquire("b") is None        # never evicts referenced
+    assert apool.resident_adapters() == 1    # rollback left "a" intact
+    # a second in-flight reference to the SAME adapter is free (cache hit)
+    held2 = apool.acquire("a")
+    assert held2 == held
+    assert apool.uploads == apool.layout.pages_per_adapter
+    apool.release(held)
+    assert apool.acquire("b") is None        # held2 still pins the pages
+    apool.release(held2)
+    got_b = apool.acquire("b")               # idle "a" LRU-evicts now
+    assert got_b is not None
+    assert apool.pool.evictions == apool.layout.pages_per_adapter
+    assert apool.resident_adapters() == 1
+    apool.release(got_b)
+
+
+def test_pool_admit_evict_complete_fuzz():
+    """Randomized acquire/release against a host-side model of the
+    bookkeeping: refcounts = holders + cache ref, held adapters' pages
+    stay disjoint and device-resident, acquire fails only when the
+    unreferenced-cached + free pages cannot fund an adapter."""
+    model, params = _model_params()
+    meta = _plan_meta(model, density=0.01)
+    probe = PoolLayout(meta, entries_per_page=ENTRIES)
+    ppa = probe.pages_per_adapter
+    n_adapters, capacity = 6, 3              # room for 3 of 6 adapters
+    apool = AdapterPool(params, num_pages=1 + capacity * ppa,
+                        entries_per_page=ENTRIES)
+    packed = {}
+    for i in range(n_adapters):
+        aid = f"ad{i}"
+        apool.register(aid, _synthetic_adapter(params, meta,
+                                               seed=100 + i))
+        packed[aid] = apool._packed[aid]
+    rng = np.random.default_rng(6)
+    held: list = []                          # (adapter_id, pages)
+    for step in range(200):
+        if held and rng.random() < 0.4:
+            aid, pages = held.pop(rng.integers(len(held)))
+            apool.release(pages)
+        else:
+            aid = f"ad{rng.integers(n_adapters)}"
+            pages = apool.acquire(aid)
+            if pages is None:
+                # exhaustion must be REAL: pages pinned by holders alone
+                # already crowd out one more adapter
+                pinned = {p for _, pg in held for p in pg}
+                assert (apool.num_pages - 1 - len(pinned)) < ppa or \
+                    len({a for a, _ in held}) >= capacity
+                continue
+            held.append((aid, pages))
+        # ---- invariants after every op
+        holders: dict = {}
+        for a, pg in held:
+            for p in pg:
+                holders[p] = holders.get(p, 0) + 1
+        cached = {apool.pool._cached[c] for c in apool.pool.cached_chains()}
+        for p in range(1, apool.num_pages):
+            want = holders.get(p, 0) + (1 if p in cached else 0)
+            assert apool.pool.refs[p] == want, (step, p)
+        by_adapter: dict = {}
+        for a, pg in held:
+            if a in by_adapter:
+                assert by_adapter[a] == pg   # same pages per adapter
+            by_adapter[a] = pg
+        pages_of = {a: set(pg) for a, pg in by_adapter.items()}
+        for a, sa in pages_of.items():
+            for b, sb in pages_of.items():
+                if a != b:
+                    assert not (sa & sb), (a, b)
+        assert apool.resident_adapters() <= capacity
+    # content spot-check: every held adapter's device pages equal its
+    # packed images
+    idx_host = np.asarray(apool.idx_pages)
+    val_host = np.asarray(apool.val_pages)
+    for aid, pages in held:
+        idx_img, val_img = packed[aid]
+        for i, p in enumerate(pages):
+            np.testing.assert_array_equal(idx_host[p], idx_img[i])
+            np.testing.assert_array_equal(val_host[p], val_img[i])
+    for _, pages in held:
+        apool.release(pages)
+
+
+# ---------------------------------------------------------------- refusals
+def test_register_refuses_wrong_base_and_geometry():
+    model, params = _model_params()
+    meta = _plan_meta(model)
+    apool = AdapterPool(params, num_pages=17, entries_per_page=ENTRIES)
+    # wrong base hash
+    with pytest.raises(DeltaMismatchError, match="base"):
+        apool.register("x", _synthetic_adapter(params, meta, seed=7,
+                                               base_hash="f" * 64))
+    # geometry drift: same paths, different k
+    apool.register("a", _synthetic_adapter(params, meta, seed=8))
+    drifted = {p: dict(m, k=m["k"] + 8) for p, m in meta.items()}
+    with pytest.raises(DeltaMismatchError, match="geometry|plan"):
+        apool.register("y", _synthetic_adapter(params, drifted, seed=9))
+    # a pool too small for even one adapter refuses at layout fix time
+    tiny = AdapterPool(params, num_pages=2, entries_per_page=ENTRIES)
+    with pytest.raises(ValueError, match="num_pages"):
+        tiny.register("a", _synthetic_adapter(params, meta, seed=8))
+
+
+def test_engine_pool_refusals():
+    model, params = _model_params()
+    meta = _plan_meta(model)
+    apool = AdapterPool(params, num_pages=17, entries_per_page=ENTRIES)
+    apool.register("a", _synthetic_adapter(params, meta, seed=10))
+    cfg = PagedEngineConfig(batch_slots=2, max_len=64, eos_id=2,
+                            page_size=8, num_pages=24)
+    # store and pool together
+    with pytest.raises(ValueError, match="not both"):
+        PagedEngine(model, params, cfg, adapters=AdapterStore(params),
+                    adapter_pool=apool)
+    # layout-less pool (nothing registered)
+    empty = AdapterPool(params, num_pages=17, entries_per_page=ENTRIES)
+    with pytest.raises(ValueError, match="no layout"):
+        PagedEngine(model, params, cfg, adapter_pool=empty)
+    # a plan covering a non-overlayable tensor (vocab-axis embed)
+    bad_meta = dict(meta)
+    bad_meta["embed/w"] = {"shape": [CFG.vocab_size, 64], "stack": [],
+                           "rows": CFG.vocab_size, "cols": 64, "k": 8,
+                           "dtype": "float32"}
+    bad_pool = AdapterPool(params, num_pages=33, entries_per_page=ENTRIES,
+                           validate=False)
+    bad_pool.layout = PoolLayout(bad_meta, entries_per_page=ENTRIES)
+    with pytest.raises(ValueError, match="embed"):
+        PagedEngine(model, params, cfg, adapter_pool=bad_pool)
+    # non-dense family
+    moe_cfg = ModelConfig(family="moe", num_layers=2, d_model=64,
+                          num_heads=4, num_kv_heads=2, head_dim=16,
+                          d_ff=128, vocab_size=max(VOCAB_SIZE, 97),
+                          num_experts=4, num_experts_per_tok=2)
+    moe = build_model(moe_cfg)
+    moe_params = moe.init(jax.random.PRNGKey(0))
+    moe_pool = AdapterPool(moe_params, num_pages=17,
+                           entries_per_page=ENTRIES, validate=False)
+    moe_pool.layout = apool.layout
+    with pytest.raises(ValueError, match="dense"):
+        PagedEngine(moe, moe_params, cfg, adapter_pool=moe_pool)
+    # unregistered adapter fails fast at submit
+    eng = PagedEngine(model, params, cfg, adapter_pool=apool)
+    with pytest.raises(KeyError):
+        eng.submit(Request(uid=0, prompt=np.arange(4, dtype=np.int32),
+                           adapter_id="ghost"))
+
+
+# ------------------------------------------------------------- end to end
+def _serve_paged(model, params, prompts, ids, temps, *, apool=None,
+                 store=None, num_pages=9999, speculate=0, max_new=8):
+    eng = PagedEngine(model, params, PagedEngineConfig(
+        batch_slots=3, max_len=64, eos_id=2, page_size=8,
+        num_pages=min(num_pages, 40), speculate=speculate,
+        draft_source="ngram"), adapters=store, adapter_pool=apool)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=p, max_new_tokens=max_new,
+                           temperature=temps[i], adapter_id=ids[i]))
+    mixed = 0
+    while eng.sched.has_work():
+        eng.step()
+        live = {s.req.adapter_id for s in eng.sched.seqs
+                if s is not None and s.phase == "decode"
+                and s.req.adapter_id is not None}
+        mixed = max(mixed, len(live))
+    assert len(eng.done) == len(prompts)
+    assert not any(r.error for r in eng.done)
+    return {r.uid: tuple(r.out_tokens) for r in eng.done}, mixed, eng
+
+
+def test_pool_serving_token_identical_to_merge_on_load():
+    """The acceptance proof: a decode batch mixing two adapters and the
+    base through the pool — greedy and sampled temperatures in one run —
+    is token-identical to merge-on-load AdapterStore serving, with and
+    without speculation, and the base weights never move."""
+    model, params = _model_params()
+    meta = _plan_meta(model)
+    arts = {aid: _synthetic_adapter(params, meta, seed)
+            for aid, seed in (("a", 11), ("b", 22))}
+    apool = AdapterPool(params, num_pages=24, entries_per_page=ENTRIES)
+    for aid, art in arts.items():
+        apool.register(aid, art)
+    store = AdapterStore(params)
+    for aid, art in arts.items():
+        store.load(aid, art)
+
+    prompts = _prompts(6, seed=5)
+    ids = ["a", "b", None, "a", "b", "a"]
+    temps = [0.0, 0.8, 0.0, 0.7, 0.0, 0.9]
+    got, mixed, eng = _serve_paged(model, params, prompts, ids, temps,
+                                   apool=apool)
+    want, _, _ = _serve_paged(model, params, prompts, ids, temps,
+                              store=store)
+    assert got == want
+    assert mixed >= 2                        # the batch actually mixed
+    assert eng.params is params              # base never replaced
+    # speculation changes dispatch shape, never the streams
+    spec, _, eng_s = _serve_paged(model, params, prompts, ids, temps,
+                                  apool=apool, speculate=2)
+    assert spec == want
+    assert eng_s.decode_compilations == 1
+
+
+def test_pool_eviction_churn_keeps_streams_identical():
+    """A pool with room for ONE adapter serving a two-adapter workload:
+    requests wait for pages, idle adapters are LRU-evicted and
+    re-uploaded, and every token stream still matches the
+    eviction-free run."""
+    model, params = _model_params()
+    meta = _plan_meta(model)
+    arts = {aid: _synthetic_adapter(params, meta, seed)
+            for aid, seed in (("a", 11), ("b", 22))}
+
+    def pool(n_pages):
+        ap = AdapterPool(params, num_pages=n_pages,
+                         entries_per_page=ENTRIES)
+        for aid, art in arts.items():
+            ap.register(aid, art)
+        return ap
+
+    prompts = _prompts(4, seed=8)
+    ids = ["a", "b", "a", "b"]
+    temps = [0.0, 0.6, 0.0, 0.6]
+    big = pool(24)
+    want, _, _ = _serve_paged(model, params, prompts, ids, temps,
+                              apool=big)
+    ppa = big.layout.pages_per_adapter
+    tight = pool(ppa + 1)
+    got, _, eng = _serve_paged(model, params, prompts, ids, temps,
+                               apool=tight)
+    assert got == want
+    assert tight.pool.evictions >= ppa       # churn actually happened
+    assert tight.uploads > ppa * 2 - 1       # "a"/"b" re-uploaded
+    assert eng.pool_stats()["resident_adapters"] <= 1

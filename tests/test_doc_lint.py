@@ -1,0 +1,82 @@
+"""Doc lint (tools/doc_lint.py, docs/CI.md): the repo's markdown carries
+no dead intra-repo paths, no citations of DESIGN.md sections that don't
+exist, and no broken relative links/anchors — and the checker itself
+still detects each failure class (so a lint regression can't silently
+pass by detecting nothing)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "tools"))
+
+import doc_lint  # noqa: E402
+
+
+def test_repo_markdown_is_clean():
+    errs = doc_lint.lint_repo(ROOT)
+    assert errs == [], "\n".join(errs)
+
+
+def test_cli_exit_status():
+    r = subprocess.run([sys.executable,
+                        os.path.join(ROOT, "tools", "doc_lint.py")],
+                       cwd=ROOT, capture_output=True, text=True)
+    assert r.returncode == 0, r.stderr
+
+
+@pytest.fixture
+def toy_repo(tmp_path):
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "src" / "repro" / "kernels").mkdir(parents=True)
+    (tmp_path / "src" / "repro" / "kernels" / "ops.py").write_text("")
+    (tmp_path / "docs" / "OK.md").write_text("# ok\n\n## Real heading\n")
+    (tmp_path / "DESIGN.md").write_text(
+        "# D\n\n## §1 Overview\n\n## §2 More\n\nbody\n")
+    return tmp_path
+
+
+def _lint(root, name, text):
+    (root / name).write_text(text)
+    return doc_lint.lint_repo(str(root))
+
+
+def test_clean_toy_repo(toy_repo):
+    errs = _lint(toy_repo, "GOOD.md",
+                 "see `kernels/ops.py` / `src/repro/kernels/ops.py` "
+                 "(DESIGN.md §2), [link](docs/OK.md#real-heading), "
+                 "`kernels/ops.py:helper`, external `foo/bar.py`, "
+                 "glob `kernels/*.py`, `--flag`, `/abs/path.py`\n")
+    assert errs == []
+
+
+def test_detects_dead_path(toy_repo):
+    errs = _lint(toy_repo, "BAD.md", "see `kernels/nope.py`\n")
+    assert len(errs) == 1 and "kernels/nope.py" in errs[0]
+
+
+def test_detects_bad_section_cite(toy_repo):
+    errs = _lint(toy_repo, "BAD.md", "per DESIGN.md §9 the pool...\n")
+    assert len(errs) == 1 and "§9" in errs[0]
+    # bare §N citations are checked inside DESIGN.md itself
+    (toy_repo / "BAD.md").write_text("fixed\n")
+    errs = _lint(toy_repo, "DESIGN.md",
+                 "# D\n\n## §1 Overview\n\nsee §3\n")
+    assert len(errs) == 1 and "§3" in errs[0]
+
+
+def test_detects_broken_link_and_anchor(toy_repo):
+    errs = _lint(toy_repo, "BAD.md",
+                 "[a](docs/MISSING.md) [b](docs/OK.md#not-a-heading)\n")
+    assert len(errs) == 2
+    assert any("MISSING.md" in e for e in errs)
+    assert any("#not-a-heading" in e for e in errs)
+
+
+def test_member_and_dir_references_resolve(toy_repo):
+    errs = _lint(toy_repo, "GOOD.md",
+                 "`kernels/ops.helper` and `kernels/` and "
+                 "`src/repro/kernels/`\n")
+    assert errs == []

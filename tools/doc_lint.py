@@ -1,0 +1,223 @@
+#!/usr/bin/env python
+"""Doc lint: dead intra-repo references in the repo's markdown (docs/CI.md).
+
+Three checks, all conservative (a reference is only flagged when it
+POSITIVELY looks intra-repo and provably resolves to nothing):
+
+1. Backtick path references — `` `src/repro/deltas/format.py` ``,
+   `` `kvpool/pool.py` ``, `` `core/selection.py::SelectionEngine` ``.
+   A candidate is checked only when its first path segment is a
+   directory that actually exists in the tree (or the whole token is a
+   tracked root-level file); it resolves if some tracked path ends with
+   it.  Everything else — external paths, module dotted names, flags,
+   globs, generated `BENCH_*.json` artifacts — is skipped, never
+   guessed at.
+2. `DESIGN.md §N` citations (and bare `§N` inside DESIGN.md itself)
+   must point at a section number DESIGN.md defines (`## §N` headings).
+3. Markdown links `[text](target)` with a relative target must point at
+   an existing file/directory, and a `#fragment` on a markdown target
+   must match a heading anchor in that file (GitHub slugging).  http(s)
+   links are never fetched.
+
+Exit 0 = clean; exit 1 prints `file:line: message` per dead reference.
+Driver-owned retrieval docs (PAPER/PAPERS/SNIPPETS/ISSUE) quote other
+repos' paths by design and are excluded, as is `.claude/`.
+
+Usage: python tools/doc_lint.py [--root DIR] [FILES...]
+Runs in CI's lint job (blocking) and in tier 1 via
+tests/test_doc_lint.py.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+
+EXCLUDE = {"PAPER.md", "PAPERS.md", "SNIPPETS.md", "ISSUE.md"}
+EXCLUDE_DIRS = (".claude/", ".git/")
+
+BACKTICK = re.compile(r"`([^`\s]+)`")
+SECTION_CITE = re.compile(r"DESIGN\.md §(\d+)")
+BARE_SECTION = re.compile(r"§(\d+)")
+SECTION_DEF = re.compile(r"^## §(\d+)\b", re.M)
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING = re.compile(r"^#{1,6}\s+(.*?)\s*$", re.M)
+
+# characters that mark a token as a pattern/placeholder, not a path
+NON_PATH = set("<>{}*$|\\\"'")
+
+
+def tracked_files(root: str) -> list[str]:
+    """Tracked + untracked-unignored files, '/'-separated, repo-relative."""
+    try:
+        out = subprocess.run(
+            ["git", "ls-files", "--cached", "--others", "--exclude-standard"],
+            cwd=root, capture_output=True, text=True, check=True).stdout
+        files = [l for l in out.splitlines() if l]
+    except (OSError, subprocess.CalledProcessError):
+        files = []
+        for dirpath, dirnames, filenames in os.walk(root):
+            rel = os.path.relpath(dirpath, root).replace(os.sep, "/")
+            rel = "" if rel == "." else rel + "/"
+            dirnames[:] = [d for d in dirnames if d != ".git"]
+            files.extend(rel + f for f in filenames)
+    return [f for f in files if not f.startswith(EXCLUDE_DIRS)]
+
+
+def _strip(token: str) -> str:
+    """Drop `::member` / `:line` / `:func` suffixes and punctuation."""
+    token = token.split(":")[0]
+    return token.rstrip(".,;:!?)")
+
+
+class Repo:
+    def __init__(self, root: str, files: list[str]):
+        self.root = root
+        self.files = files
+        self.file_set = set(files)
+        # every directory name appearing anywhere in the tree: the
+        # "looks intra-repo" signal for multi-segment candidates
+        self.dir_names: set[str] = set()
+        self.dirs: set[str] = set()
+        for f in files:
+            parts = f.split("/")[:-1]
+            self.dir_names.update(parts)
+            for i in range(1, len(parts) + 1):
+                self.dirs.add("/".join(parts[:i]))
+        self.root_files = {f for f in files if "/" not in f}
+
+    def resolves(self, cand: str) -> bool:
+        if cand.endswith("/"):
+            d = cand.rstrip("/")
+            return any(p == d or p.endswith("/" + d) for p in self.dirs)
+        if cand in self.file_set:
+            return True
+        suffix = "/" + cand
+        if any(p.endswith(suffix) for p in self.files):
+            return True
+        # `benchmarks/common.write_bench_json`-style module members:
+        # peel trailing `.attr` pieces and retry with a `.py` suffix
+        while "." in cand.rsplit("/", 1)[-1]:
+            cand = cand.rsplit(".", 1)[0]
+            for probe in (cand, cand + ".py"):
+                if probe in self.file_set or any(
+                        p.endswith("/" + probe) for p in self.files):
+                    return True
+        return False
+
+    def check_token(self, token: str):
+        """Error string for a dead intra-repo path, else None."""
+        cand = _strip(token)
+        if (not cand or NON_PATH & set(cand) or cand.startswith(("/", "-"))
+                or "//" in cand or cand.startswith(("http:", "https:"))):
+            return None
+        if "/" not in cand:
+            # single segment: only root-level docs are checkable; a
+            # bare name that isn't one could be anything — skip
+            if cand in self.root_files:
+                return None
+            if re.fullmatch(r"[A-Z]+[A-Z_]*\.md", cand) and \
+                    cand not in EXCLUDE:
+                return f"dead root doc reference `{cand}`"
+            return None
+        first = cand.split("/")[0]
+        if first not in self.dir_names and first not in self.dirs:
+            return None  # not a directory this repo has — external
+        if not self.resolves(cand):
+            return f"dead intra-repo path `{cand}`"
+        return None
+
+
+def _anchor(heading: str) -> str:
+    """GitHub-style heading slug."""
+    h = re.sub(r"`([^`]*)`", r"\1", heading).strip().lower()
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def _anchors(text: str) -> set[str]:
+    return {_anchor(m.group(1)) for m in HEADING.finditer(text)}
+
+
+def lint_file(repo: Repo, path: str, text: str,
+              sections: set[str]) -> list[str]:
+    errs = []
+    lines = text.splitlines()
+    is_design = os.path.basename(path) == "DESIGN.md"
+    own_anchors = _anchors(text)
+    for ln, line in enumerate(lines, 1):
+        for m in BACKTICK.finditer(line):
+            err = repo.check_token(m.group(1))
+            if err:
+                errs.append(f"{path}:{ln}: {err}")
+        cite = SECTION_CITE if not is_design else BARE_SECTION
+        for m in cite.finditer(line):
+            if m.group(1) not in sections:
+                errs.append(f"{path}:{ln}: citation §{m.group(1)} — "
+                            f"DESIGN.md defines no such section "
+                            f"(have §{', §'.join(sorted(sections, key=int))})")
+        for m in MD_LINK.finditer(line):
+            target = m.group(1)
+            if target.startswith(("http:", "https:", "mailto:")):
+                continue
+            base, _, frag = target.partition("#")
+            if base:
+                rel = os.path.normpath(os.path.join(
+                    os.path.dirname(path), base)).replace(os.sep, "/")
+                if rel not in repo.file_set and rel not in repo.dirs:
+                    errs.append(f"{path}:{ln}: broken link target "
+                                f"`{target}` ({rel} does not exist)")
+                    continue
+            if frag:
+                if base:
+                    if not base.endswith(".md"):
+                        continue
+                    with open(os.path.join(repo.root, rel)) as f:
+                        anchors = _anchors(f.read())
+                else:
+                    anchors = own_anchors
+                if frag.lower() not in anchors:
+                    errs.append(f"{path}:{ln}: broken anchor "
+                                f"`#{frag}` in link `{target}`")
+    return errs
+
+
+def lint_repo(root: str, only: list[str] | None = None) -> list[str]:
+    files = tracked_files(root)
+    repo = Repo(root, files)
+    design = os.path.join(root, "DESIGN.md")
+    sections: set[str] = set()
+    if os.path.exists(design):
+        with open(design) as f:
+            sections = set(SECTION_DEF.findall(f.read()))
+    targets = only if only is not None else [
+        f for f in files
+        if f.endswith(".md") and os.path.basename(f) not in EXCLUDE]
+    errs = []
+    for f in sorted(targets):
+        with open(os.path.join(root, f)) as fh:
+            errs.extend(lint_file(repo, f, fh.read(), sections))
+    return errs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail on dead intra-repo paths and broken §/anchor "
+                    "references in the repo's markdown")
+    ap.add_argument("files", nargs="*",
+                    help="specific .md files (default: every tracked one)")
+    ap.add_argument("--root", default=os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))) or ".")
+    args = ap.parse_args(argv)
+    errs = lint_repo(args.root, args.files or None)
+    for e in errs:
+        print(e, file=sys.stderr)
+    if not errs:
+        print(f"doc-lint: OK")
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
