@@ -66,7 +66,13 @@ Semantic invariants for suite "paged_decode" (DESIGN.md §5):
   * every `roofline/*` row reports numeric `attainable_tok_s` > 0 and
     `measured_tok_s` >= 0 (the memory-bound attainable bound next to
     the measured throughput; never gated against each other — the bound
-    models TPU HBM, the measurement is interpret-mode CPU).
+    models TPU HBM, the measurement is interpret-mode CPU);
+  * every `obs/*` row reports `obs_tok_s_ratio` >= 0.97 (fully
+    instrumented decode — span tracing plus compile fingerprinting,
+    docs/OBSERVABILITY.md — stays within 3 % of the
+    `ObsContext.disabled()` arm's throughput: telemetry must never add
+    a host sync to a hot path) and `matches_dense` == true
+    (instrumentation must not move a single token).
 
 Usage: python -m benchmarks.bench_schema BENCH_kernels_micro.json [...]
 """
@@ -256,6 +262,21 @@ def _paged_decode_row(name: str, metrics: dict) -> list:
             errs.append(f"{name}: speculative row needs numeric "
                         f"tok_s_ratio (vs the one-token paged engine), "
                         f"got {metrics.get('tok_s_ratio')!r}")
+    if name.startswith("obs/"):
+        ratio = metrics.get("obs_tok_s_ratio")
+        if not isinstance(ratio, (int, float)) or isinstance(ratio, bool):
+            errs.append(f"{name}: obs row needs numeric metric "
+                        f"obs_tok_s_ratio, got {ratio!r}")
+        elif ratio < 0.97:
+            errs.append(
+                f"{name}: instrumented decode at {ratio:.3f}x the "
+                f"uninstrumented throughput — telemetry overhead "
+                f"exceeds the 3% budget (a host sync crept into a hot "
+                f"path? docs/OBSERVABILITY.md)")
+        if metrics.get("matches_dense") is not True:
+            errs.append(
+                f"{name}: matches_dense must be true — instrumentation "
+                f"moved a token vs the dense engine's streams")
     if name.startswith("roofline/"):
         att = metrics.get("attainable_tok_s")
         if not isinstance(att, (int, float)) or isinstance(att, bool) \

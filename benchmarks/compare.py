@@ -77,6 +77,10 @@ NUM_GUARDS = {
     "accept_rate":              ("min", 0.25, 0.0),
     "effective_tokens_per_step": ("min", 0.10, 0.0),
     "decode_compilations":      ("max", 0.0, 0.0),
+    # observability overhead: instrumented/uninstrumented decode tok/s
+    # (both arms are wall time, but their RATIO is what must not drift —
+    # a host sync sneaking into a hot path shows up here)
+    "obs_tok_s_ratio":          ("min", 0.03, 0.0),
     # measured by XLA, stable under pinned jaxlib but version-sensitive:
     # generous headroom so only order-of-magnitude regressions (a score
     # matrix sneaking back into temps) trip the gate

@@ -27,7 +27,13 @@ paged engine with chunked prefill interleaving — with:
     interpret-mode wall time is noise;
   * a memory-bound roofline row (`roofline/`): attainable tok/s from
     `repro.launch.roofline.paged_decode_roofline` at the measured
-    accept rate and page size, next to the measured tok/s.
+    accept rate and page size, next to the measured tok/s;
+  * an observability-overhead row (`obs/`, CI-gated): the same paged
+    config served fully instrumented (span tracing + compile
+    fingerprinting on, docs/OBSERVABILITY.md) vs fully disabled
+    (`ObsContext.disabled()` — `instrument_jit` returns the raw jitted
+    callable); the instrumented arm must keep `obs_tok_s_ratio` >= 0.97
+    and stay token-identical to the dense streams.
 
 Machine-readable output: `python -m benchmarks.paged_decode --json
 BENCH_paged_decode.json` (schema: benchmarks/bench_schema.py).
@@ -40,6 +46,7 @@ import numpy as np
 import jax
 
 from benchmarks.common import SMALL, csv_rows, write_bench_json
+from repro import obs as obs_lib
 from repro.models import build_model
 from repro.serving.engine import Engine, EngineConfig, Request
 from repro.serving.kvpool import PagedEngine, PagedEngineConfig
@@ -53,6 +60,8 @@ NUM_PAGES = 56
 DRAFT_LEN = 2        # short drafts win at this mix: per-draft acceptance
                      # falls with depth while verify width cost grows
 REPS = 3             # interleaved measured passes; tok/s is the median
+OBS_REPS = 5         # obs-overhead passes: step-locked A/B gives
+                     # ~hundreds of per-step pairs for the gated median
 
 
 def _prompts(n, seed=7, lo=4, hi=60):
@@ -80,12 +89,12 @@ def run():
         return Engine(model, params, EngineConfig(
             batch_slots=SLOTS, max_len=MAX_LEN, eos_id=2))
 
-    def paged(chunked, speculate=0):
+    def paged(chunked, speculate=0, obs=None):
         return PagedEngine(model, params, PagedEngineConfig(
             batch_slots=SLOTS, max_len=MAX_LEN, eos_id=2,
             page_size=PAGE_SIZE, num_pages=NUM_PAGES,
             chunked_prefill=chunked, speculate=speculate,
-            draft_source="ngram"))
+            draft_source="ngram"), obs=obs)
 
     # serve each engine once to take the compiles (jit caches live per
     # engine instance), then REPS interleaved measured passes — round-
@@ -125,6 +134,48 @@ def run():
     # token identity must hold on EVERY measured pass, not just one
     def _matches(eng):
         return all(got == want for got, _, _ in runs[id(eng)])
+
+    # observability overhead (docs/OBSERVABILITY.md): the same paged
+    # config with everything on (span tracing + compile fingerprinting)
+    # vs ObsContext.disabled() (instrument_jit hands back the raw jitted
+    # callable) — interleaved passes, median tok/s each, gated ratio
+    obs_on = obs_lib.ObsContext.fresh(trace=True)
+    eng_i = paged(False, obs=obs_on)
+    eng_u = paged(False, obs=obs_lib.ObsContext.disabled())
+    got_i, n_tok_i, dt_instr = _serve(eng_i, prompts)   # compile pass
+    got_u, _, _ = _serve(eng_u, prompts)
+    # step-LOCKED measured passes: both arms run the same deterministic
+    # schedule, so step k is the same work in each — alternating single
+    # steps pairs them ~1ms apart and the median per-step-pair ratio
+    # cancels the CPU-drift/GC/OS hiccups that swamp whole-pass wall
+    # time (a 1-2% per-step effect is unmeasurable at +-10% pass noise)
+    pc = time.perf_counter
+    ti, tu = [], []
+    flip = False
+    for _ in range(OBS_REPS):
+        for i, p in enumerate(prompts):
+            eng_i.submit(Request(uid=i, prompt=p, max_new_tokens=MAX_NEW))
+            eng_u.submit(Request(uid=i, prompt=p, max_new_tokens=MAX_NEW))
+        while eng_i.sched.has_work() or eng_u.sched.has_work():
+            # alternate which arm steps first: going second in a pair is
+            # measurably cheaper (warmed caches), so a fixed order would
+            # bias the ratio by more than the effect being gated
+            order = (((eng_u, tu), (eng_i, ti)) if flip
+                     else ((eng_i, ti), (eng_u, tu)))
+            flip = not flip
+            for eng, acc in order:
+                if eng.sched.has_work():
+                    t0 = pc()
+                    eng.step()
+                    acc.append(pc() - t0)
+    n_steps = min(len(ti), len(tu))
+    obs_ratio = float(np.median([u / i for i, u
+                                 in zip(ti[:n_steps], tu[:n_steps])]))
+    tok_s_instr = n_tok_i * OBS_REPS / max(sum(ti), 1e-9)
+    tok_s_plain = n_tok_i * OBS_REPS / max(sum(tu), 1e-9)
+    obs_matches = got_i == want and got_u == want and \
+        {r.uid: tuple(r.out_tokens) for r in eng_i.done} == want
+    n_spans = len(obs_on.tracer.spans)
 
     from repro.launch.roofline import paged_decode_roofline
     live = float(np.mean([len(p) for p in prompts])) + MAX_NEW / 2
@@ -197,6 +248,18 @@ def run():
                      "accept_rate": float(roof["accept_rate"]),
                      "draft_len": DRAFT_LEN, "page_size": PAGE_SIZE,
                      "live_tokens_per_seq": live}},
+        {"name": f"obs/{name}-overhead",
+         "us_per_call": dt_instr * 1e6,
+         "derived": f"obs_tok_s_ratio={obs_ratio:.3f};"
+                    f"tok_s_instr={tok_s_instr:.1f};"
+                    f"tok_s_plain={tok_s_plain:.1f};"
+                    f"spans={n_spans}",
+         "metrics": {"obs_tok_s_ratio": obs_ratio,
+                     "tok_s_instrumented": tok_s_instr,
+                     "tok_s_uninstrumented": tok_s_plain,
+                     "matches_dense": bool(obs_matches),
+                     "spans": n_spans,
+                     "concurrency": SLOTS, "requests": REQUESTS}},
     ]
     return rows
 

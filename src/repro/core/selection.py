@@ -173,10 +173,13 @@ class SelectionEngine:
         # (the factors themselves are read from self.adapted_factors at
         # trace time).  Two jax.jit wrappers over the same bound method
         # share jax's trace cache — a static arg is the reliable key.
-        self._select_jit = jax.jit(self._select_impl,
-                                   static_argnames=("factors_fp",))
-        self._refresh_jit = jax.jit(self._refresh_impl,
-                                    static_argnames=("factors_fp",))
+        from repro import obs as obs_mod
+        self._select_jit = obs_mod.instrument_jit(
+            self._select_impl, name="selection.select",
+            static_argnames=("factors_fp",))
+        self._refresh_jit = obs_mod.instrument_jit(
+            self._refresh_impl, name="selection.refresh",
+            static_argnames=("factors_fp",))
         # per-(geometry, compact_factor) retry programs (overflow recovery)
         self._retry_cache: dict = {}
 
@@ -328,7 +331,10 @@ class SelectionEngine:
                 idx, ovf = self._stream_select(a, b, rows, cols, k, factor)
                 return idx.astype(jnp.int32), jnp.sum(ovf)
 
-            fn = jax.jit(body)
+            from repro import obs as obs_mod
+            # workload-keyed by design (one program per geometry +
+            # adapted factor): the manifest lists it as {"any": true}
+            fn = obs_mod.instrument_jit(body, name="selection.retry")
             self._retry_cache[key_t] = fn
         return fn(w, kk)
 

@@ -71,7 +71,9 @@ class DeltaMerger:
             for (r, c, k), ps in groups.items())
         self.group_exec = {
             (g.rows, g.cols, g.k): self._exec_mode(g) for g in self.groups}
-        self._merge_jit = jax.jit(self._impl, static_argnames=("mode",))
+        from repro import obs as obs_mod
+        self._merge_jit = obs_mod.instrument_jit(
+            self._impl, name="deltas.merge", static_argnames=("mode",))
 
     def geometry_key(self) -> tuple:
         """Hashable fingerprint the AdapterStore caches mergers by."""

@@ -120,7 +120,26 @@ def main():
                          "instead of the serving model — fresh-init, so "
                          "acceptance is a smoke signal only; vocab sizes "
                          "must match (--speculate)")
+    ap.add_argument("--trace-out", default="",
+                    help="write per-request spans (queue/prefill/decode/"
+                         "draft/verify/accept/pool tiles + request "
+                         "envelopes) as JSONL to this path "
+                         "(docs/OBSERVABILITY.md)")
+    ap.add_argument("--metrics-out", default="",
+                    help="dump the final metrics-registry snapshot as "
+                         "JSON to this path")
+    ap.add_argument("--audit-manifest", default="",
+                    help="check observed jit compilations against this "
+                         "expected-compilations manifest "
+                         "(benchmarks/compilations_manifest.json) and "
+                         "exit nonzero on any violation — the "
+                         "compilations == expected CI gate")
     args = ap.parse_args()
+
+    from repro import obs as obs_lib
+    obs_ctx = obs_lib.default()
+    if args.trace_out:
+        obs_ctx.tracer.enabled = True
 
     from repro.configs import get_arch
     from repro.data.synthetic import BOS, EOS, SEP, encode, decode, \
@@ -219,12 +238,12 @@ def main():
                                       or args.draft_arch) else "ngram"),
             overlay_backend=args.overlay_backend),
             adapters=adapters, draft_model=draft_model,
-            draft_params=draft_params, adapter_pool=apool)
+            draft_params=draft_params, adapter_pool=apool, obs=obs_ctx)
     else:
         eng = Engine(model, params, EngineConfig(
             batch_slots=args.slots, max_len=args.max_len, eos_id=EOS,
             seed=args.seed, prefill_buckets=not args.no_buckets),
-            adapters=adapters)
+            adapters=adapters, obs=obs_ctx)
     rng = np.random.default_rng(args.seed)
     t0 = time.time()
     for i in range(args.requests):
@@ -242,32 +261,38 @@ def main():
         print(f"req {r.uid}: {decode(r.out_tokens)!r}")
     print(f"{len(done)} requests, {total_new} tokens in {dt:.2f}s "
           f"({total_new / max(dt, 1e-9):.1f} tok/s, "
-          f"{args.slots} slots continuous batching, "
-          f"{eng.prefill_compilations} prefill bucket(s))")
-    if args.kv_pages > 0:
-        st = eng.kv_stats()
-        print(f"[kvpool] peak {st['peak_pages_in_use']}/{args.kv_pages} "
-              f"pages ({st['peak_kv_bytes'] / 1e6:.2f} MB, "
-              f"{st['kv_bytes_ratio']:.2f}x the dense cache), "
-              f"{eng.prefill_chunks} prefill chunk(s), "
-              f"{st['preemptions']} preemption(s), "
-              f"{st['prefix_hits']} prefix hit(s)")
-        if apool is not None:
-            ps = eng.pool_stats()
-            print(f"[adapter-pool] {ps['resident_adapters']}/"
-                  f"{ps['registered_adapters']} adapters resident, "
-                  f"{ps['uploads']} page upload(s), "
-                  f"{ps['evictions']} eviction(s), "
-                  f"{100 * ps['adapter_bytes_ratio']:.1f}% resident "
-                  f"bytes/adapter vs one dense copy")
-        if args.speculate:
-            sp = eng.spec_stats()
-            print(f"[speculate] draft={sp['draft_source']} "
-                  f"N={sp['speculate']}: accept {sp['accepted']}/"
-                  f"{sp['drafted']} ({100 * sp['accept_rate']:.0f}%), "
-                  f"{sp['effective_tokens_per_step']:.2f} effective "
-                  f"tok/step, {sp['decode_steps']} verify dispatch(es), "
-                  f"{sp['decode_compilations']} decode compilation(s)")
+          f"{args.slots} slots continuous batching)")
+    # ONE renderer over the metrics registry replaces the old per-
+    # subsystem stat prints: engine counters, kvpool./apool./spec.
+    # gauges and the latency histograms all come out of the snapshot
+    snap = eng.metrics_snapshot()
+    print("[metrics]")
+    print(obs_lib.render_snapshot(snap))
+
+    if args.metrics_out:
+        import json
+        with open(args.metrics_out, "w") as f:
+            json.dump(snap, f, indent=1, sort_keys=True)
+        print(f"[metrics] snapshot -> {args.metrics_out}")
+    if args.trace_out:
+        n = obs_ctx.tracer.write_jsonl(args.trace_out)
+        print(f"[trace] {n} span(s) -> {args.trace_out}"
+              + (f" ({obs_ctx.tracer.dropped} dropped)"
+                 if obs_ctx.tracer.dropped else ""))
+    if args.audit_manifest:
+        manifest = obs_lib.load_manifest(args.audit_manifest)
+        rep = obs_ctx.auditor.report()
+        for name, r in rep.items():
+            if r["calls"]:
+                print(f"[audit] {name}: {r['compilations']} "
+                      f"compilation(s) over {r['calls']} call(s)")
+        errs = obs_ctx.auditor.check(manifest)
+        if errs:
+            for e in errs:
+                print(f"[audit] FAIL {e}")
+            raise SystemExit(1)
+        print(f"[audit] ok: compilations == expected "
+              f"({args.audit_manifest})")
 
 
 if __name__ == "__main__":

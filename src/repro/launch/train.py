@@ -66,7 +66,26 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--eval", action="store_true")
     ap.add_argument("--data-size", type=int, default=2048)
+    ap.add_argument("--trace-out", default="",
+                    help="write step/refresh/checkpoint spans as JSONL "
+                         "to this path (docs/OBSERVABILITY.md)")
+    ap.add_argument("--metrics-out", default="",
+                    help="dump the final metrics-registry snapshot as "
+                         "JSON to this path")
+    ap.add_argument("--metrics-every", type=int, default=0,
+                    help="print a train.* metrics snapshot every N steps "
+                         "(0 = final snapshot only)")
+    ap.add_argument("--audit-manifest", default="",
+                    help="check observed jit compilations against this "
+                         "expected-compilations manifest and exit "
+                         "nonzero on any violation (the compilations == "
+                         "expected CI gate)")
     args = ap.parse_args()
+
+    from repro import obs as obs_lib
+    obs_ctx = obs_lib.default()
+    if args.trace_out:
+        obs_ctx.tracer.enabled = True
 
     from repro.checkpoint.manager import CheckpointManager
     from repro.configs import get_arch
@@ -123,8 +142,9 @@ def main():
     params, state = T.init_train_state(model, params, method,
                                        jax.random.PRNGKey(args.seed + 1),
                                        engine=engine)
-    train_step = jax.jit(T.make_train_step(model, method, adam,
-                                           T.constant_lr(args.lr)))
+    train_step = obs_lib.instrument_jit(
+        T.make_train_step(model, method, adam, T.constant_lr(args.lr)),
+        name="train.step", obs=obs_ctx)
     refresh = None
     if args.method in ("lift", "sparse"):
         # already jitted by the engine — selection + state migration fused
@@ -172,13 +192,21 @@ def main():
     # async) — mask refresh otherwise overlaps the host loop.
     pending = None                # (step, metrics, refreshed_flag)
     n_retried = 0                 # overflow auto-retries logged so far
+    reg = obs_ctx.registry
+    tr = obs_ctx.tracer
     batch = {k: jnp.asarray(v) for k, v in loader.next_batch().items()}
     for step in range(start_step, args.steps):
+        t_step = tr.now()
         params, state, metrics = train_step(params, state, batch)
         refreshed = refresh is not None \
             and (step + 1) % args.update_interval == 0
         if refreshed:
+            t_rf = tr.now()
             state = refresh(params, state, jax.random.PRNGKey(1000 + step))
+            # host-side dispatch window (the refresh program itself is
+            # async; only overflow_retry's existing D2H lands here)
+            reg.histogram("train.refresh_s").observe(tr.now() - t_rf)
+            reg.counter("train.refreshes").inc()
         # snapshot BEFORE prefetching: it must record batches 0..step
         # consumed so a resumed run re-fetches exactly batch step+1
         loader_snap = loader.state.to_dict()
@@ -192,6 +220,11 @@ def main():
         pending = None
         dt = timer.lap()
         monitor.observe(0, dt)
+        # the lap time is already a host scalar the loop computes — no
+        # sync is added by recording it (obs hard rule, DESIGN.md §11)
+        reg.counter("train.steps").inc()
+        reg.histogram("train.step_s").observe(dt)
+        tr.add("train.step", "train", t_step, tr.now(), step=step)
         if refreshed:
             print(f"[lift] mask refresh dispatched at step {step + 1}")
             if len(refresh.retried_history) > n_retried:
@@ -206,8 +239,18 @@ def main():
             pending = (step, metrics, dt)
         if ckpt is not None and (step + 1) % args.ckpt_every == 0:
             ckpt_meta["loader"] = loader_snap
+            t_ck = tr.now()
             ckpt.save_async(step + 1, {"params": params, "state": state},
                             meta=dict(ckpt_meta))
+            # save_async returns after snapshot+enqueue; the write runs
+            # in the manager's thread — this span is the loop's cost
+            reg.histogram("train.ckpt_enqueue_s").observe(tr.now() - t_ck)
+            tr.add("ckpt.save_async", "ckpt", t_ck, tr.now(),
+                   step=step + 1)
+        if args.metrics_every and (step + 1) % args.metrics_every == 0:
+            print(f"[metrics] step {step + 1}")
+            print(obs_lib.render_snapshot(reg.snapshot(),
+                                          prefix="train."))
         preempt.check(step + 1)
 
     if pending is not None:
@@ -228,12 +271,39 @@ def main():
                   f"raise LiftConfig.compact_factor")
 
     if ckpt is not None:
+        t_ck = tr.now()
         ckpt.wait()
+        tr.add("ckpt.wait", "ckpt", t_ck, tr.now())
     if args.eval:
         from repro.data.synthetic import eval_accuracy
         eff = T.effective_params(model, params, state, method)
         acc = eval_accuracy(model, eff, args.task, n=32, seq_len=args.seq)
         print(f"[eval] {args.task} accuracy {acc:.3f}")
+
+    snap = reg.snapshot()
+    print("[metrics]")
+    print(obs_lib.render_snapshot(snap))
+    if args.metrics_out:
+        import json
+        with open(args.metrics_out, "w") as f:
+            json.dump(snap, f, indent=1, sort_keys=True)
+        print(f"[metrics] snapshot -> {args.metrics_out}")
+    if args.trace_out:
+        n = obs_ctx.tracer.write_jsonl(args.trace_out)
+        print(f"[trace] {n} span(s) -> {args.trace_out}")
+    if args.audit_manifest:
+        manifest = obs_lib.load_manifest(args.audit_manifest)
+        for name, r in obs_ctx.auditor.report().items():
+            if r["calls"]:
+                print(f"[audit] {name}: {r['compilations']} "
+                      f"compilation(s) over {r['calls']} call(s)")
+        errs = obs_ctx.auditor.check(manifest)
+        if errs:
+            for e in errs:
+                print(f"[audit] FAIL {e}")
+            raise SystemExit(1)
+        print(f"[audit] ok: compilations == expected "
+              f"({args.audit_manifest})")
     print("done")
 
 

@@ -1,0 +1,120 @@
+"""Unified telemetry: metrics registry, per-request tracing, and the
+compile/trace auditor (DESIGN.md §11, docs/OBSERVABILITY.md).
+
+One `ObsContext` bundles the three concerns a subsystem needs:
+
+  * `registry` — counters/gauges/histograms (`obs.registry`), host-side
+    only (incrementing never adds a device sync);
+  * `tracer` — per-request/per-step spans (`obs.tracing`), disabled by
+    default (enable via `launch/serve.py --trace-out` or by passing an
+    enabled Tracer);
+  * `auditor` — the (jit name, abstract-shape fingerprint) compile
+    ledger (`obs.audit`), SHARED process-wide by default so every
+    engine/trainer in the process feeds one CI-gated audit.
+
+Engines and trainers take `obs: ObsContext | None`; None gives them a
+fresh private registry + the process defaults (`engine_context()`), so
+per-engine stats never collide while the compile audit stays global.
+`ObsContext.disabled()` is the zero-overhead configuration the
+`obs/` benchmark row compares against (benchmarks/paged_decode.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.obs.audit import (CompileAuditor, InstrumentedJit,
+                             call_fingerprint, load_manifest)
+from repro.obs.registry import (Counter, Gauge, Histogram,
+                                MetricsRegistry, log_edges,
+                                render_snapshot)
+from repro.obs.tracing import (Span, Tracer, read_jsonl,
+                               request_breakdown)
+
+__all__ = [
+    "CompileAuditor", "Counter", "Gauge", "Histogram", "InstrumentedJit",
+    "MetricsRegistry", "ObsContext", "Span", "Tracer", "call_fingerprint",
+    "default", "engine_context", "instrument_jit", "load_manifest",
+    "log_edges", "read_jsonl", "render_snapshot", "request_breakdown",
+    "stat_view",
+]
+
+
+def stat_view(metric: str):
+    """Registry-backed attribute view for a class with an `obs`
+    attribute: the counter in `self.obs.registry` is the ONE store; the
+    legacy attribute read/write sites (engines, benches, tests) keep
+    working unchanged (DESIGN.md §11)."""
+    def _get(self):
+        return int(self.obs.registry.counter(metric).value)
+
+    def _set(self, v):
+        self.obs.registry.counter(metric).set(int(v))
+
+    return property(_get, _set)
+
+
+@dataclasses.dataclass
+class ObsContext:
+    registry: MetricsRegistry
+    tracer: Tracer
+    auditor: CompileAuditor
+    enabled: bool = True
+
+    @classmethod
+    def fresh(cls, *, trace: bool = False) -> "ObsContext":
+        """Fully private context (tests, benchmarks): own registry, own
+        tracer, own auditor."""
+        reg = MetricsRegistry()
+        return cls(registry=reg, tracer=Tracer(enabled=trace),
+                   auditor=CompileAuditor(registry=reg))
+
+    @classmethod
+    def disabled(cls) -> "ObsContext":
+        """No tracing, no fingerprinting: `instrument_jit` returns the
+        raw jitted callable; registry stays live (attribute-view
+        bookkeeping costs a couple of host adds per dispatch)."""
+        ctx = cls.fresh()
+        ctx.enabled = False
+        return ctx
+
+
+_DEFAULT: Optional[ObsContext] = None
+
+
+def default() -> ObsContext:
+    """The process-wide context (lazy).  `launch/serve.py` and
+    `launch/train.py` snapshot/audit/export THIS context."""
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = ObsContext.fresh()
+    return _DEFAULT
+
+
+def engine_context() -> ObsContext:
+    """Default context for an engine built without an explicit one: a
+    PRIVATE registry (two engines in one process never mix stats) with
+    the process-wide tracer and auditor (one trace file, one compile
+    audit per run)."""
+    d = default()
+    return ObsContext(registry=MetricsRegistry(), tracer=d.tracer,
+                      auditor=d.auditor, enabled=d.enabled)
+
+
+def instrument_jit(fn, *, name: str, obs: Optional[ObsContext] = None,
+                   static_argnames=(), static_argnums=(), **jit_kwargs):
+    """THE way to create a jit entry point (DESIGN.md §11): wraps
+    `jax.jit(fn, ...)` and records (name, abstract-shape fingerprint)
+    per call into the context's auditor.  With a disabled context this
+    returns the raw jitted callable — zero per-call overhead."""
+    ctx = obs or default()
+    if not ctx.enabled:
+        import jax
+        if isinstance(static_argnames, str):
+            static_argnames = (static_argnames,)
+        return jax.jit(fn, static_argnames=tuple(static_argnames) or None,
+                       static_argnums=tuple(static_argnums) or None,
+                       **jit_kwargs)
+    return InstrumentedJit(fn, name=name, auditor=ctx.auditor,
+                           static_argnames=static_argnames,
+                           static_argnums=static_argnums, **jit_kwargs)

@@ -1,0 +1,269 @@
+"""Compile/trace auditor (DESIGN.md §11).
+
+Every `jax.jit` entry point in the serving engines, the drafter, the
+SelectionEngine, the delta merger and the train step goes through ONE
+helper — `instrument_jit(fn, name=...)` — which wraps `jax.jit` and
+counts new traces per call.  Two detection paths:
+
+  * **fast path** (jax exposes `_cache_size`): after each call the
+    wrapper reads jax's own compiled-entry count — ONE cheap C++
+    attribute call — and a delta is a new trace.  This is the ground
+    truth the hot loops run under; it never touches the argument
+    pytree (flattening a params tree per decode step costs ~10% of an
+    interpret-mode pass — measured, benchmarks/paged_decode.py `obs/`
+    row).
+  * **fallback** (`call_fingerprint`): fingerprint the call's ABSTRACT
+    shapes the way jax keys its trace cache — array leaves by
+    (shape, dtype) (values never retrace), python scalars by type only
+    (weak-typed: 3 vs 4 does NOT recompile), `static_argnames`/
+    `static_argnums` by VALUE (changing a static arg IS a retrace).
+    tests/test_obs.py holds the fingerprint equal to `_cache_size()`
+    on all three behaviors.
+
+The process-wide `CompileAuditor` counts compilations per name
+(cross-checkable against jax's own `_cache_size()` per wrapper) and
+`check()` compares the run against
+a committed expected-compilations manifest — the system-wide CI gate
+that turns today's hand-rolled `decode_compilations == 1` invariants
+into one audit: any future silent re-trace regression (a per-prompt
+prefill shape, a bucketing bypass, a scalar promoted to a traced shape)
+shows up as a count over its manifest bound and fails the run loudly
+(`launch/serve.py` / `launch/train.py --audit-manifest`).
+
+Manifest schema (benchmarks/compilations_manifest.json):
+
+    {"version": 1,
+     "require_listed": true,
+     "entries": {
+        "serve.paged.decode":  {"exact": 1},
+        "serve.paged.prefill_whole": {"max": 4},
+        "selection.retry": {"any": true}}}
+
+`exact` — observed names must compile exactly N traces; `max` — at most
+N; `any` — tracked but unbounded (workload-keyed retraces that are the
+design, e.g. overflow-retry capacity bumps).  With `require_listed`,
+an instrumented name that is OBSERVED but missing from the manifest
+fails too — new entry points must declare their compile budget.
+Names never observed in a run are skipped (a train run does not see
+serving entry points).
+"""
+from __future__ import annotations
+
+import inspect
+import json
+import threading
+from typing import Optional
+
+
+def _leaf_sig(x):
+    shape = getattr(x, "shape", None)
+    if shape is not None and hasattr(x, "dtype"):
+        return (tuple(shape), str(x.dtype))
+    # python scalar / other hashable: jax traces these weak-typed by
+    # TYPE — the value does not key the cache, so it must not key the
+    # fingerprint either
+    return ("py", type(x).__name__)
+
+
+def call_fingerprint(args: tuple, kwargs: dict,
+                     static: dict) -> tuple:
+    """Hashable trace-cache key approximation for one call."""
+    import jax
+    leaves, treedef = jax.tree_util.tree_flatten((args, kwargs))
+    return (treedef,
+            tuple(_leaf_sig(x) for x in leaves),
+            tuple(sorted((k, repr(v)) for k, v in static.items())))
+
+
+class InstrumentedJit:
+    """`jax.jit(fn, **jit_kwargs)` plus per-call trace-fingerprint
+    recording into an auditor.  Transparent to callers: `__call__` only
+    forwards; `lower`/`_cache_size` proxy to the jitted callable."""
+
+    def __init__(self, fn, *, name: str, auditor: "CompileAuditor",
+                 static_argnames=(), static_argnums=(), **jit_kwargs):
+        import jax
+        if isinstance(static_argnames, str):
+            static_argnames = (static_argnames,)
+        self.name = name
+        self.auditor = auditor
+        self._static_names = tuple(static_argnames)
+        self._static_nums = tuple(static_argnums)
+        self._jfn = jax.jit(fn, static_argnames=static_argnames or None,
+                            static_argnums=static_argnums or None,
+                            **jit_kwargs)
+        self._sig = None
+        if self._static_names or self._static_nums:
+            self._sig = inspect.signature(fn)
+        self._cs_fn = getattr(self._jfn, "_cache_size", None)
+        self._last_cs = 0
+        self.calls = 0          # plain int: bumped lock-free per call,
+                                # folded into the auditor at report time
+        auditor.register(self)
+
+    def _split_static(self, args, kwargs):
+        if self._sig is None:
+            return args, kwargs, {}
+        bound = self._sig.bind_partial(*args, **kwargs)
+        static = {}
+        names = set(self._static_names)
+        params = list(self._sig.parameters)
+        for i in self._static_nums:
+            names.add(params[i])
+        dyn_args, dyn_kwargs = [], {}
+        for i, (k, v) in enumerate(bound.arguments.items()):
+            if k in names:
+                static[k] = v
+            elif i < len(args):
+                dyn_args.append(v)
+            else:
+                dyn_kwargs[k] = v
+        return tuple(dyn_args), dyn_kwargs, static
+
+    def __call__(self, *args, **kwargs):
+        if self._cs_fn is not None:
+            # fast path: jax's own compiled-entry count, read AFTER the
+            # dispatch — a delta is a new trace, attributed to this
+            # call.  Cache hits (every hot-loop call) touch no lock.
+            out = self._jfn(*args, **kwargs)
+            self.calls += 1
+            cs = self._cs_fn()
+            if cs != self._last_cs:
+                self.auditor.note_traces(self.name, cs - self._last_cs)
+                self._last_cs = cs
+            return out
+        dyn_args, dyn_kwargs, static = self._split_static(args, kwargs)
+        self.auditor.note_call(
+            self.name, call_fingerprint(dyn_args, dyn_kwargs, static))
+        return self._jfn(*args, **kwargs)
+
+    def cache_size(self) -> Optional[int]:
+        """jax's own compiled-entry count for THIS wrapper (None if the
+        jax version has no `_cache_size`)."""
+        f = getattr(self._jfn, "_cache_size", None)
+        return f() if callable(f) else None
+
+    def __getattr__(self, item):            # lower(), eval_shape(), ...
+        return getattr(self._jfn, item)
+
+
+class CompileAuditor:
+    """Process-wide (name, fingerprint) trace ledger."""
+
+    def __init__(self, registry=None):
+        self._lock = threading.Lock()
+        self._traces: dict[str, set] = {}       # name -> fingerprints
+        self._compiled: dict[str, int] = {}     # name -> compilations
+        self._calls: dict[str, int] = {}
+        self._wrappers: list = []
+        self.registry = registry                # optional MetricsRegistry
+
+    def register(self, wrapper: InstrumentedJit) -> None:
+        with self._lock:
+            self._wrappers.append(wrapper)
+            self._traces.setdefault(wrapper.name, set())
+            self._compiled.setdefault(wrapper.name, 0)
+            self._calls.setdefault(wrapper.name, 0)
+
+    def note_traces(self, name: str, new: int) -> None:
+        """Record `new` fresh traces (the `_cache_size`-delta fast path
+        calls this ONLY when the compiled-entry count moved; call counts
+        ride on the wrapper's lock-free `calls` int)."""
+        with self._lock:
+            self._compiled[name] = self._compiled.get(name, 0) + new
+        if self.registry is not None:
+            self.registry.counter(f"compile.{name}").inc(new)
+
+    def note_call(self, name: str, fp) -> bool:
+        """Record one call by fingerprint (fallback path); returns True
+        when `fp` is a NEW trace."""
+        with self._lock:
+            self._calls[name] = self._calls.get(name, 0) + 1
+            seen = self._traces.setdefault(name, set())
+            if fp in seen:
+                return False
+            seen.add(fp)
+            self._compiled[name] = self._compiled.get(name, 0) + 1
+        if self.registry is not None:
+            self.registry.counter(f"compile.{name}").inc()
+        return True
+
+    def compilations(self, name: str) -> int:
+        with self._lock:
+            return self._compiled.get(name, 0)
+
+    def names(self) -> list:
+        with self._lock:
+            return sorted(self._compiled)
+
+    def report(self) -> dict:
+        """{name: {"compilations": n, "calls": n, "cache_size": n|None}}
+        — `cache_size` sums jax's own per-wrapper compiled-entry counts
+        (the ground truth the fingerprints approximate)."""
+        with self._lock:
+            sizes: dict[str, Optional[int]] = {}
+            calls = dict(self._calls)
+            for w in self._wrappers:
+                calls[w.name] = calls.get(w.name, 0) + w.calls
+                cs = w.cache_size()
+                if cs is None:
+                    sizes.setdefault(w.name, None)
+                else:
+                    sizes[w.name] = (sizes.get(w.name) or 0) + cs
+            return {name: {"compilations": n,
+                           "calls": calls.get(name, 0),
+                           "cache_size": sizes.get(name)}
+                    for name, n in sorted(self._compiled.items())}
+
+    # ------------------------------------------------------------- audit
+    def check(self, manifest: dict) -> list:
+        """Audit the observed traces against `manifest` (see module
+        docstring).  Returns human-readable violations (empty = pass).
+        Only names with >= 1 observed call are audited."""
+        errs = []
+        entries = manifest.get("entries", {})
+        require_listed = bool(manifest.get("require_listed", True))
+        rep = self.report()
+        for name, r in rep.items():
+            if r["calls"] == 0:
+                continue
+            n = r["compilations"]
+            ent = entries.get(name)
+            if ent is None:
+                if require_listed:
+                    errs.append(
+                        f"{name}: {n} compilation(s) observed but the "
+                        f"name is not in the manifest — new jit entry "
+                        f"points must declare their compile budget "
+                        f"(docs/OBSERVABILITY.md)")
+                continue
+            if ent.get("any"):
+                continue
+            if "exact" in ent and n != int(ent["exact"]):
+                errs.append(
+                    f"{name}: {n} compilation(s), manifest expects "
+                    f"exactly {ent['exact']} — "
+                    + ("a shape-keyed re-trace crept in"
+                       if n > int(ent["exact"])
+                       else "expected traces never ran"))
+            elif "max" in ent and n > int(ent["max"]):
+                errs.append(
+                    f"{name}: {n} compilation(s) exceed the manifest "
+                    f"bound {ent['max']} — a shape-keyed re-trace crept "
+                    f"in (un-bucketed length? scalar promoted to a "
+                    f"traced shape?)")
+            elif "exact" not in ent and "max" not in ent:
+                errs.append(f"{name}: manifest entry has none of "
+                            f"exact/max/any")
+        return errs
+
+
+def load_manifest(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("version") != 1:
+        raise ValueError(f"{path}: unsupported compilations-manifest "
+                         f"version {doc.get('version')!r} (expected 1)")
+    if not isinstance(doc.get("entries"), dict):
+        raise ValueError(f"{path}: manifest needs an 'entries' object")
+    return doc

@@ -1,0 +1,265 @@
+"""Process-wide metrics registry (DESIGN.md §11).
+
+Counters, gauges and bounded-bucket histograms behind ONE lock, built
+for the serving/training hot loops under two hard rules:
+
+  * **no host sync, ever**: every `inc`/`set`/`observe` takes a HOST
+    scalar.  Passing a `jax.Array` raises `TypeError` instead of
+    silently forcing a device fetch — metrics are incremented at points
+    that already sync (the engine's `np.asarray(logits)` readback, the
+    refresh overflow D2H that `overflow_retry` pays anyway) and device
+    scalars are drained only where they are already fetched;
+  * **bounded memory**: a histogram keeps a fixed log-spaced bucket
+    array for the full stream plus a bounded raw-sample window for
+    exact percentiles — observing forever never grows either.
+
+Percentile readout (`Histogram.percentile`) is EXACT (bitwise equal to
+`numpy.percentile(..., method="linear")`) while the stream fits the raw
+window (`max_samples`, default 4096 — far above any smoke/bench run);
+past the window it falls back to a bucket-edge estimate whose error is
+bounded by the bucket width (`exact` flips to False in the snapshot so
+a reader never mistakes one for the other).  tests/test_obs.py holds
+both halves against a numpy oracle.
+
+Thread-safety: all mutation and snapshotting goes through the
+registry's single re-entrant lock; the serving engine loop may run in
+one thread while another polls `snapshot()` (tested).
+"""
+from __future__ import annotations
+
+import bisect
+import math
+import threading
+from typing import Optional, Union
+
+Number = Union[int, float]
+
+
+def _host_scalar(v, what: str) -> float:
+    """Coerce to a host float; refuse device arrays (the no-sync rule)."""
+    if type(v) is int or type(v) is float:
+        return v
+    # np scalars / 0-d arrays are already host-side; jax.Array is not
+    mod = type(v).__module__
+    if mod.startswith("jax") or mod.startswith("jaxlib"):
+        raise TypeError(
+            f"{what} got a device value ({type(v).__name__}): metrics "
+            f"must never force a host sync on the hot path — fetch the "
+            f"scalar where the code already syncs (e.g. the existing "
+            f"np.asarray readback) and pass a plain int/float")
+    return float(v)
+
+
+class Counter:
+    """Monotonic-by-convention counter (supports `set` for the thin
+    attribute views the engines keep; see serving/kvpool/engine.py)."""
+
+    __slots__ = ("name", "_v", "_lock")
+
+    def __init__(self, name: str, lock: threading.RLock):
+        self.name = name
+        self._v = 0.0
+        self._lock = lock
+
+    def inc(self, n: Number = 1) -> None:
+        n = _host_scalar(n, f"counter {self.name!r}")
+        with self._lock:
+            self._v += n
+
+    def set(self, v: Number) -> None:
+        v = _host_scalar(v, f"counter {self.name!r}")
+        with self._lock:
+            self._v = v
+
+    @property
+    def value(self) -> Number:
+        v = self._v
+        return int(v) if float(v).is_integer() else v
+
+
+class Gauge:
+    """Last-write-wins scalar with an optional running max
+    (`set_max` — peak residency, peak live tokens, ...)."""
+
+    __slots__ = ("name", "_v", "_lock")
+
+    def __init__(self, name: str, lock: threading.RLock):
+        self.name = name
+        self._v = 0.0
+        self._lock = lock
+
+    def set(self, v: Number) -> None:
+        v = _host_scalar(v, f"gauge {self.name!r}")
+        with self._lock:
+            self._v = v
+
+    def set_max(self, v: Number) -> None:
+        v = _host_scalar(v, f"gauge {self.name!r}")
+        with self._lock:
+            if v > self._v:
+                self._v = v
+
+    @property
+    def value(self) -> Number:
+        v = self._v
+        return int(v) if float(v).is_integer() else v
+
+
+def log_edges(lo: float, hi: float, per_decade: int) -> list:
+    """Log-spaced bucket edges: `per_decade` edges per power of ten
+    spanning [lo, hi].  Shared by latency (seconds) and size (bytes /
+    tokens) histograms — the default covers 1us..10000s."""
+    n = int(round(math.log10(hi / lo) * per_decade))
+    return [lo * 10 ** (i / per_decade) for i in range(n + 1)]
+
+
+class Histogram:
+    """Bounded-bucket histogram with exact-percentile readout.
+
+    Buckets: fixed log-spaced edges; values below the first edge land in
+    bucket 0, values past the last edge in the overflow bucket.  The
+    bucket counts cover the WHOLE stream; the raw-sample window keeps
+    the first `max_samples` observations so percentiles are exact
+    (numpy `method="linear"`) until the stream outgrows it, after which
+    `percentile` answers from the bucket upper edges (error <= one
+    bucket width) and `exact` reads False.
+    """
+
+    __slots__ = ("name", "_lock", "_edges", "_buckets", "_samples",
+                 "_max_samples", "count", "sum", "min", "max")
+
+    def __init__(self, name: str, lock: threading.RLock, *,
+                 edges: Optional[list] = None, max_samples: int = 4096):
+        self.name = name
+        self._lock = lock
+        self._edges = list(edges) if edges is not None \
+            else log_edges(1e-6, 1e4, per_decade=4)
+        self._buckets = [0] * (len(self._edges) + 1)
+        self._samples: list = []
+        self._max_samples = int(max_samples)
+        self.count = 0
+        self.sum = 0.0
+        self.min = math.inf
+        self.max = -math.inf
+
+    def observe(self, v: Number) -> None:
+        v = _host_scalar(v, f"histogram {self.name!r}")
+        with self._lock:
+            self._buckets[bisect.bisect_left(self._edges, v)] += 1
+            self.count += 1
+            self.sum += v
+            if v < self.min:
+                self.min = v
+            if v > self.max:
+                self.max = v
+            if len(self._samples) < self._max_samples:
+                self._samples.append(v)
+
+    @property
+    def exact(self) -> bool:
+        return self.count <= self._max_samples
+
+    def percentile(self, q: Number) -> float:
+        """q in [0, 100].  Exact (numpy linear interpolation) while the
+        stream fits the raw window; bucket-upper-edge estimate after."""
+        with self._lock:
+            if self.count == 0:
+                return math.nan
+            if self.exact:
+                xs = sorted(self._samples)
+                # numpy.percentile(method="linear"): virtual index
+                # h = (n - 1) * q / 100, linear between floor/ceil
+                h = (len(xs) - 1) * (float(q) / 100.0)
+                lo = math.floor(h)
+                hi = math.ceil(h)
+                return xs[lo] + (xs[hi] - xs[lo]) * (h - lo)
+            want = (float(q) / 100.0) * self.count
+            seen = 0
+            for i, c in enumerate(self._buckets):
+                seen += c
+                if seen >= want:
+                    # upper edge of the bucket (overflow: last edge +
+                    # the stream max, whichever is larger)
+                    if i < len(self._edges):
+                        return min(self._edges[i], self.max)
+                    return self.max
+            return self.max
+
+    def summary(self) -> dict:
+        with self._lock:
+            if self.count == 0:
+                return {"count": 0, "sum": 0.0, "exact": True}
+            return {"count": self.count, "sum": self.sum,
+                    "min": self.min, "max": self.max,
+                    "mean": self.sum / self.count,
+                    "p50": self.percentile(50), "p90": self.percentile(90),
+                    "p99": self.percentile(99), "exact": self.exact}
+
+
+class MetricsRegistry:
+    """Name -> instrument map; `get`-or-create is idempotent so call
+    sites never coordinate.  One registry per serving engine / training
+    run (the process-wide default lives in `repro.obs.default()`)."""
+
+    def __init__(self):
+        self._lock = threading.RLock()
+        self._counters: dict[str, Counter] = {}
+        self._gauges: dict[str, Gauge] = {}
+        self._histograms: dict[str, Histogram] = {}
+
+    def counter(self, name: str) -> Counter:
+        with self._lock:
+            c = self._counters.get(name)
+            if c is None:
+                c = self._counters[name] = Counter(name, self._lock)
+            return c
+
+    def gauge(self, name: str) -> Gauge:
+        with self._lock:
+            g = self._gauges.get(name)
+            if g is None:
+                g = self._gauges[name] = Gauge(name, self._lock)
+            return g
+
+    def histogram(self, name: str, *, edges: Optional[list] = None,
+                  max_samples: int = 4096) -> Histogram:
+        with self._lock:
+            h = self._histograms.get(name)
+            if h is None:
+                h = self._histograms[name] = Histogram(
+                    name, self._lock, edges=edges, max_samples=max_samples)
+            return h
+
+    def snapshot(self) -> dict:
+        """One JSON-serializable dict of everything (sorted names)."""
+        with self._lock:
+            return {
+                "counters": {n: c.value
+                             for n, c in sorted(self._counters.items())},
+                "gauges": {n: g.value
+                           for n, g in sorted(self._gauges.items())},
+                "histograms": {n: h.summary()
+                               for n, h in sorted(self._histograms.items())},
+            }
+
+
+def render_snapshot(snap: dict, *, prefix: str = "") -> str:
+    """The ONE human-readable snapshot renderer (launch/serve.py,
+    launch/train.py): counters and gauges one per line, histograms with
+    count/mean/p50/p90/p99.  `prefix` filters by name prefix."""
+    lines = []
+    for name, v in snap.get("counters", {}).items():
+        if name.startswith(prefix):
+            lines.append(f"  {name} = {v}")
+    for name, v in snap.get("gauges", {}).items():
+        if name.startswith(prefix):
+            vs = f"{v:.4g}" if isinstance(v, float) else str(v)
+            lines.append(f"  {name} = {vs}")
+    for name, h in snap.get("histograms", {}).items():
+        if not name.startswith(prefix) or not h.get("count"):
+            continue
+        lines.append(
+            f"  {name}: n={h['count']} mean={h['mean']:.4g} "
+            f"p50={h['p50']:.4g} p90={h['p90']:.4g} p99={h['p99']:.4g}"
+            + ("" if h["exact"] else " (bucket-estimated)"))
+    return "\n".join(lines)

@@ -1,0 +1,232 @@
+"""Per-request span tracing (DESIGN.md §11).
+
+A `Span` is one timed interval with a category, an optional subject
+request (`uid`), and — because serving dispatches are BATCHED — two uid
+lists:
+
+  * `uids`: the requests this span is *about* (the prefilling request,
+    the decoding slots in the dispatch);
+  * `co_uids`: other requests that were placed in the batch while this
+    span ran but were not its subject (a decoding request waiting out
+    another request's prefill dispatch).
+
+The engine records spans as TILES of its step loop — admission/prefill,
+draft, decode/verify dispatch (including the `np.asarray` readback,
+which is where the device sync actually lands), accept bookkeeping — so
+for any request, `queue wait + sum(spans containing it)` reconstructs
+its end-to-end latency: `request_breakdown` does exactly that, and
+tests/test_obs.py holds the decomposition within 5% of the measured
+latency.  Training uses the same tracer for step/refresh/checkpoint
+spans (launch/train.py).
+
+Clock: `time.perf_counter()` relative to the tracer's epoch, so spans
+from one process share a timeline.  The tracer is BOUNDED
+(`max_spans`, default 1_000_000): past the bound new spans are counted
+in `dropped` instead of retained — tracing never grows without limit.
+
+Hot path: the engines do NOT build `Span` objects per step — in engine
+context every Python call runs cold (evicted between ~ms-apart steps)
+and costs ~10x its tight-loop time, so `tile()` appends ONE raw tuple
+of perf_counter stamps and `drain()` materializes Spans and feeds the
+latency histograms later, off the step path (the ring-buffer-and-drain
+shape every low-overhead tracer uses).  Reading `tracer.spans` or
+calling `write_jsonl` drains implicitly; the buffer self-drains past
+`_DEFER_BOUND` records so it stays bounded too.
+
+Export: `write_jsonl` emits one JSON object per span; `read_jsonl`
+loads them back (round-trip tested).  A disabled tracer (the default —
+`launch/serve.py --trace-out` enables it) records nothing and costs one
+attribute check per call.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Optional
+
+
+@dataclasses.dataclass(slots=True)
+class Span:
+    name: str                     # e.g. "prefill", "verify", "ckpt.save"
+    cat: str                      # queue|prefill|decode|verify|pool|train|...
+    t0: float                     # seconds since tracer epoch
+    t1: float = 0.0
+    uid: Optional[int] = None     # single-subject convenience
+    uids: tuple = ()              # subject requests
+    co_uids: tuple = ()           # co-resident (batched) requests
+    attrs: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def dur(self) -> float:
+        return self.t1 - self.t0
+
+    def to_dict(self) -> dict:
+        d = {"name": self.name, "cat": self.cat,
+             "t0": self.t0, "t1": self.t1, "dur": self.dur}
+        if self.uid is not None:
+            d["uid"] = self.uid
+        if self.uids:
+            d["uids"] = list(self.uids)
+        if self.co_uids:
+            d["co_uids"] = list(self.co_uids)
+        if self.attrs:
+            d["attrs"] = self.attrs
+        return d
+
+
+_DEFER_BOUND = 8192          # raw tile records before a forced drain
+
+
+class Tracer:
+    def __init__(self, *, enabled: bool = True,
+                 max_spans: int = 1_000_000):
+        self.enabled = enabled
+        self.max_spans = int(max_spans)
+        self.epoch = time.perf_counter()
+        self._spans: list[Span] = []
+        self._defer: list[tuple] = []
+        self.dropped = 0
+
+    @property
+    def spans(self) -> list:
+        """Materialized span list (drains the hot-path tile buffer)."""
+        if self._defer:
+            self.drain()
+        return self._spans
+
+    # ------------------------------------------------------------ record
+    def now(self) -> float:
+        return time.perf_counter() - self.epoch
+
+    def tile(self, name: str, cat: str, t0: float, t1: float,
+             uids: tuple, co_uids: tuple, hist=None,
+             attrs: Optional[dict] = None) -> None:
+        """Hot-path tile record: ONE tuple append, nothing else.
+
+        `t0`/`t1` are RAW `time.perf_counter()` stamps (not epoch-
+        relative — the subtraction is deferred too); `hist`, when given,
+        is a resolved `obs.registry.Histogram` that receives the tile
+        duration at drain time.  Span construction, attr dicts and
+        histogram bucketing all happen in `drain()`, off the engine
+        step path."""
+        self._defer.append((name, cat, t0, t1, uids, co_uids, hist, attrs))
+        if len(self._defer) >= _DEFER_BOUND:
+            self.drain()
+
+    def drain(self) -> None:
+        """Materialize buffered tile records: retain Spans (when
+        enabled) and feed the tile histograms.  Idempotent; called
+        implicitly by `spans`/`write_jsonl` and by the engines at their
+        stats read points."""
+        raw, self._defer = self._defer, []
+        epoch = self.epoch
+        for name, cat, t0, t1, uids, co_uids, hist, attrs in raw:
+            if self.enabled:
+                self._retain(Span(name=name, cat=cat, t0=t0 - epoch,
+                                  t1=t1 - epoch, uids=uids,
+                                  co_uids=co_uids,
+                                  attrs=dict(attrs) if attrs else {}))
+            if hist is not None:
+                hist.observe(t1 - t0)
+
+    def begin(self, name: str, cat: str, *, uid: Optional[int] = None,
+              uids: tuple = (), co_uids: tuple = (),
+              **attrs) -> Optional[Span]:
+        """Open a span; `end` closes and retains it.  Returns None when
+        disabled — `end(None)` is a no-op, so call sites stay linear."""
+        if not self.enabled:
+            return None
+        return Span(name=name, cat=cat, t0=self.now(), uid=uid,
+                    uids=tuple(uids), co_uids=tuple(co_uids), attrs=attrs)
+
+    def end(self, span: Optional[Span], **attrs) -> Optional[Span]:
+        if span is None:
+            return None
+        span.t1 = self.now()
+        if attrs:
+            span.attrs.update(attrs)
+        self._retain(span)
+        return span
+
+    def add(self, name: str, cat: str, t0: float, t1: float, *,
+            uid: Optional[int] = None, uids: tuple = (),
+            co_uids: tuple = (), **attrs) -> Optional[Span]:
+        """Record an externally-timed span (queue waits: the submit
+        timestamp is taken long before the span is emitted)."""
+        if not self.enabled:
+            return None
+        span = Span(name=name, cat=cat, t0=t0, t1=t1, uid=uid,
+                    uids=tuple(uids), co_uids=tuple(co_uids), attrs=attrs)
+        self._retain(span)
+        return span
+
+    def _retain(self, span: Span) -> None:
+        if len(self._spans) >= self.max_spans:
+            self.dropped += 1
+            return
+        self._spans.append(span)
+
+    # ------------------------------------------------------------ export
+    def write_jsonl(self, path: str) -> int:
+        """One JSON object per line, chronological by `t0` (drained tile
+        records interleave with directly-added spans); returns the span
+        count written."""
+        spans = sorted(self.spans, key=lambda s: s.t0)
+        with open(path, "w") as f:
+            for s in spans:
+                f.write(json.dumps(s.to_dict(), sort_keys=True) + "\n")
+        return len(spans)
+
+
+def read_jsonl(path: str) -> list:
+    """Load spans back as dicts (schema of `Span.to_dict`)."""
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    return out
+
+
+def _span_dicts(spans) -> list:
+    return [s.to_dict() if isinstance(s, Span) else s for s in spans]
+
+
+def request_breakdown(spans) -> dict:
+    """Per-request wall-time decomposition from a span list (Span objects
+    or `to_dict` dicts).
+
+    Returns {uid: {"total": s, "by_cat": {cat: s}, "e2e": s|None}} where
+    `by_cat` sums subject spans by category, co-resident time lands
+    under "batch" (the request sat in the batch while another request's
+    dispatch ran), and `e2e` is the request's `cat == "request"`
+    envelope span when one was recorded.  Subject/co tiles are disjoint
+    by construction (the engine emits them as a tiling of its step
+    loop), so `total` approximates the request's placed lifetime and
+    `total + queue` its end-to-end latency.
+    """
+    out: dict = {}
+
+    def slot(uid):
+        return out.setdefault(uid, {"total": 0.0, "by_cat": {}, "e2e": None})
+
+    for s in _span_dicts(spans):
+        cat, dur = s["cat"], s["dur"]
+        subjects = list(s.get("uids", ()))
+        if s.get("uid") is not None and s["uid"] not in subjects:
+            subjects.append(s["uid"])
+        if cat == "request":
+            for uid in subjects:
+                slot(uid)["e2e"] = dur
+            continue
+        for uid in subjects:
+            d = slot(uid)
+            d["total"] += dur
+            d["by_cat"][cat] = d["by_cat"].get(cat, 0.0) + dur
+        for uid in s.get("co_uids", ()):
+            d = slot(uid)
+            d["total"] += dur
+            d["by_cat"]["batch"] = d["by_cat"].get("batch", 0.0) + dur
+    return out

@@ -109,7 +109,7 @@ class ModelDraft(DraftSource):
 
     def __init__(self, model, params, batch_slots: int, max_len: int, *,
                  backend: str = "auto", prefill_buckets: bool = True,
-                 min_bucket: int = 16):
+                 min_bucket: int = 16, obs=None):
         family = getattr(model.cfg, "family", "")
         if not hasattr(model, "init_paged_cache") or family == "hybrid":
             raise ValueError(
@@ -125,13 +125,16 @@ class ModelDraft(DraftSource):
         self.bt = (np.arange(batch_slots, dtype=np.int32) + 1)[:, None]
         self._bucketing = prefill_buckets and family == "dense"
         self.min_bucket = min_bucket
-        self._decode = jax.jit(
+        from repro import obs as obs_mod
+        self._decode = obs_mod.instrument_jit(
             lambda p, t, kv, bt, pos: model.decode_paged(
-                p, t, kv, bt, pos, backend=backend))
-        self._prefill = jax.jit(
+                p, t, kv, bt, pos, backend=backend),
+            name="serve.draft.decode", obs=obs)
+        self._prefill = obs_mod.instrument_jit(
             lambda p, b, kv, bt, wu, lp: model.prefill_paged(
                 p, b, kv, bt, start_pos=jnp.int32(0), write_upto=wu,
-                last_pos=lp, whole_prompt=True))
+                last_pos=lp, whole_prompt=True),
+            name="serve.draft.prefill", obs=obs)
 
     def _bucket_len(self, s: int) -> int:
         if not self._bucketing:
@@ -185,7 +188,7 @@ def make_draft_source(name: str, *, model=None, params=None,
                       batch_slots: int = 0, max_len: int = 0,
                       backend: str = "auto", max_ngram: int = 3,
                       prefill_buckets: bool = True,
-                      min_bucket: int = 16) -> DraftSource:
+                      min_bucket: int = 16, obs=None) -> DraftSource:
     """Engine-facing factory.  "ngram" needs no model; "model" drafts
     with (model, params) — the unmerged base under adapters, or a
     smaller arch."""
@@ -199,6 +202,6 @@ def make_draft_source(name: str, *, model=None, params=None,
                 "draft_source='ngram')")
         return ModelDraft(model, params, batch_slots, max_len,
                           backend=backend, prefill_buckets=prefill_buckets,
-                          min_bucket=min_bucket)
+                          min_bucket=min_bucket, obs=obs)
     raise ValueError(f"unknown draft source {name!r} "
                      f"(expected 'ngram' or 'model')")

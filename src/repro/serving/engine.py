@@ -37,11 +37,14 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro import obs as obs_mod
 
 
 @dataclasses.dataclass
@@ -161,7 +164,8 @@ class AdapterStore:
 
 class Engine:
     def __init__(self, model, params, cfg: EngineConfig,
-                 adapters: Optional[AdapterStore] = None):
+                 adapters: Optional[AdapterStore] = None,
+                 obs: Optional[obs_mod.ObsContext] = None):
         self.model = model
         self.params = params
         self.cfg = cfg
@@ -193,13 +197,29 @@ class Engine:
         self._bucketing = (cfg.prefill_buckets
                           and getattr(mcfg, "family", "") == "dense"
                           and getattr(mcfg, "sliding_window", None) is None)
+
+        # telemetry (DESIGN.md §11): engine counters live in the
+        # context's registry (`prefill_compilations`/`decode_steps` are
+        # property views over it); jit entry points are auditor-wrapped
+        self.obs = obs if obs is not None else obs_mod.engine_context()
+        self._tr = self.obs.tracer
+        self._obs_on = self.obs.enabled
+        # hot-tile histograms resolved ONCE (a registry lookup per decode
+        # step is measurable at interpret-mode step times); tiles record
+        # raw perf_counter stamps, materialized at Tracer.drain()
+        self._h_prefill = self.obs.registry.histogram("serve.prefill_s")
+        self._h_decode = self.obs.registry.histogram("serve.decode_step_s")
+        self._pc = time.perf_counter
         self.prefill_compilations = 0
+        self.decode_steps = 0
         self._seen_buckets: set = set()
 
-        self._prefill = jax.jit(
-            lambda p, b, c, last: model.prefill(p, b, c, last_pos=last))
-        self._decode = jax.jit(
-            lambda p, t, c, pos: model.decode(p, t, c, pos))
+        self._prefill = obs_mod.instrument_jit(
+            lambda p, b, c, last: model.prefill(p, b, c, last_pos=last),
+            name="serve.dense.prefill", obs=self.obs)
+        self._decode = obs_mod.instrument_jit(
+            lambda p, t, c, pos: model.decode(p, t, c, pos),
+            name="serve.dense.decode", obs=self.obs)
 
     # ----------------------------------------------------------- client
     def submit(self, req: Request):
@@ -210,6 +230,9 @@ class Engine:
                     f"but the engine has no AdapterStore")
             self.adapters.params_for(req.adapter_id)  # fail fast if absent
         req.out_tokens = []
+        if self._obs_on:
+            # submit time anchors the e2e envelope span and queue wait
+            req._obs_t_sub = req._obs_t_q = self._tr.now()
         if self._len_limited and len(req.prompt) + 1 > self.cfg.max_len:
             # fail fast: a clamped prefill + wrapping decode writes would
             # silently corrupt the cache (the pre-fix behavior)
@@ -227,6 +250,8 @@ class Engine:
                 and steps < max_steps:
             self.step()
             steps += 1
+        if self._obs_on:
+            self._tr.drain()        # materialize buffered step tiles
         return self.done
 
     # --------------------------------------------------------- scheduler
@@ -289,6 +314,17 @@ class Engine:
             req = self._next_request()
             if req is None:
                 break
+            t0, co = self._tile_open(subjects=(req.uid,))
+            if self._obs_on:
+                # queue spans use the tracer's epoch-relative clock
+                # (t0 is a raw perf_counter stamp for the tile record)
+                tq = getattr(req, "_obs_t_q", None)
+                if tq is not None:
+                    now = self._tr.now()
+                    self.obs.registry.histogram(
+                        "serve.queue_wait_s").observe(now - tq)
+                    self._tr.add("queue.wait", "queue", tq, now,
+                                 uid=req.uid, uids=(req.uid,))
             s = len(req.prompt)
             padded = self._bucket_len(s)
             prompt = np.zeros((1, padded), np.int32)
@@ -305,6 +341,9 @@ class Engine:
             nxt = sample_token(np.asarray(logits[0, -1]), req.temperature,
                                req.rng)
             req.out_tokens.append(int(nxt))
+            self._tile_close("prefill", "prefill", t0, co,
+                             uids=(req.uid,), hist=self._h_prefill,
+                             padded=padded)
             self.active[slot] = req
             self.tokens[slot, 0] = nxt
             self.positions[slot] = s
@@ -316,10 +355,13 @@ class Engine:
             self.budget[slot] = budget - 1
 
     def _decode_step(self):
+        uids = tuple(r.uid for r in self.active if r is not None)
+        t0, co = self._tile_open(subjects=uids)
         logits, self.cache = self._decode(
             self.params, jnp.asarray(self.tokens), self.cache,
             jnp.asarray(self.positions))
         logits = np.asarray(logits[:, 0])
+        self.decode_steps += 1
         for slot, req in enumerate(self.active):
             if req is None:
                 continue
@@ -334,6 +376,8 @@ class Engine:
             req.out_tokens.append(int(nxt))
             self.tokens[slot, 0] = nxt
             self.budget[slot] -= 1
+        self._tile_close("decode", "decode", t0, co, uids=uids,
+                         hist=self._h_decode, batch=len(uids))
 
     def _finish(self, slot: int):
         req = self.active[slot]
@@ -341,6 +385,51 @@ class Engine:
             req.out_tokens = req.out_tokens[:-1]
         self.done.append(req)
         self.active[slot] = None
+        if self._obs_on:
+            reg = self.obs.registry
+            reg.counter("serve.requests_done").inc()
+            reg.counter("serve.tokens_emitted").inc(len(req.out_tokens))
+            t_sub = getattr(req, "_obs_t_sub", None)
+            if t_sub is not None:
+                now = self._tr.now()
+                reg.histogram("serve.request_latency_s").observe(
+                    now - t_sub)
+                self._tr.add("request", "request", t_sub, now,
+                             uid=req.uid, uids=(req.uid,),
+                             tokens=len(req.out_tokens))
+
+    # ----------------------------------------------------- observability
+    def _tile_open(self, subjects: tuple):
+        """Open one tile of the engine step loop (see the PagedEngine
+        twin): co_uids are the OTHER active requests — they sit in the
+        batch while this tile runs."""
+        if not self._obs_on:
+            return 0.0, ()
+        co = ()
+        if self._tr.enabled:
+            subj = set(subjects)
+            co = tuple(r.uid for r in self.active
+                       if r is not None and r.uid not in subj)
+        return self._pc(), co
+
+    def _tile_close(self, name: str, cat: str, t0: float, co: tuple,
+                    *, uids: tuple, hist=None, **attrs):
+        """One buffered record (raw perf_counter stamps) — Span and
+        histogram materialization happens at `Tracer.drain()`."""
+        if not self._obs_on:
+            return
+        self._tr.tile(name, cat, t0, self._pc(), uids, co, hist,
+                      attrs or None)
+
+    def metrics_snapshot(self) -> dict:
+        """Registry snapshot with buffered step tiles drained — what
+        launch/serve.py renders and dumps (--metrics-out)."""
+        self._tr.drain()
+        return self.obs.registry.snapshot()
+
+    # registry-backed attribute views (DESIGN.md §11)
+    prefill_compilations = obs_mod.stat_view("serve.prefill_compilations")
+    decode_steps = obs_mod.stat_view("serve.decode_steps")
 
 
 def _splice(cache_batched, cache_one, slot: int):

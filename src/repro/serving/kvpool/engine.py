@@ -37,12 +37,14 @@ logits on the monolithic-prefill path, greedy-identical under chunking)
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as obs_mod
 from repro.serving.engine import (AdapterStore, Request, _splice,
                                   request_rng, sample_token)
 from repro.serving.kvpool.adapter_pool import AdapterPool, pool_overlay
@@ -72,11 +74,15 @@ class PagedEngineConfig:
                                   # ("lax" | "kernel" | "auto")
 
 
+_stat_view = obs_mod.stat_view
+
+
 class PagedEngine:
     def __init__(self, model, params, cfg: PagedEngineConfig,
                  adapters: Optional[AdapterStore] = None,
                  draft_model=None, draft_params=None,
-                 adapter_pool: Optional[AdapterPool] = None):
+                 adapter_pool: Optional[AdapterPool] = None,
+                 obs: Optional[obs_mod.ObsContext] = None):
         mcfg = model.cfg
         family = getattr(mcfg, "family", "")
         if family == "rwkv6":
@@ -178,6 +184,21 @@ class PagedEngine:
             max_step_tokens=1 + self._spec_n,
             mixed_adapters=adapter_pool is not None)
 
+        # telemetry (DESIGN.md §11): the registry is the one store for
+        # the engine's counters — the legacy stat attributes are
+        # registry-backed property views (see class tail).  Default is a
+        # PRIVATE per-engine registry sharing the process tracer/auditor.
+        self.obs = obs if obs is not None else obs_mod.engine_context()
+        self._tr = self.obs.tracer
+        self._obs_on = self.obs.enabled
+        # hot-tile histograms resolved ONCE (a registry lookup per decode
+        # step is measurable at interpret-mode step times), and the raw
+        # clock pre-bound — tiles record bare perf_counter stamps; Span
+        # objects and histogram buckets materialize at Tracer.drain()
+        self._h_prefill = self.obs.registry.histogram("serve.prefill_s")
+        self._h_decode = self.obs.registry.histogram("serve.decode_step_s")
+        self._pc = time.perf_counter
+
         self.draft = None
         if self._spec_n:
             from repro.serving.draft import make_draft_source
@@ -195,7 +216,7 @@ class PagedEngine:
                 cfg.draft_source, model=draft_model,
                 params=draft_params, batch_slots=B, max_len=cfg.max_len,
                 backend=cfg.backend, prefill_buckets=cfg.prefill_buckets,
-                min_bucket=cfg.min_bucket)
+                min_bucket=cfg.min_bucket, obs=self.obs)
 
         if self._hybrid:
             self.kv = model.init_paged_cache(B, cfg.num_pages, ps)
@@ -224,8 +245,11 @@ class PagedEngine:
         self.spec_accepted = 0                   # drafts that matched
         self.spec_emitted = 0                    # tokens out of verify
         self.spec_slot_steps = 0                 # (sequence, dispatch) pairs
+        self.sched.on_preempt_requeue = self._restamp_queue
 
         backend = cfg.backend
+        jit = lambda fn, name: obs_mod.instrument_jit(fn, name=name,
+                                                      obs=self.obs)
         if adapter_pool is not None:
             # overlay-threaded dispatches: the per-slot adapter overlay
             # is gathered from the pool pages INSIDE the jitted program
@@ -234,44 +258,52 @@ class PagedEngine:
             nl, ovb = mcfg.num_layers, cfg.overlay_backend
             ov_of = lambda ip, vp, apt: pool_overlay(ip, vp, apt, slices,
                                                      nl)
-            self._decode_fn = jax.jit(
+            self._decode_fn = jit(
                 lambda p, t, kv, bt, pos, ip, vp, apt: model.decode_paged(
                     p, t, kv, bt, pos, backend=backend,
-                    overlay=ov_of(ip, vp, apt), overlay_backend=ovb))
+                    overlay=ov_of(ip, vp, apt), overlay_backend=ovb),
+                "serve.paged.decode")
             if self._spec_n:
-                self._verify_fn = jax.jit(
+                self._verify_fn = jit(
                     lambda p, t, kv, bt, pos, ip, vp, apt:
                     model.decode_paged_multi(
                         p, t, kv, bt, pos, backend=backend,
-                        overlay=ov_of(ip, vp, apt), overlay_backend=ovb))
-            self._prefill_whole = jax.jit(
+                        overlay=ov_of(ip, vp, apt), overlay_backend=ovb),
+                    "serve.paged.verify")
+            self._prefill_whole = jit(
                 lambda p, b, kv, bt, sp, wu, lp, ip, vp, apt:
                 model.prefill_paged(
                     p, b, kv, bt, start_pos=sp, write_upto=wu,
                     last_pos=lp, whole_prompt=True,
-                    overlay=ov_of(ip, vp, apt), overlay_backend=ovb))
-            self._prefill_chunk_fn = jax.jit(
+                    overlay=ov_of(ip, vp, apt), overlay_backend=ovb),
+                "serve.paged.prefill_whole")
+            self._prefill_chunk_fn = jit(
                 lambda p, b, kv, bt, sp, wu, lp, ip, vp, apt:
                 model.prefill_paged(
                     p, b, kv, bt, start_pos=sp, write_upto=wu,
                     last_pos=lp, whole_prompt=False,
-                    overlay=ov_of(ip, vp, apt), overlay_backend=ovb))
+                    overlay=ov_of(ip, vp, apt), overlay_backend=ovb),
+                "serve.paged.prefill_chunk")
         else:
-            self._decode_fn = jax.jit(
+            self._decode_fn = jit(
                 lambda p, t, kv, bt, pos: model.decode_paged(
-                    p, t, kv, bt, pos, backend=backend))
+                    p, t, kv, bt, pos, backend=backend),
+                "serve.paged.decode")
             if self._spec_n:
-                self._verify_fn = jax.jit(
+                self._verify_fn = jit(
                     lambda p, t, kv, bt, pos: model.decode_paged_multi(
-                        p, t, kv, bt, pos, backend=backend))
-            self._prefill_whole = jax.jit(
+                        p, t, kv, bt, pos, backend=backend),
+                    "serve.paged.verify")
+            self._prefill_whole = jit(
                 lambda p, b, kv, bt, sp, wu, lp: model.prefill_paged(
                     p, b, kv, bt, start_pos=sp, write_upto=wu, last_pos=lp,
-                    whole_prompt=True))
-            self._prefill_chunk_fn = jax.jit(
+                    whole_prompt=True),
+                "serve.paged.prefill_whole")
+            self._prefill_chunk_fn = jit(
                 lambda p, b, kv, bt, sp, wu, lp: model.prefill_paged(
                     p, b, kv, bt, start_pos=sp, write_upto=wu, last_pos=lp,
-                    whole_prompt=False))
+                    whole_prompt=False),
+                "serve.paged.prefill_chunk")
 
     # ----------------------------------------------------------- client
     def submit(self, req: Request):
@@ -285,6 +317,10 @@ class PagedEngine:
             else:
                 self.adapters.params_for(req.adapter_id)  # fail fast
         req.out_tokens = []
+        if self._obs_on:
+            # submit time anchors the e2e envelope span; the queue clock
+            # restarts on preemption (see _restamp_queue)
+            req._obs_t_sub = req._obs_t_q = self._tr.now()
         if len(req.prompt) + 1 > self.cfg.max_len:
             req.error = (f"prompt length {len(req.prompt)} exceeds "
                          f"max_len={self.cfg.max_len} - 1 — the sequence "
@@ -299,6 +335,8 @@ class PagedEngine:
         while self.sched.has_work() and steps < max_steps:
             self.step()
             steps += 1
+        if self._obs_on:
+            self._tr.drain()        # materialize buffered step tiles
         return self.done
 
     # --------------------------------------------------------- scheduler
@@ -341,10 +379,16 @@ class PagedEngine:
                 # merge-free: pin the adapter's delta pages for the
                 # request's lifetime (prefetch-on-admission — cache hits
                 # cost nothing); params stay the base weights
+                t_acq = self._tr.now() if self._obs_on else 0.0
                 apages = self.apool.acquire(req.adapter_id)
                 if apages is None:      # adapter pool exhausted: wait
                     self.sched.requeue_front(req)
                     return
+                if self._obs_on:
+                    self._tr.add("pool.acquire", "pool", t_acq,
+                                 self._tr.now(), uid=req.uid,
+                                 uids=(req.uid,),
+                                 adapter=req.adapter_id)
             else:
                 try:
                     self._activate(req.adapter_id)
@@ -365,6 +409,14 @@ class PagedEngine:
                 self.apt[slot] = 0
                 for j, p in enumerate(apages):
                     self.apt[slot, j] = p
+            if self._obs_on:
+                tq = getattr(req, "_obs_t_q", None)
+                now = self._tr.now()
+                if tq is not None:
+                    self.obs.registry.histogram(
+                        "serve.queue_wait_s").observe(now - tq)
+                    self._tr.add("queue.wait", "queue", tq, now,
+                                 uid=req.uid, uids=(req.uid,))
             self._start_prefill(seq)
 
     # ----------------------------------------------------------- prefill
@@ -389,8 +441,12 @@ class PagedEngine:
             rem = seq.n_ctx - start
             C = self._bucket_len(rem)
             whole = start == 0
+            t0, co = self._tile_open(subjects=(seq.req.uid,))
             logits = self._run_prefill(seq, start, C, whole=whole)
             self._finish_prefill(seq, logits)
+            self._tile_close("prefill", "prefill", t0, co,
+                             uids=(seq.req.uid,),
+                             hist=self._h_prefill, C=C)
 
     def _prefill_step(self):
         """Chunked prefill: advance ONE chunk of one prefilling sequence
@@ -407,10 +463,14 @@ class PagedEngine:
         start = seq.prefill_pos
         C = self.cfg.prefill_chunk
         end = min(start + C, seq.n_ctx)
+        t0, co = self._tile_open(subjects=(seq.req.uid,))
         logits = self._run_prefill(seq, start, C, whole=False)
         seq.prefill_pos = end
         if end == seq.n_ctx:
             self._finish_prefill(seq, logits)
+        self._tile_close("prefill.chunk", "prefill", t0, co,
+                         uids=(seq.req.uid,),
+                         hist=self._h_prefill, start=start, end=end)
 
     def _run_prefill(self, seq: SeqState, start: int, C: int, *,
                      whole: bool):
@@ -532,9 +592,9 @@ class PagedEngine:
             bt_d[slot] = self.bt[slot]
             pos_d[slot] = self.positions[slot]
             tok_d[slot] = self.tokens[slot]
-        if 1 not in self._seen_decode:
-            self._seen_decode.add(1)
-            self.decode_compilations += 1
+        self._note_decode_shape(1)
+        uids = tuple(self.sched.seqs[s].req.uid for s in live)
+        t0, co = self._tile_open(subjects=uids)
         if self.apool is not None:
             # inactive rows keep an all-zero adapter page table: the
             # trash page's all-sentinel delta composes to exactly the
@@ -567,6 +627,8 @@ class PagedEngine:
             req.out_tokens.append(int(nxt))
             self.tokens[slot, 0] = nxt
             self.budget[slot] -= 1
+        self._tile_close("decode", "decode", t0, co, uids=uids,
+                         hist=self._h_decode, batch=len(live))
         self._note_live()
 
     def _decode_step_spec(self):
@@ -591,6 +653,8 @@ class PagedEngine:
                  if s is not None and s.phase == "decode"]
         if not cands:
             return
+        cand_uids = tuple(s.req.uid for s in cands)
+        t0, co = self._tile_open(subjects=cand_uids)
         # draft proposals (host-side / drafter-model; sloppy drafts only
         # cost speculation throughput, never correctness)
         proposals = self.draft.propose(
@@ -617,6 +681,8 @@ class PagedEngine:
         live = [slot for slot, _ in dmap.items()
                 if self.sched.seqs[slot] is not None
                 and self.sched.seqs[slot].phase == "decode"]
+        self._tile_close("draft", "draft", t0, co, uids=cand_uids,
+                         drafted=sum(len(d) for d in dmap.values()))
         if not live:
             return
         M = 1 + N
@@ -630,9 +696,9 @@ class PagedEngine:
             d = dmap[slot]
             if d:
                 tok_d[slot, 1:1 + len(d)] = d
-        if M not in self._seen_decode:
-            self._seen_decode.add(M)
-            self.decode_compilations += 1
+        self._note_decode_shape(M)
+        uids = tuple(self.sched.seqs[s].req.uid for s in live)
+        t1, co1 = self._tile_open(subjects=uids)
         if self.apool is not None:
             apt_d = np.zeros_like(self.apt)
             for slot in live:
@@ -647,13 +713,19 @@ class PagedEngine:
                 self.params, jnp.asarray(tok_d), self.kv,
                 jnp.asarray(bt_d), jnp.asarray(pos_d))
         logits = np.asarray(logits)              # (B, M, V)
+        self._tile_close("verify", "verify", t1, co1, uids=uids,
+                         hist=self._h_decode, batch=len(live))
         self.decode_steps += 1
         self.spec_slot_steps += len(live)
+        t2, co2 = self._tile_open(subjects=uids)
+        # accumulate the spec counters locally — the registry-backed
+        # properties take a lock per assignment, once per STEP is enough
+        n_drafted = n_emitted = n_accepted = 0
         for slot in live:
             seq = self.sched.seqs[slot]
             req = seq.req
             d = dmap[slot]
-            self.spec_drafted += len(d)
+            n_drafted += len(d)
             for i in range(len(d) + 1):
                 # sub-step i == the one-token decode step at base+i
                 self.positions[slot] += 1
@@ -669,11 +741,15 @@ class PagedEngine:
                 req.out_tokens.append(int(nxt))
                 self.tokens[slot, 0] = nxt
                 self.budget[slot] -= 1
-                self.spec_emitted += 1
+                n_emitted += 1
                 if i < len(d):
                     if int(nxt) != int(d[i]):
                         break            # rejection: rows > i discarded
-                    self.spec_accepted += 1
+                    n_accepted += 1
+        self.spec_drafted += n_drafted
+        self.spec_emitted += n_emitted
+        self.spec_accepted += n_accepted
+        self._tile_close("accept", "accept", t2, co2, uids=uids)
         self._note_live()
 
     def _finish(self, slot: int):
@@ -683,6 +759,18 @@ class PagedEngine:
             req.out_tokens = req.out_tokens[:-1]
         self.done.append(req)
         self._clear_slot(slot)
+        if self._obs_on:
+            reg = self.obs.registry
+            reg.counter("serve.requests_done").inc()
+            reg.counter("serve.tokens_emitted").inc(len(req.out_tokens))
+            t_sub = getattr(req, "_obs_t_sub", None)
+            if t_sub is not None:
+                now = self._tr.now()
+                reg.histogram("serve.request_latency_s").observe(
+                    now - t_sub)
+                self._tr.add("request", "request", t_sub, now,
+                             uid=req.uid, uids=(req.uid,),
+                             tokens=len(req.out_tokens))
 
     def _clear_slot(self, slot: int):
         self.bt[slot] = 0
@@ -697,6 +785,51 @@ class PagedEngine:
             self._apages[slot] = []
             self.apt[slot] = 0
 
+    # ----------------------------------------------------- observability
+    def _restamp_queue(self, req: Request):
+        """Scheduler preempt hook: the request is back in the queue —
+        its wait clock restarts (its placed time is already covered by
+        the step tiles it was subject/co-resident in)."""
+        if self._obs_on:
+            req._obs_t_q = self._tr.now()
+
+    def _note_decode_shape(self, m: int):
+        """ONE compile-count site for both decode paths: a decode/verify
+        dispatch compiles once per token width m (1, or 1 + speculate)."""
+        if m not in self._seen_decode:
+            self._seen_decode.add(m)
+            self.decode_compilations += 1
+
+    def _tile_open(self, subjects: tuple):
+        """Open one tile of the engine step loop: returns (t0, co_uids)
+        where t0 is a RAW perf_counter stamp and co_uids are the OTHER
+        placed requests — they sit in the batch while this tile runs, so
+        its duration is their 'batch' time in the per-request
+        decomposition (obs.tracing)."""
+        if not self._obs_on:
+            return 0.0, ()
+        co = ()
+        if self._tr.enabled:
+            seqs = self.sched.seqs
+            # fast path: every placed sequence is a subject (the usual
+            # monolithic-prefill decode tile) -> no co-residents
+            if len(seqs) - seqs.count(None) != len(subjects):
+                subj = set(subjects)
+                co = tuple(s.req.uid for s in seqs
+                           if s is not None and s.req.uid not in subj)
+        return self._pc(), co
+
+    def _tile_close(self, name: str, cat: str, t0: float, co: tuple,
+                    *, uids: tuple, hist=None, **attrs):
+        """One buffered record — Span/histogram work happens at
+        `Tracer.drain()`, not here (in engine context every extra call
+        runs icache-cold and costs ~10x its tight-loop time).  `hist` is
+        a resolved Histogram (self._h_*), not a name."""
+        if not self._obs_on:
+            return
+        self._tr.tile(name, cat, t0, self._pc(), uids, co, hist,
+                      attrs or None)
+
     # ------------------------------------------------------------- stats
     def _note_live(self):
         live = sum((int(self.positions[s.slot]) if s.phase == "decode"
@@ -704,10 +837,35 @@ class PagedEngine:
                    for s in self.sched.seqs if s is not None)
         self.peak_live_tokens = max(self.peak_live_tokens, live)
 
+    def _mirror(self, prefix: str, d: dict) -> dict:
+        """Publish a stats dict's scalars into the registry as gauges at
+        the READ point (stats calls are never on the hot path), so one
+        `render_snapshot` shows engine + scheduler + pool together."""
+        reg = self.obs.registry
+        for k, v in d.items():
+            if isinstance(v, bool):
+                reg.gauge(f"{prefix}.{k}").set(int(v))
+            elif isinstance(v, (int, float)):
+                reg.gauge(f"{prefix}.{k}").set(v)
+        return d
+
+    def metrics_snapshot(self) -> dict:
+        """Registry snapshot with the scheduler/pool gauges refreshed
+        and the buffered step tiles drained into their histograms —
+        what launch/serve.py renders and dumps (--metrics-out)."""
+        self._tr.drain()
+        self.kv_stats()
+        self.pool_stats()
+        if self._spec_n:
+            self.spec_stats()
+        return self.obs.registry.snapshot()
+
     def kv_stats(self) -> dict:
         """KV-memory accounting for benchmarks/paged_decode.py: resident
         paged bytes at the peak vs the dense engine's slots x max_len
-        allocation, plus the live-token bound the pool must respect."""
+        allocation, plus the live-token bound the pool must respect.
+        A thin view: engine-owned counts read from the registry (the
+        property views), scheduler/pool counts are mirrored into it."""
         pages_tree = self.kv.kv if self._hybrid else self.kv
         total = sum(leaf.nbytes for leaf in jax.tree.leaves(pages_tree))
         page_bytes = total / self.cfg.num_pages
@@ -720,7 +878,7 @@ class PagedEngine:
         bound = (self.peak_live_tokens
                  + (self.cfg.batch_slots + pool.cached_pages())
                  * self.cfg.page_size) * per_token
-        return {
+        return self._mirror("kvpool", {
             "page_size": self.cfg.page_size,
             "num_pages": self.cfg.num_pages,
             "page_bytes": page_bytes,
@@ -735,22 +893,23 @@ class PagedEngine:
             "prefix_hits": self.sched.prefix_hits,
             "stalls": self.sched.stalls,
             "evictions": pool.evictions,
-        }
+        })
 
     def pool_stats(self) -> dict:
         """Adapter-pool accounting (merge-free serving): residency,
         bytes per adapter vs one dense merged copy, upload/eviction
         counts.  Empty when the engine runs merge-on-load."""
-        return self.apool.stats() if self.apool is not None else {}
+        if self.apool is None:
+            return {}
+        return self._mirror("apool", self.apool.stats())
 
     def spec_stats(self) -> dict:
         """Speculative-decode accounting for the bench rows: acceptance
         and the effective tokens a sequence advances per verify dispatch
         it takes part in (> 1 is the whole point — each dispatch costs
         ~one decode pass per sequence; one-token decode is exactly 1)."""
-        return {
+        return self._mirror("spec", {
             "speculate": self._spec_n,
-            "draft_source": self.cfg.draft_source if self._spec_n else "",
             "drafted": self.spec_drafted,
             "accepted": self.spec_accepted,
             "accept_rate": (self.spec_accepted / self.spec_drafted
@@ -760,4 +919,18 @@ class PagedEngine:
                 self.spec_emitted / max(1, self.spec_slot_steps),
             "decode_steps": self.decode_steps,
             "decode_compilations": self.decode_compilations,
-        }
+        }) | {"draft_source":
+              self.cfg.draft_source if self._spec_n else ""}
+
+    # registry-backed attribute views: the counters live in
+    # self.obs.registry; these keep every existing read/write site and
+    # test working unchanged (DESIGN.md §11)
+    prefill_compilations = _stat_view("serve.prefill_compilations")
+    decode_compilations = _stat_view("serve.decode_compilations")
+    decode_steps = _stat_view("serve.decode_steps")
+    prefill_chunks = _stat_view("serve.prefill_chunks")
+    peak_live_tokens = _stat_view("serve.peak_live_tokens")
+    spec_drafted = _stat_view("serve.spec.drafted")
+    spec_accepted = _stat_view("serve.spec.accepted")
+    spec_emitted = _stat_view("serve.spec.emitted")
+    spec_slot_steps = _stat_view("serve.spec.slot_steps")

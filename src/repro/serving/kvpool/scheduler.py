@@ -83,6 +83,11 @@ class PagedScheduler:
         self.forced_preemptions = 0
         self.prefix_hits = 0
         self.stalls = 0
+        # observability hook: the engine re-stamps a preempted request's
+        # queue clock here (preemption restarts the wait; the admission
+        # requeue_front path does NOT reset it — the request never
+        # stopped waiting)
+        self.on_preempt_requeue = None
 
     # ------------------------------------------------------------- queue
     def submit(self, req: Request) -> None:
@@ -241,6 +246,8 @@ class PagedScheduler:
         self.requeue_front(seq.req)
         self.seqs[slot] = None
         self.preemptions += 1
+        if self.on_preempt_requeue is not None:
+            self.on_preempt_requeue(seq.req)
 
     def finish(self, slot: int, publish_prefix: bool = True) -> SeqState:
         """Retire a completed sequence: publish its full prompt pages to

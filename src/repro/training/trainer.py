@@ -299,14 +299,23 @@ def make_refresh_step(model, method: MethodConfig,
         return refresh
 
     def refresh(params, state, key):
+        from repro import obs as obs_mod
+        tr = obs_mod.default().tracer
         sub = subtree(params, engine.paths)
+        # phase spans (DESIGN.md §11): "dispatch" is the fused
+        # select+migrate program's async dispatch; "retry" includes the
+        # one scalar D2H overflow_retry pays anyway — no NEW syncs here
+        sp = tr.begin("refresh.dispatch", "refresh")
         opt, stats = engine.refresh_opt(sub, state["opt"], key)
+        tr.end(sp)
         if not isinstance(stats["overflow"], jax.core.Tracer):
             refresh.last_stats = stats  # skipped under an outer jit trace
             refresh.overflow_history.append(stats["overflow"])
             if lcfg.overflow_retry:
+                sp = tr.begin("refresh.retry", "refresh")
                 opt = _refresh_overflow_retry(engine, sub, state["opt"],
                                               opt, stats, key, refresh)
+                tr.end(sp, retried=len(refresh.retried_history))
         return dict(state, opt=opt)
 
     refresh.engine = engine

@@ -1,0 +1,437 @@
+"""Unified telemetry (DESIGN.md §11, docs/OBSERVABILITY.md).
+
+The contract under test, layer by layer:
+
+  * `obs.registry` — histogram percentiles are EXACT (bitwise equal to
+    `numpy.percentile(method="linear")`) while the stream fits the raw
+    window and bounded by one log-bucket width after; passing a device
+    array to any instrument raises instead of forcing a host sync; one
+    lock makes engine-thread mutation + snapshot polling safe;
+  * `obs.tracing` — spans round-trip through JSONL, the hot-path tile
+    buffer drains into Spans and histograms with epoch-relative stamps,
+    and `request_breakdown` reconstructs per-request wall time from the
+    engine's step tiling;
+  * `obs.audit` — `instrument_jit` counts new traces exactly as jax's
+    own compile cache does (shape changes retrace, values never do,
+    static args retrace by value) on BOTH detection paths, and
+    `CompileAuditor.check` enforces the committed compile-budget
+    manifest;
+  * end to end — a mixed speculative + multi-adapter serve under a
+    fresh ObsContext passes the committed manifest audit, its trace
+    decomposes each request's latency to within 5%, and a deliberately
+    un-bucketed prefill fails the audit loudly.
+"""
+import json
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core.lift import LiftConfig, get_by_path, make_plan
+from repro.deltas import DeltaArtifact
+from repro.deltas.format import make_manifest, num_stack, tree_hash
+from repro.models import ModelConfig, build_model
+from repro.obs.registry import Histogram, MetricsRegistry, log_edges
+from repro.obs.tracing import Span, Tracer, read_jsonl, request_breakdown
+from repro.serving.engine import Request
+from repro.serving.kvpool import AdapterPool, PagedEngine, PagedEngineConfig
+
+CFG = ModelConfig(family="dense", num_layers=2, d_model=64, num_heads=4,
+                  num_kv_heads=2, head_dim=16, d_ff=128, vocab_size=97)
+
+MANIFEST = "benchmarks/compilations_manifest.json"
+
+
+@pytest.fixture(scope="module")
+def model_params():
+    model = build_model(CFG)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _prompts(n, seed=3, lo=3, hi=40):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(3, 90, size=int(s)).astype(np.int32)
+            for s in rng.integers(lo, hi, size=n)]
+
+
+def _serve(model, params, prompts, ctx, *, max_new=8, speculate=0,
+           apool=None, ids=None, **cfg_kw):
+    eng = PagedEngine(model, params, PagedEngineConfig(
+        batch_slots=3, max_len=64, eos_id=2, page_size=8, num_pages=40,
+        speculate=speculate, draft_source="ngram", **cfg_kw),
+        adapter_pool=apool, obs=ctx)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=p, max_new_tokens=max_new,
+                           adapter_id=ids[i] if ids else None))
+    eng.run()
+    assert len(eng.done) == len(prompts)
+    assert not any(r.error for r in eng.done)
+    return {r.uid: tuple(r.out_tokens) for r in eng.done}, eng
+
+
+# ------------------------------------------------------------- registry
+def test_histogram_percentiles_exact_vs_numpy():
+    rng = np.random.default_rng(0)
+    xs = rng.lognormal(mean=-7.0, sigma=2.0, size=513)
+    h = Histogram("t", threading.RLock())
+    for v in xs:
+        h.observe(float(v))
+    assert h.exact
+    for q in (0.0, 10.0, 50.0, 90.0, 99.0, 100.0):
+        assert h.percentile(q) == float(
+            np.percentile(xs, q, method="linear"))
+    s = h.summary()
+    assert s["count"] == len(xs) and s["exact"]
+    assert s["min"] == xs.min() and s["max"] == xs.max()
+
+
+def test_histogram_bucket_fallback_bounded():
+    """Past the raw window the estimate answers from bucket upper edges:
+    within one log-bucket (10^(1/per_decade) = ~1.78x at the default 4
+    per decade) of the true percentile, and `exact` flips off."""
+    rng = np.random.default_rng(1)
+    xs = rng.lognormal(mean=-6.0, sigma=1.5, size=400)
+    h = Histogram("t", threading.RLock(), max_samples=32)
+    for v in xs:
+        h.observe(float(v))
+    assert not h.exact and not h.summary()["exact"]
+    width = 10 ** (1 / 4)
+    for q in (50.0, 90.0, 99.0):
+        truth = float(np.percentile(xs, q, method="linear"))
+        est = h.percentile(q)
+        assert truth / width <= est <= truth * width, (q, truth, est)
+
+
+def test_device_values_rejected_everywhere():
+    """The no-host-sync rule: a jax.Array never reaches an instrument."""
+    reg = MetricsRegistry()
+    dev = jnp.float32(1.0)
+    with pytest.raises(TypeError, match="host sync"):
+        reg.counter("c").inc(dev)
+    with pytest.raises(TypeError, match="host sync"):
+        reg.gauge("g").set(dev)
+    with pytest.raises(TypeError, match="host sync"):
+        reg.histogram("h").observe(dev)
+    # host-side numpy scalars are fine
+    reg.counter("c").inc(np.int64(2))
+    reg.histogram("h").observe(np.float64(0.5))
+    assert reg.counter("c").value == 2
+
+
+def test_snapshot_and_render():
+    reg = MetricsRegistry()
+    reg.counter("serve.tokens").inc(7)
+    reg.gauge("pool.peak").set_max(3)
+    reg.gauge("pool.peak").set_max(1)          # running max keeps 3
+    reg.histogram("lat").observe(0.25)
+    snap = reg.snapshot()
+    assert snap["counters"]["serve.tokens"] == 7
+    assert snap["gauges"]["pool.peak"] == 3
+    assert snap["histograms"]["lat"]["count"] == 1
+    text = obs.render_snapshot(snap)
+    assert "serve.tokens = 7" in text and "lat:" in text
+    assert "serve.tokens" not in obs.render_snapshot(snap, prefix="pool")
+
+
+def test_registry_thread_safe_under_polling():
+    reg = MetricsRegistry()
+    stop = threading.Event()
+
+    def mutate():
+        c = reg.counter("n")
+        h = reg.histogram("h")
+        while not stop.is_set():
+            c.inc()
+            h.observe(0.001)
+
+    threads = [threading.Thread(target=mutate) for _ in range(3)]
+    for t in threads:
+        t.start()
+    for _ in range(50):
+        snap = reg.snapshot()
+        assert snap["histograms"].get("h", {}).get("count", 0) >= 0
+    stop.set()
+    for t in threads:
+        t.join()
+    assert reg.counter("n").value == reg.histogram("h").count
+
+
+# -------------------------------------------------------------- tracing
+def test_span_jsonl_roundtrip(tmp_path):
+    tr = Tracer()
+    s = tr.begin("prefill", "prefill", uid=1, uids=(1,), C=32)
+    tr.end(s, padded=32)
+    tr.add("queue.wait", "queue", 0.0, 0.5, uid=2, uids=(2,))
+    path = str(tmp_path / "trace.jsonl")
+    assert tr.write_jsonl(path) == 2
+    back = read_jsonl(path)
+    assert [b["t0"] for b in back] == sorted(b["t0"] for b in back)
+    by_name = {b["name"]: b for b in back}
+    q = by_name["queue.wait"]
+    assert q["cat"] == "queue" and q["uid"] == 2 and q["dur"] == 0.5
+    p = by_name["prefill"]
+    assert p["attrs"] == {"C": 32, "padded": 32} and p["uids"] == [1]
+
+
+def test_tile_buffer_drains_spans_and_histograms():
+    """The engines' hot path: `tile()` is one tuple append of RAW
+    perf_counter stamps; `drain()` (implicit on `.spans`) materializes
+    epoch-relative Spans and feeds the tile histogram."""
+    tr = Tracer()
+    h = Histogram("d", threading.RLock())
+    t0 = tr.epoch + 1.0
+    tr.tile("decode", "decode", t0, t0 + 0.25, (1, 2), (3,), h,
+            {"batch": 2})
+    assert not tr._spans and h.count == 0      # nothing materialized yet
+    spans = tr.spans                           # property drains
+    assert len(spans) == 1 and h.count == 1
+    s = spans[0]
+    assert (s.t0, s.t1) == (1.0, 1.25) and s.uids == (1, 2)
+    assert s.co_uids == (3,) and s.attrs == {"batch": 2}
+    assert h.sum == pytest.approx(0.25)
+    tr.drain()                                 # idempotent
+    assert len(tr.spans) == 1 and h.count == 1
+
+
+def test_tracer_bounded_and_disabled():
+    tr = Tracer(max_spans=2)
+    for i in range(5):
+        tr.add("s", "x", 0.0, 1.0, uid=i)
+    assert len(tr.spans) == 2 and tr.dropped == 3
+    off = Tracer(enabled=False)
+    assert off.begin("a", "b") is None
+    assert off.end(None) is None               # call sites stay linear
+    assert off.add("a", "b", 0.0, 1.0) is None
+    off.tile("a", "b", 0.0, 1.0, (), (), None, None)
+    assert off.spans == [] and off.dropped == 0
+
+
+def test_request_breakdown_tiling():
+    spans = [
+        Span("queue.wait", "queue", 0.0, 1.0, uid=1, uids=(1,)),
+        Span("prefill", "prefill", 1.0, 3.0, uids=(1,), co_uids=(2,)),
+        Span("decode", "decode", 3.0, 7.0, uids=(1, 2)),
+        Span("request", "request", 0.0, 7.0, uid=1, uids=(1,)),
+    ]
+    bd = request_breakdown(spans)
+    assert bd[1]["by_cat"] == {"queue": 1.0, "prefill": 2.0, "decode": 4.0}
+    assert bd[1]["total"] == 7.0 and bd[1]["e2e"] == 7.0
+    # request 2 waited out request 1's prefill as a co-resident
+    assert bd[2]["by_cat"] == {"batch": 2.0, "decode": 4.0}
+    assert bd[2]["e2e"] is None
+
+
+# ---------------------------------------------------------------- audit
+def _jit_probe(ctx):
+    return obs.instrument_jit(
+        lambda x, n: x * n, name="probe", obs=ctx)
+
+
+def test_instrument_jit_counts_traces_like_jax():
+    ctx = obs.ObsContext.fresh()
+    fn = _jit_probe(ctx)
+    a = jnp.ones((4,), jnp.float32)
+    fn(a, 2)
+    fn(a + 1, 2)                   # same abstract shape: cache hit
+    fn(a, 3)                       # weak-typed python scalar: cache hit
+    assert ctx.auditor.compilations("probe") == 1
+    fn(jnp.ones((8,), jnp.float32), 2)      # new shape: retrace
+    fn(jnp.ones((4,), jnp.int32), 2)        # new dtype: retrace
+    assert ctx.auditor.compilations("probe") == 3
+    cs = fn.cache_size()
+    if cs is not None:             # cross-check vs jax's own cache
+        assert cs == 3
+    rep = ctx.auditor.report()["probe"]
+    assert rep["calls"] == 5 and rep["compilations"] == 3
+
+
+def test_instrument_jit_static_args_retrace_by_value():
+    ctx = obs.ObsContext.fresh()
+    fn = obs.instrument_jit(lambda x, n: x * n, name="stat", obs=ctx,
+                            static_argnames=("n",))
+    a = jnp.ones((4,), jnp.float32)
+    fn(a, n=2)
+    fn(a, n=2)
+    assert ctx.auditor.compilations("stat") == 1
+    fn(a, n=3)                     # static arg changed: IS a retrace
+    assert ctx.auditor.compilations("stat") == 2
+
+
+def test_fingerprint_fallback_matches_cache_size():
+    """Force the `call_fingerprint` path (no `_cache_size` fast path)
+    and hold it equal to jax's own compile count on the same calls."""
+    ctx = obs.ObsContext.fresh()
+    fn = _jit_probe(ctx)
+    if fn.cache_size() is None:
+        pytest.skip("jax version exposes no _cache_size to compare")
+    fn._cs_fn = None               # fallback from the first call on
+    a = jnp.ones((4,), jnp.float32)
+    for arg, n in ((a, 2), (a + 1, 2), (a, 5),
+                   (jnp.ones((2,), jnp.float32), 2)):
+        fn(arg, n)
+    assert ctx.auditor.compilations("probe") == fn.cache_size() == 2
+
+
+def test_manifest_check_semantics():
+    aud = obs.CompileAuditor()
+    for name, fps in (("a", ("f1",)), ("b", ("f1", "f2", "f3")),
+                      ("c", ("f1", "f2")), ("d", ("f1",))):
+        for fp in fps:
+            aud.note_call(name, fp)
+    man = {"version": 1, "require_listed": True,
+           "entries": {"a": {"exact": 1}, "b": {"max": 2},
+                       "c": {"any": True}}}
+    errs = aud.check(man)
+    assert len(errs) == 2
+    assert any("b: 3" in e and "re-trace" in e for e in errs)
+    assert any(e.startswith("d:") and "not in the manifest" in e
+               for e in errs)
+    man["entries"]["b"] = {"max": 3}
+    man["require_listed"] = False
+    assert aud.check(man) == []
+    # a name never CALLED is never audited (train vs serve manifests)
+    man["entries"]["ghost"] = {"exact": 99}
+    assert aud.check(man) == []
+    man["entries"]["a"] = {}
+    assert any("none of exact/max/any" in e for e in aud.check(man))
+
+
+def test_load_manifest_validates(tmp_path):
+    good = tmp_path / "m.json"
+    good.write_text(json.dumps(
+        {"version": 1, "entries": {"x": {"exact": 1}}}))
+    assert obs.load_manifest(str(good))["entries"]["x"] == {"exact": 1}
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"version": 2, "entries": {}}))
+    with pytest.raises(ValueError, match="version"):
+        obs.load_manifest(str(bad))
+    bad.write_text(json.dumps({"version": 1}))
+    with pytest.raises(ValueError, match="entries"):
+        obs.load_manifest(str(bad))
+
+
+# ----------------------------------------------------- engine integration
+def _plan_meta(model, density=0.05):
+    plan = make_plan(model.spec(), LiftConfig(density=density, min_dim=16))
+    return {p: {"shape": list(t.shape), "stack": list(t.stack),
+                "rows": t.rows, "cols": t.cols, "k": t.k,
+                "dtype": "float32"} for p, t in sorted(plan.items())}
+
+
+def _synthetic_adapter(base_params, meta, seed):
+    rng = np.random.default_rng(seed)
+    tensors = {}
+    for path, m in meta.items():
+        ns, k = num_stack(m), m["k"]
+        size = m["rows"] * m["cols"]
+        idx = np.stack([np.sort(rng.choice(size, k, replace=False))
+                        for _ in range(ns)]).astype(np.int32)
+        base = np.asarray(get_by_path(base_params, path),
+                          np.float32).reshape(ns, size)
+        val = np.take_along_axis(base, idx, 1) \
+            + rng.normal(scale=0.05, size=(ns, k)).astype(np.float32)
+        tensors[path] = {"idx": idx, "val": val.astype(np.float32)}
+    return DeltaArtifact(
+        manifest=make_manifest(mode="replace",
+                               base_hash=tree_hash(base_params),
+                               selection=None, tensors_meta=meta, step=0),
+        tensors=tensors)
+
+
+def test_engine_audit_passes_committed_manifest(model_params):
+    """A mixed speculative + multi-adapter serve under a fresh context:
+    the committed compile-budget manifest holds, the trace has every
+    step-phase category, and instrumentation never changes tokens."""
+    model, params = model_params
+    meta = _plan_meta(model)
+    apool = AdapterPool(params, num_pages=24, entries_per_page=512)
+    for aid, seed in (("a", 11), ("b", 22)):
+        apool.register(aid, _synthetic_adapter(params, meta, seed))
+    prompts = _prompts(6, seed=5)
+    ids = ["a", "b", None, "a", "b", "a"]
+
+    ctx = obs.ObsContext.fresh(trace=True)
+    got, eng = _serve(model, params, prompts, ctx, speculate=2,
+                      apool=apool, ids=ids)
+    want, _ = _serve(model, params, prompts, obs.ObsContext.disabled(),
+                     speculate=2, apool=apool, ids=ids)
+    assert got == want                       # observability is read-only
+
+    errs = ctx.auditor.check(obs.load_manifest(MANIFEST))
+    assert errs == []
+    rep = ctx.auditor.report()
+    assert rep["serve.paged.verify"]["compilations"] == 1
+    cats = {s.cat for s in ctx.tracer.spans}
+    assert {"queue", "prefill", "verify", "accept", "pool",
+            "request"} <= cats
+    # the registry saw the same stream the engine counted
+    snap = eng.metrics_snapshot()
+    assert snap["counters"]["serve.tokens_emitted"] == \
+        sum(len(t) for t in got.values())
+    assert snap["histograms"]["serve.decode_step_s"]["count"] == \
+        eng.decode_steps
+
+
+def test_unbucketed_prefill_fails_audit_loudly(model_params):
+    """The regression the auditor exists to catch: switching off prefill
+    bucketing re-traces the prefill per distinct prompt length, blowing
+    the manifest's serve.paged.prefill_whole budget."""
+    model, params = model_params
+    ctx = obs.ObsContext.fresh()
+    prompts = [np.arange(3, 3 + n, dtype=np.int32).astype(np.int32)
+               for n in (5, 9, 14, 23, 31, 38)]      # 6 distinct lengths
+    _serve(model, params, prompts, ctx, prefill_buckets=False)
+    errs = ctx.auditor.check(obs.load_manifest(MANIFEST))
+    assert errs, "un-bucketed prefill must fail the compile audit"
+    assert any("serve.paged.prefill_whole" in e and "re-trace" in e
+               for e in errs)
+    # the same workload WITH bucketing stays inside the budget
+    ctx2 = obs.ObsContext.fresh()
+    _serve(model, params, prompts, ctx2)
+    assert ctx2.auditor.check(obs.load_manifest(MANIFEST)) == []
+
+
+def test_trace_decomposition_within_bound(model_params):
+    """queue wait + step tiles (subject or co-resident) reconstruct each
+    request's submit->finish latency to within 5% in aggregate."""
+    model, params = model_params
+    ctx = obs.ObsContext.fresh(trace=True)
+    _serve(model, params, _prompts(6, seed=9), ctx, max_new=16)
+    bd = request_breakdown(ctx.tracer.spans)
+    assert set(bd) == set(range(6))
+    tot = sum(d["total"] for d in bd.values())
+    e2e = sum(d["e2e"] for d in bd.values())
+    assert all(d["e2e"] is not None for d in bd.values())
+    assert abs(tot - e2e) / e2e < 0.05, (tot, e2e)
+    for uid, d in bd.items():
+        assert {"queue", "prefill", "decode"} <= set(d["by_cat"]), uid
+        # no tile may exceed the envelope it tiles
+        assert d["total"] <= d["e2e"] * 1.05, (uid, d)
+
+
+def test_engine_loop_thread_vs_snapshot_polling(model_params):
+    """The serving loop in one thread, a metrics reader in another —
+    the single registry lock keeps both consistent (no torn reads, no
+    deadlock)."""
+    model, params = model_params
+    ctx = obs.ObsContext.fresh(trace=True)
+    eng = PagedEngine(model, params, PagedEngineConfig(
+        batch_slots=3, max_len=64, eos_id=2, page_size=8, num_pages=40),
+        obs=ctx)
+    for i, p in enumerate(_prompts(6, seed=4)):
+        eng.submit(Request(uid=i, prompt=p, max_new_tokens=12))
+    t = threading.Thread(target=eng.run)
+    t.start()
+    seen = 0
+    while t.is_alive():
+        snap = eng.metrics_snapshot()
+        steps = snap["counters"].get("serve.decode_steps", 0)
+        assert steps >= seen                 # monotone under the lock
+        seen = steps
+    t.join()
+    assert len(eng.done) == 6
+    assert eng.metrics_snapshot()["counters"]["serve.decode_steps"] \
+        == eng.decode_steps > 0
