@@ -74,6 +74,21 @@ Semantic invariants for suite "paged_decode" (DESIGN.md §5):
     a host sync to a hot path) and `matches_dense` == true
     (instrumentation must not move a single token).
 
+Semantic invariants for suite "quant" (DESIGN.md §12):
+  * every `residency/*` row reports numeric `hbm_bytes_ratio` <= 0.55 —
+    int8 base + fp32 principal overlay must cost at most 55 % of the
+    dense fp32 residency for the quantized projection set;
+  * every `parity/*` row reports `matches_ref` == true — the fused
+    dequant-scatter-matmul kernel and the lax fallback must both stay
+    bitwise-identical to the `kernels.ref` oracle;
+  * every `divergence/*` row reports numeric `max_logit_divergence` >= 0
+    AND `within_bound` == true (per-position max |logit - fp32 logit|
+    stays under the row's committed `bound`);
+  * every `identity/*` row reports `matches_ref` == true — greedy decode
+    over the quantized base reproduces the fp32 reference token streams
+    exactly, including the mixed-adapter pool row (vs fp32
+    merge-on-load), which additionally reports `adapters_mixed` >= 2.
+
 Usage: python -m benchmarks.bench_schema BENCH_kernels_micro.json [...]
 """
 from __future__ import annotations
@@ -126,6 +141,8 @@ def validate(doc) -> list:
             errs.extend(_delta_merge_row(name, metrics))
         if suite == "paged_decode":
             errs.extend(_paged_decode_row(name, metrics))
+        if suite == "quant":
+            errs.extend(_quant_row(name, metrics))
     return errs
 
 
@@ -288,6 +305,53 @@ def _paged_decode_row(name: str, metrics: dict) -> list:
                 or meas < 0:
             errs.append(f"{name}: roofline row needs numeric "
                         f"measured_tok_s >= 0, got {meas!r}")
+    return errs
+
+
+def _quant_row(name: str, metrics: dict) -> list:
+    errs = []
+    if name.startswith("residency/"):
+        ratio = metrics.get("hbm_bytes_ratio")
+        if not isinstance(ratio, (int, float)) or isinstance(ratio, bool):
+            errs.append(f"{name}: residency row needs numeric metric "
+                        f"hbm_bytes_ratio, got {ratio!r}")
+        elif ratio > 0.55:
+            errs.append(
+                f"{name}: quantized residency is {ratio:.3f}x the dense "
+                f"fp32 bytes — exceeds the 55% int8+overlay bound "
+                f"(DESIGN.md §12)")
+    if name.startswith("parity/"):
+        if metrics.get("matches_ref") is not True:
+            errs.append(
+                f"{name}: matches_ref must be true — the fused "
+                f"dequant-scatter-matmul diverged from the kernels.ref "
+                f"oracle (the contract is bitwise, DESIGN.md §12)")
+    if name.startswith("divergence/"):
+        div = metrics.get("max_logit_divergence")
+        if not isinstance(div, (int, float)) or isinstance(div, bool) \
+                or div < 0:
+            errs.append(f"{name}: divergence row needs numeric "
+                        f"max_logit_divergence >= 0, got {div!r}")
+        if metrics.get("within_bound") is not True:
+            errs.append(
+                f"{name}: within_bound must be true — per-position logit "
+                f"divergence vs the fp32 reference exceeded the committed "
+                f"bound ({metrics.get('max_logit_divergence')!r} vs "
+                f"{metrics.get('bound')!r})")
+    if name.startswith("identity/"):
+        if metrics.get("matches_ref") is not True:
+            errs.append(
+                f"{name}: matches_ref must be true — greedy decode over "
+                f"the quantized base moved a token vs the fp32 reference "
+                f"streams (DESIGN.md §12)")
+        if "adapters_mixed" in metrics:
+            mixed = metrics.get("adapters_mixed")
+            if not isinstance(mixed, int) or isinstance(mixed, bool) \
+                    or mixed < 2:
+                errs.append(
+                    f"{name}: adapters_mixed must be an integer >= 2 — "
+                    f"the pool row must actually mix adapters over the "
+                    f"int8 base, got {mixed!r}")
     return errs
 
 

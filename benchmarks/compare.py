@@ -33,6 +33,8 @@ baseline artifact in place and commit it with the PR:
         --json benchmarks/baselines/BENCH_delta_merge.json
     PYTHONPATH=src:. python -m benchmarks.paged_decode \
         --json benchmarks/baselines/BENCH_paged_decode.json
+    PYTHONPATH=src:. python -m benchmarks.quant \
+        --json benchmarks/baselines/BENCH_quant.json
 
 The baseline diff then documents the accepted trajectory change in
 review, which is the point of committing baselines at all.
@@ -81,6 +83,13 @@ NUM_GUARDS = {
     # (both arms are wall time, but their RATIO is what must not drift —
     # a host sync sneaking into a hot path shows up here)
     "obs_tok_s_ratio":          ("min", 0.03, 0.0),
+    # quantized-base serving (DESIGN.md §12): residency is deterministic
+    # byte arithmetic; logit divergence is fixed-seed deterministic with
+    # headroom for jax-version numeric shifts; the committed bound itself
+    # must NEVER loosen (zero tolerance)
+    "hbm_bytes_ratio":          ("max", 0.05, 0.0),
+    "max_logit_divergence":     ("max", 0.25, 0.0),
+    "bound":                    ("max", 0.0, 0.0),
     # measured by XLA, stable under pinned jaxlib but version-sensitive:
     # generous headroom so only order-of-magnitude regressions (a score
     # matrix sneaking back into temps) trip the gate

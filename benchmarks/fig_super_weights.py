@@ -1,0 +1,123 @@
+"""Super-weight survival under rank reduction (DESIGN.md §12).
+
+The quantized-base overlay keeps two ingredients in high precision: the
+top-density entries of the rank-reduced LIFT score |W'| (the Principal
+Weights, paper eq. 2) and the super-weight outliers (|w| above a sigma
+threshold).  This figure checks the part the paper's thesis rests on:
+rank reduction does NOT wash out the outliers that dominate quantization
+error.  Gaussian weight matrices get super-weight entries (~50 sigma)
+injected into a handful of columns; at every paper rank the rank-r
+score must place ALL of them inside the top-5% mask — `run()` asserts
+it, so `benchmarks/run.py` fails if rank reduction ever loses one.
+
+A final row drives `repro.quant.quantize.principal_indices` (the
+quantizer's actual selection, sigma guard on): even with the guard
+DISABLED the outliers survive scoring; with it on they are guaranteed
+regardless of rank — both facts are asserted.
+
+Machine-readable output: `python -m benchmarks.fig_super_weights --json
+BENCH_fig_super_weights.json` (schema: benchmarks/bench_schema.py).
+"""
+import argparse
+import time
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from benchmarks.common import csv_rows, write_bench_json
+from repro.core.lift import LiftConfig, scores_for, topk_indices
+from repro.quant.quantize import principal_indices
+
+ROWS, COLS = 256, 512
+SIGMA = 0.02                 # bulk weight scale
+RANKS = (4, 8, 16, 32)       # paper operating ranks
+DENSITY = 0.05               # top-5% mask
+OUTLIER_COLS = (7, 133, 310, 471)
+OUTLIERS_PER_COL = 4
+OUTLIER_SIGMA = 50.0         # injected |w| in bulk-sigma units
+
+
+def _matrix(seed=0):
+    """Gaussian bulk + injected super-weight outliers; returns the
+    matrix and the sorted flat indices of the injected entries."""
+    rng = np.random.default_rng(seed)
+    w = rng.normal(scale=SIGMA, size=(ROWS, COLS)).astype(np.float32)
+    injected = []
+    for c in OUTLIER_COLS:
+        for r in rng.choice(ROWS, OUTLIERS_PER_COL, replace=False):
+            sign = 1.0 if rng.random() < 0.5 else -1.0
+            w[r, c] = sign * OUTLIER_SIGMA * SIGMA * (1.0 + rng.random())
+            injected.append(r * COLS + c)
+    return w, np.unique(np.asarray(injected, np.int64))
+
+
+def run():
+    w, injected = _matrix()
+    wj = jnp.asarray(w)
+    k = int(DENSITY * ROWS * COLS)
+    rows = []
+    for rank in RANKS:
+        cfg = LiftConfig(rank=rank, density=DENSITY, method="exact",
+                         min_dim=16)
+        t0 = time.perf_counter()
+        mask = np.asarray(topk_indices(scores_for(wj, cfg, "lift"), k))
+        dt = time.perf_counter() - t0
+        captured = int(np.intersect1d(injected, mask).size)
+        rate = captured / injected.size
+        assert captured == injected.size, (
+            f"rank {rank}: only {captured}/{injected.size} injected "
+            f"super-weights survived rank-reduced scoring into the "
+            f"top-{DENSITY:.0%} mask — the principal-overlay premise "
+            f"(DESIGN.md §12) is broken")
+        rows.append({
+            "name": f"super/rank{rank}",
+            "us_per_call": dt * 1e6,
+            "derived": f"capture_rate={rate:.3f};"
+                       f"captured={captured}/{injected.size}",
+            "metrics": {"capture_rate": float(rate),
+                        "captured": captured,
+                        "injected": int(injected.size),
+                        "all_captured": captured == injected.size,
+                        "rank": rank, "density": DENSITY,
+                        "outlier_sigma": OUTLIER_SIGMA}})
+
+    # the quantizer's own selection, sigma guard ON: capture is
+    # guaranteed by construction at ANY rank (50-sigma entries trip the
+    # 6-sigma guard), independent of what scoring does
+    cfg = LiftConfig(rank=RANKS[0], density=DENSITY, method="exact",
+                     min_dim=16)
+    t0 = time.perf_counter()
+    guarded = principal_indices(wj, cfg, k, superw_sigma=6.0)
+    dt = time.perf_counter() - t0
+    captured = int(np.intersect1d(injected, guarded).size)
+    assert captured == injected.size, (
+        f"sigma guard lost {injected.size - captured} super-weights — "
+        f"quantize.principal_indices guard broken")
+    rows.append({
+        "name": "super/guard-sigma6",
+        "us_per_call": dt * 1e6,
+        "derived": f"captured={captured}/{injected.size};rank={RANKS[0]}",
+        "metrics": {"capture_rate": 1.0, "captured": captured,
+                    "injected": int(injected.size),
+                    "all_captured": True,
+                    "rank": RANKS[0], "density": DENSITY,
+                    "superw_sigma": 6.0}})
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="",
+                    help="write the machine-readable artifact here "
+                         "(BENCH_fig_super_weights.json; docs/CI.md)")
+    args = ap.parse_args()
+    rows = run()
+    csv_rows(rows)
+    if args.json:
+        write_bench_json(args.json, rows, suite="fig_super_weights")
+        print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -27,7 +27,10 @@ paged engine with chunked prefill interleaving — with:
     interpret-mode wall time is noise;
   * a memory-bound roofline row (`roofline/`): attainable tok/s from
     `repro.launch.roofline.paged_decode_roofline` at the measured
-    accept rate and page size, next to the measured tok/s;
+    accept rate and page size, next to the measured tok/s — plus a
+    report-only `roofline/*-int8` variant modeling the int8 base +
+    principal-overlay weight stream (DESIGN.md §12; never gated
+    against a measurement);
   * an observability-overhead row (`obs/`, CI-gated): the same paged
     config served fully instrumented (span tracing + compile
     fingerprinting on, docs/OBSERVABILITY.md) vs fully disabled
@@ -183,6 +186,15 @@ def run():
         SMALL, batch=SLOTS, live_tokens_per_seq=live,
         page_size=PAGE_SIZE, draft_len=DRAFT_LEN,
         accept_rate=sp["accept_rate"])
+    # report-only: same roofline with the int8 base + principal overlay
+    # weight-stream term (DESIGN.md §12) — the modeled headroom a
+    # quantized base buys in the memory-bound decode regime; never gated
+    # against a measurement (this bench serves the fp32 base)
+    roof_q = paged_decode_roofline(
+        SMALL, batch=SLOTS, live_tokens_per_seq=live,
+        page_size=PAGE_SIZE, draft_len=DRAFT_LEN,
+        accept_rate=sp["accept_rate"], quantize_base=True,
+        overlay_density=0.05)
     rows = [
         {"name": f"decode/{name}-paged",
          "us_per_call": dt_paged * 1e6,
@@ -248,6 +260,22 @@ def run():
                      "accept_rate": float(roof["accept_rate"]),
                      "draft_len": DRAFT_LEN, "page_size": PAGE_SIZE,
                      "live_tokens_per_seq": live}},
+        {"name": f"roofline/{name}-spec-int8",
+         "us_per_call": 0.0,
+         "derived": f"attainable_tok_s={roof_q['attainable_tok_s']:.0f};"
+                    f"vs_fp32_attainable="
+                    f"{roof_q['attainable_tok_s'] / roof['attainable_tok_s']:.2f};"
+                    f"param_bytes={roof_q['param_bytes']:.0f}",
+         "metrics": {"attainable_tok_s": float(roof_q["attainable_tok_s"]),
+                     "measured_tok_s": 0.0,
+                     "vs_fp32_attainable":
+                         float(roof_q["attainable_tok_s"]
+                               / roof["attainable_tok_s"]),
+                     "param_bytes": float(roof_q["param_bytes"]),
+                     "param_bytes_dense": float(roof["param_bytes"]),
+                     "overlay_density": 0.05,
+                     "quantize_base": True,
+                     "draft_len": DRAFT_LEN, "page_size": PAGE_SIZE}},
         {"name": f"obs/{name}-overhead",
          "us_per_call": dt_instr * 1e6,
          "derived": f"obs_tok_s_ratio={obs_ratio:.3f};"

@@ -25,9 +25,11 @@ MODULES = [
     "benchmarks.tbl17_structured",        # App G.7 / Table 17
     "benchmarks.fig16_rank_grid",         # Figure 16
     "benchmarks.fig17_selection_overlap", # Figure 17 / App G.9
+    "benchmarks.fig_super_weights",       # outliers survive rank reduction
     "benchmarks.kernels_micro",           # kernel hot-spots
     "benchmarks.delta_merge",             # DeltaHub scatter-merge + bytes
     "benchmarks.paged_decode",            # PagedKV serving identity + bytes
+    "benchmarks.quant",                   # int8 base + overlay serving
 ]
 
 

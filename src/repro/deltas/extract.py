@@ -47,9 +47,13 @@ def extract(ckpt, step: int, base_params, *, mode: str = "replace",
 
     `value_dtype` (e.g. "float16") stores the shipped VALUES narrower
     than the tensor dtype — half the value bytes for fp32 tensors;
-    merging upcasts (format v2).  Quantization breaks the bitwise
-    mode="replace" contract (merged = fp32(fp16(w))); leave None when
-    bitwise identity to the fine-tuned checkpoint matters."""
+    merging upcasts (format v2).  `value_dtype="int8"` (format v3)
+    quantizes the values to int8 with a per-tensor absmax/127
+    `value_scale` — a quarter of the value bytes; merging dequantizes
+    `val * value_scale` in fp32.  Quantization breaks the bitwise
+    mode="replace" contract (merged = fp32(fp16(w)) or
+    fp32(int8(w) * scale)); leave None when bitwise identity to the
+    fine-tuned checkpoint matters."""
     selection = ckpt.restore_selection(step)
     if selection is None:
         raise DeltaMismatchError(
@@ -75,7 +79,14 @@ def extract(ckpt, step: int, base_params, *, mode: str = "replace",
                 ns, meta["rows"] * meta["cols"])
             val = val - np.take_along_axis(base_flat, idx2, axis=-1)
         meta_out = dict(meta, dtype=str(tuned.dtype))
-        if value_dtype is not None and value_dtype != str(tuned.dtype):
+        if value_dtype == "int8":
+            absmax = float(np.max(np.abs(val.astype(np.float32))))
+            scale = (absmax / 127.0) or 1.0
+            val = np.clip(np.rint(val.astype(np.float32) / scale),
+                          -127, 127).astype(np.int8)
+            meta_out["value_dtype"] = "int8"
+            meta_out["value_scale"] = scale
+        elif value_dtype is not None and value_dtype != str(tuned.dtype):
             val = val.astype(np.dtype(value_dtype))
             meta_out["value_dtype"] = value_dtype
         tensors[path] = {"idx": idx2, "val": val}

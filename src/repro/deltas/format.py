@@ -22,20 +22,25 @@ Manifest fields:
   * tensors — {path: {shape, stack, rows, cols, k, dtype}} for the
     shipped pairs; format v2 adds an optional per-tensor `value_dtype`
     (e.g. "float16") when the shipped values are stored narrower than
-    the tensor dtype — consumers upcast on merge;
+    the tensor dtype — consumers upcast on merge; format v3 extends
+    `value_dtype` to "int8" with a per-tensor `value_scale` (absmax/127
+    over the tensor's shipped values) — consumers dequantize
+    `val * value_scale` in fp32 on merge (`decode_values`);
   * step — the source checkpoint step.
 
 The artifact is O(k) per tensor — ~2x density of the dense bytes at equal
 dtype (int32 index + value per entry), i.e. ≤ 12 % of the dense
 checkpoint at the paper's 5 % density (benchmarks/delta_merge.py tracks
 this ratio in CI).  fp16 values (`extract(..., value_dtype="float16")`)
-shrink the value half of the payload 2x for fp32 tensors at the cost of
-the bitwise mode="replace" contract: a quantized delta merges to
-fp32(fp16(w)), not w — ship full-precision values when bitwise identity
-to the fine-tuned checkpoint matters.  Refusal semantics are unchanged:
-a v1 reader refuses v2 artifacts by format_version exactly as before,
-and this reader accepts every version in SUPPORTED_FORMAT_VERSIONS
-(v1 artifacts simply have no `value_dtype` fields).
+shrink the value half of the payload 2x for fp32 tensors, int8 values
+(`value_dtype="int8"`, v3) shrink it 4x — both at the cost of the
+bitwise mode="replace" contract: a quantized delta merges to
+fp32(fp16(w)) / fp32(int8(w) * scale), not w — ship full-precision
+values when bitwise identity to the fine-tuned checkpoint matters.
+Refusal semantics are unchanged: a v1 reader refuses v2/v3 artifacts by
+format_version exactly as before, and this reader accepts every version
+in SUPPORTED_FORMAT_VERSIONS (v1 artifacts simply have no `value_dtype`
+fields, v1/v2 no `value_scale`).
 """
 from __future__ import annotations
 
@@ -49,8 +54,8 @@ import numpy as np
 
 from repro.checkpoint.manager import _flatten
 
-DELTA_FORMAT_VERSION = 2
-SUPPORTED_FORMAT_VERSIONS = (1, 2)
+DELTA_FORMAT_VERSION = 3
+SUPPORTED_FORMAT_VERSIONS = (1, 2, 3)
 MANIFEST_NAME = "delta.json"
 ARRAYS_NAME = "arrays.npz"
 MODES = ("replace", "add")
@@ -70,6 +75,21 @@ def value_dtype(meta: dict) -> str:
     `value_dtype` field, defaulting to the tensor dtype (always the case
     for v1 artifacts)."""
     return meta.get("value_dtype", meta["dtype"])
+
+
+def decode_values(val, meta: dict):
+    """Shipped values -> tensor dtype: identity for full-precision
+    artifacts, exact upcast for v2 narrow floats, fp32 dequantization
+    (`val * value_scale`) for v3 int8 values.  Works on numpy and jax
+    arrays alike — the ONE decode every consumer (merge, pool packing)
+    shares, so an artifact merges identically everywhere."""
+    vd = value_dtype(meta)
+    if vd == meta["dtype"]:
+        return val
+    if vd == "int8":
+        scale = np.float32(meta.get("value_scale", 1.0))
+        return (val.astype("float32") * scale).astype(meta["dtype"])
+    return val.astype(meta["dtype"])
 
 
 def tree_hash(tree) -> str:

@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.lift import get_by_path, set_by_path
 from repro.core.selection import GroupSpec
@@ -92,19 +93,17 @@ class DeltaMerger:
     def merge(self, base_params, delta: DeltaArtifact):
         """base tree + artifact -> merged tree (one jitted program).
 
-        Quantized artifacts (format v2 `value_dtype`, e.g. fp16 values)
-        UPCAST here: fp16 -> fp32 is exact, so the merged entry is
-        fp32(fp16(w)) — the only lossy step was extraction-time rounding,
-        never the merge itself."""
-        from repro.deltas.format import value_dtype
+        Quantized artifacts (format v2 `value_dtype`, e.g. fp16 values;
+        format v3 int8 values with a per-tensor `value_scale`) DECODE
+        here: fp16 -> fp32 is an exact upcast, int8 dequantizes
+        `val * value_scale` in fp32 — so the merged entry is
+        fp32(fp16(w)) / fp32(int8(w) * scale); the only lossy step was
+        extraction-time rounding, never the merge itself."""
+        from repro.deltas.format import decode_values
         idx = {p: jnp.asarray(delta.tensors[p]["idx"]) for p in self.paths}
-        val = {}
-        for p in self.paths:
-            v = jnp.asarray(delta.tensors[p]["val"])
-            meta = self.meta[p]
-            if value_dtype(meta) != meta["dtype"]:
-                v = v.astype(jnp.dtype(meta["dtype"]))
-            val[p] = v
+        val = {p: jnp.asarray(decode_values(
+            np.asarray(delta.tensors[p]["val"]), self.meta[p]))
+            for p in self.paths}
         return self._merge_jit(base_params, idx, val,
                                mode=delta.manifest["mode"])
 

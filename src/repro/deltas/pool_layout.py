@@ -33,7 +33,7 @@ import numpy as np
 
 from repro.core.lift import get_by_path
 from repro.deltas.format import (DeltaArtifact, DeltaMismatchError,
-                                 num_stack, value_dtype)
+                                 decode_values, num_stack)
 
 # >= rows*cols for any supported tensor (asserted), dropped by the
 # "drop"-mode scatter and keyed outside every kernel window
@@ -114,9 +114,9 @@ class PoolLayout:
             ns, k = num_stack(m), m["k"]
             idx = np.asarray(delta.tensors[p]["idx"],
                              np.int32).reshape(ns, k)
-            val = np.asarray(delta.tensors[p]["val"])
-            if value_dtype(m) != m["dtype"]:
-                val = val.astype(np.dtype(m["dtype"]))  # exact upcast (v2)
+            # v2 narrow floats upcast exactly, v3 int8 dequantizes — the
+            # shared decode, so pool residency == merge-on-load entries
+            val = decode_values(np.asarray(delta.tensors[p]["val"]), m)
             val = val.astype(np.float32).reshape(ns, k)
             size = m["rows"] * m["cols"]
             valid = idx < size

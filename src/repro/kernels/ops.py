@@ -931,6 +931,9 @@ def overlay_matmul(x, w, overlay, *, backend: str = "lax",
       * x (B, d) (decode): `delta_matmul` — the fused kernel or the
         batched-einsum lax fallback, both row-bitwise to the dense dot.
     """
+    if is_quantized(w):
+        return quant_overlay_matmul(x, w, overlay, backend=backend,
+                                    interpret=interpret)
     if overlay is None:
         return x @ w
     idx, val = overlay["idx"], overlay["val"]
@@ -952,3 +955,137 @@ def overlay_matmul(x, w, overlay, *, backend: str = "lax",
         lambda i, v: wf.at[i].set(v.astype(w.dtype), mode="drop"))(
             idx, val).reshape((b,) + w.shape)
     return jnp.einsum("btd,bdf->btf", x, wm)
+
+
+# --------------------------------- quantized-base matmul (DESIGN.md §12)
+def is_quantized(w) -> bool:
+    """True for a quantized-weight operand: the {"q", "scale", "idx",
+    "val"} dict `quant.QuantArtifact.to_params` swaps in for a planned
+    dense leaf (int8 base + high-precision principal overlay)."""
+    return isinstance(w, dict) and "q" in w and "scale" in w
+
+
+def weight_operand(w, dtype):
+    """The forward's weight-cast point: dense leaves cast to the
+    activation dtype (the engines' existing `.astype`), quantized
+    operand dicts pass through untouched — dequant happens inside
+    `quant_matmul` in f32 regardless of activation dtype."""
+    if is_quantized(w):
+        return w
+    return w.astype(dtype)
+
+
+def _dequant_merged_f32(qw):
+    """(rows, cols) f32 merged weight of a quantized operand: dequantize
+    the int8 base elementwise, then REPLACE the principal entries with
+    their stored full-precision values (`ref.quant_merged` arithmetic)."""
+    merged = qw["q"].astype(jnp.float32) * qw["scale"]
+    idx, val = qw.get("idx"), qw.get("val")
+    if idx is not None:
+        merged = merged.reshape(-1).at[idx].set(
+            val.astype(jnp.float32), mode="drop").reshape(qw["q"].shape)
+    return merged
+
+
+def quant_matmul(x, qw, idx=None, val=None, *, bn: int = 256,
+                 capacity: int = 0, backend: str = "auto",
+                 interpret: Optional[bool] = None):
+    """y[b] = x[b] @ (dequant(qw) + principal overlay [+ slot b's delta]).
+
+    x: (B, d); qw: quantized operand dict for the (d, f) weight; idx/val:
+    optional (B, kd) per-slot adapter replace-deltas (sentinel >= d*f
+    writes nothing), composing base + principal + adapter in ONE epilogue.
+    A colliding adapter entry overrides the principal value (sequential
+    scatter order — principal first, delta second).
+
+    backend:
+      * "kernel" — the fused Pallas kernel (`quant_matmul.py`): per
+        (slot, col-block) in-VMEM dequant, one-hot overlay deposits, then
+        the f32 dot;
+      * "lax"    — exact fallback: dequant + principal scatter into ONE
+        transient f32 matrix inside XLA, per-slot delta scatters, one dot;
+      * "auto"   — kernel on TPU, lax elsewhere.
+
+    All backends are bitwise-matched by `ref.quant_matmul` (the
+    BENCH_quant matches_ref contract).  Returns y: (B, f) in x.dtype.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    if backend == "auto":
+        backend = "kernel" if jax.default_backend() == "tpu" else "lax"
+    rows, cols = qw["q"].shape
+    xf = x.astype(jnp.float32)
+    if backend == "lax":
+        merged = _dequant_merged_f32(qw)
+        if idx is None:
+            return (xf @ merged).astype(x.dtype)
+        mf = merged.reshape(-1)
+        wm = jax.vmap(
+            lambda i, v: mf.at[i].set(v.astype(jnp.float32),
+                                      mode="drop"))(idx, val).reshape(
+                                          x.shape[0], rows, cols)
+        return jnp.einsum("bd,bdf->bf", xf, wm).astype(x.dtype)
+    if backend != "kernel":
+        raise ValueError(f"unknown quant-matmul backend {backend!r}")
+    from repro.kernels import quant_matmul as qmk
+    bn = max(1, min(bn, cols))
+    nb = -(-cols // bn)
+    pkeyw, pvalw, _ = _colmajor_windows(
+        qw["idx"][None], qw["val"][None].astype(jnp.float32),
+        rows, cols, nb, bn, capacity)
+    if idx is None:                              # no adapter: empty windows
+        dkeyw = jnp.full((1, nb, 1), -1, jnp.int32)
+        dvalw = jnp.zeros((1, nb, 1), jnp.float32)
+    else:
+        dkeyw, dvalw, _ = _colmajor_windows(
+            idx, val.astype(jnp.float32), rows, cols, nb, bn, capacity)
+    q_pad = jnp.pad(qw["q"], ((0, 0), (0, nb * bn - cols)))
+    sc = jnp.broadcast_to(qw["scale"].astype(jnp.float32), (1, cols))
+    sc_pad = jnp.pad(sc, ((0, 0), (0, nb * bn - cols)))
+    y = qmk.quant_matmul_blocks(xf, q_pad, sc_pad, pkeyw, pvalw,
+                                dkeyw, dvalw, bn=bn, interpret=interpret)
+    return y[:, :cols].astype(x.dtype)
+
+
+def quant_overlay_matmul(x, qw, overlay, *, backend: str = "lax",
+                         interpret: Optional[bool] = None):
+    """`overlay_matmul` for a quantized weight operand — same shape
+    contract, same per-slot composition semantics, with the int8 base
+    dequantized and the principal overlay merged inside the dot.
+
+      * overlay None: plain quantized matmul (any leading shape);
+      * overlay b == 1 (prefill / shared delta): one transient scatter
+        into the merged f32 matrix, then the same dot;
+      * x (B, d) or (B, 1, d) decode: `quant_matmul` per-slot epilogue
+        (fused kernel or lax fallback per `backend`);
+      * x (B, T, d) multi-query (speculative verify): per-slot lax
+        composition, einsum over per-slot merged copies.
+    """
+    if backend == "auto":
+        backend = "kernel" if jax.default_backend() == "tpu" else "lax"
+    if overlay is None:
+        if x.ndim == 2 and backend == "kernel":
+            return quant_matmul(x, qw, backend=backend, interpret=interpret)
+        merged = _dequant_merged_f32(qw)
+        return (x.astype(jnp.float32) @ merged).astype(x.dtype)
+    idx, val = overlay["idx"], overlay["val"]
+    b = idx.shape[0]
+    if b == 1:
+        merged = _dequant_merged_f32(qw)
+        wm = merged.reshape(-1).at[idx[0]].set(
+            val[0].astype(jnp.float32), mode="drop").reshape(merged.shape)
+        return (x.astype(jnp.float32) @ wm).astype(x.dtype)
+    if x.ndim == 3 and x.shape[1] == 1:       # (B, 1, d) one-token decode
+        y = quant_matmul(x[:, 0, :], qw, idx, val, backend=backend,
+                         interpret=interpret)
+        return y[:, None, :]
+    if x.ndim == 2:
+        return quant_matmul(x, qw, idx, val, backend=backend,
+                            interpret=interpret)
+    # (B, T, d) multi-query per-slot composition (speculative verify)
+    merged = _dequant_merged_f32(qw)
+    mf = merged.reshape(-1)
+    wm = jax.vmap(
+        lambda i, v: mf.at[i].set(v.astype(jnp.float32), mode="drop"))(
+            idx, val).reshape((b,) + merged.shape)
+    return jnp.einsum("btd,bdf->btf", x.astype(jnp.float32),
+                      wm).astype(x.dtype)

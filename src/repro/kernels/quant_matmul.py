@@ -1,0 +1,111 @@
+"""Fused dequant + overlay matmul kernel (Pallas TPU).
+
+Quantized-base serving's hot spot (DESIGN.md §12): compute
+
+    y[b] = x[b] @ (dequant(Q, scale) overlaid with the principal
+                   (idx, val) entries, then slot b's adapter delta)
+
+without ever materializing the dequantized weight in HBM.  The int8
+base Q is the ONE resident copy; each grid cell dequantizes its
+(rows, BN) tile in VMEM (`Q_blk * scale_blk` in f32), then scatters the
+high-precision overlay in the epilogue — first the principal-weight
+entries shared by every slot, then the per-slot adapter delta, so a
+colliding adapter entry overrides the principal value exactly like the
+sequential lax scatters of the fallback.
+
+The scatter mechanics are `delta_matmul.py`'s: entries arrive re-keyed
+COLUMN-MAJOR (key = col * rows + row, -1 = pad) so col-block j's entries
+form one contiguous window, deposited via two-sided one-hot dots at
+HIGHEST precision (bit-exact single-entry deposits).  The final
+x @ merged dot runs in f32 at DEFAULT precision — the same arithmetic
+as the lax fallback's dot over the fully dequantized matrix, which is
+what makes kernel, fallback, and `ref.quant_matmul` bitwise-identical
+(the BENCH_quant `matches_ref` contract).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _deposit(keyw, vals, base, *, j, rows: int, bn: int):
+    """Replace-deposit one -1-padded column-major entry window into the
+    (rows, bn) f32 tile `base` — delta_matmul.py's one-hot scatter."""
+    valid = keyw >= 0
+    keyc = jnp.maximum(keyw, 0)
+    col_loc = keyc // rows - j * bn              # local col in [0, bn)
+    row = keyc % rows
+    k = keyw.shape[0]
+
+    iota_r = jax.lax.broadcasted_iota(jnp.int32, (k, rows), 1)
+    iota_c = jax.lax.broadcasted_iota(jnp.int32, (k, bn), 1)
+    row_oh = ((row[:, None] == iota_r) & valid[:, None]).astype(jnp.float32)
+    col_oh = ((col_loc[:, None] == iota_c) & valid[:, None]).astype(
+        jnp.float32)
+
+    contract = (((0,), (0,)), ((), ()))          # sum over K
+    # HIGHEST precision: deposits must carry the overlay values bit-exact
+    dep = jax.lax.dot_general(row_oh * vals[:, None], col_oh, contract,
+                              precision=jax.lax.Precision.HIGHEST)
+    cnt = jax.lax.dot_general(row_oh, col_oh, contract,
+                              precision=jax.lax.Precision.HIGHEST)
+    return jnp.where(cnt > 0, dep, base)
+
+
+def _kernel(x_ref, pkeyw_ref, pvalw_ref, dkeyw_ref, dvalw_ref, q_ref, s_ref,
+            out_ref, *, rows: int, bn: int):
+    j = pl.program_id(1)
+    # dequantize the int8 tile in VMEM: elementwise, so bitwise-equal to
+    # the same elements of the full dequantized matrix
+    w_blk = q_ref[...].astype(jnp.float32) * s_ref[...]      # (rows, bn)
+    merged = _deposit(pkeyw_ref[0, 0, :],
+                      pvalw_ref[0, 0, :].astype(jnp.float32),
+                      w_blk, j=j, rows=rows, bn=bn)          # principal
+    merged = _deposit(dkeyw_ref[0, 0, :],
+                      dvalw_ref[0, 0, :].astype(jnp.float32),
+                      merged, j=j, rows=rows, bn=bn)         # slot delta
+    x_row = x_ref[...].astype(jnp.float32)                   # (1, rows)
+    # DEFAULT precision: the fallback's f32 `x @ merged` dot, bit for bit
+    out_ref[...] = jax.lax.dot(x_row, merged).astype(out_ref.dtype)
+
+
+def quant_matmul_blocks(x, q, scale, pkeyw, pvalw, dkeyw, dvalw, *, bn: int,
+                        interpret: bool = True):
+    """x: (B, rows); q: (rows, NB*BN) int8; scale: (1, NB*BN) f32;
+    pkeyw/pvalw: (1, NB, Kp) principal windows shared by every slot;
+    dkeyw/dvalw: (B, NB, Kd) per-slot delta windows, or (1, NB, Kd)
+    shared (the broadcast b == 1 overlay).
+
+    Window entries are COLUMN-MAJOR flat keys (col * rows + row) into the
+    un-padded (rows, cols) matrix, -1 = padded slot.  Returns y
+    (B, NB*BN) in x.dtype — columns beyond the real `cols` multiply
+    zero-padded q columns and are sliced by the caller.
+    """
+    b, rows = x.shape
+    nb = pkeyw.shape[1]
+    kp = pkeyw.shape[2]
+    kd = dkeyw.shape[2]
+    assert q.shape == (rows, nb * bn), (q.shape, rows, nb, bn)
+    assert scale.shape == (1, nb * bn), (scale.shape, nb, bn)
+    d_shared = dkeyw.shape[0] == 1
+    d_map = (lambda s, j: (0, j, 0)) if d_shared else (lambda s, j: (s, j, 0))
+    kern = functools.partial(_kernel, rows=rows, bn=bn)
+    return pl.pallas_call(
+        kern,
+        grid=(b, nb),
+        in_specs=[
+            pl.BlockSpec((1, rows), lambda s, j: (s, 0)),      # x row
+            pl.BlockSpec((1, 1, kp), lambda s, j: (0, j, 0)),  # principal key
+            pl.BlockSpec((1, 1, kp), lambda s, j: (0, j, 0)),  # principal val
+            pl.BlockSpec((1, 1, kd), d_map),                   # delta keys
+            pl.BlockSpec((1, 1, kd), d_map),                   # delta vals
+            pl.BlockSpec((rows, bn), lambda s, j: (0, j)),     # q col-block
+            pl.BlockSpec((1, bn), lambda s, j: (0, j)),        # scale block
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda s, j: (s, j)),
+        out_shape=jax.ShapeDtypeStruct((b, nb * bn), x.dtype),
+        interpret=interpret,
+    )(x, pkeyw, pvalw, dkeyw, dvalw, q, scale)

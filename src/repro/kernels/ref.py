@@ -104,6 +104,39 @@ def delta_matmul(x, w, idx, val):
     return jnp.stack(rows)
 
 
+# ---------------------------------------------- quantized-base matmul
+def quant_merged(q, scale, idx, val):
+    """(rows, cols) f32 merged weight: dequantize the int8 base, then
+    REPLACE the principal-overlay entries with their full-precision
+    values.  q: (rows, cols) int8; scale: (1, cols) | (1, 1) f32;
+    idx: (k,) int32 row-major flat, sorted; val: (k,)."""
+    m = q.astype(jnp.float32) * scale
+    return m.reshape(-1).at[idx].set(
+        val.astype(jnp.float32), mode="drop").reshape(q.shape)
+
+
+def quant_matmul(x, q, scale, idx, val, didx=None, dval=None):
+    """Dense oracle for `ops.quant_matmul`: dequantize, merge the
+    principal overlay, optionally merge slot b's adapter delta (which
+    overrides principal entries on collision — the sequential-scatter
+    order every backend implements), then the f32 matmul.
+
+    x: (B, d); didx/dval: (B, kd) per-slot replace entries (sentinel
+    >= d*f writes nothing) or None.  Returns (B, f) in x.dtype.
+    """
+    merged = quant_merged(q, scale, idx, val)
+    xf = x.astype(jnp.float32)
+    if didx is None:
+        return (xf @ merged).astype(x.dtype)
+    mf = merged.reshape(-1)
+    rows = []
+    for s in range(x.shape[0]):
+        wm = mf.at[didx[s]].set(dval[s].astype(jnp.float32),
+                                mode="drop").reshape(merged.shape)
+        rows.append((xf @ wm)[s])
+    return jnp.stack(rows).astype(x.dtype)
+
+
 # ------------------------------------------------------------- sparse_adam
 def sparse_adam(p, g, idx, m, v, *, lr, b1, b2, eps, wd, step):
     """Reference sparse AdamW on flat vectors.

@@ -105,6 +105,8 @@ def paged_decode_roofline(cfg, *, batch: int, live_tokens_per_seq: float,
                           page_size: int, draft_len: int = 0,
                           accept_rate: float = 0.0,
                           dtype_bytes: int = 2,
+                          quantize_base: bool = False,
+                          overlay_density: float = 0.05,
                           hbm_bw: float = HBM_BW) -> dict:
     """Memory-bound attainable tok/s for (speculative) paged decode.
 
@@ -118,9 +120,23 @@ def paged_decode_roofline(cfg, *, batch: int, live_tokens_per_seq: float,
     tokens instead of one — same bytes, more tokens — which is the
     entire speculative speedup in the memory-bound regime; the bench
     reports measured tok/s next to this attainable bound.
+
+    `quantize_base` models int8-resident projection weights with the
+    fp32 principal-weight overlay (DESIGN.md §12): the planned
+    projections stream 1 byte/weight plus `overlay_density` * 8 bytes
+    of (int32 idx, fp32 val) overlay entries; the d*V head matmul is
+    never quantized and streams at `dtype_bytes`.  Decode being
+    weight-stream-bound, the residency ratio is also roughly the
+    attainable-throughput gain.
     """
     n_lin = _linear_params(cfg)
-    param_bytes = n_lin * dtype_bytes
+    head = float(cfg.d_model * cfg.vocab_size)
+    if quantize_base:
+        n_planned = max(n_lin - head, 0.0)
+        param_bytes = head * dtype_bytes \
+            + n_planned * (1.0 + float(overlay_density) * 8.0)
+    else:
+        param_bytes = n_lin * dtype_bytes
     kv_per_token = (2 * cfg.num_layers * cfg.num_kv_heads * cfg.head_dim
                     * dtype_bytes)
     pages = -(-max(live_tokens_per_seq, 1.0) // page_size)
@@ -136,6 +152,8 @@ def paged_decode_roofline(cfg, *, batch: int, live_tokens_per_seq: float,
         "draft_len": draft_len,
         "accept_rate": accept_rate,
         "effective_tokens_per_step": eff,
+        "quantize_base": quantize_base,
+        "param_bytes": param_bytes,
         "step_bytes": step_bytes,
         "t_step_s": t_step,
         "attainable_tok_s": batch * eff / t_step,

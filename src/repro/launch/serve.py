@@ -25,6 +25,15 @@ assigned round-robin across the loaded deltas, and token streams are
 bitwise-identical to merge-on-load serving.  Requires the paged engine
 (`--kv-pages`); `--adapter-pool-entries` sets the page granularity.
 
+Quantized base (DESIGN.md §12): `--quantize-base` converts the restored
+dense weights into an int8 resident base plus a full-precision overlay
+of the top `--overlay-density` principal weights and super-weight
+outliers (`src/repro/quant/`) before engine construction — halving
+weight HBM per replica while the matmuls dequantize in the epilogue.
+Works in BOTH engines and composes with the merge-free adapter pool
+(base int8 + principal overlay + per-slot delta in one epilogue);
+merge-on-load `--delta` is refused (it scatters into dense leaves).
+
 Speculative decode (DESIGN.md §5): `--speculate` verifies `--draft-len`
 drafted tokens per decode dispatch on the paged engine (dense family).
 `--draft-source ngram` drafts by prompt lookup (no extra model);
@@ -80,6 +89,21 @@ def main():
                     help="delta-overlay matmul backend (--adapter-pool): "
                          "exact O(k) lax scatter or the Pallas fused "
                          "gather-epilogue kernel")
+    ap.add_argument("--quantize-base", action="store_true",
+                    help="serve an int8 resident base + full-precision "
+                         "principal-weight overlay instead of the dense "
+                         "weights (src/repro/quant/, DESIGN.md §12); "
+                         "composes with --adapter-pool, refuses "
+                         "merge-on-load --delta")
+    ap.add_argument("--overlay-density", type=float, default=0.05,
+                    help="fraction of entries kept at full precision in "
+                         "the principal overlay (--quantize-base)")
+    ap.add_argument("--quant-scale", default="per-channel",
+                    choices=["per-channel", "per-tensor"],
+                    help="int8 scale granularity (--quantize-base)")
+    ap.add_argument("--quant-rank", type=int, default=32,
+                    help="rank-reduction rank for principal-weight "
+                         "scoring (--quantize-base)")
     ap.add_argument("--no-buckets", action="store_true",
                     help="disable power-of-two prefill length buckets "
                          "(compile per exact prompt length)")
@@ -207,6 +231,32 @@ def main():
                   f"({st['adapter_nbytes']} B resident/adapter, "
                   f"{100 * st['adapter_bytes_ratio']:.1f}% of one dense "
                   f"merged copy)")
+
+    if args.quantize_base:
+        if args.delta and args.adapter_pool <= 0:
+            raise SystemExit(
+                "--quantize-base composes with --delta only through the "
+                "merge-free pool (--adapter-pool N): merge-on-load "
+                "scatters into dense weight leaves, which no longer exist "
+                "under a quantized base")
+        from repro.quant import QuantConfig, quantize
+        qcfg = QuantConfig(scale_mode=args.quant_scale,
+                           density=args.overlay_density,
+                           rank=args.quant_rank)
+        art = quantize(model, params, qcfg, jax.random.PRNGKey(args.seed))
+        ratio = art.resident_nbytes() / art.dense_nbytes()
+        entries = sum(int(np.prod(t["idx"].shape))
+                      for t in art.tensors.values())
+        params = art.to_params(params)
+        reg = obs_ctx.registry
+        reg.gauge("quant.hbm_bytes_ratio").set(ratio)
+        reg.gauge("quant.tensors").set(len(art.tensors))
+        reg.gauge("quant.overlay_entries").set(entries)
+        print(f"[quant] int8 base + {100 * qcfg.density:.1f}% principal "
+              f"overlay ({qcfg.scale_mode} scales): {len(art.tensors)} "
+              f"tensors, {entries} overlay entries, "
+              f"{art.resident_nbytes()} B resident "
+              f"({100 * ratio:.1f}% of dense)")
 
     if args.speculate and args.kv_pages <= 0:
         raise SystemExit("--speculate needs the paged engine: pass "

@@ -427,7 +427,14 @@ class LM:
         as a third scanned operand — a per-layer pytree with leading
         layer axis (adapter overlays for merge-free serving); when None
         the scanned tuple is exactly the pre-overlay (blocks, cache), so
-        overlay-free callers compile the identical HLO as before."""
+        overlay-free callers compile the identical HLO as before.
+
+        Planned projection leaves of params["blocks"] may be
+        quantized-operand dicts (int8 base + principal overlay,
+        `quant.QuantArtifact.to_params`, DESIGN.md §12): every leaf
+        leads with the layer axis, so the scan slices {"q", "scale",
+        "idx", "val"} per layer like any other leaf and the nn layers'
+        `weight_operand`/`overlay_matmul` fuse dequant into the dots."""
         cfg = self.cfg
         xs = ((params["blocks"], cache) if overlay is None
               else (params["blocks"], cache, overlay))

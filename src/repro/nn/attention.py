@@ -124,16 +124,16 @@ def _qkv(params, x, cfg: ModelConfig, ov=None, ov_backend: str = "lax"):
     merge-free serving (DESIGN.md §5) — each batch slot's sparse delta is
     composed into the projection dot by `ops.overlay_matmul`; ov None
     compiles the identical program as before."""
-    from repro.kernels.ops import overlay_matmul
+    from repro.kernels.ops import overlay_matmul, weight_operand
     B, S, _ = x.shape
     dt = x.dtype
     hd = cfg.head_dim
     ov = ov or {}
-    q = overlay_matmul(x, params["wq"].astype(dt), ov.get("wq"),
+    q = overlay_matmul(x, weight_operand(params["wq"], dt), ov.get("wq"),
                        backend=ov_backend)
-    k = overlay_matmul(x, params["wk"].astype(dt), ov.get("wk"),
+    k = overlay_matmul(x, weight_operand(params["wk"], dt), ov.get("wk"),
                        backend=ov_backend)
-    v = overlay_matmul(x, params["wv"].astype(dt), ov.get("wv"),
+    v = overlay_matmul(x, weight_operand(params["wv"], dt), ov.get("wv"),
                        backend=ov_backend)
     if cfg.qkv_bias:
         q = q + params["bq"].astype(dt)
@@ -200,7 +200,9 @@ def attention(params, x, cfg: ModelConfig, positions: Optional[jax.Array] = None
         o = _naive_attention(q, k, v, bias, scale)
     o = shard_logical(o, ("batch", "seq", "heads", "head_dim"))
     o = o.reshape(B, S, cfg.num_heads * cfg.head_dim)
-    out = o @ params["wo"].astype(x.dtype)
+    from repro.kernels import ops as kops
+    out = kops.overlay_matmul(o, kops.weight_operand(params["wo"], x.dtype),
+                              None)
     return shard_logical(out, ("batch", "seq", "embed"))
 
 
@@ -260,7 +262,9 @@ def attention_prefill(params, x, cfg: ModelConfig, cache: KVCache):
     else:
         o = _naive_attention(q, ke, ve, bias_fn(positions, positions), scale)
     o = o.reshape(B, S, cfg.num_heads * cfg.head_dim)
-    out = o @ params["wo"].astype(x.dtype)
+    from repro.kernels import ops as kops
+    out = kops.overlay_matmul(o, kops.weight_operand(params["wo"], x.dtype),
+                              None)
     return shard_logical(out, ("batch", "seq", "embed")), new_cache
 
 
@@ -340,7 +344,7 @@ def attention_prefill_paged(params, x, cfg: ModelConfig,
                        preferred_element_type=jnp.float32).astype(x.dtype)
         o = o.reshape(1, C, cfg.num_heads, cfg.head_dim)
     o = o.reshape(1, C, cfg.num_heads * cfg.head_dim)
-    out = kops.overlay_matmul(o, params["wo"].astype(x.dtype),
+    out = kops.overlay_matmul(o, kops.weight_operand(params["wo"], x.dtype),
                               (ov or {}).get("wo"), backend=ov_backend)
     return shard_logical(out, ("batch", "seq", "embed")), new_pages
 
@@ -375,7 +379,7 @@ def attention_decode_paged(params, x, cfg: ModelConfig,
                                     block_tables, positions,
                                     backend=backend)
     o = o.reshape(B, 1, cfg.num_heads * cfg.head_dim)
-    out = kops.overlay_matmul(o, params["wo"].astype(x.dtype),
+    out = kops.overlay_matmul(o, kops.weight_operand(params["wo"], x.dtype),
                               (ov or {}).get("wo"), backend=ov_backend)
     return shard_logical(out, ("batch", "seq", "embed")), new_pages
 
@@ -418,7 +422,7 @@ def attention_verify_paged(params, x, cfg: ModelConfig,
                                     block_tables, positions,
                                     backend=backend)
     o = o.reshape(B, nq, cfg.num_heads * hd)
-    out = kops.overlay_matmul(o, params["wo"].astype(x.dtype),
+    out = kops.overlay_matmul(o, kops.weight_operand(params["wo"], x.dtype),
                               (ov or {}).get("wo"), backend=ov_backend)
     return shard_logical(out, ("batch", "seq", "embed")), new_pages
 
@@ -470,5 +474,7 @@ def attention_decode(params, x, cfg: ModelConfig, cache: KVCache,
     o = jnp.einsum("bhgqt,bthd->bqhgd", p.astype(vc.dtype), vc,
                    preferred_element_type=jnp.float32).astype(x.dtype)
     o = o.reshape(B, 1, cfg.num_heads * cfg.head_dim)
-    out = o @ params["wo"].astype(x.dtype)
+    from repro.kernels import ops as kops
+    out = kops.overlay_matmul(o, kops.weight_operand(params["wo"], x.dtype),
+                              None)
     return shard_logical(out, ("batch", "seq", "embed")), new_cache

@@ -29,21 +29,23 @@ def mlp(params, x, cfg: ModelConfig, ov=None, ov_backend: str = "lax"):
     """ov: optional per-slot adapter overlay {name: {"idx", "val"}} for
     merge-free serving (DESIGN.md §5) — `overlay_matmul` composes each
     batch slot's sparse delta into the dot; ov None compiles the
-    identical program as before."""
-    from repro.kernels.ops import overlay_matmul
+    identical program as before.  Params leaves may be quantized-operand
+    dicts (int8 base + principal overlay, DESIGN.md §12) — `weight_operand`
+    passes them through and `overlay_matmul` fuses dequant + overlays."""
+    from repro.kernels.ops import overlay_matmul, weight_operand
     dt = x.dtype
     act = _ACTS[cfg.mlp_act]
     ov = ov or {}
-    up = overlay_matmul(x, params["up"].astype(dt), ov.get("up"),
+    up = overlay_matmul(x, weight_operand(params["up"], dt), ov.get("up"),
                         backend=ov_backend)
     up = shard_logical(up, ("batch", "seq", "mlp"))
     if cfg.mlp_glu:
-        gate = overlay_matmul(x, params["gate"].astype(dt), ov.get("gate"),
-                              backend=ov_backend)
+        gate = overlay_matmul(x, weight_operand(params["gate"], dt),
+                              ov.get("gate"), backend=ov_backend)
         gate = shard_logical(gate, ("batch", "seq", "mlp"))
         h = act(gate) * up
     else:
         h = act(up)
-    out = overlay_matmul(h, params["down"].astype(dt), ov.get("down"),
-                         backend=ov_backend)
+    out = overlay_matmul(h, weight_operand(params["down"], dt),
+                         ov.get("down"), backend=ov_backend)
     return shard_logical(out, ("batch", "seq", "embed"))

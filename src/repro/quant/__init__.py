@@ -1,0 +1,12 @@
+"""Quantized-base serving: int8 resident weights + principal overlay.
+
+DESIGN.md §12.  `quantize.quantize` converts a dense checkpoint into a
+`pack.QuantArtifact` (int8 base + O(k) high-precision overlay of the
+top-density principal weights and super-weight outliers);
+`QuantArtifact.to_params` swaps planned dense leaves for the
+quantized-operand dicts `kernels.ops.overlay_matmul` consumes.
+"""
+from repro.quant.pack import (QUANT_FORMAT_VERSION,  # noqa: F401
+                              SUPPORTED_QUANT_VERSIONS, QuantArtifact)
+from repro.quant.quantize import (QuantConfig, hbm_bytes_ratio,  # noqa: F401
+                                  lift_config, quantize)

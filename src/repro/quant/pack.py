@@ -1,0 +1,197 @@
+"""Quantized-base artifact layout (DESIGN.md §12).
+
+The unit `quant/quantize.py` produces is a **quantized-base artifact**:
+per planned tensor, the int8 base plus the high-precision principal
+overlay —
+
+    quant.json          manifest (see below)
+    arrays.npz          "<path>\\x1fq"     int8  (ns, rows, cols)
+                        "<path>\\x1fscale" f32   (ns, 1, cols) | (ns, 1, 1)
+                        "<path>\\x1fidx"   int32 (ns, k) sorted flat
+                        "<path>\\x1fval"   value_dtype (ns, k)
+
+The (idx, val) half IS the DeltaHub index machinery (`deltas/format.py`):
+row-major flat replace indices into the (rows, cols) matrix, sorted
+ascending, exactly the geometry `DeltaMerger`/`PoolLayout` consume — the
+overlay is an O(k) sparse artifact holding the top-density principal
+weights (and super-weight outliers) at full precision, while everything
+else rides as int8 `q * scale`.
+
+Manifest fields mirror the delta manifest's refusal machinery:
+  * format_version — QUANT_FORMAT_VERSION; a reader refuses anything it
+    does not support, exactly like `DeltaArtifact`;
+  * base_hash — `deltas.format.tree_hash` of the dense base the artifact
+    was quantized from: `to_params` REFUSES any other base
+    (`DeltaMismatchError`), because the overlay values are entries of
+    that specific checkpoint;
+  * scale_mode / density / rank / selection / superw_sigma — the
+    producing `QuantConfig`, pinned for reproducibility;
+  * tensors — {path: {shape, stack, rows, cols, k, dtype, value_dtype}}.
+
+`to_params` swaps each planned dense leaf for the quantized-operand
+dict {"q", "scale", "idx", "val"} with a leading layer axis — the form
+`kernels.ops.overlay_matmul` dispatches on and `LM._scan_serve` slices
+per layer (every leaf leads with the stack dim, so `jax.lax.scan` works
+unchanged).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lift import get_by_path, set_by_path
+from repro.deltas.format import DeltaMismatchError, tree_hash
+
+QUANT_FORMAT_VERSION = 1
+SUPPORTED_QUANT_VERSIONS = (1,)
+MANIFEST_NAME = "quant.json"
+ARRAYS_NAME = "arrays.npz"
+SCALE_MODES = ("per-tensor", "per-channel")
+
+_PARTS = ("q", "scale", "idx", "val")
+
+
+def num_stack(meta: dict) -> int:
+    return int(np.prod(meta["stack"])) if meta["stack"] else 1
+
+
+def make_manifest(*, base_hash: str, scale_mode: str, density: float,
+                  rank: int, selection: str, superw_sigma: float,
+                  tensors_meta: dict) -> dict:
+    if scale_mode not in SCALE_MODES:
+        raise ValueError(f"unknown scale_mode {scale_mode!r} "
+                         f"(want one of {SCALE_MODES})")
+    return {
+        "format_version": QUANT_FORMAT_VERSION,
+        "kind": "quant-base",
+        "base_hash": base_hash,
+        "scale_mode": scale_mode,
+        "density": float(density),
+        "rank": int(rank),
+        "selection": selection,
+        "superw_sigma": float(superw_sigma),
+        "tensors": {p: dict(m) for p, m in sorted(tensors_meta.items())},
+    }
+
+
+@dataclasses.dataclass
+class QuantArtifact:
+    """manifest + {path: {"q", "scale", "idx", "val"}} numpy arrays."""
+    manifest: dict
+    tensors: dict
+
+    # ------------------------------------------------------------- sizes
+    def resident_nbytes(self) -> int:
+        """Device bytes the quantized planned tensors cost resident."""
+        return int(sum(arr.nbytes for t in self.tensors.values()
+                       for arr in t.values()))
+
+    def dense_nbytes(self) -> int:
+        """Bytes the same tensors cost dense at their original dtype."""
+        total = 0
+        for m in self.manifest["tensors"].values():
+            total += int(np.prod(m["shape"])) * np.dtype(m["dtype"]).itemsize
+        return total
+
+    def nbytes(self) -> int:
+        return self.resident_nbytes()
+
+    # ------------------------------------------------------------- disk
+    def save(self, path: str) -> None:
+        os.makedirs(path, exist_ok=True)
+        with open(os.path.join(path, MANIFEST_NAME), "w") as f:
+            json.dump(self.manifest, f, indent=1, sort_keys=True)
+        arrays = {f"{p}\x1f{part}": np.asarray(t[part])
+                  for p, t in self.tensors.items() for part in _PARTS}
+        np.savez(os.path.join(path, ARRAYS_NAME), **arrays)
+
+    @classmethod
+    def load(cls, path: str) -> "QuantArtifact":
+        with open(os.path.join(path, MANIFEST_NAME)) as f:
+            manifest = json.load(f)
+        ver = manifest.get("format_version")
+        if ver not in SUPPORTED_QUANT_VERSIONS:
+            raise DeltaMismatchError(
+                f"quant artifact at {path} has format_version {ver!r}; "
+                f"this reader supports {SUPPORTED_QUANT_VERSIONS}")
+        tensors: dict = {}
+        with np.load(os.path.join(path, ARRAYS_NAME)) as z:
+            for key in z.files:
+                p, part = key.rsplit("\x1f", 1)
+                tensors.setdefault(p, {})[part] = z[key]
+        want = set(manifest["tensors"])
+        got = set(tensors)
+        if want != got:
+            raise DeltaMismatchError(
+                f"quant artifact tensor set mismatch: manifest has "
+                f"{sorted(want)}, arrays have {sorted(got)}")
+        for p, t in tensors.items():
+            missing = [part for part in _PARTS if part not in t]
+            if missing:
+                raise DeltaMismatchError(
+                    f"quant artifact tensor {p!r} is missing array "
+                    f"part(s) {missing}")
+        return cls(manifest=manifest, tensors=tensors)
+
+    # ---------------------------------------------------------- refusals
+    def validate_base(self, base_params) -> None:
+        """Refuse application to any base but the quantized one."""
+        got = tree_hash(base_params)
+        want = self.manifest["base_hash"]
+        if got != want:
+            raise DeltaMismatchError(
+                f"quant artifact was produced from base {want[:12]}… but "
+                f"application was attempted on base {got[:12]}… — the "
+                f"overlay values belong to the original checkpoint")
+
+    # ------------------------------------------------------ params tree
+    def to_params(self, base_params, *, validate: bool = True):
+        """Swap each planned dense leaf for its quantized-operand dict.
+
+        Leaves keep a leading stack (layer) axis — q (L, rows, cols)
+        int8, scale (L, 1, cols)/(L, 1, 1) f32, idx (L, k) int32,
+        val (L, k) — so `jax.lax.scan` over `params["blocks"]` slices
+        them per layer untouched.  Unplanned leaves (embeddings, norms,
+        biases) pass through dense."""
+        if validate:
+            self.validate_base(base_params)
+        out = base_params
+        for p in sorted(self.tensors):
+            m = self.manifest["tensors"][p]
+            t = self.tensors[p]
+            stack = tuple(m["stack"])
+            rows, cols = int(m["rows"]), int(m["cols"])
+            k = int(m["k"])
+            scol = 1 if self.manifest["scale_mode"] == "per-tensor" else cols
+            leaf = {
+                "q": jnp.asarray(t["q"]).reshape(stack + (rows, cols)),
+                "scale": jnp.asarray(t["scale"], jnp.float32).reshape(
+                    stack + (1, scol)),
+                "idx": jnp.asarray(t["idx"], jnp.int32).reshape(
+                    stack + (k,)),
+                "val": jnp.asarray(t["val"]).reshape(stack + (k,)),
+            }
+            out = set_by_path(out, p, leaf)
+        return out
+
+    def check_against(self, base_params) -> None:
+        """Sanity check: every overlay value equals the base entry it
+        covers (mode-"replace" semantics of the principal overlay)."""
+        for p in sorted(self.tensors):
+            m = self.manifest["tensors"][p]
+            ns = num_stack(m)
+            base = np.asarray(get_by_path(base_params, p)).reshape(
+                ns, m["rows"] * m["cols"])
+            idx = np.asarray(self.tensors[p]["idx"]).reshape(ns, m["k"])
+            val = np.asarray(self.tensors[p]["val"]).reshape(ns, m["k"])
+            want = np.take_along_axis(base, idx, axis=1)
+            if not np.array_equal(
+                    want.astype(val.dtype).astype(np.float32),
+                    val.astype(np.float32)):
+                raise DeltaMismatchError(
+                    f"quant overlay values for {p!r} do not match the "
+                    f"base entries they cover")

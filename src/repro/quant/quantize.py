@@ -1,0 +1,144 @@
+"""Dense checkpoint -> int8 base + high-precision principal overlay.
+
+LIFT's serving-side corollary (PAPER.md, DESIGN.md §12): if the top ~5 %
+principal weights after rank reduction carry the reasoning signal, the
+other 95 % can sit in HBM at int8 while the principal entries — plus the
+super-weight outliers that must never be degraded ("Super Weights in
+LLMs", PAPERS.md) — ride in a full-precision O(k) (idx, val) overlay.
+
+Per planned tensor (geometry from `core.lift.make_plan`, the same plan
+that drives training-time selection and delta extraction):
+
+  1. score each (rows, cols) matrix with `core.lift.scores_for` —
+     default rank-`rank` LIFT scores |A Bᵀ|;
+  2. force super-weights in: any entry with |w| > superw_sigma * std(w)
+     gets score +inf, so outlier columns can never be quantized away
+     regardless of what the low-rank scores say (benchmarks/
+     fig_super_weights.py asserts they survive scoring alone too);
+  3. `topk_indices` -> sorted flat idx; overlay values are the ORIGINAL
+     entries, bitwise (mode-"replace" DeltaHub semantics);
+  4. the whole matrix quantizes to int8 with per-tensor or per-channel
+     (per output column) absmax/127 scales.  Principal positions are
+     quantized too — harmless, since the overlay scatter replaces them
+     at apply time — which keeps q a plain dense int8 image.
+
+Everything is host-side numpy except scoring, which runs through the
+same jax pipeline training uses (so the selected sets line up with
+figures 17/…).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lift import (LiftConfig, get_by_path, make_plan, scores_for,
+                             topk_indices)
+from repro.deltas.format import tree_hash
+from repro.quant.pack import QuantArtifact, make_manifest
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    scale_mode: str = "per-channel"   # per-tensor | per-channel
+    density: float = 0.05             # overlay density (paper's top-5 %)
+    rank: int = 32                    # rank-reduction rank for scoring
+    selection: str = "lift"           # lift | magnitude (scores_for)
+    superw_sigma: float = 6.0         # |w| > sigma*std forced into overlay
+    min_dim: int = 16                 # plan floor (smoke configs are small)
+    method: str = "exact"             # lowrank method for scoring
+
+    def replace(self, **kw):
+        return dataclasses.replace(self, **kw)
+
+
+def lift_config(cfg: QuantConfig) -> LiftConfig:
+    """The LiftConfig equivalent — one geometry pipeline, not two."""
+    return LiftConfig(rank=cfg.rank, density=cfg.density, method=cfg.method,
+                      selection=cfg.selection, min_dim=cfg.min_dim)
+
+
+def _scale(w2d: np.ndarray, mode: str) -> np.ndarray:
+    """absmax/127 scale, (1, 1) per-tensor or (1, cols) per-channel.
+    All-zero slices get scale 1.0 so dequant stays finite."""
+    if mode == "per-tensor":
+        absmax = np.max(np.abs(w2d), keepdims=True).reshape(1, 1)
+    else:
+        absmax = np.max(np.abs(w2d), axis=0, keepdims=True)
+    scale = absmax.astype(np.float32) / 127.0
+    return np.where(scale > 0.0, scale, np.float32(1.0))
+
+
+def quantize_matrix(w2d: np.ndarray, scale: np.ndarray) -> np.ndarray:
+    return np.clip(np.rint(w2d.astype(np.float32) / scale),
+                   -127, 127).astype(np.int8)
+
+
+def principal_indices(w2d: jax.Array, lcfg: LiftConfig, k: int,
+                      superw_sigma: float,
+                      key: Optional[jax.Array] = None) -> np.ndarray:
+    """Sorted flat top-k indices with the super-weight guard applied."""
+    wf = w2d.astype(jnp.float32)
+    scores = scores_for(wf, lcfg, lcfg.selection, key)
+    if superw_sigma > 0:
+        guard = jnp.abs(wf) > superw_sigma * jnp.std(wf)
+        scores = jnp.where(guard, jnp.inf, scores)
+    return np.asarray(topk_indices(scores, k), np.int32)
+
+
+def quantize(model, params, cfg: QuantConfig,
+             key: Optional[jax.Array] = None) -> QuantArtifact:
+    """Convert `params` (the dense checkpoint of `model`) into a
+    `QuantArtifact`: int8 base + principal overlay per planned tensor."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    lcfg = lift_config(cfg)
+    plan = make_plan(model.spec(), lcfg)
+    if not plan:
+        raise ValueError(
+            "quantization plan is empty — every tensor fell below "
+            f"min_dim={cfg.min_dim}; nothing to quantize")
+    base_hash = tree_hash(params)
+
+    tensors = {}
+    tensors_meta = {}
+    for path in sorted(plan):
+        tp = plan[path]
+        leaf = np.asarray(get_by_path(params, path))
+        ns = int(np.prod(tp.stack)) if tp.stack else 1
+        w3 = leaf.reshape(ns, tp.rows, tp.cols)
+        scol = 1 if cfg.scale_mode == "per-tensor" else tp.cols
+        q = np.empty((ns, tp.rows, tp.cols), np.int8)
+        scale = np.empty((ns, 1, scol), np.float32)
+        idx = np.empty((ns, tp.k), np.int32)
+        val = np.empty((ns, tp.k), leaf.dtype)
+        for s in range(ns):
+            key, sub = jax.random.split(key)
+            w2d = w3[s]
+            fi = principal_indices(jnp.asarray(w2d), lcfg, tp.k,
+                                   cfg.superw_sigma, sub)
+            sc = _scale(w2d, cfg.scale_mode)
+            q[s] = quantize_matrix(w2d, sc)
+            scale[s] = sc
+            idx[s] = fi
+            val[s] = w2d.reshape(-1)[fi]
+        tensors[path] = {"q": q, "scale": scale, "idx": idx, "val": val}
+        tensors_meta[path] = {
+            "shape": list(tp.shape), "stack": list(tp.stack),
+            "rows": tp.rows, "cols": tp.cols, "k": tp.k,
+            "dtype": str(leaf.dtype), "value_dtype": str(val.dtype),
+        }
+
+    manifest = make_manifest(
+        base_hash=base_hash, scale_mode=cfg.scale_mode, density=cfg.density,
+        rank=cfg.rank, selection=cfg.selection, superw_sigma=cfg.superw_sigma,
+        tensors_meta=tensors_meta)
+    return QuantArtifact(manifest=manifest, tensors=tensors)
+
+
+def hbm_bytes_ratio(artifact: QuantArtifact) -> float:
+    """Resident bytes of the quantized planned tensors vs dense."""
+    return artifact.resident_nbytes() / artifact.dense_nbytes()

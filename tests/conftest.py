@@ -8,6 +8,27 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 # NOTE: no XLA_FLAGS here on purpose — tests must see the real single
 # device; only launch/dryrun.py requests 512 placeholder devices.
 
+import gc  # noqa: E402
+
 import jax  # noqa: E402
+import pytest  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_per_module():
+    """Release compiled executables between test modules.
+
+    Every XLA:CPU executable keeps JIT code pages mapped for the life of
+    the process; a full-suite run accumulates tens of thousands of maps
+    and segfaults inside `backend_compile` when it crosses the kernel's
+    `vm.max_map_count` (65530 by default) — deterministically, in
+    whichever innocent test compiles next.  Dropping the jit caches at
+    module teardown bounds the accumulation; module-internal
+    compile-count invariants (e.g. decode_compilations == 1) are
+    unaffected because the clear runs after the module finishes.
+    """
+    yield
+    jax.clear_caches()
+    gc.collect()

@@ -136,6 +136,69 @@ def test_paged_decode_invariants(mutate, expect):
     assert errs and any(expect in e for e in errs), (expect, errs)
 
 
+def _quant_rows():
+    return [
+        {"name": "residency/small-d0.05", "us_per_call": 0.0,
+         "derived": "hbm_bytes_ratio=0.37",
+         "metrics": {"hbm_bytes_ratio": 0.37, "tensors": 7,
+                     "density": 0.05}},
+        {"name": "parity/f32-perchan", "us_per_call": 1.0,
+         "derived": "matches_ref=True",
+         "metrics": {"matches_ref": True, "bn": 32}},
+        {"name": "divergence/logits-d0.05", "us_per_call": 0.0,
+         "derived": "max_logit_divergence=0.09;bound=0.25",
+         "metrics": {"max_logit_divergence": 0.09, "bound": 0.25,
+                     "within_bound": True}},
+        {"name": "identity/pool-mixed-int8", "us_per_call": 1.0,
+         "derived": "matches_ref=True;adapters_mixed=2",
+         "metrics": {"matches_ref": True, "adapters_mixed": 2}},
+    ]
+
+
+@pytest.mark.parametrize("mutate, expect", [
+    (lambda d: d["rows"][0]["metrics"].update(hbm_bytes_ratio=0.6),
+     "55%"),
+    (lambda d: d["rows"][0]["metrics"].pop("hbm_bytes_ratio"),
+     "hbm_bytes_ratio"),
+    (lambda d: d["rows"][1]["metrics"].update(matches_ref=False),
+     "bitwise"),
+    (lambda d: d["rows"][2]["metrics"].update(within_bound=False),
+     "within_bound"),
+    (lambda d: d["rows"][2]["metrics"].pop("max_logit_divergence"),
+     "max_logit_divergence"),
+    (lambda d: d["rows"][3]["metrics"].update(matches_ref=False),
+     "moved a token"),
+    (lambda d: d["rows"][3]["metrics"].update(adapters_mixed=1),
+     "adapters_mixed"),
+])
+def test_quant_invariants(mutate, expect):
+    """Quantized-base gates (DESIGN.md §12): residency bound, bitwise
+    kernel/oracle parity, divergence bound, greedy token identity."""
+    doc = bench_doc(_quant_rows(), suite="quant")
+    assert validate(doc) == []
+    mutate(doc)
+    errs = validate(doc)
+    assert errs and any(expect in e for e in errs), (expect, errs)
+
+
+def test_quant_compare_guards():
+    """The baseline gate never lets the committed divergence bound
+    loosen, and holds hbm_bytes_ratio within +5%."""
+    base = bench_doc(_quant_rows(), suite="quant")
+    cur = json.loads(json.dumps(base))
+    cur["rows"][2]["metrics"]["bound"] = 0.30        # loosened bound
+    errs = compare_docs(cur, base)
+    assert any("bound regressed" in e for e in errs), errs
+    cur = json.loads(json.dumps(base))
+    cur["rows"][0]["metrics"]["hbm_bytes_ratio"] = 0.45   # > +5%
+    errs = compare_docs(cur, base)
+    assert any("hbm_bytes_ratio regressed" in e for e in errs), errs
+    cur = json.loads(json.dumps(base))
+    cur["rows"][0]["metrics"]["hbm_bytes_ratio"] = 0.38   # within +5%
+    cur["rows"][2]["metrics"]["max_logit_divergence"] = 0.10  # within +25%
+    assert compare_docs(cur, base) == []
+
+
 # ----------------------------------------------- baseline regression gate
 def _baseline_doc():
     return bench_doc(_rows(), suite="kernels_micro")

@@ -172,7 +172,8 @@ def test_fp16_values_roundtrip_and_upcast_on_merge(tmp_path):
     assert half.nbytes() < full.nbytes()
     half.save(str(tmp_path / "delta16"))
     loaded = DeltaArtifact.load(str(tmp_path / "delta16"))
-    assert loaded.manifest["format_version"] == 2
+    from repro.deltas.format import DELTA_FORMAT_VERSION
+    assert loaded.manifest["format_version"] == DELTA_FORMAT_VERSION
     from repro.core.lift import get_by_path
     for backend in ("kernel", "ref"):
         merged = merge_delta(base, loaded, backend=backend)
@@ -187,6 +188,79 @@ def test_fp16_values_roundtrip_and_upcast_on_merge(tmp_path):
     other = jax.tree.map(lambda x: x + 1e-3, base)
     with pytest.raises(DeltaMismatchError):
         merge_delta(other, loaded, backend="kernel")
+
+
+def test_v2_artifacts_still_load(tmp_path):
+    """The v3 bump (int8 values + value_scale) must not orphan v2
+    artifacts: an fp16-value manifest stamped format_version=2 loads and
+    merges to the same tree as the v3-stamped artifact."""
+    model, base, tuned, state, engine = _train_lift(steps=1)
+    ck = _save_ckpt(tmp_path, 1, tuned, state, engine)
+    half = extract(ck, 1, base, value_dtype="float16")
+    half.manifest["format_version"] = 2           # as a v2 writer made it
+    half.save(str(tmp_path / "delta2"))
+    loaded = DeltaArtifact.load(str(tmp_path / "delta2"))
+    assert loaded.manifest["format_version"] == 2
+    assert _trees_equal(merge_delta(base, loaded, backend="kernel"),
+                        merge_delta(base, half, validate=True))
+
+
+# ------------------------------------------------------------ int8 values
+def test_int8_values_dequantize_on_merge(tmp_path):
+    """format v3 satellite: extract(..., value_dtype="int8") shrinks the
+    value payload 4x with one per-tensor absmax/127 `value_scale`; every
+    consumer decodes through the ONE shared `decode_values`, so merging
+    (ref and kernel) plants fp32(int8(w) * scale) at the shipped
+    indices."""
+    from repro.core.lift import get_by_path
+    from repro.deltas.format import decode_values
+    model, base, tuned, state, engine = _train_lift(steps=3)
+    ck = _save_ckpt(tmp_path, 3, tuned, state, engine)
+    full = extract(ck, 3, base)
+    q = extract(ck, 3, base, value_dtype="int8")
+    for path, t in q.tensors.items():
+        assert t["val"].dtype == np.int8
+        m = q.manifest["tensors"][path]
+        assert m["value_dtype"] == "int8" and m["value_scale"] > 0
+    # int32 idx + int8 val vs int32 idx + fp32 val: ~5/8 of the payload
+    assert q.nbytes() < 0.7 * full.nbytes()
+    q.save(str(tmp_path / "delta8"))
+    loaded = DeltaArtifact.load(str(tmp_path / "delta8"))
+    assert loaded.manifest["format_version"] == 3
+    for backend in ("kernel", "ref"):
+        merged = merge_delta(base, loaded, backend=backend)
+        for path, t in loaded.tensors.items():
+            m = loaded.manifest["tensors"][path]
+            ns = t["idx"].shape[0]
+            got = np.asarray(get_by_path(merged, path)).reshape(ns, -1)
+            np.testing.assert_array_equal(
+                np.take_along_axis(got, t["idx"], axis=-1),
+                np.asarray(decode_values(t["val"], m)),
+                err_msg=f"{backend}:{path}")
+
+
+def test_int8_pool_residency_equals_merge_on_load(tmp_path):
+    """Pool packing and merge-on-load share `decode_values`: the
+    device-resident entries of an int8 artifact are exactly the values
+    its merge would plant — composing them in-matmul reproduces
+    merge-on-load serving bit for bit (DESIGN.md §5)."""
+    from repro.deltas.pool_layout import PoolLayout, SENTINEL_IDX
+    model, base, tuned, state, engine = _train_lift(steps=3)
+    ck = _save_ckpt(tmp_path, 3, tuned, state, engine)
+    q = extract(ck, 3, base, value_dtype="int8")
+    lay = PoolLayout(q.manifest["tensors"], entries_per_page=512)
+    idx_pages, val_pages = lay.pack(base, q)
+    from repro.deltas.format import decode_values
+    for path, (off, ns, k) in lay.slices().items():
+        m = q.manifest["tensors"][path]
+        got = val_pages.reshape(-1)[off:off + ns * k].reshape(ns, k)
+        np.testing.assert_array_equal(
+            got, np.asarray(decode_values(q.tensors[path]["val"], m),
+                            np.float32), err_msg=path)
+        gi = idx_pages.reshape(-1)[off:off + ns * k].reshape(ns, k)
+        assert np.all(gi < SENTINEL_IDX)
+        np.testing.assert_array_equal(gi, q.tensors[path]["idx"],
+                                      err_msg=path)
 
 
 # ------------------------------------------------------------------ diff
