@@ -89,6 +89,23 @@ Semantic invariants for suite "quant" (DESIGN.md §12):
     exactly, including the mixed-adapter pool row (vs fp32
     merge-on-load), which additionally reports `adapters_mixed` >= 2.
 
+Semantic invariants for suite "serving_scenarios" (docs/CI.md; the
+unified-engine fleet scenario harness, benchmarks/serving_scenarios.py):
+  * every row reports `deterministic` == true — rerunning the seeded
+    scenario must reproduce every token stream exactly;
+  * every row reports `preemption_rate` in [0, 1],
+    `peak_pool_occupancy` in (0, 1] and `page_hit_rate` in [0, 1]
+    (ratio metrics — the gated trajectory; latency percentiles and
+    tok/s ride along unguarded, wall time is never gated);
+  * every `storm/*` row reports `preemption_rate` > 0 (the storm must
+    actually preempt) and `matches_ref` == true (streams bitwise-equal
+    to the roomy-pool reference despite the churn);
+  * every `chat/*` row reports `page_hit_rate` > 0 (the shared prefix
+    must actually hit the refcounted prefix cache);
+  * every `elastic/*` row reports `restart_matches` == true (the union
+    of pre-crash and post-restart streams equals the uninterrupted
+    reference).
+
 Usage: python -m benchmarks.bench_schema BENCH_kernels_micro.json [...]
 """
 from __future__ import annotations
@@ -143,6 +160,8 @@ def validate(doc) -> list:
             errs.extend(_paged_decode_row(name, metrics))
         if suite == "quant":
             errs.extend(_quant_row(name, metrics))
+        if suite == "serving_scenarios":
+            errs.extend(_serving_scenarios_row(name, metrics))
     return errs
 
 
@@ -352,6 +371,45 @@ def _quant_row(name: str, metrics: dict) -> list:
                     f"{name}: adapters_mixed must be an integer >= 2 — "
                     f"the pool row must actually mix adapters over the "
                     f"int8 base, got {mixed!r}")
+    return errs
+
+
+def _serving_scenarios_row(name: str, metrics: dict) -> list:
+    errs = []
+    if metrics.get("deterministic") is not True:
+        errs.append(f"{name}: deterministic must be true — rerunning the "
+                    f"seeded scenario moved a token")
+    for key, lo_open in (("preemption_rate", False),
+                         ("page_hit_rate", False),
+                         ("peak_pool_occupancy", True)):
+        v = metrics.get(key)
+        if not isinstance(v, (int, float)) or isinstance(v, bool) \
+                or not 0.0 <= v <= 1.0 or (lo_open and v == 0.0):
+            errs.append(f"{name}: needs metric {key} in "
+                        f"{'(0, 1]' if lo_open else '[0, 1]'}, got {v!r}")
+    for key in ("p50_latency_s", "p99_latency_s", "tok_s"):
+        v = metrics.get(key)
+        if not isinstance(v, (int, float)) or isinstance(v, bool) or v < 0:
+            errs.append(f"{name}: needs numeric metric {key} >= 0, "
+                        f"got {v!r}")
+    if name.startswith("storm/"):
+        pr = metrics.get("preemption_rate")
+        if isinstance(pr, (int, float)) and pr <= 0:
+            errs.append(f"{name}: preemption_rate must be > 0 — the "
+                        f"storm scenario never actually preempted")
+        if metrics.get("matches_ref") is not True:
+            errs.append(f"{name}: matches_ref must be true — preemption "
+                        f"churn moved a token vs the roomy-pool reference")
+    if name.startswith("chat/"):
+        hr = metrics.get("page_hit_rate")
+        if isinstance(hr, (int, float)) and hr <= 0:
+            errs.append(f"{name}: page_hit_rate must be > 0 — the shared "
+                        f"prefix never hit the prefix cache")
+    if name.startswith("elastic/"):
+        if metrics.get("restart_matches") is not True:
+            errs.append(f"{name}: restart_matches must be true — the "
+                        f"restarted engine's streams diverged from the "
+                        f"uninterrupted reference")
     return errs
 
 

@@ -35,6 +35,8 @@ baseline artifact in place and commit it with the PR:
         --json benchmarks/baselines/BENCH_paged_decode.json
     PYTHONPATH=src:. python -m benchmarks.quant \
         --json benchmarks/baselines/BENCH_quant.json
+    PYTHONPATH=src:. python -m benchmarks.serving_scenarios \
+        --json benchmarks/baselines/BENCH_serving_scenarios.json
 
 The baseline diff then documents the accepted trajectory change in
 review, which is the point of committing baselines at all.
@@ -51,7 +53,7 @@ import sys
 
 # guarded booleans: once true in the baseline, must stay true
 BOOL_GUARDS = ("matches_dense", "matches_ref", "within_bound",
-               "within_live_bound")
+               "within_live_bound", "deterministic", "restart_matches")
 
 # guarded numerics: {metric: (direction, rel_tol, abs_tol)} — "max" means
 # the current value must not EXCEED baseline * (1 + rel_tol) + abs_tol,
@@ -90,6 +92,14 @@ NUM_GUARDS = {
     "hbm_bytes_ratio":          ("max", 0.05, 0.0),
     "max_logit_divergence":     ("max", 0.25, 0.0),
     "bound":                    ("max", 0.0, 0.0),
+    # serving scenario harness (benchmarks/serving_scenarios.py):
+    # deterministic scheduler arithmetic on seeded workloads — a storm
+    # that stops preempting or a prefix cache that stops hitting is a
+    # behavior regression, never wall time (latency/tok_s stay
+    # unguarded); occupancy must not creep past the live working set
+    "preemption_rate":          ("min", 0.5, 0.0),
+    "page_hit_rate":            ("min", 0.5, 0.0),
+    "peak_pool_occupancy":      ("max", 0.25, 0.05),
     # measured by XLA, stable under pinned jaxlib but version-sensitive:
     # generous headroom so only order-of-magnitude regressions (a score
     # matrix sneaking back into temps) trip the gate

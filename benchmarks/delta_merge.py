@@ -134,7 +134,7 @@ def _serve_mixed(eng, prompts, adapter_ids):
     """Serve the request mix, tracking the PEAK number of distinct
     adapters decoding in one batch step.  Temperatures alternate greedy /
     sampled — identity must hold bitwise at any temperature."""
-    from repro.serving.engine import Request
+    from repro.serving import Request
     for i, (p, a) in enumerate(zip(prompts, adapter_ids)):
         eng.submit(Request(uid=i, prompt=p, max_new_tokens=POOL_MAX_NEW,
                            temperature=0.0 if i % 2 == 0 else 0.8,
@@ -154,9 +154,8 @@ def _serve_mixed(eng, prompts, adapter_ids):
 
 def pool_rows():
     from repro.models import build_model
-    from repro.serving.engine import AdapterStore
-    from repro.serving.kvpool import (AdapterPool, PagedEngine,
-                                      PagedEngineConfig)
+    from repro.serving import AdapterStore, ServingConfig, make_engine
+    from repro.serving.kvpool import AdapterPool
     model = build_model(SMALL)
     params = model.init(jax.random.PRNGKey(0))
     base_hash = tree_hash(params)
@@ -205,12 +204,12 @@ def pool_rows():
         ipool.register(aid, art)
     cfg = dict(batch_slots=POOL_SLOTS, max_len=POOL_MAX_LEN, eos_id=2,
                page_size=POOL_PAGE_SIZE, num_pages=POOL_KV_PAGES)
-    eng_pool = PagedEngine(model, params, PagedEngineConfig(**cfg),
+    eng_pool = make_engine(model, params, ServingConfig(**cfg),
                            adapter_pool=ipool)
     store = AdapterStore(params)
     for aid, art in arts.items():
         store.load(aid, art)
-    eng_ref = PagedEngine(model, params, PagedEngineConfig(**cfg),
+    eng_ref = make_engine(model, params, ServingConfig(**cfg),
                           adapters=store)
 
     rng = np.random.default_rng(7)

@@ -51,8 +51,8 @@ import jax
 from benchmarks.common import SMALL, csv_rows, write_bench_json
 from repro import obs as obs_lib
 from repro.models import build_model
-from repro.serving.engine import Engine, EngineConfig, Request
-from repro.serving.kvpool import PagedEngine, PagedEngineConfig
+from repro.serving import Request, ServingConfig, make_engine
+from repro.serving.oracle import DenseOracle
 
 SLOTS = 8
 REQUESTS = 12
@@ -89,11 +89,11 @@ def run():
     prompts = _prompts(REQUESTS)
 
     def dense():
-        return Engine(model, params, EngineConfig(
+        return DenseOracle(model, params, ServingConfig(
             batch_slots=SLOTS, max_len=MAX_LEN, eos_id=2))
 
     def paged(chunked, speculate=0, obs=None):
-        return PagedEngine(model, params, PagedEngineConfig(
+        return make_engine(model, params, ServingConfig(
             batch_slots=SLOTS, max_len=MAX_LEN, eos_id=2,
             page_size=PAGE_SIZE, num_pages=NUM_PAGES,
             chunked_prefill=chunked, speculate=speculate,

@@ -119,14 +119,14 @@ def _serve_greedy(eng, prompts, adapter_ids=None):
     """Greedy-only serve (token identity under quantization holds at
     temperature 0; sampled streams see different logits by design),
     tracking the peak distinct adapters decoding in one step."""
-    from repro.serving.engine import Request
+    from repro.serving import Request
     aids = adapter_ids or [None] * len(prompts)
     for i, (p, a) in enumerate(zip(prompts, aids)):
         eng.submit(Request(uid=i, prompt=p, max_new_tokens=MAX_NEW,
                            temperature=0.0, adapter_id=a))
     mixed, steps = 0, 0
     t0 = time.perf_counter()
-    if not hasattr(eng, "sched"):       # dense Engine: no step-level view
+    if not hasattr(eng, "sched"):       # dense oracle: no step-level view
         done = eng.run()
         dt = time.perf_counter() - t0
         return {r.uid: tuple(r.out_tokens) for r in done}, 0, dt
@@ -142,9 +142,9 @@ def _serve_greedy(eng, prompts, adapter_ids=None):
 
 
 def run():
-    from repro.serving.engine import (AdapterStore, Engine, EngineConfig)
-    from repro.serving.kvpool import (AdapterPool, PagedEngine,
-                                      PagedEngineConfig)
+    from repro.serving import AdapterStore, ServingConfig, make_engine
+    from repro.serving.kvpool import AdapterPool
+    from repro.serving.oracle import DenseOracle
     rows = parity_rows()
 
     # a briefly-trained model, not random init: the identity rows are a
@@ -194,12 +194,12 @@ def run():
     # greedy token identity through BOTH engines: quantized base vs the
     # fp32 reference serve of the same prompt mix
     prompts = _prompts(REQUESTS)
-    ecfg = EngineConfig(batch_slots=SLOTS, max_len=MAX_LEN, eos_id=2)
-    pcfg = PagedEngineConfig(batch_slots=SLOTS, max_len=MAX_LEN, eos_id=2,
-                             page_size=PAGE_SIZE, num_pages=KV_PAGES)
+    ecfg = ServingConfig(batch_slots=SLOTS, max_len=MAX_LEN, eos_id=2)
+    pcfg = ServingConfig(batch_slots=SLOTS, max_len=MAX_LEN, eos_id=2,
+                         page_size=PAGE_SIZE, num_pages=KV_PAGES)
     for label, mk in (
-            ("dense", lambda p: Engine(model, p, ecfg)),
-            ("paged", lambda p: PagedEngine(model, p, pcfg))):
+            ("dense", lambda p: DenseOracle(model, p, ecfg)),
+            ("paged", lambda p: make_engine(model, p, pcfg))):
         want, _, _ = _serve_greedy(mk(params), prompts)
         got, _, dt = _serve_greedy(mk(qparams), prompts)
         matches = bool(got == want)
@@ -225,8 +225,8 @@ def run():
     for aid, a in arts.items():
         ipool.register(aid, a)
         store.load(aid, a)
-    eng_q = PagedEngine(model, qparams, pcfg, adapter_pool=ipool)
-    eng_ref = PagedEngine(model, params, pcfg, adapters=store)
+    eng_q = make_engine(model, qparams, pcfg, adapter_pool=ipool)
+    eng_ref = make_engine(model, params, pcfg, adapters=store)
     aids = [("a", "b", None)[i % 3] for i in range(REQUESTS)]
     want, _, _ = _serve_greedy(eng_ref, prompts, aids)
     got, mixed, dt = _serve_greedy(eng_q, prompts, aids)

@@ -30,6 +30,7 @@ MODULES = [
     "benchmarks.delta_merge",             # DeltaHub scatter-merge + bytes
     "benchmarks.paged_decode",            # PagedKV serving identity + bytes
     "benchmarks.quant",                   # int8 base + overlay serving
+    "benchmarks.serving_scenarios",       # fleet scenarios, one engine
 ]
 
 

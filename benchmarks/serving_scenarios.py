@@ -1,0 +1,327 @@
+"""Fleet-style serving scenarios over the unified paged engine.
+
+Seeded workload generator driven through `launch/serve.py`'s
+`build_parser()` / `build_engine_from_args()` pipeline (docs/CI.md):
+
+  * oneshot/reasoning    — mixed prompt/output-length one-shot stream;
+  * chat/prefix_heavy    — chat turns sharing a long system prefix
+                           through the refcounted prefix cache;
+  * adapters/zipf        — zipf-popularity adapter mix over synthetic
+                           LIFT delta artifacts (DeltaHub round-trip:
+                           save to disk, serve via --delta);
+  * storm/preemption     — an undersized pool forces checkpoint/
+                           preempt/restore churn; streams must match a
+                           roomy-pool reference bitwise;
+  * elastic/restart      — `ft.PreemptionSimulator` kills the engine
+                           mid-stream; a rebuilt engine resumes the
+                           unfinished requests and the union of streams
+                           must equal an uninterrupted reference.
+
+Every scenario runs twice from the same seed and reports
+`deterministic` (identical token streams).  Latency percentiles and
+tok/s ride along for the uploaded trajectory but are NEVER gated
+(interpret-mode wall time is noise); the gated metrics are the
+determinism bits and the ratio metrics (preemption_rate,
+page_hit_rate, peak_pool_occupancy) — see `bench_schema.py` and
+`compare.py`.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_rows, write_bench_json
+from repro.ft import PreemptionSimulator
+from repro.launch.serve import build_engine_from_args, build_parser
+from repro.serving import Request
+
+ARCH = ["--arch", "qwen3-1.7b", "--smoke"]
+SEED = 0
+
+
+def _parse(extra):
+    return build_parser().parse_args(ARCH + ["--seed", str(SEED)] + extra)
+
+
+def _engine(extra):
+    eng, _, cfg = build_engine_from_args(_parse(extra), None)
+    return eng, cfg
+
+
+# ------------------------------------------------------------ workloads
+def _requests(specs):
+    """specs: list of (uid, prompt, max_new, temperature, adapter_id)."""
+    return [Request(uid=u, prompt=np.asarray(p, np.int32),
+                    max_new_tokens=m, temperature=t, adapter_id=a)
+            for (u, p, m, t, a) in specs]
+
+
+def _oneshot_specs(vocab, n=12):
+    """One-shot reasoning mix: short chat-y prompts interleaved with
+    long chain-of-thought prompts, varied output budgets, mixed
+    greedy/sampled temperatures."""
+    rng = np.random.default_rng(SEED)
+    specs = []
+    for i in range(n):
+        long = i % 3 == 2
+        plen = int(rng.integers(24, 48) if long else rng.integers(6, 14))
+        prompt = rng.integers(5, vocab, size=plen)
+        specs.append((i, prompt, int(rng.integers(6, 18)),
+                      0.0 if i % 2 == 0 else 0.8, None))
+    return specs
+
+
+def _chat_specs(vocab, n=10, prefix_len=32):
+    """Prefix-heavy chat: every turn shares one long system prefix."""
+    rng = np.random.default_rng(SEED)
+    prefix = rng.integers(5, vocab, size=prefix_len)
+    specs = []
+    for i in range(n):
+        turn = rng.integers(5, vocab, size=int(rng.integers(4, 12)))
+        specs.append((i, np.concatenate([prefix, turn]), 8,
+                      0.0 if i % 2 == 0 else 0.7, None))
+    return specs
+
+
+def _zipf_choice(rng, n_items, a=1.5):
+    """Zipf-popularity index in [0, n_items): rank 0 dominates."""
+    return min(int(rng.zipf(a)) - 1, n_items - 1)
+
+
+def _drive(eng, reqs):
+    t0 = time.perf_counter()
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    dt = time.perf_counter() - t0
+    bad = [r for r in done if getattr(r, "error", None)]
+    if bad:
+        raise RuntimeError(f"request(s) failed: {bad[0].error}")
+    streams = {r.uid: tuple(r.out_tokens) for r in done}
+    return streams, dt
+
+
+def _row(name, eng, streams, dt, n_reqs, *, extra=None, derived_extra=""):
+    snap = eng.metrics_snapshot()
+    lat = snap["histograms"].get("serve.request_latency_s", {})
+    st = eng.kv_stats()
+    tokens = sum(len(s) for s in streams.values())
+    metrics = {
+        "requests": n_reqs,
+        "tokens": tokens,
+        "p50_latency_s": float(lat.get("p50", 0.0)),
+        "p99_latency_s": float(lat.get("p99", 0.0)),
+        "tok_s": tokens / max(dt, 1e-9),
+        "preemption_rate": st["preemptions"] / n_reqs,
+        "page_hit_rate": 0.0,
+        "peak_pool_occupancy": st["peak_pages_in_use"] / st["num_pages"],
+    }
+    if extra:
+        metrics.update(extra)
+    derived = (f"tok_s={metrics['tok_s']:.1f};"
+               f"preempt={metrics['preemption_rate']:.2f};"
+               f"occ={metrics['peak_pool_occupancy']:.2f}" + derived_extra)
+    return {"name": name, "us_per_call": dt / n_reqs * 1e6,
+            "derived": derived, "metrics": metrics}
+
+
+# ------------------------------------------------------------ scenarios
+def _oneshot_row():
+    flags = ["--slots", "4", "--max-len", "96", "--pages", "64",
+             "--page-size", "16"]
+    eng, cfg = _engine(flags)
+    specs = _oneshot_specs(cfg.vocab_size)
+    streams, dt = _drive(eng, _requests(specs))
+    again, _ = _drive(_engine(flags)[0], _requests(specs))
+    return _row("oneshot/reasoning-mixed-lengths", eng, streams, dt,
+                len(specs), extra={"deterministic": streams == again})
+
+
+def _chat_row():
+    flags = ["--slots", "4", "--max-len", "96", "--pages", "64",
+             "--page-size", "16", "--prefix-cache"]
+    eng, cfg = _engine(flags)
+    specs = _chat_specs(cfg.vocab_size)
+    streams, dt = _drive(eng, _requests(specs))
+    again, _ = _drive(_engine(flags)[0], _requests(specs))
+    st = eng.kv_stats()
+    prompt_pages = sum(len(p) // 16 for (_, p, _, _, _) in specs)
+    row = _row("chat/prefix-heavy", eng, streams, dt, len(specs),
+               extra={"deterministic": streams == again,
+                      "prefix_hits": st["prefix_hits"]},
+               derived_extra=f";prefix_hits={st['prefix_hits']}")
+    row["metrics"]["page_hit_rate"] = st["prefix_hits"] / prompt_pages
+    return row
+
+
+def _zipf_row():
+    rng = np.random.default_rng(SEED)
+    with tempfile.TemporaryDirectory() as td:
+        dirs = _save_synthetic_adapters(td, n=3)
+        flags = (["--slots", "4", "--max-len", "96", "--pages", "64",
+                  "--page-size", "16"]
+                 + [f for d in dirs for f in ("--delta", d)])
+        eng, cfg = _engine(flags)
+        specs = []
+        served = set()
+        for i in range(10):
+            aid = f"delta{_zipf_choice(rng, len(dirs))}"
+            served.add(aid)
+            prompt = rng.integers(5, cfg.vocab_size,
+                                  size=int(rng.integers(6, 20)))
+            specs.append((i, prompt, 8, 0.0 if i % 2 == 0 else 0.8, aid))
+        streams, dt = _drive(eng, _requests(specs))
+        again, _ = _drive(_engine(flags)[0], _requests(specs))
+    return _row("adapters/zipf-popularity-mix", eng, streams, dt,
+                len(specs),
+                extra={"deterministic": streams == again,
+                       "adapters_served": len(served)},
+                derived_extra=f";adapters={len(served)}")
+
+
+def _save_synthetic_adapters(td, n):
+    """Synthetic LIFT fine-tunes with the geometry of `deltas.extract`
+    (mode="replace" at 5%-density principal positions), saved to disk so
+    the scenario exercises the real --delta load path."""
+    import jax
+
+    from repro.core.lift import LiftConfig, get_by_path, make_plan
+    from repro.deltas import DeltaArtifact, tree_hash
+    from repro.deltas.format import make_manifest, num_stack
+    from repro.models import build_model
+
+    args = _parse([])
+    from repro.configs import get_arch
+    cfg = get_arch(args.arch).smoke
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(SEED))
+    plan = make_plan(model.spec(), LiftConfig(density=0.05, min_dim=16))
+    meta = {p: {"shape": list(t.shape), "stack": list(t.stack),
+                "rows": t.rows, "cols": t.cols, "k": t.k,
+                "dtype": "float32"}
+            for p, t in sorted(plan.items())}
+    base_hash = tree_hash(params)
+    dirs = []
+    for j in range(n):
+        rng = np.random.default_rng(100 + j)
+        tensors = {}
+        for path, m in meta.items():
+            ns, k, size = num_stack(m), m["k"], m["rows"] * m["cols"]
+            idx = np.stack([np.sort(rng.choice(size, k, replace=False))
+                            for _ in range(ns)]).astype(np.int32)
+            base = np.asarray(get_by_path(params, path),
+                              np.float32).reshape(ns, size)
+            val = (np.take_along_axis(base, idx, 1)
+                   + rng.normal(scale=0.05, size=(ns, k))
+                   ).astype(np.float32)
+            tensors[path] = {"idx": idx, "val": val}
+        art = DeltaArtifact(
+            manifest=make_manifest(mode="replace", base_hash=base_hash,
+                                   selection=None, tensors_meta=meta,
+                                   step=0),
+            tensors=tensors)
+        d = os.path.join(td, f"delta{j}")
+        art.save(d)
+        dirs.append(d)
+    return dirs
+
+
+def _storm_row():
+    """Preemption storm: long decodes through a pool sized barely above
+    the one-sequence floor, so page growth keeps evicting the youngest
+    sequence; a roomy-pool run is the bitwise reference."""
+    tiny = ["--slots", "4", "--max-len", "96", "--pages", "16",
+            "--page-size", "8"]
+    roomy = ["--slots", "4", "--max-len", "96", "--pages", "96",
+             "--page-size", "8"]
+    rng = np.random.default_rng(SEED)
+    eng, cfg = _engine(tiny)
+    specs = [(i, rng.integers(5, cfg.vocab_size,
+                              size=int(rng.integers(8, 24))),
+              24, 0.0 if i % 2 == 0 else 0.8, None)
+             for i in range(8)]
+    streams, dt = _drive(eng, _requests(specs))
+    again, _ = _drive(_engine(tiny)[0], _requests(specs))
+    ref, _ = _drive(_engine(roomy)[0], _requests(specs))
+    return _row("storm/preemption-tight-pool", eng, streams, dt,
+                len(specs),
+                extra={"deterministic": streams == again,
+                       "matches_ref": streams == ref},
+                derived_extra=f";matches_ref={streams == ref}")
+
+
+def _elastic_row():
+    """Elastic restart: a simulated preemption (`ft/resilience.py`)
+    kills the serving loop mid-stream; the harness rebuilds the engine
+    through the same `launch/serve.py` pipeline and resubmits the
+    unfinished requests.  Per-request sampling streams are keyed by
+    (seed, uid), so the union of pre-crash completions and post-restart
+    completions must equal an uninterrupted run bitwise."""
+    flags = ["--slots", "4", "--max-len", "96", "--pages", "64",
+             "--page-size", "16"]
+    rng = np.random.default_rng(SEED)
+    eng, cfg = _engine(flags)
+    specs = [(i, rng.integers(5, cfg.vocab_size,
+                              size=int(rng.integers(6, 20))),
+              12, 0.0 if i % 2 == 0 else 0.8, None)
+             for i in range(10)]
+    sim = PreemptionSimulator(crash_at_step=18)
+    t0 = time.perf_counter()
+    for r in _requests(specs):
+        eng.submit(r)
+    step = 0
+    crashed = False
+    try:
+        while eng.sched.has_work():
+            sim.check(step)
+            eng.step()
+            step += 1
+    except SystemExit:
+        crashed = True
+    finished = {r.uid: tuple(r.out_tokens) for r in eng.done
+                if not getattr(r, "error", None)}
+    # restart: a fresh engine (same pipeline, same config) takes over
+    # the requests the crashed engine never finished
+    eng2, _ = _engine(flags)
+    redo = [s for s in specs if s[0] not in finished]
+    streams2, _ = _drive(eng2, _requests(redo))
+    union = dict(finished)
+    union.update(streams2)
+    dt = time.perf_counter() - t0
+    ref, _ = _drive(_engine(flags)[0], _requests(specs))
+    again = dict(finished)
+    again.update(_drive(_engine(flags)[0], _requests(redo))[0])
+    return _row("elastic/restart-mid-stream", eng2, union, dt,
+                len(specs),
+                extra={"deterministic": union == again,
+                       "restart_matches": union == ref,
+                       "crashed": crashed,
+                       "resubmitted": len(redo)},
+                derived_extra=f";resubmitted={len(redo)};"
+                              f"restart_matches={union == ref}")
+
+
+def run():
+    return [_oneshot_row(), _chat_row(), _zipf_row(), _storm_row(),
+            _elastic_row()]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="",
+                    help="write the machine-readable artifact here "
+                         "(BENCH_serving_scenarios.json; docs/CI.md)")
+    args = ap.parse_args()
+    rows = run()
+    csv_rows(rows)
+    if args.json:
+        write_bench_json(args.json, rows, suite="serving_scenarios")
+        print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,8 +1,9 @@
 """Continuous-batching serving demo in two acts (docs/SERVING.md).
 
-Act 1 — dense cache vs PagedKV pool: a stream of reasoning prompts
-through both engines, watching slot admission / chunked prefill / page
-accounting (DESIGN.md §5).
+Act 1 — one engine, two prefill modes: a stream of reasoning prompts
+through the unified paged engine (`repro.serving.make_engine`) with
+whole-prompt prefill vs chunked prefill, watching slot admission /
+page accounting (DESIGN.md §5) — greedy token streams are identical.
 
 Act 2 — merge-free multi-adapter serving: two LIFT-style sparse deltas
 served from a paged adapter pool, MIXED per slot in one decode batch,
@@ -20,9 +21,9 @@ import numpy as np
 from repro.data.synthetic import (BOS, EOS, SEP, VOCAB_SIZE, decode, encode,
                                   make_arith_example)
 from repro.models import ModelConfig, build_model
-from repro.serving.engine import (AdapterStore, Engine, EngineConfig,
-                                  Request)
-from repro.serving.kvpool import AdapterPool, PagedEngine, PagedEngineConfig
+from repro.serving import (AdapterStore, Request, ServingConfig,
+                           make_engine)
+from repro.serving.kvpool import AdapterPool
 
 cfg = ModelConfig(family="dense", num_layers=2, d_model=96, num_heads=4,
                   num_kv_heads=2, head_dim=24, d_ff=192,
@@ -71,15 +72,17 @@ def drive(engine, label, adapter_ids=(None,)):
     return {r.uid: tuple(r.out_tokens) for r in done}
 
 
-# ------------------------------------------- act 1: dense vs paged KV
-dense = drive(Engine(model, params,
-                     EngineConfig(batch_slots=4, max_len=96, eos_id=EOS)),
-              "dense cache, 4 slots")
+# ------------------- act 1: whole-prompt vs chunked prefill, ONE engine
+dense = drive(make_engine(model, params,
+                          ServingConfig(batch_slots=4, max_len=96,
+                                        eos_id=EOS, page_size=16,
+                                        num_pages=32)),
+              "whole-prompt prefill, 4 slots")
 
-paged_eng = PagedEngine(model, params, PagedEngineConfig(
+paged_eng = make_engine(model, params, ServingConfig(
     batch_slots=4, max_len=96, eos_id=EOS, page_size=16, num_pages=32,
     chunked_prefill=True, prefill_chunk=16))
-paged = drive(paged_eng, "paged pool, chunked prefill")
+paged = drive(paged_eng, "chunked prefill")
 
 st = paged_eng.kv_stats()
 # greedy streams are guaranteed identical under chunked prefill; the
@@ -140,7 +143,7 @@ pcfg = dict(batch_slots=4, max_len=96, eos_id=EOS, page_size=16,
 store = AdapterStore(params)
 for aid, art in arts.items():
     store.load(aid, art)
-ref_eng = PagedEngine(model, params, PagedEngineConfig(**pcfg),
+ref_eng = make_engine(model, params, ServingConfig(**pcfg),
                       adapters=store)
 
 # merge-free path: ONE base weight set + a paged (idx, val) pool; each
@@ -153,7 +156,7 @@ ref_eng = PagedEngine(model, params, PagedEngineConfig(**pcfg),
 apool = AdapterPool(params, num_pages=40, entries_per_page=512)
 for aid, art in arts.items():
     apool.register(aid, art)
-pool_eng = PagedEngine(model, params, PagedEngineConfig(**pcfg),
+pool_eng = make_engine(model, params, ServingConfig(**pcfg),
                        adapter_pool=apool)
 
 mix = ("alice", "bob", None)   # None = the unadapted base model

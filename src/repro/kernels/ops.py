@@ -521,10 +521,13 @@ def lift_indices_sharded(a, b_local, k: int, *, axis_name: str,
 
 
 # -------------------------------------------------------- paged attention
-@functools.partial(jax.jit, static_argnames=("backend", "interpret"))
+@functools.partial(jax.jit, static_argnames=("backend", "interpret",
+                                             "window", "ring"))
 def paged_attention_decode(q, k_pages, v_pages, block_tables, positions, *,
                            backend: str = "auto",
-                           interpret: Optional[bool] = None):
+                           interpret: Optional[bool] = None,
+                           window: Optional[int] = None,
+                           ring: Optional[int] = None):
     """One-token decode attention over a block-paged KV pool.
 
     q: (B, H_kv, g, D) grouped queries (GQA groups folded, the cache is
@@ -532,6 +535,16 @@ def paged_attention_decode(q, k_pages, v_pages, block_tables, positions, *,
     shared page pool; block_tables: (B, nmax) int32 physical page of each
     logical page; positions: (B,) int32 — keys at logical token index
     <= positions[b] are attended, everything else masked.
+
+    `window`/`ring` (STATIC, both or neither) select the sliding-window
+    ring read: block tables are then indexed by RING index (logical page
+    l lives at table column l % ring, slot-in-page unchanged) and keys at
+    kpos <= positions[b] - window are masked off.  The lax path gathers
+    into EXACTLY the dense rolling-buffer layout (`attention_decode`'s
+    slot s holds position pos - ((pos - s) % window)) and runs the same
+    grouped einsum, so ring decode stays bitwise-comparable to the dense
+    rolling cache; stale ring cells fall outside the window mask by
+    construction ((ring - 1) * ps >= window).
 
     backend:
       * "kernel" — the Pallas kernel (`paged_attention.paged_decode_fwd`):
@@ -547,21 +560,44 @@ def paged_attention_decode(q, k_pages, v_pages, block_tables, positions, *,
     Returns o: (B, H_kv, g, D).
     """
     interpret = _default_interpret() if interpret is None else interpret
+    if (window is None) != (ring is None):
+        raise ValueError("window and ring must be given together")
     if backend == "auto":
         backend = "kernel" if jax.default_backend() == "tpu" else "lax"
     if backend == "kernel":
         from repro.kernels import paged_attention as pak
         return pak.paged_decode_fwd(q, k_pages, v_pages, block_tables,
-                                    positions, interpret=interpret)
+                                    positions, interpret=interpret,
+                                    window=window, ring=ring)
     if backend != "lax":
         raise ValueError(f"unknown paged-attention backend {backend!r}")
     B, hkv, g, D = q.shape
     P, ps, _, _ = k_pages.shape
     nmax = block_tables.shape[1]
-    kc = k_pages[block_tables].reshape(B, nmax * ps, hkv, D).astype(q.dtype)
-    vc = v_pages[block_tables].reshape(B, nmax * ps, hkv, D).astype(q.dtype)
-    t = jnp.arange(nmax * ps)
-    ok = t[None, :] <= positions[:, None]
+    if window is None:
+        kc = k_pages[block_tables].reshape(B, nmax * ps, hkv, D)
+        vc = v_pages[block_tables].reshape(B, nmax * ps, hkv, D)
+        t = jnp.arange(nmax * ps)
+        ok = t[None, :] <= positions[:, None]
+    else:
+        # dense rolling-buffer layout: slot s of a window-long buffer
+        # holds the latest position congruent to s (mod window); gather
+        # that position's ring cell per slot so the einsum below sees
+        # the exact array the dense engine's attention_decode reads
+        # (masked slots may gather garbage — the -1e30 bias zeroes them
+        # exactly, scores being ~1e20 below the mask's absorption point)
+        s_idx = jnp.arange(window)
+        kp = positions[:, None] - ((positions[:, None] - s_idx[None, :])
+                                   % window)                  # (B, W)
+        kpc = jnp.maximum(kp, 0)
+        col = (kpc // ps) % ring
+        phys = jnp.take_along_axis(block_tables, col, axis=1)  # (B, W)
+        kc = k_pages[phys, kpc % ps]                   # (B, W, hkv, D)
+        vc = v_pages[phys, kpc % ps]
+        ok = (kp >= 0) & (kp <= positions[:, None]) \
+            & (kp > positions[:, None] - window)
+    kc = kc.astype(q.dtype)
+    vc = vc.astype(q.dtype)
     bias = jnp.where(ok, 0.0, -1e30)[:, None, None, None, :]  # (B,1,1,1,T)
     qg = q.reshape(B, 1, hkv, g, D)
     scale = D ** -0.5

@@ -54,9 +54,15 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _attend_page(q, k, v, j, pos, carry, *, page_size: int, g: int):
+def _attend_page(q, k, v, j, pos, carry, *, page_size: int, g: int,
+                 window=None):
     """One page's online-softmax update.  q: (n_q*g, d) pre-scaled fp32;
-    k/v: (ps, d); query row r belongs to decode position pos + r // g."""
+    k/v: (ps, d); query row r belongs to decode position pos + r // g;
+    j is the page's LOGICAL index (kpos = j * ps + slot), which for ring
+    walks may differ from the block-table column it was loaded from.
+    `window` additionally masks kpos <= qpos - window (sliding-window
+    rings; stale ring cells alias kpos - ring * ps and land outside the
+    window by construction)."""
     m, l, acc = carry
     rows = q.shape[0]
     s = q @ k.astype(jnp.float32).T                     # (n_q*g, ps)
@@ -64,7 +70,10 @@ def _attend_page(q, k, v, j, pos, carry, *, page_size: int, g: int):
         jnp.int32, (rows, page_size), 1)
     qpos = pos + jax.lax.broadcasted_iota(
         jnp.int32, (rows, page_size), 0) // g
-    s = jnp.where(kpos <= qpos, s, NEG_INF)
+    ok = kpos <= qpos
+    if window is not None:
+        ok &= kpos > qpos - window
+    s = jnp.where(ok, s, NEG_INF)
     m_new = jnp.maximum(m, jnp.max(s, axis=-1))
     p = jnp.exp(s - m_new[:, None])
     corr = jnp.exp(m - m_new)
@@ -74,27 +83,45 @@ def _attend_page(q, k, v, j, pos, carry, *, page_size: int, g: int):
 
 
 def _paged_attn_kernel(q_ref, k_ref, v_ref, bt_ref, pos_ref, o_ref, *,
-                       page_size: int, scale: float):
+                       page_size: int, scale: float, window=None,
+                       ring=None):
     """Direct-load schedule: one blocking page load per block-table
-    entry.  Runs under interpret mode and is the non-TPU reference."""
+    entry.  Runs under interpret mode and is the non-TPU reference.
+
+    With `ring` the block table is indexed by ring column: the walk
+    visits the newest page first (logical page pos // ps lives at column
+    (pos // ps) % ring) and steps back at most `ring` pages — everything
+    older is outside the window."""
     nq, g, d = q_ref.shape[2:]
     q = q_ref[0, 0].astype(jnp.float32).reshape(nq * g, d) * scale
     pos = pos_ref[0, 0]                                 # scalar int32
     nmax = bt_ref.shape[1]
-    n_live = jnp.minimum((pos + nq - 1) // page_size + 1, nmax)
+    if ring is None:
+        n_live = jnp.minimum((pos + nq - 1) // page_size + 1, nmax)
+    else:
+        base = pos // page_size
+        n_live = jnp.minimum(base + 1, ring)
 
     m0 = jnp.full((nq * g,), NEG_INF, jnp.float32)
     l0 = jnp.zeros((nq * g,), jnp.float32)
     a0 = jnp.zeros((nq * g, d), jnp.float32)
 
-    def body(j, carry):
-        page = bt_ref[0, j]
+    def body(i, carry):
+        if ring is None:
+            logical = i
+            col = i
+        else:
+            logical = base - i          # newest page first: it always
+            col = jax.lax.rem(logical, ring)   # holds pos itself, so the
+            #                           # softmax max is finite before any
+            #                           # fully-masked older page arrives
+        page = bt_ref[0, col]
         k = pl.load(k_ref, (pl.dslice(page, 1), slice(None),
                             pl.dslice(0, 1), slice(None)))[0, :, 0, :]
         v = pl.load(v_ref, (pl.dslice(page, 1), slice(None),
                             pl.dslice(0, 1), slice(None)))[0, :, 0, :]
-        return _attend_page(q, k, v, j, pos, carry,
-                            page_size=page_size, g=g)
+        return _attend_page(q, k, v, logical, pos, carry,
+                            page_size=page_size, g=g, window=window)
 
     m, l, acc = jax.lax.fori_loop(0, n_live, body, (m0, l0, a0))
     l = jnp.maximum(l, 1e-37)
@@ -102,20 +129,28 @@ def _paged_attn_kernel(q_ref, k_ref, v_ref, bt_ref, pos_ref, o_ref, *,
 
 
 def _paged_attn_kernel_dma(q_ref, k_hbm, v_hbm, bt_ref, pos_ref, o_ref, *,
-                           page_size: int, scale: float):
+                           page_size: int, scale: float, window=None,
+                           ring=None):
     """Double-buffered schedule: K/V pages live in HBM and stream
     through two VMEM scratch slots — page j+1's async copy is in flight
-    while page j is attended."""
+    while page j is attended.  `ring` walks the block table by ring
+    column, newest page first (see `_paged_attn_kernel`)."""
     h = pl.program_id(1)
     nq, g, d = q_ref.shape[2:]
     q = q_ref[0, 0].astype(jnp.float32).reshape(nq * g, d) * scale
     pos = pos_ref[0, 0]
     nmax = bt_ref.shape[1]
-    n_live = jnp.minimum((pos + nq - 1) // page_size + 1, nmax)
+    if ring is None:
+        n_live = jnp.minimum((pos + nq - 1) // page_size + 1, nmax)
+        base = None
+    else:
+        base = pos // page_size
+        n_live = jnp.minimum(base + 1, ring)
 
     def body(k_buf, v_buf, sem):
         def page_dma(slot, j):
-            page = bt_ref[0, j]
+            col = j if ring is None else jax.lax.rem(base - j, ring)
+            page = bt_ref[0, col]
             return (
                 pltpu.make_async_copy(
                     k_hbm.at[pl.dslice(page, 1), :, pl.dslice(h, 1), :],
@@ -144,8 +179,9 @@ def _paged_attn_kernel_dma(q_ref, k_hbm, v_hbm, bt_ref, pos_ref, o_ref, *,
                 c.wait()
             k = k_buf[slot, 0, :, 0, :]
             v = v_buf[slot, 0, :, 0, :]
-            return _attend_page(q, k, v, j, pos, carry,
-                                page_size=page_size, g=g)
+            logical = j if ring is None else base - j
+            return _attend_page(q, k, v, logical, pos, carry,
+                                page_size=page_size, g=g, window=window)
 
         m, l, acc = jax.lax.fori_loop(0, n_live, loop, (m0, l0, a0))
         l = jnp.maximum(l, 1e-37)
@@ -161,7 +197,8 @@ def _paged_attn_kernel_dma(q_ref, k_hbm, v_hbm, bt_ref, pos_ref, o_ref, *,
 
 
 def _paged_attn_call(q, k_pages, v_pages, block_tables, positions, *,
-                     scale: float, interpret: bool, pipeline: bool):
+                     scale: float, interpret: bool, pipeline: bool,
+                     window=None, ring=None):
     """Shared pallas_call plumbing.  q: (B, H_kv, n_q, g, D)."""
     B, hkv, nq, g, D = q.shape
     P, ps, hkv2, D2 = k_pages.shape
@@ -170,11 +207,11 @@ def _paged_attn_call(q, k_pages, v_pages, block_tables, positions, *,
 
     if pipeline:
         kern = functools.partial(_paged_attn_kernel_dma, page_size=ps,
-                                 scale=scale)
+                                 scale=scale, window=window, ring=ring)
         kv_spec = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)
     else:
         kern = functools.partial(_paged_attn_kernel, page_size=ps,
-                                 scale=scale)
+                                 scale=scale, window=window, ring=ring)
         kv_spec = pl.BlockSpec((P, ps, 1, D), lambda b, h: (0, 0, h, 0))
     return pl.pallas_call(
         kern,
@@ -196,10 +233,15 @@ def _paged_attn_call(q, k_pages, v_pages, block_tables, positions, *,
 
 def paged_decode_fwd(q, k_pages, v_pages, block_tables, positions, *,
                      scale: float | None = None, interpret: bool = True,
-                     pipeline: bool | None = None):
+                     pipeline: bool | None = None,
+                     window: int | None = None, ring: int | None = None):
     """q: (B, H_kv, g, D) grouped queries for ONE decode token;
     k_pages / v_pages: (P, ps, H_kv, D); block_tables: (B, nmax) int32;
     positions: (B,) int32.  Returns o: (B, H_kv, g, D).
+
+    `window`/`ring` (STATIC, both or neither) select the sliding-window
+    ring walk: the block table is indexed by ring column and only keys
+    with kpos in (pos - window, pos] contribute.
 
     `pipeline` selects the double-buffered HBM page stream; it defaults
     to on for compiled TPU runs and off under interpret mode (the DMA
@@ -209,7 +251,7 @@ def paged_decode_fwd(q, k_pages, v_pages, block_tables, positions, *,
     pipeline = (not interpret) if pipeline is None else pipeline
     o = _paged_attn_call(q[:, :, None], k_pages, v_pages, block_tables,
                          positions, scale=scale, interpret=interpret,
-                         pipeline=pipeline)
+                         pipeline=pipeline, window=window, ring=ring)
     return o[:, :, 0]
 
 

@@ -1,7 +1,18 @@
-"""Serving launcher: continuous-batching engine over a (smoke) model.
+"""Serving launcher: the unified paged engine over a (smoke) model.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
         --requests 8 --max-new 16
+
+Every family serves through ONE engine (`repro.serving.make_engine`,
+DESIGN.md §5): KV lives in `--pages` shared pages of `--page-size`
+tokens with page-aware continuous batching (admission waits or preempts
+instead of OOMing), sliding-window families keep a ring of pages per
+slot, and recurrent families (rwkv6 / zamba hybrids) draw fixed-size
+state slabs from the same pool — checkpointed on preemption so a
+restart resumes decode instead of re-running prefill.
+`--chunked-prefill` interleaves fixed-size prompt chunks with decode
+steps (dense family).  The legacy `--engine` / `--kv-*` spellings are
+deprecated aliases.
 
 DeltaHub (DESIGN.md §4): `--base <ckpt-dir>` restores the base weights
 from a checkpoint; `--delta <artifact-dir>` loads a sparse delta artifact
@@ -10,49 +21,43 @@ every request through the merged adapter — token-identical to serving the
 dense fine-tuned checkpoint, at O(k) artifact bytes.  `--merge-mode`
 picks the scatter-merge backend (Pallas kernel vs dense reference).
 
-PagedKV (DESIGN.md §5): `--kv-pages N` switches to the block-paged
-engine — KV lives in N shared pages of `--kv-page-size` tokens with
-page-aware continuous batching (admission waits or preempts instead of
-OOMing), and `--chunked-prefill` interleaves fixed-size prompt chunks
-with decode steps.  Token-identical to the dense-cache engine; attention
-families only (rwkv6 keeps the dense engine).
-
 Merge-free multi-adapter serving (DESIGN.md §5): `--adapter-pool N`
 keeps ONE base weight set resident and serves every `--delta` (the flag
 repeats) as pool-resident sparse pages composed into the forward matmuls
 per batch slot — a decode batch mixes adapters freely, requests are
 assigned round-robin across the loaded deltas, and token streams are
-bitwise-identical to merge-on-load serving.  Requires the paged engine
-(`--kv-pages`); `--adapter-pool-entries` sets the page granularity.
+bitwise-identical to merge-on-load serving.
+`--adapter-pool-entries` sets the page granularity.
 
 Quantized base (DESIGN.md §12): `--quantize-base` converts the restored
 dense weights into an int8 resident base plus a full-precision overlay
 of the top `--overlay-density` principal weights and super-weight
 outliers (`src/repro/quant/`) before engine construction — halving
 weight HBM per replica while the matmuls dequantize in the epilogue.
-Works in BOTH engines and composes with the merge-free adapter pool
-(base int8 + principal overlay + per-slot delta in one epilogue);
-merge-on-load `--delta` is refused (it scatters into dense leaves).
+Composes with the merge-free adapter pool (base int8 + principal
+overlay + per-slot delta in one epilogue); merge-on-load `--delta` is
+refused (it scatters into dense leaves).
 
 Speculative decode (DESIGN.md §5): `--speculate` verifies `--draft-len`
-drafted tokens per decode dispatch on the paged engine (dense family).
-`--draft-source ngram` drafts by prompt lookup (no extra model);
-`--draft-source base` drafts with the unmerged base weights (the
-LIFT-native drafter under `--delta`); `--draft-arch` drafts with a
-smaller arch's smoke config.  Token streams stay bitwise-identical to
-one-token decode at any temperature for any drafter — acceptance only
-moves throughput — and the verify path compiles exactly one program.
+drafted tokens per decode dispatch (dense family).  `--draft-source
+ngram` drafts by prompt lookup (no extra model); `--draft-source base`
+drafts with the unmerged base weights (the LIFT-native drafter under
+`--delta`); `--draft-arch` drafts with a smaller arch's smoke config.
+Token streams stay bitwise-identical to one-token decode at any
+temperature for any drafter — acceptance only moves throughput — and
+the verify path compiles exactly one program.
 """
 from __future__ import annotations
 
 import argparse
 import time
+import warnings
 
 import jax
 import numpy as np
 
 
-def main():
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama2-7b")
     ap.add_argument("--smoke", action="store_true")
@@ -62,6 +67,15 @@ def main():
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--pages", type=int, default=64,
+                    help="shared KV/state pages in the pool (every "
+                         "family serves through the paged engine)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page")
+    ap.add_argument("--exhaustion", default="preempt",
+                    choices=["preempt", "stall"],
+                    help="page-exhaustion policy: preempt the youngest "
+                         "sequence or stall the growing one")
     ap.add_argument("--base", default="",
                     help="checkpoint dir to restore base weights from "
                          "(latest step); default: fresh init")
@@ -80,8 +94,7 @@ def main():
                          "adapter pool with this many pages: one base "
                          "weight set stays resident and each slot's "
                          "sparse delta composes into the forward matmuls "
-                         "(paged engine only, dense family; 0 = "
-                         "merge-on-load AdapterStore)")
+                         "(dense family; 0 = merge-on-load AdapterStore)")
     ap.add_argument("--adapter-pool-entries", type=int, default=2048,
                     help="(idx, val) entries per adapter-pool page")
     ap.add_argument("--overlay-backend", default="lax",
@@ -107,28 +120,18 @@ def main():
     ap.add_argument("--no-buckets", action="store_true",
                     help="disable power-of-two prefill length buckets "
                          "(compile per exact prompt length)")
-    ap.add_argument("--kv-pages", type=int, default=0,
-                    help="serve through the block-paged KV pool with this "
-                         "many shared pages (0 = dense per-slot cache)")
-    ap.add_argument("--kv-page-size", type=int, default=16,
-                    help="tokens per KV page (paged engine)")
     ap.add_argument("--chunked-prefill", action="store_true",
                     help="prefill long prompts in fixed-size chunks that "
-                         "interleave with decode steps (paged engine, "
-                         "dense family)")
+                         "interleave with decode steps (dense family)")
     ap.add_argument("--prefill-chunk", type=int, default=32,
                     help="tokens per prefill chunk (--chunked-prefill)")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="share reference-counted prompt-prefix pages "
-                         "across requests (paged engine, dense family)")
-    ap.add_argument("--kv-policy", default="preempt",
-                    choices=["preempt", "stall"],
-                    help="page-exhaustion policy: preempt the youngest "
-                         "sequence or stall the growing one")
+                         "across requests (dense family)")
     ap.add_argument("--speculate", action="store_true",
                     help="speculative multi-token decode: verify "
                          "--draft-len drafted tokens per decode dispatch "
-                         "(paged engine, dense family; token streams stay "
+                         "(dense family; token streams stay "
                          "bitwise-identical to one-token decode)")
     ap.add_argument("--draft-len", type=int, default=4,
                     help="drafted tokens per decode dispatch "
@@ -158,19 +161,54 @@ def main():
                          "(benchmarks/compilations_manifest.json) and "
                          "exit nonzero on any violation — the "
                          "compilations == expected CI gate")
-    args = ap.parse_args()
+    # ------------------------------------------- deprecated aliases
+    # (default None so "flag was passed" is detectable; resolved by
+    # `resolve_deprecated` into the canonical spellings above)
+    ap.add_argument("--engine", default=None, choices=["dense", "paged"],
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--kv-pages", type=int, default=None,
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--kv-page-size", type=int, default=None,
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--kv-policy", default=None,
+                    choices=["preempt", "stall"],
+                    help=argparse.SUPPRESS)
+    return ap
 
-    from repro import obs as obs_lib
-    obs_ctx = obs_lib.default()
-    if args.trace_out:
-        obs_ctx.tracer.enabled = True
 
+def resolve_deprecated(args: argparse.Namespace) -> argparse.Namespace:
+    """Map legacy flag spellings onto the canonical ones, warning once
+    per flag.  `--engine` is accepted and ignored: every family serves
+    through the one paged engine now."""
+    def warn(old: str, new: str):
+        warnings.warn(f"{old} is deprecated; use {new}",
+                      DeprecationWarning, stacklevel=3)
+
+    if args.engine is not None:
+        warn("--engine", "the unified engine (the flag is ignored; "
+             "dense serving survives only as the test oracle)")
+    if args.kv_pages is not None:
+        warn("--kv-pages", "--pages")
+        if args.kv_pages > 0:
+            args.pages = args.kv_pages
+    if args.kv_page_size is not None:
+        warn("--kv-page-size", "--page-size")
+        args.page_size = args.kv_page_size
+    if args.kv_policy is not None:
+        warn("--kv-policy", "--exhaustion")
+        args.exhaustion = args.kv_policy
+    return args
+
+
+def build_engine_from_args(args: argparse.Namespace, obs_ctx=None):
+    """Model + weights + adapters/quant/draft + unified engine from a
+    parsed `build_parser()` namespace.  Returns `(engine, adapter_ids,
+    model_cfg)` so callers (the CLI below, the scenario benchmark
+    harness) share one construction path."""
     from repro.configs import get_arch
-    from repro.data.synthetic import BOS, EOS, SEP, encode, decode, \
-        make_arith_example
+    from repro.data.synthetic import EOS
     from repro.models import build_model
-    from repro.serving.engine import (AdapterStore, Engine, EngineConfig,
-                                      Request)
+    from repro.serving import AdapterStore, ServingConfig, make_engine
 
     bundle = get_arch(args.arch)
     cfg = bundle.smoke if args.smoke else bundle.full
@@ -190,13 +228,9 @@ def main():
         params = ckpt.restore(step, {"params": params})["params"]
         print(f"[base] restored step {step} from {args.base}")
 
-    if args.adapter_pool > 0:
-        if args.kv_pages <= 0:
-            raise SystemExit("--adapter-pool needs the paged engine: "
-                             "pass --kv-pages N")
-        if not args.delta:
-            raise SystemExit("--adapter-pool without --delta has nothing "
-                             "to pool; pass one or more --delta dirs")
+    if args.adapter_pool > 0 and not args.delta:
+        raise SystemExit("--adapter-pool without --delta has nothing "
+                         "to pool; pass one or more --delta dirs")
 
     adapters = None
     apool = None
@@ -248,19 +282,17 @@ def main():
         entries = sum(int(np.prod(t["idx"].shape))
                       for t in art.tensors.values())
         params = art.to_params(params)
-        reg = obs_ctx.registry
-        reg.gauge("quant.hbm_bytes_ratio").set(ratio)
-        reg.gauge("quant.tensors").set(len(art.tensors))
-        reg.gauge("quant.overlay_entries").set(entries)
+        if obs_ctx is not None:
+            reg = obs_ctx.registry
+            reg.gauge("quant.hbm_bytes_ratio").set(ratio)
+            reg.gauge("quant.tensors").set(len(art.tensors))
+            reg.gauge("quant.overlay_entries").set(entries)
         print(f"[quant] int8 base + {100 * qcfg.density:.1f}% principal "
               f"overlay ({qcfg.scale_mode} scales): {len(art.tensors)} "
               f"tensors, {entries} overlay entries, "
               f"{art.resident_nbytes()} B resident "
               f"({100 * ratio:.1f}% of dense)")
 
-    if args.speculate and args.kv_pages <= 0:
-        raise SystemExit("--speculate needs the paged engine: pass "
-                         "--kv-pages N")
     draft_model = draft_params = None
     if args.speculate and args.draft_arch:
         dcfg = get_arch(args.draft_arch).smoke
@@ -272,28 +304,37 @@ def main():
         draft_model = build_model(dcfg)
         draft_params = draft_model.init(jax.random.PRNGKey(args.seed + 1))
 
-    if args.kv_pages > 0:
-        from repro.serving.kvpool import PagedEngine, PagedEngineConfig
-        eng = PagedEngine(model, params, PagedEngineConfig(
-            batch_slots=args.slots, max_len=args.max_len, eos_id=EOS,
-            seed=args.seed, page_size=args.kv_page_size,
-            num_pages=args.kv_pages,
-            chunked_prefill=args.chunked_prefill,
-            prefill_chunk=args.prefill_chunk,
-            prefill_buckets=not args.no_buckets,
-            prefix_cache=args.prefix_cache,
-            exhaustion=args.kv_policy,
-            speculate=args.draft_len if args.speculate else 0,
-            draft_source=("model" if (args.draft_source == "base"
-                                      or args.draft_arch) else "ngram"),
-            overlay_backend=args.overlay_backend),
-            adapters=adapters, draft_model=draft_model,
-            draft_params=draft_params, adapter_pool=apool, obs=obs_ctx)
-    else:
-        eng = Engine(model, params, EngineConfig(
-            batch_slots=args.slots, max_len=args.max_len, eos_id=EOS,
-            seed=args.seed, prefill_buckets=not args.no_buckets),
-            adapters=adapters, obs=obs_ctx)
+    eng = make_engine(model, params, ServingConfig(
+        batch_slots=args.slots, max_len=args.max_len, eos_id=EOS,
+        seed=args.seed, page_size=args.page_size,
+        num_pages=args.pages,
+        chunked_prefill=args.chunked_prefill,
+        prefill_chunk=args.prefill_chunk,
+        prefill_buckets=not args.no_buckets,
+        prefix_cache=args.prefix_cache,
+        exhaustion=args.exhaustion,
+        speculate=args.draft_len if args.speculate else 0,
+        draft_source=("model" if (args.draft_source == "base"
+                                  or args.draft_arch) else "ngram"),
+        overlay_backend=args.overlay_backend),
+        adapters=adapters, draft_model=draft_model,
+        draft_params=draft_params, adapter_pool=apool, obs=obs_ctx)
+    return eng, adapter_ids, cfg
+
+
+def main(argv=None):
+    args = resolve_deprecated(build_parser().parse_args(argv))
+
+    from repro import obs as obs_lib
+    obs_ctx = obs_lib.default()
+    if args.trace_out:
+        obs_ctx.tracer.enabled = True
+
+    from repro.data.synthetic import BOS, SEP, encode, decode, \
+        make_arith_example
+    from repro.serving import Request
+
+    eng, adapter_ids, _ = build_engine_from_args(args, obs_ctx)
     rng = np.random.default_rng(args.seed)
     t0 = time.time()
     for i in range(args.requests):

@@ -194,18 +194,16 @@ class LM:
     def init_paged_cache(self, num_pages: int, page_size: int):
         """Per-layer-stacked page pool for the PagedKV serving engine
         (DESIGN.md §5): (L, P, page_size, H_kv, D) zeros, shared by every
-        batch slot.  Only attention families page their cache; recurrent
-        state (rwkv6) has no KV to page, and a rolling sliding-window
-        cache is already bounded — both keep the dense engine."""
+        batch slot.  Attention families page their cache (sliding-window
+        configs included — their block tables address a ring of
+        `attention.ring_shape` pages); rwkv6 has no KV at all, its
+        recurrent state lives in the engine's per-slot arena and is
+        charged to the pool as "state"-class slab pages."""
         cfg = self.cfg
         if cfg.family == "rwkv6":
             raise ValueError("rwkv6 keeps fixed recurrent state — no KV "
-                             "cache to page; serve it with the dense "
-                             "engine")
-        if cfg.sliding_window is not None:
-            raise ValueError("sliding-window caches are rolling buffers "
-                             "already bounded by the window; paging is "
-                             "for full-attention caches")
+                             "cache to page; the paged engine serves it "
+                             "from a state arena charged as slab pages")
         dt = _dtype(cfg.compute_dtype)
         one = PagedKVCache.init(num_pages, page_size, cfg.num_kv_heads,
                                 cfg.head_dim, dt)

@@ -94,6 +94,23 @@ class PagedKVCache(NamedTuple):
         )
 
 
+def ring_shape(cfg: ModelConfig, page_size: int) -> int:
+    """Ring length R for a sliding-window sequence: enough pages that the
+    last W positions are always live — ceil(W / ps) full pages plus one
+    page being overwritten.  (R - 1) * ps >= W guarantees the cell a new
+    token lands in never still holds a key inside the window."""
+    return -(-cfg.sliding_window // page_size) + 1
+
+
+def ring_positions(positions, page_size: int, ring: int):
+    """Map absolute positions to VIRTUAL positions inside the ring so the
+    ordinary `paged_write` scatter lands in ring cell
+    (pos // ps) % ring, slot pos % ps — block tables of ring sequences
+    are indexed by RING index, and writes wrap in place."""
+    return ((positions // page_size) % ring) * page_size \
+        + positions % page_size
+
+
 def paged_write(pages: PagedKVCache, k, v, block_tables, positions,
                 write_mask=None) -> PagedKVCache:
     """Scatter one K/V vector per row into the page pool.
@@ -302,15 +319,30 @@ def attention_prefill_paged(params, x, cfg: ModelConfig,
 
     bt = jnp.broadcast_to(block_table.reshape(1, -1), (C,
                                                        block_table.size))
-    new_pages = paged_write(pages, k[0], v[0], bt, positions,
-                            write_mask=positions < write_upto)
+    ps = pages.k.shape[1]
+    if cfg.sliding_window is not None:
+        # ring write: scatter through virtual in-ring positions; rows
+        # more than R - 1 full pages behind the last written token would
+        # alias a LIVE ring cell from the right, so they are masked off
+        # (they are outside the window of every later query anyway)
+        R = ring_shape(cfg, ps)
+        floor = jnp.maximum(
+            0, ((write_upto - 1) // ps - (R - 1)) * ps)
+        mask = (positions < write_upto) & (positions >= floor)
+        new_pages = paged_write(pages, k[0], v[0], bt,
+                                ring_positions(positions, ps, R),
+                                write_mask=mask)
+    else:
+        new_pages = paged_write(pages, k[0], v[0], bt, positions,
+                                write_mask=positions < write_upto)
 
     scale = cfg.head_dim ** -0.5
     if whole_prompt:
         # same read as attention_prefill: intra-chunk causal attention
+        # (windowed when the config slides — identical bias math)
         ke = _expand_kv(k, cfg.num_heads)
         ve = _expand_kv(v, cfg.num_heads)
-        bias_fn = causal_bias()
+        bias_fn = causal_bias(window=cfg.sliding_window)
         if cfg.attn_chunk and C > cfg.attn_chunk:
             qc = min(cfg.attn_chunk, C)
             o = flash_attention(q, ke, ve, bias_fn, scale, qc, qc,
@@ -321,6 +353,9 @@ def attention_prefill_paged(params, x, cfg: ModelConfig,
                                  scale)
     else:
         # mid-stream chunk: grouped read over the gathered logical stream
+        assert cfg.sliding_window is None, \
+            "chunked prefill reads a linear block table — ring sequences" \
+            " prefill monolithically"
         hkv = cfg.num_kv_heads
         g = cfg.num_heads // hkv
         nmax = block_table.size
@@ -370,14 +405,22 @@ def attention_decode_paged(params, x, cfg: ModelConfig,
     q = L.apply_rope(q, cos, sin)
     k = L.apply_rope(k, cos, sin)
 
-    new_pages = paged_write(pages, k[:, 0], v[:, 0], block_tables,
-                            positions)
+    if cfg.sliding_window is not None:
+        ps = pages.k.shape[1]
+        R = ring_shape(cfg, ps)
+        new_pages = paged_write(pages, k[:, 0], v[:, 0], block_tables,
+                                ring_positions(positions, ps, R))
+    else:
+        R = None
+        new_pages = paged_write(pages, k[:, 0], v[:, 0], block_tables,
+                                positions)
     hkv = cfg.num_kv_heads
     g = cfg.num_heads // hkv
     qg = q.reshape(B, hkv, g, cfg.head_dim)
     o = kops.paged_attention_decode(qg, new_pages.k, new_pages.v,
                                     block_tables, positions,
-                                    backend=backend)
+                                    backend=backend,
+                                    window=cfg.sliding_window, ring=R)
     o = o.reshape(B, 1, cfg.num_heads * cfg.head_dim)
     out = kops.overlay_matmul(o, kops.weight_operand(params["wo"], x.dtype),
                               (ov or {}).get("wo"), backend=ov_backend)

@@ -70,6 +70,18 @@ class MambaState(NamedTuple):
         )
 
 
+def state_nbytes(cfg, dtype) -> int:
+    """Device bytes of ONE sequence's full-stack mamba state (all
+    `num_layers` MambaStates at batch 1) — what the serving engine
+    charges to the page pool as a state slab, computed from shapes
+    without materializing arrays."""
+    W = cfg.ssm_conv
+    item = jnp.dtype(dtype).itemsize
+    per_layer = (W - 1) * (cfg.ssm_d_inner + 2 * cfg.ssm_state) * item \
+        + cfg.ssm_heads * cfg.ssm_state * cfg.ssm_head_dim * 4
+    return cfg.num_layers * per_layer
+
+
 def _causal_conv(x, w, b, cache: Optional[jax.Array]):
     """Depthwise causal conv + silu.  x: (B, S, C); w: (W, C)."""
     B, S, C = x.shape

@@ -75,6 +75,17 @@ class RwkvState(NamedTuple):
         )
 
 
+def state_nbytes(cfg: ModelConfig, dtype) -> int:
+    """Device bytes of ONE sequence's full-stack recurrent state (all
+    `num_layers` RwkvStates at batch 1) — what the serving engine
+    charges to the page pool as a state slab, computed from shapes
+    without materializing arrays."""
+    H, K = cfg.rwkv_heads, cfg.rwkv_head_dim
+    item = jnp.dtype(dtype).itemsize
+    per_layer = 2 * cfg.d_model * item + H * K * K * 4   # wkv is fp32
+    return cfg.num_layers * per_layer
+
+
 def _ddlerp(params, x, prev):
     """Data-dependent lerp between x and prev -> the 5 streams (5, B, S, d)."""
     dt = x.dtype

@@ -1,0 +1,44 @@
+"""Public serving API (DESIGN.md §4/§5): ONE config, ONE engine factory.
+
+    from repro.serving import ServingConfig, make_engine
+
+    engine = make_engine(model, params, ServingConfig(num_pages=64))
+    engine.submit(Request(uid=0, prompt=tokens))
+    done = engine.run()
+
+`make_engine` builds the unified paged engine for EVERY model family —
+dense, MoE, sliding-window (ring pages), zamba hybrids (KV pages +
+mamba state slabs), rwkv6 (state slabs only) — all sharing the same
+`KVPool`, scheduler and per-request sampling.  The legacy dense engine
+is not part of this surface; it survives as the non-exported test
+oracle `repro.serving.oracle.DenseOracle`.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.serving.api import (AdapterStore, Request, ServingConfig,
+                               request_rng, sample_token)
+
+__all__ = ["AdapterStore", "Request", "ServingConfig", "make_engine",
+           "request_rng", "sample_token"]
+
+
+def make_engine(model, params, cfg: ServingConfig, *,
+                adapters: Optional[AdapterStore] = None,
+                adapter_pool=None, draft_model=None, draft_params=None,
+                obs=None):
+    """Build the serving engine for `model` from a `ServingConfig`.
+
+    Every family routes to the unified paged engine; family-specific
+    state placement (KV pages, ring pages, state slabs) is the engine's
+    concern, not the caller's.  `adapters` is a merged-weights
+    `AdapterStore` (one adapter per decode batch); `adapter_pool` is the
+    merge-free paged `AdapterPool` (mixed adapters per batch; mutually
+    exclusive with `adapters`); `draft_model`/`draft_params` feed
+    speculative decode when `cfg.speculate > 0`.
+    """
+    from repro.serving.kvpool.engine import PagedEngine
+    return PagedEngine(model, params, cfg, adapters=adapters,
+                       adapter_pool=adapter_pool, draft_model=draft_model,
+                       draft_params=draft_params, obs=obs)

@@ -1,0 +1,176 @@
+"""The serving API surface (DESIGN.md §4/§5): the request/config types,
+the per-request sampler, and the adapter store every engine shares.
+
+`ServingConfig` is the ONE serving configuration — `make_engine()` in
+`repro.serving` builds the unified paged engine from it for every model
+family (dense, MoE, sliding-window, zamba hybrids, rwkv6).  The old
+dense `Engine`/`EngineConfig` pair is gone from the public API; the
+dense code path survives only as `repro.serving.oracle.DenseOracle`, a
+test oracle the identity tests compare token streams against.
+
+Sampling is PER-REQUEST (`request_rng(seed, uid)`): a request's token
+stream depends only on its own prompt, adapter and uid — never on
+scheduling order — so any engine produces identical streams for the
+same request set at any temperature, and a preempted-and-restarted
+request regenerates exactly the tokens it would have produced
+uninterrupted.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Optional
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # (S,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0      # 0 -> greedy
+    adapter_id: Optional[str] = None   # None -> base weights
+    out_tokens: Optional[list] = None
+    error: Optional[str] = None   # set if the request failed (e.g. its
+                                  # adapter was evicted before scheduling)
+    rng: Optional[object] = None  # per-request sampler, (re)seeded at
+                                  # admission — see request_rng
+
+
+def request_rng(seed: int, uid: int) -> np.random.Generator:
+    """The per-request sampling stream.  Seeded by (engine seed, uid) so
+    token streams are scheduling-independent and preemption-safe."""
+    return np.random.default_rng((seed, uid))
+
+
+def sample_token(logits: np.ndarray, temperature: float,
+                 rng: Optional[np.random.Generator]) -> int:
+    """Greedy (temperature <= 0) or temperature sampling from a (V,)
+    logits row — the one sampler every serving engine shares."""
+    if temperature <= 0.0:
+        return int(np.argmax(logits))
+    p = np.exp((logits - logits.max()) / temperature)
+    p = p / p.sum()
+    return int(rng.choice(len(p), p=p))
+
+
+@dataclasses.dataclass
+class ServingConfig:
+    """The unified serving configuration (`make_engine()` consumes it).
+
+    Core knobs:
+      * batch_slots / max_len / eos_id / seed — the continuous-batching
+        envelope every family shares;
+      * page_size / num_pages — the shared `KVPool`: KV pages for
+        attention families (sliding-window configs use a ring of
+        `ring_shape` pages per slot), "state"-class slab pages charging
+        rwkv6 / mamba recurrent state;
+      * exhaustion — decode-growth policy on pool exhaustion ("preempt"
+        the youngest, or "stall" the grower);
+      * chunked_prefill / prefill_chunk / prefill_buckets / min_bucket —
+        prefill shaping (chunking and bucketing are dense-family-only);
+      * prefix_cache — refcounted prompt-prefix page sharing;
+      * backend — paged-attention read ("auto" | "kernel" | "lax");
+      * speculate / draft_source — multi-token speculative decode
+        (dense, non-windowed families only);
+      * overlay_backend — merge-free adapter-overlay composition.
+    """
+    batch_slots: int = 4
+    max_len: int = 256
+    eos_id: int = 2
+    seed: int = 0
+    page_size: int = 16
+    num_pages: int = 64
+    chunked_prefill: bool = False
+    prefill_chunk: int = 32
+    prefill_buckets: bool = True  # power-of-two prompt padding
+    min_bucket: int = 16
+    prefix_cache: bool = False
+    exhaustion: str = "preempt"
+    backend: str = "auto"
+    speculate: int = 0
+    draft_source: str = "ngram"
+    overlay_backend: str = "lax"
+
+
+class AdapterStore:
+    """LRU-bounded cache of merged (base + delta) parameter trees.
+
+    `load` folds a `DeltaArtifact` into the base weights with the
+    scatter-merge kernel (backend "kernel") or the dense reference
+    ("ref") — ONE jitted program per adapter geometry, compiled once and
+    reused across adapters (mergers are cached by geometry fingerprint).
+    Validation is on by default: a delta refuses the wrong base hash,
+    and — when the store is given the consumer's `plan_meta` — an
+    incompatible selection-plan fingerprint (geometry / quota policy).
+    """
+
+    def __init__(self, base_params, *, capacity: int = 4,
+                 backend: str = "kernel", mesh=None, validate: bool = True,
+                 plan_meta: Optional[dict] = None):
+        from repro.deltas.format import tree_hash
+        self.base = base_params
+        self.capacity = max(1, capacity)
+        self.backend = backend
+        self.mesh = mesh
+        self.validate = validate
+        self.plan_meta = plan_meta
+        self.base_hash = tree_hash(base_params) if validate else None
+        self._merged: collections.OrderedDict = collections.OrderedDict()
+        self._mergers: dict = {}
+        self.evictions = 0
+
+    def load(self, adapter_id: str, delta) -> None:
+        """Merge `delta` (a DeltaArtifact) and cache it under
+        `adapter_id`; evicts the least-recently-used adapter beyond
+        `capacity`.  Re-loading an id replaces it."""
+        from repro.deltas.format import DeltaMismatchError
+        from repro.deltas.merge import DeltaMerger
+        if self.validate:
+            want = delta.manifest["base_hash"]
+            if want != self.base_hash:
+                raise DeltaMismatchError(
+                    f"adapter {adapter_id!r} was extracted against base "
+                    f"{want[:12]}… but this store serves base "
+                    f"{self.base_hash[:12]}…")
+            if self.plan_meta is not None:
+                delta.validate_plan(self.plan_meta)
+        from repro.deltas.merge import geometry_key
+        key = geometry_key(delta.manifest["tensors"], self.backend)
+        merger = self._mergers.get(key)
+        if merger is None:
+            merger = self._mergers[key] = DeltaMerger(
+                delta.manifest["tensors"], backend=self.backend,
+                mesh=self.mesh)
+        self._merged.pop(adapter_id, None)
+        self._merged[adapter_id] = merger.merge(self.base, delta)
+        while len(self._merged) > self.capacity:
+            self._merged.popitem(last=False)
+            self.evictions += 1
+
+    def evict(self, adapter_id: str) -> None:
+        self._merged.pop(adapter_id, None)
+
+    def adapter_ids(self) -> list:
+        return list(self._merged)
+
+    def params_for(self, adapter_id: Optional[str]):
+        """Merged weights for `adapter_id` (None -> base); marks the
+        adapter most-recently-used.  Unknown ids raise KeyError — the
+        scheduler checks at submit time."""
+        if adapter_id is None:
+            return self.base
+        if adapter_id not in self._merged:
+            raise KeyError(f"adapter {adapter_id!r} is not loaded "
+                           f"(loaded: {list(self._merged)})")
+        self._merged.move_to_end(adapter_id)
+        return self._merged[adapter_id]
+
+
+def _splice(cache_batched, cache_one, slot: int):
+    """Insert batch=1 cache into slot `slot` of the batched cache."""
+    def ins(big, small):
+        return jax.lax.dynamic_update_slice_in_dim(big, small, slot, axis=1)
+    return jax.tree.map(ins, cache_batched, cache_one)

@@ -4,7 +4,7 @@ The PagedEngine's speculative decode step is draft -> verify -> accept:
 a DraftSource PROPOSES up to N next tokens per decoding sequence, the
 target model scores the current token plus all N drafts in one
 `decode_paged_multi` dispatch, and the engine accepts the longest prefix
-whose drafts match what its own sampler (`serving.engine.sample_token`
+whose drafts match what its own sampler (`serving.api.sample_token`
 on the per-request `request_rng` stream) would have emitted.  Drafts
 therefore only ever change HOW MANY tokens a dispatch advances — never
 which tokens come out: a wrong draft costs speculation throughput, not

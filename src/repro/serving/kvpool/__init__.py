@@ -1,9 +1,10 @@
 """PagedKV subsystem (DESIGN.md §5): block-paged KV pool, page-aware
-continuous-batching scheduler, the paged serving engine, and the draft
-sources its speculative multi-token decode verifies against."""
+continuous-batching scheduler, the unified serving engine (built via
+`repro.serving.make_engine`), and the draft sources its speculative
+multi-token decode verifies against."""
 from repro.serving.draft import (DraftSource, ModelDraft,  # noqa: F401
                                  NgramDraft, make_draft_source)
 from repro.serving.kvpool.adapter_pool import AdapterPool, pool_overlay  # noqa: F401
-from repro.serving.kvpool.engine import PagedEngine, PagedEngineConfig  # noqa: F401
+from repro.serving.kvpool.engine import PagedEngine  # noqa: F401
 from repro.serving.kvpool.pool import KVPool, TRASH_PAGE  # noqa: F401
 from repro.serving.kvpool.scheduler import PagedScheduler, SeqState  # noqa: F401

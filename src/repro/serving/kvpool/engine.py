@@ -1,7 +1,7 @@
-"""PagedKV serving engine: continuous batching over a block-paged KV
-pool with chunked prefill (DESIGN.md §5).
+"""The unified serving engine: continuous batching over ONE shared page
+pool for EVERY model family (DESIGN.md §5).
 
-What changes vs the dense-cache `serving.engine.Engine`:
+Built from a `ServingConfig` through `repro.serving.make_engine`:
 
   * KV memory is a POOL of fixed-size pages shared by every batch slot
     (`nn.attention.PagedKVCache` + `kvpool.pool.KVPool`), not a dense
@@ -17,26 +17,36 @@ What changes vs the dense-cache `serving.engine.Engine`:
     producing tokens, and every chunk runs through ONE compiled program
     (fixed chunk shape) instead of one program per length bucket;
   * decode attention reads the pool through per-slot block tables — the
-    Pallas paged-attention kernel on TPU, a gather + the dense engine's
+    Pallas paged-attention kernel on TPU, a gather + the dense oracle's
     exact grouped-einsum read elsewhere (`ops.paged_attention_decode`),
     which keeps paged decode bitwise-comparable to the dense cache.
 
-Family policy (ISSUE/DESIGN §5): attention families (dense, moe, and the
-zamba hybrid's shared attention blocks) route cache init/read/write
-through the pool; stateful families keep their fixed recurrent state —
-the zamba mamba backbone stays a per-slot spliced state beside its paged
-attention KV, and rwkv6 (no KV at all) is refused here and served by the
-dense engine.  Chunked prefill and prefix caching are mask-safety-gated
-exactly like the dense engine's length buckets: only the dense family
-(no MoE capacity dispatch, no recurrent state) uses them.
+Family routing — how each family's decode state lives in the pool:
 
-Token streams are identical to the dense engine per request (bitwise
-logits on the monolithic-prefill path, greedy-identical under chunking)
-— proven by tests/test_paged_kv.py and benchmarks/paged_decode.py.
+  * dense / moe — linear block tables over KV pages;
+  * sliding-window — a RING of `attention.ring_shape` pages per slot,
+    allocated in full at placement and overwritten in place (virtual
+    in-ring write positions, modular block-table walk at read);
+  * hybrid (zamba) — shared-attention KV pages + the mamba recurrent
+    state in a per-slot device arena CHARGED to the pool as
+    "state"-class slab pages; preemption checkpoints state + pages so
+    restart resumes mid-decode instead of re-running prefill;
+  * rwkv6 — no KV at all: the full recurrent state lives in a per-slot
+    arena charged as slab pages, prefill/decode run the exact dense
+    programs (`serve.recurrent.*`), and preemption checkpoints the
+    state slice.
+
+Chunked prefill, length buckets and prefix caching remain
+mask-safety-gated: only the dense non-windowed family uses them.
+
+Token streams are identical to the dense reference
+(`serving.oracle.DenseOracle`) per request — bitwise on the
+monolithic-prefill path, greedy-identical under chunking — proven by
+tests/test_paged_kv.py, tests/test_unified_serving.py and
+benchmarks/paged_decode.py.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from typing import Optional
 
@@ -45,62 +55,39 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs as obs_mod
-from repro.serving.engine import (AdapterStore, Request, _splice,
-                                  request_rng, sample_token)
+from repro.serving.api import (AdapterStore, Request, ServingConfig,
+                               _splice, request_rng, sample_token)
 from repro.serving.kvpool.adapter_pool import AdapterPool, pool_overlay
 from repro.serving.kvpool.pool import KVPool
 from repro.serving.kvpool.scheduler import PagedScheduler, SeqState
-
-
-@dataclasses.dataclass
-class PagedEngineConfig:
-    batch_slots: int = 4
-    max_len: int = 256            # per-sequence logical capacity
-    eos_id: int = 2
-    seed: int = 0
-    page_size: int = 16           # tokens per KV page
-    num_pages: int = 64           # pool size incl. the trash page
-    chunked_prefill: bool = False
-    prefill_chunk: int = 32       # tokens per prefill chunk
-    prefill_buckets: bool = True  # pad monolithic prefill to power-of-two
-    min_bucket: int = 16
-    prefix_cache: bool = False    # refcounted prompt-prefix page sharing
-    exhaustion: str = "preempt"   # page exhaustion: "preempt" | "stall"
-    backend: str = "auto"         # paged-attention read: auto|kernel|lax
-    speculate: int = 0            # drafted tokens verified per decode
-                                  # dispatch (0 = one-token decode)
-    draft_source: str = "ngram"   # "ngram" | "model" (see serving.draft)
-    overlay_backend: str = "lax"  # adapter-pool overlay matmul backend
-                                  # ("lax" | "kernel" | "auto")
-
 
 _stat_view = obs_mod.stat_view
 
 
 class PagedEngine:
-    def __init__(self, model, params, cfg: PagedEngineConfig,
+    def __init__(self, model, params, cfg: ServingConfig,
                  adapters: Optional[AdapterStore] = None,
                  draft_model=None, draft_params=None,
                  adapter_pool: Optional[AdapterPool] = None,
                  obs: Optional[obs_mod.ObsContext] = None):
         mcfg = model.cfg
         family = getattr(mcfg, "family", "")
-        if family == "rwkv6":
-            raise ValueError(
-                "rwkv6 keeps fixed recurrent state and has no KV cache to "
-                "page — serve it with the dense serving.engine.Engine")
-        if getattr(mcfg, "sliding_window", None) is not None:
-            raise ValueError(
-                "sliding-window caches are rolling buffers already bounded "
-                "by the window — serve them with the dense engine")
+        window = getattr(mcfg, "sliding_window", None)
         if getattr(mcfg, "is_encoder", False):
             raise ValueError("encoder-only models have no decode serving")
+        if window is not None and window >= cfg.max_len:
+            raise ValueError(
+                f"sliding_window={window} >= max_len={cfg.max_len}: the "
+                f"window never slides inside this engine's envelope — "
+                f"raise max_len or serve the config as full attention")
         self.model = model
         self.params = params
         self.cfg = cfg
         self.adapters = adapters
         self.active_adapter: Optional[str] = None
         self._hybrid = family == "hybrid"
+        self._recurrent = family == "rwkv6"
+        self._window = window
 
         # merge-free adapter-pool serving (DESIGN.md §5): params stay the
         # BASE weights forever; each slot's sparse delta is composed into
@@ -143,46 +130,104 @@ class PagedEngine:
                         f"in-matmul — extract deltas with a plan that "
                         f"excludes embeddings/head (include_embed=False)")
 
-        if self._hybrid and cfg.exhaustion == "stall":
+        if (self._hybrid or self._recurrent) and cfg.exhaustion == "stall":
             raise ValueError(
-                "exhaustion='stall' is unsupported for the hybrid family: "
-                "a stalled slot's mamba recurrent state would keep "
-                "advancing on the dummy dispatch inputs (attention writes "
-                "go to the trash page, recurrent state has no such "
-                "redirect) — use exhaustion='preempt', which restarts the "
-                "sequence from scratch instead of resuming corrupted state")
+                "exhaustion='stall' is unsupported for recurrent-state "
+                "families (zamba mamba / rwkv6): a stalled slot's "
+                "recurrent state would keep advancing on the dummy "
+                "dispatch inputs (attention writes go to the trash page, "
+                "recurrent state has no such redirect) — use "
+                "exhaustion='preempt', which checkpoints the state and "
+                "resumes mid-stream")
         self._spec_n = int(cfg.speculate)
         if self._spec_n < 0:
             raise ValueError(f"speculate must be >= 0, got {cfg.speculate}")
-        if self._spec_n and family != "dense":
-            # hybrid: the mamba recurrent state advances per input token
-            # and cannot rewind a rejected draft; moe: capacity dispatch
-            # routes by the dispatch's token count, so an N-token verify
-            # would change real tokens' expert routing vs one-token
-            # decode and break stream identity
+        if self._spec_n and (family != "dense" or window is not None):
+            # recurrent state advances per input token and cannot rewind
+            # a rejected draft; moe: capacity dispatch routes by the
+            # dispatch's token count, so an N-token verify would change
+            # real tokens' expert routing vs one-token decode; a sliding
+            # window's ring pages are overwritten in place — a rejected
+            # draft's stale writes may have already evicted real keys
             raise ValueError(
                 f"speculative decode is dense-family only (family="
-                f"{family!r}): rejected drafts need position-addressed "
-                f"state that can be overwritten (paged KV), and routing "
-                f"must not depend on the dispatch's token count")
+                f"{family!r}, sliding_window={window}): rejected drafts "
+                f"need position-addressed state that can be overwritten "
+                f"(linear paged KV), and routing must not depend on the "
+                f"dispatch's token count")
         B, ps = cfg.batch_slots, cfg.page_size
         self.nmax = -(-cfg.max_len // ps)       # block-table width
-        if cfg.num_pages < self.nmax + 1:
+        self._ring = None
+        if window is not None:
+            from repro.nn.attention import ring_shape
+            self._ring = ring_shape(mcfg, ps)
+            self.nmax = max(self.nmax, self._ring)
+        # full (non-rolling) KV pages hold exactly max_len positions:
+        # prompts beyond that fail fast at submit and decode budgets are
+        # clamped; recurrent state and ring pages have no such limit
+        # (mirrors DenseOracle._len_limited)
+        self._len_limited = not self._recurrent and window is None
+
+        # family state placement: KV page arrays (none at all for rwkv6 —
+        # its whole decode state is the recurrent arena), the recurrent
+        # state arenas, and the "state"-class slab page charge that makes
+        # recurrent state visible to the pool's accounting
+        self.kv = None
+        self.state = None
+        self._slab_pages = 0
+        if self._recurrent:
+            self.state = model.init_cache(B, cfg.max_len)
+            sd = jax.tree.leaves(self.state)[0].dtype
+            from repro.nn.rwkv6 import state_nbytes
+            # no KV arrays exist to price a page from: charge slabs at
+            # the NOMINAL kv-page byte size this config would have had
+            nkv = getattr(mcfg, "num_kv_heads", None) \
+                or getattr(mcfg, "num_heads", 1)
+            self._page_bytes = (2 * ps * nkv * mcfg.head_dim
+                                * jnp.dtype(sd).itemsize)
+            self._slab_pages = max(
+                1, -(-state_nbytes(mcfg, sd) // self._page_bytes))
+        elif self._hybrid:
+            self.kv = model.init_paged_cache(B, cfg.num_pages, ps)
+            total = sum(leaf.nbytes
+                        for leaf in jax.tree.leaves(self.kv.kv))
+            self._page_bytes = total // cfg.num_pages
+            sd = self.kv.mamba.conv_x.dtype
+            from repro.nn.mamba2 import state_nbytes
+            self._slab_pages = max(
+                1, -(-state_nbytes(mcfg, sd) // self._page_bytes))
+        else:
+            self.kv = model.init_paged_cache(cfg.num_pages, ps)
+            total = sum(leaf.nbytes for leaf in jax.tree.leaves(self.kv))
+            self._page_bytes = total // cfg.num_pages
+
+        # pool floor: one sequence's worst-case pages + the trash page
+        if self._recurrent:
+            need = self._slab_pages + 1
+        elif self._ring is not None:
+            need = self._ring + 1
+        else:
+            need = self.nmax + self._slab_pages + 1
+        if cfg.num_pages < need:
             raise ValueError(
                 f"num_pages={cfg.num_pages} cannot hold even one full "
-                f"sequence: need >= {self.nmax + 1} "
-                f"(ceil(max_len/page_size) + the trash page)")
+                f"sequence: need >= {need} (worst-case KV pages + state "
+                f"slab pages + the trash page)")
         pool = KVPool(cfg.num_pages, ps)
         # chunked prefill / prefix sharing are mask-safety-gated like the
-        # dense engine's buckets: recurrent state (zamba mamba) and MoE
-        # capacity dispatch are chunk/pad-sensitive
-        self._chunked = cfg.chunked_prefill and family == "dense"
-        self._bucketing = cfg.prefill_buckets and family == "dense"
+        # dense oracle's buckets: recurrent state (rwkv6 / zamba mamba)
+        # and MoE capacity dispatch are chunk/pad-sensitive, and a ring
+        # page holds keys from several window generations — its contents
+        # cannot be shared across prompts or revisited chunk-by-chunk
+        plain_dense = family == "dense" and window is None
+        self._chunked = cfg.chunked_prefill and plain_dense
+        self._bucketing = cfg.prefill_buckets and plain_dense
         self.sched = PagedScheduler(
             pool, B, exhaustion=cfg.exhaustion,
-            prefix_cache=cfg.prefix_cache and family == "dense",
+            prefix_cache=cfg.prefix_cache and plain_dense,
             max_step_tokens=1 + self._spec_n,
             mixed_adapters=adapter_pool is not None)
+        self.sched.on_checkpoint = self._on_checkpoint
 
         # telemetry (DESIGN.md §11): the registry is the one store for
         # the engine's counters — the legacy stat attributes are
@@ -218,10 +263,6 @@ class PagedEngine:
                 backend=cfg.backend, prefill_buckets=cfg.prefill_buckets,
                 min_bucket=cfg.min_bucket, obs=self.obs)
 
-        if self._hybrid:
-            self.kv = model.init_paged_cache(B, cfg.num_pages, ps)
-        else:
-            self.kv = model.init_paged_cache(cfg.num_pages, ps)
         self.bt = np.zeros((B, self.nmax), np.int32)
         if adapter_pool is not None:
             ppa = adapter_pool.layout.pages_per_adapter
@@ -241,6 +282,8 @@ class PagedEngine:
         self.decode_steps = 0
         self.prefill_chunks = 0
         self.peak_live_tokens = 0
+        self.checkpoints = 0                     # preempts that snapshotted
+        self.restores = 0                        # checkpointed re-admissions
         self.spec_drafted = 0                    # drafts sent to verify
         self.spec_accepted = 0                   # drafts that matched
         self.spec_emitted = 0                    # tokens out of verify
@@ -250,7 +293,17 @@ class PagedEngine:
         backend = cfg.backend
         jit = lambda fn, name: obs_mod.instrument_jit(fn, name=name,
                                                       obs=self.obs)
-        if adapter_pool is not None:
+        if self._recurrent:
+            # rwkv6 runs the EXACT dense programs over the state arena —
+            # that's what makes its streams bitwise the dense oracle's
+            self._prefill_rec = jit(
+                lambda p, b, c, last: model.prefill(p, b, c,
+                                                    last_pos=last),
+                "serve.recurrent.prefill")
+            self._decode_fn = jit(
+                lambda p, t, c, pos: model.decode(p, t, c, pos),
+                "serve.recurrent.decode")
+        elif adapter_pool is not None:
             # overlay-threaded dispatches: the per-slot adapter overlay
             # is gathered from the pool pages INSIDE the jitted program
             # (static layout slices), so mixing adapters never retraces
@@ -321,7 +374,7 @@ class PagedEngine:
             # submit time anchors the e2e envelope span; the queue clock
             # restarts on preemption (see _restamp_queue)
             req._obs_t_sub = req._obs_t_q = self._tr.now()
-        if len(req.prompt) + 1 > self.cfg.max_len:
+        if self._len_limited and len(req.prompt) + 1 > self.cfg.max_len:
             req.error = (f"prompt length {len(req.prompt)} exceeds "
                          f"max_len={self.cfg.max_len} - 1 — the sequence "
                          f"must hold the prompt plus at least one "
@@ -397,7 +450,18 @@ class PagedEngine:
                     req.out_tokens = req.out_tokens or []
                     self.done.append(req)
                     continue
-            seq = self.sched.place(req, free[0])
+            rs = getattr(req, "_resume", None)
+            pkw: dict = {}
+            if self._recurrent:
+                # no KV pages at all — only the state slab charge
+                pkw = dict(n_pages=0, slab_pages=self._slab_pages)
+            elif self._hybrid:
+                pkw = dict(slab_pages=self._slab_pages)
+                if rs is not None:
+                    pkw["n_pages"] = rs["n_pages"]
+            elif self._ring is not None:
+                pkw = dict(ring=self._ring)
+            seq = self.sched.place(req, free[0], **pkw)
             if seq is None:             # page-aware admission: wait
                 if self.apool is not None:
                     self.apool.release(apages)
@@ -417,7 +481,10 @@ class PagedEngine:
                         "serve.queue_wait_s").observe(now - tq)
                     self._tr.add("queue.wait", "queue", tq, now,
                                  uid=req.uid, uids=(req.uid,))
-            self._start_prefill(seq)
+            if rs is not None:
+                self._resume_checkpoint(seq, rs)
+            else:
+                self._start_prefill(seq)
 
     # ----------------------------------------------------------- prefill
     def _bucket_len(self, s: int) -> int:
@@ -434,7 +501,9 @@ class PagedEngine:
         for j, p in enumerate(seq.pages):
             self.bt[slot, j] = p
         seq.req.rng = request_rng(self.cfg.seed, seq.req.uid)
-        if not self._chunked:
+        if self._recurrent:
+            self._prefill_recurrent(seq)
+        elif not self._chunked:
             # monolithic: one prefill dispatch for the (un-reused part of
             # the) prompt, then straight into the decode phase
             start = seq.prefill_pos
@@ -447,6 +516,30 @@ class PagedEngine:
             self._tile_close("prefill", "prefill", t0, co,
                              uids=(seq.req.uid,),
                              hist=self._h_prefill, C=C)
+
+    def _prefill_recurrent(self, seq: SeqState):
+        """rwkv6 prefill: the EXACT dense-oracle path — exact-length
+        prompt, batch-1 state, spliced into the slot's row of the state
+        arena — so the unified engine's token streams stay bitwise the
+        oracle's (rwkv ops are row-wise independent; other slots'
+        arena rows are untouched by the splice)."""
+        slot, S = seq.slot, seq.n_ctx
+        prompt = np.zeros((1, S), np.int32)
+        prompt[0] = seq.req.prompt
+        if (S, True) not in self._seen_prefill:
+            self._seen_prefill.add((S, True))
+            self.prefill_compilations += 1
+        t0, co = self._tile_open(subjects=(seq.req.uid,))
+        one = self.model.init_cache(1, self.cfg.max_len)
+        logits, one = self._prefill_rec(
+            self.params, {"tokens": jnp.asarray(prompt)}, one,
+            jnp.int32(S - 1))
+        self.state = _splice(self.state, one, slot)
+        self.prefill_chunks += 1
+        self._note_live()
+        self._finish_prefill(seq, logits)
+        self._tile_close("prefill", "prefill", t0, co,
+                         uids=(seq.req.uid,), hist=self._h_prefill, C=S)
 
     def _prefill_step(self):
         """Chunked prefill: advance ONE chunk of one prefilling sequence
@@ -523,10 +616,13 @@ class PagedEngine:
         seq.prefill_pos = S
         self.tokens[slot, 0] = nxt
         self.positions[slot] = S
-        # clamp like the dense engine: decode writes must stay in
-        # [0, max_len) — at most max_len - S tokens can be generated
-        self.budget[slot] = min(req.max_new_tokens,
-                                self.cfg.max_len - S) - 1
+        # clamp like the dense oracle: full-cache decode writes must
+        # stay in [0, max_len) — at most max_len - S tokens can be
+        # generated (ring pages and recurrent state never fill up)
+        budget = req.max_new_tokens
+        if self._len_limited:
+            budget = min(budget, self.cfg.max_len - S)
+        self.budget[slot] = budget - 1
         if self.draft is not None:
             self.draft.begin(slot, req)
 
@@ -576,6 +672,8 @@ class PagedEngine:
                 self._clear_slot(seq.slot)
 
     def _decode_step(self):
+        if self._recurrent:
+            return self._decode_step_recurrent()
         if self._spec_n:
             return self._decode_step_spec()
         self._grow_all()
@@ -629,6 +727,108 @@ class PagedEngine:
             self.budget[slot] -= 1
         self._tile_close("decode", "decode", t0, co, uids=uids,
                          hist=self._h_decode, batch=len(live))
+        self._note_live()
+
+    def _decode_step_recurrent(self):
+        """rwkv6 decode: the dense oracle's full-batch dispatch over the
+        state arena — no pages to grow, no block tables.  Inactive slots
+        integrate dummy tokens into their arena rows exactly like the
+        oracle's finished slots do; rwkv ops are row-wise independent,
+        so live rows are bitwise unaffected."""
+        live = [s.slot for s in self.sched.seqs
+                if s is not None and s.phase == "decode"]
+        if not live:
+            return
+        self._note_decode_shape(1)
+        uids = tuple(self.sched.seqs[s].req.uid for s in live)
+        t0, co = self._tile_open(subjects=uids)
+        logits, self.state = self._decode_fn(
+            self.params, jnp.asarray(self.tokens), self.state,
+            jnp.asarray(self.positions))
+        logits = np.asarray(logits[:, 0])
+        self.decode_steps += 1
+        for slot in live:
+            seq = self.sched.seqs[slot]
+            req = seq.req
+            self.positions[slot] += 1
+            if req.out_tokens and req.out_tokens[-1] == self.cfg.eos_id:
+                self._finish(slot)
+                continue
+            if self.budget[slot] <= 0:
+                self._finish(slot)
+                continue
+            nxt = sample_token(logits[slot], req.temperature, req.rng)
+            req.out_tokens.append(int(nxt))
+            self.tokens[slot, 0] = nxt
+            self.budget[slot] -= 1
+        self._tile_close("decode", "decode", t0, co, uids=uids,
+                         hist=self._h_decode, batch=len(live))
+        self._note_live()
+
+    # ---------------------------------------------- checkpointed preempt
+    def _on_checkpoint(self, seq: SeqState) -> bool:
+        """Scheduler preempt hook, called BEFORE the pages are released:
+        recurrent-state families snapshot their decode state to host so
+        re-admission RESUMES mid-stream instead of re-running prefill.
+        Recurrent state is small and exact; attention-only families
+        return False — their state IS the (about-to-be-released) pages,
+        and the classic restart path regenerates the identical stream
+        from the per-request rng."""
+        if not (self._recurrent or self._hybrid) or seq.phase != "decode":
+            return False
+        slot = seq.slot
+        if self._recurrent:
+            snap = {"state": jax.tree.map(
+                lambda a: np.asarray(a[:, slot:slot + 1]), self.state)}
+        else:
+            idx = np.asarray(seq.pages, np.int32)
+            snap = {
+                "mamba": jax.tree.map(
+                    lambda a: np.asarray(a[:, slot:slot + 1]),
+                    self.kv.mamba),
+                "k_pages": np.asarray(self.kv.kv.k[:, idx]),
+                "v_pages": np.asarray(self.kv.kv.v[:, idx]),
+                "n_pages": len(seq.pages),
+            }
+        snap["positions"] = int(self.positions[slot])
+        snap["token"] = int(self.tokens[slot, 0])
+        snap["budget"] = int(self.budget[slot])
+        seq.req._resume = snap
+        self.checkpoints += 1
+        return True
+
+    def _resume_checkpoint(self, seq: SeqState, snap: dict):
+        """Re-admission of a checkpointed preempt: restore the host
+        snapshot into the slot and jump straight into the decode phase —
+        no prefill re-run, no rng reseed (the sampling stream CONTINUES
+        where the checkpoint left it).  Plain unjitted `.at[]` writes:
+        restores are rare by construction."""
+        slot, req = seq.slot, seq.req
+        self.bt[slot] = 0
+        for j, p in enumerate(seq.pages):
+            self.bt[slot, j] = p
+        if self._recurrent:
+            self.state = _splice(
+                self.state, jax.tree.map(jnp.asarray, snap["state"]),
+                slot)
+        else:
+            from repro.models.zamba import ZambaCache
+            kv = self.kv.kv
+            k, v = kv.k, kv.v
+            for j, p in enumerate(seq.pages):
+                k = k.at[:, p].set(jnp.asarray(snap["k_pages"][:, j]))
+                v = v.at[:, p].set(jnp.asarray(snap["v_pages"][:, j]))
+            mamba = _splice(
+                self.kv.mamba, jax.tree.map(jnp.asarray, snap["mamba"]),
+                slot)
+            self.kv = ZambaCache(mamba, type(kv)(k, v))
+        seq.phase = "decode"
+        seq.prefill_pos = seq.n_ctx
+        self.positions[slot] = snap["positions"]
+        self.tokens[slot, 0] = snap["token"]
+        self.budget[slot] = snap["budget"]
+        self.restores += 1
+        del req._resume
         self._note_live()
 
     def _decode_step_spec(self):
@@ -866,9 +1066,13 @@ class PagedEngine:
         allocation, plus the live-token bound the pool must respect.
         A thin view: engine-owned counts read from the registry (the
         property views), scheduler/pool counts are mirrored into it."""
-        pages_tree = self.kv.kv if self._hybrid else self.kv
-        total = sum(leaf.nbytes for leaf in jax.tree.leaves(pages_tree))
-        page_bytes = total / self.cfg.num_pages
+        if self.kv is None:     # rwkv6: no KV arrays — nominal pricing
+            page_bytes = float(self._page_bytes)
+        else:
+            pages_tree = self.kv.kv if self._hybrid else self.kv
+            total = sum(leaf.nbytes
+                        for leaf in jax.tree.leaves(pages_tree))
+            page_bytes = total / self.cfg.num_pages
         per_token = page_bytes / self.cfg.page_size
         pool = self.sched.pool
         peak_kv = pool.peak_pages_in_use * page_bytes
@@ -893,6 +1097,9 @@ class PagedEngine:
             "prefix_hits": self.sched.prefix_hits,
             "stalls": self.sched.stalls,
             "evictions": pool.evictions,
+            "state_pages": self._slab_pages,
+            "checkpoints": self.checkpoints,
+            "restores": self.restores,
         })
 
     def pool_stats(self) -> dict:
@@ -930,6 +1137,8 @@ class PagedEngine:
     decode_steps = _stat_view("serve.decode_steps")
     prefill_chunks = _stat_view("serve.prefill_chunks")
     peak_live_tokens = _stat_view("serve.peak_live_tokens")
+    checkpoints = _stat_view("serve.checkpoints")
+    restores = _stat_view("serve.restores")
     spec_drafted = _stat_view("serve.spec.drafted")
     spec_accepted = _stat_view("serve.spec.accepted")
     spec_emitted = _stat_view("serve.spec.emitted")

@@ -13,7 +13,12 @@ Invariants:
   * prefix-cached pages carry the cache's own reference, so a cached
     page that no live request uses has refcount exactly 1 and is the
     only kind of page eviction may reclaim — pages referenced by live
-    requests are never handed out twice.
+    requests are never handed out twice;
+  * every allocated page belongs to exactly ONE page class ("kv" for
+    block-table KV pages, "state" for recurrent state slabs) from
+    `alloc()` until its refcount returns to 0 — classes share the free
+    list but a live page never serves both, and only "kv" pages may
+    enter the prefix cache.
 
 All bookkeeping is O(1) per page operation; the allocator never touches
 device memory (the engine owns the arrays; physical page ids are just
@@ -45,13 +50,17 @@ class KVPool:
         # physical page; insertion order == LRU order
         self._cached: collections.OrderedDict = collections.OrderedDict()
         self._chain_of: dict = {}       # page -> chain key
+        self.cls_of: list = [None] * num_pages   # page -> class while live
+        self._in_use = {"kv": 0, "state": 0}
         self.evictions = 0
         self.peak_pages_in_use = 0
 
     # ------------------------------------------------------------- sizes
-    def pages_in_use(self) -> int:
+    def pages_in_use(self, cls: Optional[str] = None) -> int:
         """Allocated pages (live requests + prefix cache), excluding the
-        trash page."""
+        trash page; `cls` restricts the count to one page class."""
+        if cls is not None:
+            return self._in_use[cls]
         return self.num_pages - 1 - len(self.free)
 
     def _note_usage(self):
@@ -59,10 +68,13 @@ class KVPool:
                                      self.pages_in_use())
 
     # -------------------------------------------------------- alloc/free
-    def alloc(self, n: int) -> Optional[list]:
-        """n fresh pages with refcount 1, or None if even evicting every
-        unreferenced cached page cannot satisfy the request (the caller
-        waits or preempts — the pool never over-commits)."""
+    def alloc(self, n: int, cls: str = "kv") -> Optional[list]:
+        """n fresh pages of class `cls` with refcount 1, or None if even
+        evicting every unreferenced cached page cannot satisfy the
+        request (the caller waits or preempts — the pool never
+        over-commits)."""
+        if cls not in self._in_use:
+            raise ValueError(f"unknown page class {cls!r}")
         while len(self.free) < n and self._evict_one():
             pass
         if len(self.free) < n:
@@ -70,6 +82,8 @@ class KVPool:
         out = [self.free.popleft() for _ in range(n)]
         for p in out:
             self.refs[p] = 1
+            self.cls_of[p] = cls
+        self._in_use[cls] += n
         self._note_usage()
         return out
 
@@ -83,6 +97,8 @@ class KVPool:
         if self.refs[page] == 0:
             # cached pages always hold the cache's reference, so hitting
             # zero means the page is fully unreferenced
+            self._in_use[self.cls_of[page]] -= 1
+            self.cls_of[page] = None
             self.free.append(page)
 
     def _evict_one(self) -> bool:
@@ -91,6 +107,8 @@ class KVPool:
                 del self._cached[chain]
                 del self._chain_of[page]
                 self.refs[page] = 0
+                self._in_use[self.cls_of[page]] -= 1
+                self.cls_of[page] = None
                 self.free.append(page)
                 self.evictions += 1
                 return True
@@ -113,6 +131,9 @@ class KVPool:
         if chain in self._cached or page in self._chain_of:
             return False
         assert page != TRASH_PAGE and self.refs[page] > 0, page
+        assert self.cls_of[page] == "kv", \
+            f"only kv pages enter the prefix cache, page {page} is " \
+            f"{self.cls_of[page]!r}"
         self._cached[chain] = page
         self._chain_of[page] = chain
         self.refs[page] += 1

@@ -17,8 +17,11 @@ Request lifecycle:
     is force-preempted to break the deadlock);
   * preemption releases the sequence's pages and requeues the request at
     the queue FRONT with its tokens cleared — per-request sampling
-    (`serving.engine.request_rng`) regenerates exactly the same stream
-    on re-admission, so preemption is invisible in the output;
+    (`serving.api.request_rng`) regenerates exactly the same stream
+    on re-admission, so preemption is invisible in the output; recurrent
+    families instead CHECKPOINT through the engine's `on_checkpoint`
+    hook (state snapshot taken before the pages are released, emitted
+    tokens kept) and resume mid-decode without re-running prefill;
   * prefix pages are reference-counted: with `prefix_cache` enabled,
     finished requests publish their full prompt pages keyed by the
     (adapter, token-prefix) chain, and admission reuses matching pages
@@ -34,7 +37,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
-from repro.serving.engine import Request
+from repro.serving.api import Request
 from repro.serving.kvpool.pool import KVPool
 
 
@@ -43,12 +46,19 @@ class SeqState:
     """One admitted request's paged-serving state."""
     req: Request
     slot: int
-    pages: list                  # physical pages, logical order
+    pages: list                  # physical pages, logical order (ring
+                                 # order for sliding-window sequences)
     n_ctx: int                   # prompt length S
     prefill_pos: int             # next position to prefill (page-aligned
                                  # when a shared prefix was reused)
     phase: str                   # "prefill" | "decode" | "stalled"
     admit_order: int
+    ring: Optional[int] = None   # ring length R for sliding-window
+                                 # sequences (all R pages allocated at
+                                 # placement; grow() is then a no-op)
+    slab: list = dataclasses.field(default_factory=list)
+    #                            # "state"-class pages charging this
+    #                            # slot's recurrent state to the pool
 
 
 class PagedScheduler:
@@ -88,6 +98,11 @@ class PagedScheduler:
         # requeue_front path does NOT reset it — the request never
         # stopped waiting)
         self.on_preempt_requeue = None
+        # checkpoint hook: called with the SeqState BEFORE its pages are
+        # released on preemption; returns True when the engine
+        # snapshotted enough state to resume mid-decode, in which case
+        # the request keeps its emitted tokens instead of restarting
+        self.on_checkpoint = None
 
     # ------------------------------------------------------------- queue
     def submit(self, req: Request) -> None:
@@ -129,30 +144,48 @@ class PagedScheduler:
         engine needs the last real token's logits."""
         return (n_ctx - 1) // self.pool.page_size
 
-    def place(self, req: Request, slot: int) -> Optional[SeqState]:
+    def place(self, req: Request, slot: int, *,
+              ring: Optional[int] = None, slab_pages: int = 0,
+              n_pages: Optional[int] = None) -> Optional[SeqState]:
         """Allocate prompt pages (reusing cached prefix pages) and bind
         `req` to `slot`.  Returns None when pages are short — the caller
         requeues the request at the front and stops admitting (admission
-        waits; it never preempts running sequences)."""
+        waits; it never preempts running sequences).
+
+        `ring=R` places a sliding-window sequence: ALL R ring pages are
+        allocated up front (the ring never grows — `pages[r]` is the
+        physical page of ring index r) and prefix reuse is disabled
+        (ring cells are overwritten in place, so their contents are not
+        position-stable).  `slab_pages` additionally charges that many
+        "state"-class pages for the slot's recurrent state arena.
+        `n_pages` overrides the KV page count (checkpoint restore: the
+        engine re-materializes exactly the pages it snapshotted)."""
         ps = self.pool.page_size
         S = len(req.prompt)
-        n_pages = -(-S // ps)
+        if ring is not None:
+            n_kv = ring
+        elif n_pages is not None:
+            n_kv = n_pages
+        else:
+            n_kv = -(-S // ps)
         reused: list = []
-        if self.prefix_cache:
+        if self.prefix_cache and ring is None and n_pages is None:
             for j in range(self._reuse_cap(S)):
                 page = self.pool.cache_get(self._chain(req, j))
                 if page is None:
                     break
                 reused.append(page)
-        got = self.pool.alloc(n_pages - len(reused))
-        if got is None:
-            for p in reused:
+        got = self.pool.alloc(n_kv - len(reused))
+        slab = self.pool.alloc(slab_pages, cls="state") \
+            if got is not None else None
+        if got is None or slab is None:
+            for p in reused + (got or []):
                 self.pool.release(p)
             return None
         self.prefix_hits += len(reused)
         seq = SeqState(req=req, slot=slot, pages=reused + got, n_ctx=S,
                        prefill_pos=len(reused) * ps, phase="prefill",
-                       admit_order=self._order)
+                       admit_order=self._order, ring=ring, slab=slab)
         self._order += 1
         self.seqs[slot] = seq
         return seq
@@ -178,6 +211,10 @@ class PagedScheduler:
                 f"grow({n_tokens} tokens) exceeds max_step_tokens="
                 f"{self.max_step_tokens} — the engine must construct the "
                 f"scheduler with max_step_tokens >= 1 + draft_len")
+        if seq.ring is not None:
+            # a sliding-window ring owns all R pages from placement and
+            # overwrites cells in place — it never grows
+            return True, []
         ps = self.pool.page_size
         last_lp = (position + n_tokens - 1) // ps
         preempted: list[int] = []
@@ -236,13 +273,19 @@ class PagedScheduler:
     # --------------------------------------------------------- retirement
     def preempt(self, slot: int) -> None:
         """Release the sequence's pages and restart it from the queue
-        front (tokens cleared; per-request rng makes the regenerated
-        stream identical)."""
+        front.  The engine's `on_checkpoint` hook runs FIRST (pages and
+        device state are still live to snapshot); when it reports a
+        checkpoint the request keeps its emitted tokens and resumes
+        mid-decode on re-admission, otherwise tokens are cleared and the
+        per-request rng regenerates the identical stream from scratch."""
         seq = self.seqs[slot]
         assert seq is not None, slot
-        for p in seq.pages:
+        checkpointed = (self.on_checkpoint is not None
+                        and self.on_checkpoint(seq))
+        for p in seq.pages + seq.slab:
             self.pool.release(p)
-        seq.req.out_tokens = []
+        if not checkpointed:
+            seq.req.out_tokens = []
         self.requeue_front(seq.req)
         self.seqs[slot] = None
         self.preemptions += 1
@@ -254,10 +297,10 @@ class PagedScheduler:
         the prefix cache (when enabled), then drop its references."""
         seq = self.seqs[slot]
         assert seq is not None, slot
-        if self.prefix_cache and publish_prefix:
+        if self.prefix_cache and publish_prefix and seq.ring is None:
             for j in range(self._reuse_cap(seq.n_ctx)):
                 self.pool.cache_put(self._chain(seq.req, j), seq.pages[j])
-        for p in seq.pages:
+        for p in seq.pages + seq.slab:
             self.pool.release(p)
         self.seqs[slot] = None
         return seq

@@ -1,11 +1,13 @@
-"""Continuous-batching serving engine, adapter-aware (DESIGN.md §4).
+"""Dense-cache reference engine — a TEST ORACLE, not a public API.
 
-vLLM-style slot scheduler on top of the model's prefill/decode steps:
-  * fixed B decode slots; the decode step always runs the full batch
-    (inactive slots are masked),
-  * new requests prefill with batch=1 and are spliced into a free slot of
-    the batched cache (tree-wide dynamic_update_slice on the batch axis),
-  * finished sequences (EOS / max_new_tokens) free their slot immediately.
+This is the pre-unification continuous-batching engine over a dense
+per-slot KV cache (vLLM-style slot scheduler, batch-1 prefill spliced
+into the batched cache, same-adapter batching, per-request sampling).
+Production serving is the unified paged engine behind
+`repro.serving.make_engine`; this module survives ONLY so the identity
+tests can prove the paged engine's token streams bitwise-equal to the
+dense reference for every family.  It is deliberately NOT exported from
+`repro.serving`.
 
 Prefill compiles once per power-of-two length *bucket*, not once per
 prompt length: prompts are right-padded (mask-aware — causal attention
@@ -16,154 +18,24 @@ where padding changes real-token math opt out and keep the
 exact-length path: recurrent state (rwkv6 / zamba hybrids), rolling
 sliding-window caches, and MoE capacity-limited dispatch (pads consume
 expert capacity slots).
-
-Adapters (DeltaHub): an `AdapterStore` holds LRU-bounded merged variants
-of the base weights — each a sparse LIFT delta folded in by the
-scatter-merge kernel at load time (the single-adapter fast path: after
-the one-time merge, serving an adapter costs exactly what serving the
-base costs).  Requests carry an `adapter_id`; the scheduler batches
-same-adapter requests into the decode slots and switches the active
-parameter tree only when the batch drains — one set of weights per
-decode dispatch, no per-slot gather.
-
-Greedy or temperature sampling; deterministic under a seed.  Sampling is
-PER-REQUEST (`request_rng(seed, uid)`): a request's token stream depends
-only on its own prompt, adapter and uid — never on scheduling order — so
-the dense and PagedKV engines produce identical streams for the same
-request set at any temperature, and a preempted-and-restarted request
-regenerates exactly the tokens it would have produced uninterrupted.
 """
 from __future__ import annotations
 
-import collections
-import dataclasses
 import time
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro import obs as obs_mod
+from repro.serving.api import (AdapterStore, Request, ServingConfig,
+                               _splice, request_rng, sample_token)
+
+__all__ = ["DenseOracle"]
 
 
-@dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray            # (S,) int32
-    max_new_tokens: int = 32
-    temperature: float = 0.0      # 0 -> greedy
-    adapter_id: Optional[str] = None   # None -> base weights
-    out_tokens: Optional[list] = None
-    error: Optional[str] = None   # set if the request failed (e.g. its
-                                  # adapter was evicted before scheduling)
-    rng: Optional[object] = None  # per-request sampler, (re)seeded at
-                                  # admission — see request_rng
-
-
-def request_rng(seed: int, uid: int) -> np.random.Generator:
-    """The per-request sampling stream.  Seeded by (engine seed, uid) so
-    token streams are scheduling-independent and preemption-safe."""
-    return np.random.default_rng((seed, uid))
-
-
-def sample_token(logits: np.ndarray, temperature: float,
-                 rng: Optional[np.random.Generator]) -> int:
-    """Greedy (temperature <= 0) or temperature sampling from a (V,)
-    logits row — the one sampler both serving engines share."""
-    if temperature <= 0.0:
-        return int(np.argmax(logits))
-    p = np.exp((logits - logits.max()) / temperature)
-    p = p / p.sum()
-    return int(rng.choice(len(p), p=p))
-
-
-@dataclasses.dataclass
-class EngineConfig:
-    batch_slots: int = 4
-    max_len: int = 256
-    eos_id: int = 2
-    seed: int = 0
-    prefill_buckets: bool = True  # power-of-two prompt padding
-    min_bucket: int = 16
-
-
-class AdapterStore:
-    """LRU-bounded cache of merged (base + delta) parameter trees.
-
-    `load` folds a `DeltaArtifact` into the base weights with the
-    scatter-merge kernel (backend "kernel") or the dense reference
-    ("ref") — ONE jitted program per adapter geometry, compiled once and
-    reused across adapters (mergers are cached by geometry fingerprint).
-    Validation is on by default: a delta refuses the wrong base hash,
-    and — when the store is given the consumer's `plan_meta` — an
-    incompatible selection-plan fingerprint (geometry / quota policy).
-    """
-
-    def __init__(self, base_params, *, capacity: int = 4,
-                 backend: str = "kernel", mesh=None, validate: bool = True,
-                 plan_meta: Optional[dict] = None):
-        from repro.deltas.format import tree_hash
-        self.base = base_params
-        self.capacity = max(1, capacity)
-        self.backend = backend
-        self.mesh = mesh
-        self.validate = validate
-        self.plan_meta = plan_meta
-        self.base_hash = tree_hash(base_params) if validate else None
-        self._merged: collections.OrderedDict = collections.OrderedDict()
-        self._mergers: dict = {}
-        self.evictions = 0
-
-    def load(self, adapter_id: str, delta) -> None:
-        """Merge `delta` (a DeltaArtifact) and cache it under
-        `adapter_id`; evicts the least-recently-used adapter beyond
-        `capacity`.  Re-loading an id replaces it."""
-        from repro.deltas.format import DeltaMismatchError
-        from repro.deltas.merge import DeltaMerger
-        if self.validate:
-            want = delta.manifest["base_hash"]
-            if want != self.base_hash:
-                raise DeltaMismatchError(
-                    f"adapter {adapter_id!r} was extracted against base "
-                    f"{want[:12]}… but this store serves base "
-                    f"{self.base_hash[:12]}…")
-            if self.plan_meta is not None:
-                delta.validate_plan(self.plan_meta)
-        from repro.deltas.merge import geometry_key
-        key = geometry_key(delta.manifest["tensors"], self.backend)
-        merger = self._mergers.get(key)
-        if merger is None:
-            merger = self._mergers[key] = DeltaMerger(
-                delta.manifest["tensors"], backend=self.backend,
-                mesh=self.mesh)
-        self._merged.pop(adapter_id, None)
-        self._merged[adapter_id] = merger.merge(self.base, delta)
-        while len(self._merged) > self.capacity:
-            self._merged.popitem(last=False)
-            self.evictions += 1
-
-    def evict(self, adapter_id: str) -> None:
-        self._merged.pop(adapter_id, None)
-
-    def adapter_ids(self) -> list:
-        return list(self._merged)
-
-    def params_for(self, adapter_id: Optional[str]):
-        """Merged weights for `adapter_id` (None -> base); marks the
-        adapter most-recently-used.  Unknown ids raise KeyError — the
-        scheduler checks at submit time."""
-        if adapter_id is None:
-            return self.base
-        if adapter_id not in self._merged:
-            raise KeyError(f"adapter {adapter_id!r} is not loaded "
-                           f"(loaded: {list(self._merged)})")
-        self._merged.move_to_end(adapter_id)
-        return self._merged[adapter_id]
-
-
-class Engine:
-    def __init__(self, model, params, cfg: EngineConfig,
+class DenseOracle:
+    def __init__(self, model, params, cfg: ServingConfig,
                  adapters: Optional[AdapterStore] = None,
                  obs: Optional[obs_mod.ObsContext] = None):
         self.model = model
@@ -422,18 +294,10 @@ class Engine:
                       attrs or None)
 
     def metrics_snapshot(self) -> dict:
-        """Registry snapshot with buffered step tiles drained — what
-        launch/serve.py renders and dumps (--metrics-out)."""
+        """Registry snapshot with buffered step tiles drained."""
         self._tr.drain()
         return self.obs.registry.snapshot()
 
     # registry-backed attribute views (DESIGN.md §11)
     prefill_compilations = obs_mod.stat_view("serve.prefill_compilations")
     decode_steps = obs_mod.stat_view("serve.decode_steps")
-
-
-def _splice(cache_batched, cache_one, slot: int):
-    """Insert batch=1 cache into slot `slot` of the batched cache."""
-    def ins(big, small):
-        return jax.lax.dynamic_update_slice_in_dim(big, small, slot, axis=1)
-    return jax.tree.map(ins, cache_batched, cache_one)

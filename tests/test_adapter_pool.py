@@ -31,9 +31,8 @@ from repro.deltas.merge import DeltaMerger
 from repro.deltas.pool_layout import SENTINEL_IDX
 from repro.kernels import ops, ref
 from repro.models import ModelConfig, build_model
-from repro.serving.engine import AdapterStore, Request
-from repro.serving.kvpool import (AdapterPool, PagedEngine,
-                                  PagedEngineConfig, pool_overlay)
+from repro.serving import AdapterStore, Request, ServingConfig
+from repro.serving.kvpool import AdapterPool, PagedEngine, pool_overlay
 
 CFG = ModelConfig(family="dense", num_layers=2, d_model=64, num_heads=4,
                   num_kv_heads=2, head_dim=16, d_ff=128,
@@ -316,7 +315,7 @@ def test_engine_pool_refusals():
     meta = _plan_meta(model)
     apool = AdapterPool(params, num_pages=17, entries_per_page=ENTRIES)
     apool.register("a", _synthetic_adapter(params, meta, seed=10))
-    cfg = PagedEngineConfig(batch_slots=2, max_len=64, eos_id=2,
+    cfg = ServingConfig(batch_slots=2, max_len=64, eos_id=2,
                             page_size=8, num_pages=24)
     # store and pool together
     with pytest.raises(ValueError, match="not both"):
@@ -358,7 +357,7 @@ def test_engine_pool_refusals():
 # ------------------------------------------------------------- end to end
 def _serve_paged(model, params, prompts, ids, temps, *, apool=None,
                  store=None, num_pages=9999, speculate=0, max_new=8):
-    eng = PagedEngine(model, params, PagedEngineConfig(
+    eng = PagedEngine(model, params, ServingConfig(
         batch_slots=3, max_len=64, eos_id=2, page_size=8,
         num_pages=min(num_pages, 40), speculate=speculate,
         draft_source="ngram"), adapters=store, adapter_pool=apool)

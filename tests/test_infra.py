@@ -21,7 +21,7 @@ from repro.data.synthetic import EOS, VOCAB_SIZE, generate
 from repro.ft import PreemptionSimulator, StragglerMonitor
 from repro.launch.hlo import analyze_collectives
 from repro.models import ModelConfig, build_model
-from repro.serving.engine import Engine, EngineConfig, Request
+from repro.serving import Request, ServingConfig, make_engine
 from repro.training import trainer as T
 
 CFG = ModelConfig(family="dense", num_layers=2, d_model=32, num_heads=4,
@@ -193,8 +193,8 @@ def test_straggler_baseline_not_poisoned():
 def test_engine_continuous_batching_completes_all():
     m = build_model(CFG)
     params = m.init(jax.random.PRNGKey(0))
-    eng = Engine(m, params, EngineConfig(batch_slots=2, max_len=48,
-                                         eos_id=EOS))
+    eng = make_engine(m, params, ServingConfig(batch_slots=2, max_len=48,
+                                               eos_id=EOS))
     for i in range(5):
         eng.submit(Request(uid=i, prompt=np.arange(3 + i) % 50,
                            max_new_tokens=6))
@@ -207,8 +207,8 @@ def test_engine_greedy_matches_manual_decode():
     m = build_model(CFG)
     params = m.init(jax.random.PRNGKey(0))
     prompt = np.arange(5) % 50
-    eng = Engine(m, params, EngineConfig(batch_slots=1, max_len=32,
-                                         eos_id=EOS))
+    eng = make_engine(m, params, ServingConfig(batch_slots=1, max_len=32,
+                                               eos_id=EOS))
     eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=4))
     got = eng.run()[0].out_tokens
 

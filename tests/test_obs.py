@@ -36,8 +36,8 @@ from repro.deltas.format import make_manifest, num_stack, tree_hash
 from repro.models import ModelConfig, build_model
 from repro.obs.registry import Histogram, MetricsRegistry, log_edges
 from repro.obs.tracing import Span, Tracer, read_jsonl, request_breakdown
-from repro.serving.engine import Request
-from repro.serving.kvpool import AdapterPool, PagedEngine, PagedEngineConfig
+from repro.serving import Request, ServingConfig
+from repro.serving.kvpool import AdapterPool, PagedEngine
 
 CFG = ModelConfig(family="dense", num_layers=2, d_model=64, num_heads=4,
                   num_kv_heads=2, head_dim=16, d_ff=128, vocab_size=97)
@@ -59,7 +59,7 @@ def _prompts(n, seed=3, lo=3, hi=40):
 
 def _serve(model, params, prompts, ctx, *, max_new=8, speculate=0,
            apool=None, ids=None, **cfg_kw):
-    eng = PagedEngine(model, params, PagedEngineConfig(
+    eng = PagedEngine(model, params, ServingConfig(
         batch_slots=3, max_len=64, eos_id=2, page_size=8, num_pages=40,
         speculate=speculate, draft_source="ngram", **cfg_kw),
         adapter_pool=apool, obs=ctx)
@@ -382,7 +382,9 @@ def test_unbucketed_prefill_fails_audit_loudly(model_params):
     model, params = model_params
     ctx = obs.ObsContext.fresh()
     prompts = [np.arange(3, 3 + n, dtype=np.int32).astype(np.int32)
-               for n in (5, 9, 14, 23, 31, 38)]      # 6 distinct lengths
+               for n in (5, 7, 9, 14, 19, 23, 27, 31, 35, 38)]
+    # 10 distinct lengths: past the max-8 budget that unbucketed
+    # families (SWA/MoE/recurrent) are allowed
     _serve(model, params, prompts, ctx, prefill_buckets=False)
     errs = ctx.auditor.check(obs.load_manifest(MANIFEST))
     assert errs, "un-bucketed prefill must fail the compile audit"
@@ -418,7 +420,7 @@ def test_engine_loop_thread_vs_snapshot_polling(model_params):
     deadlock)."""
     model, params = model_params
     ctx = obs.ObsContext.fresh(trace=True)
-    eng = PagedEngine(model, params, PagedEngineConfig(
+    eng = PagedEngine(model, params, ServingConfig(
         batch_slots=3, max_len=64, eos_id=2, page_size=8, num_pages=40),
         obs=ctx)
     for i, p in enumerate(_prompts(6, seed=4)):

@@ -19,9 +19,10 @@ import pytest
 
 from repro.kernels import ops, ref
 from repro.models import ModelConfig, build_model
-from repro.serving.engine import Engine, EngineConfig, Request
-from repro.serving.kvpool import (KVPool, PagedEngine, PagedEngineConfig,
-                                  PagedScheduler, TRASH_PAGE)
+from repro.serving import Request, ServingConfig, make_engine
+from repro.serving.kvpool import (KVPool, PagedEngine, PagedScheduler,
+                                  TRASH_PAGE)
+from repro.serving.oracle import DenseOracle
 
 CFG = ModelConfig(family="dense", num_layers=2, d_model=64, num_heads=4,
                   num_kv_heads=2, head_dim=16, d_ff=128, vocab_size=97)
@@ -41,7 +42,7 @@ def _prompts(n, seed=3, lo=3, hi=40):
 
 def _serve_dense(model, params, prompts, *, temps=None, max_new=8,
                  slots=3, max_len=64, adapters=None, adapter_ids=None):
-    eng = Engine(model, params, EngineConfig(
+    eng = DenseOracle(model, params, ServingConfig(
         batch_slots=slots, max_len=max_len, eos_id=2), adapters=adapters)
     for i, p in enumerate(prompts):
         eng.submit(Request(uid=i, prompt=p, max_new_tokens=max_new,
@@ -57,7 +58,7 @@ def _serve_paged(model, params, prompts, *, temps=None, max_new=8,
                  slots=3, max_len=64, page_size=8, num_pages=40,
                  adapters=None, adapter_ids=None, draft_model=None,
                  draft_params=None, **kw):
-    eng = PagedEngine(model, params, PagedEngineConfig(
+    eng = make_engine(model, params, ServingConfig(
         batch_slots=slots, max_len=max_len, eos_id=2, page_size=page_size,
         num_pages=num_pages, **kw), adapters=adapters,
         draft_model=draft_model, draft_params=draft_params)
@@ -209,34 +210,37 @@ def test_paged_engine_families_token_identical(family, kw):
     assert not eng._chunked and not eng.sched.prefix_cache  # gated off
 
 
-def test_engine_refuses_stateful_and_swa_families():
+def test_engine_refuses_degenerate_configs():
+    """Unified-engine guardrails: rwkv6 + stall (recurrent state cannot
+    survive a stall), hybrid + stall (same), and a sliding window that
+    never slides inside the serving envelope."""
     rw = ModelConfig(family="rwkv6", num_layers=2, d_model=64, num_heads=2,
                      num_kv_heads=2, head_dim=32, d_ff=128, vocab_size=97)
     model = build_model(rw)
-    with pytest.raises(ValueError, match="recurrent"):
+    with pytest.raises(ValueError, match="stall"):
         PagedEngine(model, model.init(jax.random.PRNGKey(0)),
-                    PagedEngineConfig())
+                    ServingConfig(exhaustion="stall"))
     swa = CFG.replace(sliding_window=32)
     model = build_model(swa)
     with pytest.raises(ValueError, match="window"):
         PagedEngine(model, model.init(jax.random.PRNGKey(0)),
-                    PagedEngineConfig())
+                    ServingConfig(max_len=32))
     # hybrid + stall: a stalled slot's mamba state would advance on dummy
-    # dispatch inputs — refused up front (preempt restarts cleanly)
+    # dispatch inputs — refused up front (preempt checkpoints + resumes)
     zam = ModelConfig(family="hybrid", num_layers=4, d_model=64,
                       num_heads=4, num_kv_heads=2, head_dim=32, d_ff=128,
                       vocab_size=97, shared_attn_period=2)
     model = build_model(zam)
     with pytest.raises(ValueError, match="stall"):
         PagedEngine(model, model.init(jax.random.PRNGKey(0)),
-                    PagedEngineConfig(exhaustion="stall"))
+                    ServingConfig(exhaustion="stall"))
 
 
 def test_mixed_adapter_stream_token_identical(model_params, tmp_path):
     """Mixed-adapter continuous batching through the pool: every request
     matches the dense engine serving the same adapters."""
     from test_serving_delta import _tiny_delta
-    from repro.serving.engine import AdapterStore
+    from repro.serving import AdapterStore
     model, base = model_params
     d1, _ = _tiny_delta(model, base, 11, tmp_path, "a")
     d2, _ = _tiny_delta(model, base, 22, tmp_path, "b")
@@ -312,15 +316,14 @@ def test_prompt_longer_than_max_len_fails_fast(model_params):
     model, params = model_params
     long_prompt = np.arange(3, 68, dtype=np.int32) % 60 + 3   # 65 > 64-1
     ok_prompt = np.arange(3, 13, dtype=np.int32)
-    for make in (lambda: Engine(model, params,
-                                EngineConfig(batch_slots=1, max_len=64,
-                                             eos_id=2)),
-                 lambda: PagedEngine(model, params,
-                                     PagedEngineConfig(batch_slots=1,
-                                                       max_len=64,
-                                                       eos_id=2,
-                                                       page_size=8,
-                                                       num_pages=20))):
+    for make in (lambda: DenseOracle(model, params,
+                                    ServingConfig(batch_slots=1,
+                                                  max_len=64, eos_id=2)),
+                 lambda: make_engine(model, params,
+                                     ServingConfig(batch_slots=1,
+                                                   max_len=64, eos_id=2,
+                                                   page_size=8,
+                                                   num_pages=20))):
         eng = make()
         eng.submit(Request(uid=0, prompt=long_prompt, max_new_tokens=4))
         eng.submit(Request(uid=1, prompt=ok_prompt, max_new_tokens=4))
@@ -473,7 +476,7 @@ def test_speculative_mixed_adapters_token_identical(model_params,
     base-model drafter proposes, each request's merged adapter verifies,
     streams match the dense engine serving the same adapters."""
     from test_serving_delta import _tiny_delta
-    from repro.serving.engine import AdapterStore
+    from repro.serving import AdapterStore
     model, base = model_params
     d1, _ = _tiny_delta(model, base, 11, tmp_path, "a")
     d2, _ = _tiny_delta(model, base, 22, tmp_path, "b")
@@ -507,14 +510,14 @@ def test_speculative_refuses_non_dense_families():
     model = build_model(moe)
     with pytest.raises(ValueError, match="dense-family only"):
         PagedEngine(model, model.init(jax.random.PRNGKey(0)),
-                    PagedEngineConfig(speculate=2))
+                    ServingConfig(speculate=2))
     zam = ModelConfig(family="hybrid", num_layers=4, d_model=64,
                       num_heads=4, num_kv_heads=2, head_dim=32, d_ff=128,
                       vocab_size=97, shared_attn_period=2)
     model = build_model(zam)
     with pytest.raises(ValueError, match="dense-family only"):
         PagedEngine(model, model.init(jax.random.PRNGKey(0)),
-                    PagedEngineConfig(speculate=2))
+                    ServingConfig(speculate=2))
 
 
 # --------------------------------------- scheduler multi-token growth

@@ -188,8 +188,8 @@ def test_greedy_identity_both_engines():
     briefly-trained model, not random init: identity is a claim about
     argmax margins, and random-init logits are near-ties everywhere."""
     from benchmarks.common import SMALL, make_method, train_method
-    from repro.serving.engine import Engine, EngineConfig, Request
-    from repro.serving.kvpool import PagedEngine, PagedEngineConfig
+    from repro.serving import Request, ServingConfig, make_engine
+    from repro.serving.oracle import DenseOracle
     trained = train_method(SMALL, make_method("full"), task="arith",
                            steps=100, batch=8, seq=48, eval_n=0)
     model, params = trained["model"], trained["params"]
@@ -207,11 +207,11 @@ def test_greedy_identity_both_engines():
                                temperature=0.0))
         return {r.uid: tuple(r.out_tokens) for r in eng.run()}
 
-    ecfg = EngineConfig(batch_slots=2, max_len=64, eos_id=2)
-    pcfg = PagedEngineConfig(batch_slots=2, max_len=64, eos_id=2,
-                             page_size=16, num_pages=24)
-    for mk in (lambda p: Engine(model, p, ecfg),
-               lambda p: PagedEngine(model, p, pcfg)):
+    ecfg = ServingConfig(batch_slots=2, max_len=64, eos_id=2)
+    pcfg = ServingConfig(batch_slots=2, max_len=64, eos_id=2,
+                         page_size=16, num_pages=24)
+    for mk in (lambda p: DenseOracle(model, p, ecfg),
+               lambda p: make_engine(model, p, pcfg)):
         assert serve(mk, qparams) == serve(mk, params)
 
 

@@ -16,8 +16,8 @@ from repro.data.loader import ShardedLoader
 from repro.data.synthetic import VOCAB_SIZE, generate
 from repro.deltas import DeltaArtifact, DeltaMismatchError, extract
 from repro.models import ModelConfig, build_model
-from repro.serving.engine import (AdapterStore, Engine, EngineConfig,
-                                  Request)
+from repro.serving import AdapterStore, Request, ServingConfig
+from repro.serving.oracle import DenseOracle
 from repro.training import trainer as T
 
 CFG = ModelConfig(family="dense", num_layers=2, d_model=64, num_heads=4,
@@ -38,8 +38,8 @@ def _prompts(n, seed=3, lo=3, hi=33):
 
 def _serve(model, params, prompts, *, buckets=True, adapters=None,
            adapter_ids=None, slots=2, max_new=8):
-    eng = Engine(model, params,
-                 EngineConfig(batch_slots=slots, max_len=64, eos_id=2,
+    eng = DenseOracle(model, params,
+                 ServingConfig(batch_slots=slots, max_len=64, eos_id=2,
                               prefill_buckets=buckets), adapters=adapters)
     for i, p in enumerate(prompts):
         eng.submit(Request(
@@ -80,7 +80,7 @@ def test_bucketing_disabled_for_pad_sensitive_families(family, kw):
                          if k not in ("num_heads", "head_dim")})
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    eng = Engine(model, params, EngineConfig(batch_slots=1, max_len=64,
+    eng = DenseOracle(model, params, ServingConfig(batch_slots=1, max_len=64,
                                              eos_id=2))
     assert not eng._bucketing
     assert eng._bucket_len(13) == 13
@@ -173,7 +173,7 @@ def test_evicted_adapter_fails_only_its_request(tmp_path):
     d2, _ = _tiny_delta(model, base, 22, tmp_path, "b")
     store = AdapterStore(base, capacity=1, backend="kernel")
     store.load("a", d1)
-    eng = Engine(model, base, EngineConfig(batch_slots=2, max_len=64,
+    eng = DenseOracle(model, base, ServingConfig(batch_slots=2, max_len=64,
                                            eos_id=2), adapters=store)
     prompts = _prompts(3, seed=6)
     eng.submit(Request(uid=0, prompt=prompts[0], max_new_tokens=4,
@@ -191,7 +191,7 @@ def test_evicted_adapter_fails_only_its_request(tmp_path):
 
 def test_engine_rejects_adapter_without_store():
     model, base = _model_params()
-    eng = Engine(model, base, EngineConfig(batch_slots=1, max_len=64))
+    eng = DenseOracle(model, base, ServingConfig(batch_slots=1, max_len=64))
     with pytest.raises(ValueError):
         eng.submit(Request(uid=0, prompt=np.arange(4, dtype=np.int32),
                            adapter_id="ghost"))

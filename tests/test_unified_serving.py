@@ -1,0 +1,255 @@
+"""Every family on ONE engine (DESIGN.md §5): the unified paged engine
+built by `repro.serving.make_engine` must reproduce the dense reference
+engine's token streams bitwise for every model family at any
+temperature — sliding-window attention through a ring of refcounted
+pages, rwkv6 / zamba-hybrid recurrent state through "state"-class slab
+pages from the same `KVPool`, with state CHECKPOINTED on preemption so
+a restart resumes decode instead of re-running prefill.  Plus the page
+classes' cross-allocation invariants and the public-API surface of the
+`ServingConfig` / `make_engine` redesign."""
+import jax
+import numpy as np
+import pytest
+
+from repro.models import ModelConfig, build_model
+from repro.serving import Request, ServingConfig, make_engine
+from repro.serving.kvpool import KVPool
+from repro.serving.oracle import DenseOracle
+
+DENSE_KW = dict(num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+                head_dim=16, d_ff=128, vocab_size=97)
+
+
+def _prompts(n, seed=3, lo=3, hi=40):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(3, 90, size=int(s)).astype(np.int32)
+            for s in rng.integers(lo, hi, size=n)]
+
+
+def _serve(eng, prompts, temps=None, max_new=10):
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=p, max_new_tokens=max_new,
+                           temperature=temps[i] if temps else 0.0))
+    done = eng.run()
+    assert len(done) == len(prompts), (len(done), len(prompts))
+    for r in done:
+        assert not getattr(r, "error", None), r.error
+    return {r.uid: tuple(r.out_tokens) for r in done}
+
+
+# --------------------------------------------- SWA ring-page identity
+@pytest.mark.parametrize("window", [16, 12])   # divides page_size 8 / not
+def test_swa_ring_pages_match_dense_oracle(window):
+    """Sliding-window decode from a fixed ring of pages per slot must be
+    token-identical to the dense rolling-buffer reference, for a window
+    that divides the page size and one that straddles page boundaries
+    (the ring then carries one extra partially-masked page)."""
+    cfg = ModelConfig(family="dense", sliding_window=window, **DENSE_KW)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = _prompts(6)
+    temps = [0.0, 0.8, 0.0, 1.2, 0.0, 0.6]
+    want = _serve(DenseOracle(model, params,
+                              ServingConfig(batch_slots=2, max_len=64)),
+                  prompts, temps)
+    eng = make_engine(model, params,
+                      ServingConfig(batch_slots=2, max_len=64,
+                                    page_size=8, num_pages=24))
+    got = _serve(eng, prompts, temps)
+    assert eng._ring == 3            # ceil(W/8)+1 for both windows
+    assert got == want
+    # the ring never grows: per-slot residency is bounded by the ring
+    assert eng.kv_stats()["peak_pages_in_use"] <= 2 * eng._ring
+
+
+def test_swa_refuses_window_wider_than_max_len():
+    cfg = ModelConfig(family="dense", sliding_window=64, **DENSE_KW)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="window"):
+        make_engine(model, params, ServingConfig(max_len=64))
+
+
+# ------------------------------------------ recurrent state-slab slots
+def test_rwkv6_state_slabs_match_dense_oracle():
+    cfg = ModelConfig(family="rwkv6", num_layers=2, d_model=64,
+                      num_heads=8, head_dim=8, d_ff=128, vocab_size=128)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = _prompts(4, seed=9, lo=8, hi=30)
+    temps = [0.0, 0.9, 0.0, 0.7]
+    want = _serve(DenseOracle(model, params,
+                              ServingConfig(batch_slots=2, max_len=64)),
+                  prompts, temps)
+    eng = make_engine(model, params,
+                      ServingConfig(batch_slots=2, max_len=64,
+                                    page_size=8, num_pages=64))
+    got = _serve(eng, prompts, temps)
+    assert got == want
+    st = eng.kv_stats()
+    assert st["state_pages"] > 0     # slabs charged to the shared pool
+    # slabs are the ONLY pool usage for a pure-recurrent family
+    assert eng.sched.pool.pages_in_use("kv") == 0
+
+
+def test_rwkv6_preempt_checkpoints_state_no_prefill_rerun():
+    """Forced mid-decode preemption of a recurrent sequence must
+    checkpoint its state slab and restore it bitwise on re-admission —
+    the stream continues where it left off and prefill NEVER re-runs."""
+    cfg = ModelConfig(family="rwkv6", num_layers=2, d_model=64,
+                      num_heads=8, head_dim=8, d_ff=128, vocab_size=128)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = _prompts(2, seed=9, lo=10, hi=30)
+    temps = [0.0, 0.9]
+    want = _serve(DenseOracle(model, params,
+                              ServingConfig(batch_slots=2, max_len=64)),
+                  prompts, temps, max_new=12)
+    eng = make_engine(model, params,
+                      ServingConfig(batch_slots=2, max_len=64,
+                                    page_size=8, num_pages=64))
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=p, max_new_tokens=12,
+                           temperature=temps[i]))
+    for _ in range(4):               # both slots well into decode
+        eng.step()
+    pc_before = eng.prefill_chunks
+    eng.sched.preempt(0)             # forced mid-decode preemption
+    eng._clear_slot(0)
+    got = {r.uid: tuple(r.out_tokens) for r in eng.run()}
+    assert got == want
+    assert eng.checkpoints == 1 and eng.restores == 1
+    assert eng.prefill_chunks == pc_before   # restored, not recomputed
+
+
+def test_hybrid_tight_pool_preempts_checkpoints_and_matches():
+    """Zamba-style hybrid (shared-attention KV pages + mamba state
+    slabs) through a pool too small for every sequence at once: page
+    exhaustion must preempt WITH a state checkpoint, and the final
+    streams must still match the dense reference bitwise."""
+    cfg = ModelConfig(family="hybrid", num_layers=4, d_model=64,
+                      num_heads=4, num_kv_heads=2, head_dim=32, d_ff=128,
+                      vocab_size=97, shared_attn_period=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = _prompts(5, seed=5, lo=10, hi=30)
+    temps = [0.0, 0.9, 0.0, 0.7, 0.0]
+    want = _serve(DenseOracle(model, params,
+                              ServingConfig(batch_slots=3, max_len=64)),
+                  prompts, temps)
+    roomy = make_engine(model, params,
+                        ServingConfig(batch_slots=3, max_len=64,
+                                      page_size=8, num_pages=48))
+    assert _serve(roomy, prompts, temps) == want
+    slab = roomy._slab_pages
+    tight = make_engine(model, params,
+                        ServingConfig(batch_slots=3, max_len=64,
+                                      page_size=8,
+                                      num_pages=8 + 3 * slab))
+    got = _serve(tight, prompts, temps)
+    assert got == want
+    assert tight.sched.preemptions > 0
+    assert tight.checkpoints > 0 and tight.restores > 0
+    # both page classes drew from the one shared pool
+    st = tight.kv_stats()
+    assert st["state_pages"] == slab > 0
+
+
+# ------------------------------------------------ the whole family zoo
+@pytest.mark.parametrize("arch", ["rwkv6-1.6b", "zamba2-1.2b",
+                                  "mixtral-8x22b", "qwen3-1.7b"])
+def test_make_engine_serves_every_zoo_family(arch):
+    """Acceptance sweep: every zoo smoke config — recurrent, hybrid,
+    SWA + MoE, dense — serves through `make_engine` bitwise-identical
+    to the dense reference engine on a mixed-temperature stream."""
+    from repro.configs import get_arch
+    cfg = get_arch(arch).smoke
+    if cfg.input_mode == "embeddings":
+        cfg = cfg.replace(input_mode="tokens")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = _prompts(4, seed=11, lo=6, hi=24)
+    temps = [0.0, 0.8, 0.0, 0.6]
+    want = _serve(DenseOracle(model, params,
+                              ServingConfig(batch_slots=2, max_len=64)),
+                  prompts, temps, max_new=8)
+    eng = make_engine(model, params,
+                      ServingConfig(batch_slots=2, max_len=64,
+                                    page_size=8, num_pages=48))
+    got = _serve(eng, prompts, temps, max_new=8)
+    assert got == want
+
+
+# --------------------------------------------- pool page-class fuzzing
+def test_pool_page_classes_never_cross_allocate():
+    """Randomized alloc/release interleaving of "kv" and "state" pages:
+    a live page belongs to exactly one class, the per-class counters
+    always sum to the total, and a page freed from one class is
+    reusable by the other only AFTER its refcount returns to zero."""
+    rng = np.random.default_rng(0)
+    pool = KVPool(num_pages=24, page_size=4)
+    live = {"kv": [], "state": []}
+    for _ in range(600):
+        op = rng.integers(0, 3)
+        cls = "kv" if rng.integers(0, 2) == 0 else "state"
+        if op == 0:                                   # alloc
+            got = pool.alloc(int(rng.integers(1, 4)), cls=cls)
+            if got is not None:
+                assert all(pool.cls_of[p] == cls for p in got)
+                live[cls].extend(got)
+        elif op == 1 and live[cls]:                   # release
+            p = live[cls].pop(int(rng.integers(0, len(live[cls]))))
+            pool.release(p)
+            assert pool.cls_of[p] is None             # class cleared
+        elif op == 2 and live[cls]:                   # retain+release
+            p = live[cls][int(rng.integers(0, len(live[cls])))]
+            pool.retain(p)
+            assert pool.cls_of[p] == cls              # still that class
+            pool.release(p)
+        # global invariants after every step
+        assert set(live["kv"]) & set(live["state"]) == set()
+        assert pool.pages_in_use("kv") == len(live["kv"])
+        assert pool.pages_in_use("state") == len(live["state"])
+        assert (pool.pages_in_use("kv") + pool.pages_in_use("state")
+                == pool.pages_in_use())
+    for cls in live:
+        for p in live[cls]:
+            pool.release(p)
+    assert pool.pages_in_use() == 0
+
+
+def test_pool_rejects_unknown_page_class():
+    pool = KVPool(num_pages=4, page_size=4)
+    with pytest.raises(ValueError, match="page class"):
+        pool.alloc(1, cls="weights")
+
+
+def test_state_pages_never_enter_prefix_cache():
+    pool = KVPool(num_pages=6, page_size=4)
+    (slab,) = pool.alloc(1, cls="state")
+    with pytest.raises(AssertionError, match="kv pages"):
+        pool.cache_put("chain0", slab)
+
+
+# ------------------------------------------------- public API surface
+def test_dense_engine_is_not_public():
+    """The API redesign's contract: ONE config + ONE factory.  The dense
+    engine survives only as the non-exported test oracle."""
+    import repro.serving as serving
+    assert "make_engine" in serving.__all__
+    assert "ServingConfig" in serving.__all__
+    for legacy in ("Engine", "EngineConfig", "PagedEngineConfig",
+                   "DenseOracle"):
+        assert legacy not in serving.__all__
+        assert not hasattr(serving, legacy)
+    with pytest.raises(ImportError):
+        from repro.serving import Engine  # noqa: F401
+
+
+def test_serving_config_defaults_build_paged_engine():
+    model = build_model(ModelConfig(family="dense", **DENSE_KW))
+    params = model.init(jax.random.PRNGKey(0))
+    eng = make_engine(model, params, ServingConfig(max_len=64))
+    from repro.serving.kvpool import PagedEngine
+    assert isinstance(eng, PagedEngine)
+    assert _serve(eng, _prompts(2), max_new=4)
